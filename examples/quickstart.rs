@@ -1,0 +1,79 @@
+//! Quickstart: compress one sparse gradient with several DeepReduce
+//! instantiations and inspect volume + reconstruction error.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//! No artifacts needed — this exercises the pure compression API.
+
+use deepreduce::compress::{index_by_name, value_by_name, DeepReduce};
+use deepreduce::sparsify::{Sparsifier, TopK};
+use deepreduce::util::benchkit::Table;
+use deepreduce::util::prng::Rng;
+use deepreduce::util::stats::rel_l2_err;
+use deepreduce::util::testkit::gradient_like;
+
+fn main() -> anyhow::Result<()> {
+    // a gradient the size of the paper's Fig 10 conv layer
+    let d = 36_864;
+    let mut rng = Rng::new(2021);
+    let grad = gradient_like(&mut rng, d);
+
+    // 1. sparsify: Top-1% (the paper's default)
+    let mut topk = TopK::new(0.01);
+    let sparse = topk.sparsify(&grad);
+    println!(
+        "gradient d={d}, top-1% keeps r={} values ({} B as raw <key,value>)\n",
+        sparse.nnz(),
+        sparse.kv_wire_bytes()
+    );
+
+    // 2. try a few instantiations DR_idx^val
+    let mut table = Table::new(
+        "DeepReduce quickstart",
+        &["instantiation", "wire B", "vs <k,v>", "support", "value rel-err"],
+    );
+    for (idx, idx_param, val) in [
+        ("raw", f64::NAN, "raw"),
+        ("delta_varint", f64::NAN, "raw"),
+        ("bloom_p0", 0.001, "raw"),
+        ("bloom_p2", 0.001, "raw"),
+        ("bloom_p2", 0.001, "fitpoly"),
+        ("raw", f64::NAN, "qsgd"),
+        ("raw", f64::NAN, "fitdexp"),
+    ] {
+        let dr = DeepReduce::new(
+            index_by_name(idx, idx_param, 7).unwrap(),
+            value_by_name(val, f64::NAN, 7).unwrap(),
+        );
+        // 3. encode -> container bytes (what goes on the wire)
+        let container = dr.encode(&sparse, Some(&grad));
+        let wire = container.to_bytes();
+
+        // 4. decode on the "receiving worker"
+        let received = deepreduce::compress::Container::from_bytes(&wire)?;
+        let decoded = dr.decode(&received)?;
+
+        // 5. measure
+        let support_note = if decoded.indices() == sparse.indices() {
+            "exact".to_string()
+        } else {
+            format!("{} ids", decoded.nnz())
+        };
+        let dense_in = sparse.to_dense();
+        let dense_out = decoded.to_dense();
+        let err = rel_l2_err(dense_in.data(), dense_out.data());
+        table.row(&[
+            dr.name(),
+            wire.len().to_string(),
+            format!("{:.3}", wire.len() as f64 / sparse.kv_wire_bytes() as f64),
+            support_note,
+            format!("{err:.4}"),
+        ]);
+    }
+    table.print();
+    println!("note: bloom_p0 reconstructs a superset of the support (the extra");
+    println!("positions carry original gradient values), so dense-space 'error'");
+    println!("includes useful signal the plain sparsifier dropped — see Fig 6a.");
+    Ok(())
+}

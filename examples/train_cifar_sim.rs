@@ -1,0 +1,70 @@
+//! CIFAR-scenario example (paper §6.1 setting): train the ResNet-20
+//! stand-in with three gradient paths — no compression, plain Top-1%,
+//! and Top-1% + BF-P2 — and compare convergence and data volume,
+//! mirroring Fig 7 at small scale.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example train_cifar_sim [steps]
+//! ```
+
+use deepreduce::coordinator::{CompressionSpec, ModelKind, TrainConfig, Trainer};
+use deepreduce::util::benchkit::Table;
+
+fn run(label: &str, steps: usize, compression: Option<CompressionSpec>) -> anyhow::Result<(String, deepreduce::coordinator::TrainReport)> {
+    let mut cfg = TrainConfig::new(ModelKind::Mlp, "mlp");
+    cfg.workers = 4;
+    cfg.steps = steps;
+    cfg.compression = compression;
+    cfg.log_every = steps / 5;
+    eprintln!("--- {label} ---");
+    let report = Trainer::new(cfg)?.run()?;
+    Ok((label.to_string(), report))
+}
+
+fn main() -> anyhow::Result<()> {
+    let steps: usize =
+        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(150);
+
+    let mut runs = Vec::new();
+    runs.push(run("baseline (dense fp32)", steps, None)?);
+    let mut plain = CompressionSpec::topk(0.01, "raw", f64::NAN, "raw", f64::NAN);
+    plain.seed = 1;
+    runs.push(run("Top-1% (raw kv)", steps, Some(plain))?);
+    let bf = CompressionSpec::topk(0.01, "bloom_p2", 0.001, "raw", f64::NAN);
+    runs.push(run("DR[BF-P2] fpr=1e-3", steps, Some(bf))?);
+    let bf_fit = CompressionSpec::topk(0.01, "bloom_p2", 0.001, "fitpoly", 5.0);
+    runs.push(run("DR[BF-P2 | Fit-Poly]", steps, Some(bf_fit))?);
+
+    let mut table = Table::new(
+        &format!("CIFAR-sim convergence after {steps} steps (4 workers)"),
+        &["method", "final loss", "final acc", "rel. volume", "codec s/step"],
+    );
+    for (label, r) in &runs {
+        table.row(&[
+            label.clone(),
+            format!("{:.4}", r.final_loss()),
+            format!("{:.4}", r.final_aux(10)),
+            format!("{:.4}", r.relative_volume()),
+            format!("{:.4}", (r.total_encode_s() + r.total_decode_s()) / steps as f64),
+        ]);
+    }
+    table.print();
+
+    // convergence timeline (Fig 7 shape): loss every steps/10
+    let mut tl = Table::new(
+        "timeline (train loss)",
+        &["step", "baseline", "top-1%", "BF-P2", "BF-P2+Fit"],
+    );
+    let stride = (steps / 10).max(1);
+    for s in (0..steps).step_by(stride) {
+        tl.row(&[
+            s.to_string(),
+            format!("{:.3}", runs[0].1.steps[s].loss),
+            format!("{:.3}", runs[1].1.steps[s].loss),
+            format!("{:.3}", runs[2].1.steps[s].loss),
+            format!("{:.3}", runs[3].1.steps[s].loss),
+        ]);
+    }
+    tl.print();
+    Ok(())
+}

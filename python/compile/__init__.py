@@ -1,0 +1,4 @@
+"""Build-time compile package: L2 models, L1 kernels, AOT lowering.
+
+Never imported at runtime — the rust binary only consumes artifacts/.
+"""

@@ -1,0 +1,213 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) → HLO **text** artifacts + JSON
+manifests, consumed by the rust runtime (`rust/src/runtime`).
+
+HLO text — NOT ``lowered.compiler_ir("hlo").as_serialized_hlo_module_proto()``
+— is the interchange format: jax ≥ 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the `xla`
+crate) rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; never on the training path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import fitpoly as K_fitpoly
+from .kernels import qsgd as K_qsgd
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _write(out_dir, name, hlo_text, manifest):
+    hlo_path = os.path.join(out_dir, f"{name}.hlo.txt")
+    man_path = os.path.join(out_dir, f"{name}.manifest.json")
+    with open(hlo_path, "w") as f:
+        f.write(hlo_text)
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"  {name}: {len(hlo_text) / 1e6:.2f} MB HLO, {len(manifest['params'])} params")
+
+
+# --------------------------------------------------------------------------
+# model train-step artifacts
+# --------------------------------------------------------------------------
+
+
+def build_model(name, cfg, specs, step_fn, inputs, out_dir):
+    """Lower fn(*params, *batch) -> (loss, aux, *grads)."""
+    nparams = len(specs)
+
+    def flat_fn(*args):
+        params = list(args[:nparams])
+        batch = args[nparams:]
+        loss, aux, grads = step_fn(params, *batch, cfg)
+        return (loss, aux, *grads)
+
+    param_specs = [_spec(s.shape) for s in specs]
+    input_specs = [_spec(shape, dtype) for _, shape, dtype in inputs]
+    lowered = jax.jit(flat_fn).lower(*param_specs, *input_specs)
+    manifest = {
+        "name": name,
+        "kind": "train_step",
+        "params": [s.to_json() for s in specs],
+        "inputs": [
+            {"name": nm, "shape": list(shape), "dtype": str(jnp.dtype(dt))}
+            for nm, shape, dt in inputs
+        ],
+        "outputs": ["loss", "aux"] + [f"grad_{s.name}" for s in specs],
+        "config": {k: (list(v) if isinstance(v, tuple) else v) for k, v in vars(cfg).items()},
+    }
+    _write(out_dir, name, to_hlo_text(lowered), manifest)
+
+
+def build_mlp(out_dir, name="mlp", **kw):
+    cfg = M.MlpConfig(**kw)
+    build_model(
+        name,
+        cfg,
+        M.mlp_specs(cfg),
+        M.mlp_train_step,
+        [
+            ("x", (cfg.batch, cfg.input_dim), jnp.float32),
+            ("y", (cfg.batch,), jnp.int32),
+        ],
+        out_dir,
+    )
+
+
+def build_ncf(out_dir, name="ncf", **kw):
+    cfg = M.NcfConfig(**kw)
+    build_model(
+        name,
+        cfg,
+        M.ncf_specs(cfg),
+        M.ncf_train_step,
+        [
+            ("users", (cfg.batch,), jnp.int32),
+            ("items", (cfg.batch,), jnp.int32),
+            ("labels", (cfg.batch,), jnp.float32),
+        ],
+        out_dir,
+    )
+
+
+def build_transformer(out_dir, name="transformer_small", **kw):
+    cfg = M.TransformerConfig(**kw)
+    build_model(
+        name,
+        cfg,
+        M.transformer_specs(cfg),
+        M.transformer_train_step,
+        [
+            ("tokens", (cfg.batch, cfg.seq), jnp.int32),
+            ("targets", (cfg.batch, cfg.seq), jnp.int32),
+        ],
+        out_dir,
+    )
+
+
+# --------------------------------------------------------------------------
+# kernel artifacts (L1 lowered standalone, pallas flavor)
+# --------------------------------------------------------------------------
+
+
+def build_pallas_smoke(out_dir):
+    """Tiny pallas-flavored MLP train step: proves Pallas→HLO→rust-PJRT."""
+    build_mlp(
+        out_dir,
+        name="pallas_smoke",
+        input_dim=64,
+        hidden=(32,),
+        classes=8,
+        batch=16,
+        use_pallas=True,
+    )
+
+
+def build_fitpoly(out_dir, segs=8, seg_len=512, degree=5):
+    def fn(y, mask, x0):
+        return (K_fitpoly.fitpoly_solve(y, mask, x0, degree),)
+
+    lowered = jax.jit(fn).lower(
+        _spec((segs, seg_len)), _spec((segs, seg_len)), _spec((segs,))
+    )
+    manifest = {
+        "name": "fitpoly",
+        "kind": "kernel",
+        "params": [],
+        "inputs": [
+            {"name": "y", "shape": [segs, seg_len], "dtype": "float32"},
+            {"name": "mask", "shape": [segs, seg_len], "dtype": "float32"},
+            {"name": "x0", "shape": [segs], "dtype": "float32"},
+        ],
+        "outputs": ["coeffs"],
+        "config": {"segs": segs, "seg_len": seg_len, "degree": degree},
+    }
+    _write(out_dir, "fitpoly", to_hlo_text(lowered), manifest)
+
+
+def build_qsgd(out_dir, n=4096, bucket=512, bits=7):
+    def fn(values, randoms):
+        return K_qsgd.qsgd_quantize(values, randoms, bucket, bits)
+
+    lowered = jax.jit(fn).lower(_spec((n,)), _spec((n,)))
+    manifest = {
+        "name": "qsgd",
+        "kind": "kernel",
+        "params": [],
+        "inputs": [
+            {"name": "values", "shape": [n], "dtype": "float32"},
+            {"name": "randoms", "shape": [n], "dtype": "float32"},
+        ],
+        "outputs": ["levels", "signs", "maxs"],
+        "config": {"n": n, "bucket": bucket, "bits": bits},
+    }
+    _write(out_dir, "qsgd", to_hlo_text(lowered), manifest)
+
+
+BUILDERS = {
+    "mlp": lambda o: build_mlp(o),
+    "ncf": lambda o: build_ncf(o),
+    "transformer_small": lambda o: build_transformer(o),
+    "transformer_e2e": lambda o: build_transformer(o, name="transformer_e2e", **M.E2E),
+    "transformer_medium": lambda o: build_transformer(o, name="transformer_medium", **M.E2E_MEDIUM),
+    "pallas_smoke": build_pallas_smoke,
+    "fitpoly": build_fitpoly,
+    "qsgd": build_qsgd,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", help="subset of artifacts to build")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    names = args.only or list(BUILDERS)
+    print(f"lowering {len(names)} artifacts to {args.out_dir}:")
+    for name in names:
+        BUILDERS[name](args.out_dir)
+    # stamp for make
+    with open(os.path.join(args.out_dir, ".stamp"), "w") as f:
+        f.write("\n".join(names) + "\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""L1 kernels: Pallas implementations + pure-jnp oracles.
+
+`dispatch(use_pallas)` returns the kernel namespace the L2 models build
+against. Training artifacts are lowered with the jnp flavor (identical
+math, XLA-fusible); the Pallas flavor backs the smoke artifact and the
+kernel parity tests — interpret=True is a correctness vehicle on CPU, not
+a performance one (DESIGN.md §Hardware-Adaptation).
+"""
+
+from . import attention as _attention
+from . import fused_linear as _fused_linear
+from . import ref
+
+
+class _PallasKernels:
+    linear = staticmethod(_fused_linear.fused_linear)
+    attention = staticmethod(_attention.attention)
+
+
+class _RefKernels:
+    linear = staticmethod(ref.linear)
+    attention = staticmethod(ref.attention)
+
+
+def dispatch(use_pallas: bool):
+    return _PallasKernels if use_pallas else _RefKernels

@@ -1,0 +1,109 @@
+"""L1 Pallas kernel: batched Fit-Poly normal equations (paper §5,
+"Our GPU implementation uses Least-Square fitting, which can be trivially
+expressed with tensor operations").
+
+Each grid step processes one segment: builds the rescaled Vandermonde
+powers in VMEM and contracts XᵀX [m×m] and Xᵀy [m] on the MXU. The tiny
+(≤6×6) Cholesky solve stays outside the kernel (jnp.linalg.solve in the
+surrounding jitted function) — solving 6×6 systems on the MXU wastes the
+systolic array.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(y_ref, mask_ref, x0_ref, xtx_ref, xty_ref, *, degree, seg_len):
+    m = degree + 1
+    y = y_ref[...].reshape(seg_len)  # [L]
+    mask = mask_ref[...].reshape(seg_len)
+    x0 = x0_ref[0, 0]
+    length = mask.sum()
+    x1 = x0 + jnp.maximum(length - 1.0, 0.0)
+    mid = (x0 + x1) / 2.0
+    half = jnp.maximum((x1 - x0) / 2.0, 1.0)
+    pos = x0 + jax.lax.iota(y.dtype, seg_len)
+    t = (pos - mid) / half
+    powers = t[:, None] ** jax.lax.iota(y.dtype, m)[None, :]  # [L, m]
+    powers = powers * mask[:, None]
+    xtx_ref[...] = (powers.T @ powers).reshape(1, m, m)
+    xty_ref[...] = (powers.T @ (y * mask)).reshape(1, m)
+
+
+def fitpoly_normal_eqs(y, mask, x0, degree):
+    """Batched normal equations. y, mask: [S, L]; x0: [S].
+
+    Returns (xtx [S, m, m], xty [S, m]).
+    """
+    s, l = y.shape
+    m = degree + 1
+    return pl.pallas_call(
+        partial(_kernel, degree=degree, seg_len=l),
+        grid=(s,),
+        in_specs=[
+            pl.BlockSpec((1, l), lambda i: (i, 0)),
+            pl.BlockSpec((1, l), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, m, m), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, m), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((s, m, m), y.dtype),
+            jax.ShapeDtypeStruct((s, m), y.dtype),
+        ],
+        interpret=True,
+    )(y, mask, x0.reshape(-1, 1))
+
+
+def _chol_solve_batched(a, b):
+    """Batched SPD solve via fully-unrolled Cholesky (m <= 9).
+
+    jnp.linalg.solve lowers to a typed-FFI LAPACK custom call that the
+    xla_extension 0.5.1 runtime behind the rust loader rejects
+    (API_VERSION_TYPED_FFI); an unrolled Cholesky lowers to plain HLO.
+    a: [S, m, m], b: [S, m] -> x: [S, m].
+    """
+    m = a.shape[-1]
+    l = [[None] * m for _ in range(m)]
+    for i in range(m):
+        for j in range(i + 1):
+            s = a[:, i, j]
+            for k in range(j):
+                s = s - l[i][k] * l[j][k]
+            if i == j:
+                l[i][i] = jnp.sqrt(jnp.maximum(s, 1e-20))
+            else:
+                l[i][j] = s / l[j][j]
+    # forward solve L y = b
+    y = [None] * m
+    for i in range(m):
+        s = b[:, i]
+        for k in range(i):
+            s = s - l[i][k] * y[k]
+        y[i] = s / l[i][i]
+    # back solve L^T x = y
+    x = [None] * m
+    for i in reversed(range(m)):
+        s = y[i]
+        for k in range(i + 1, m):
+            s = s - l[k][i] * x[k]
+        x[i] = s / l[i][i]
+    return jnp.stack(x, axis=-1)
+
+
+def fitpoly_solve(y, mask, x0, degree):
+    """Full Fit-Poly batch: kernel-built normal equations + unrolled
+    Cholesky solve (plain-HLO friendly).
+
+    Returns coefficients [S, degree+1] (low order first, rescaled domain).
+    """
+    xtx, xty = fitpoly_normal_eqs(y, mask, x0, degree)
+    m = degree + 1
+    # ridge for rank-deficient (short/padded) segments
+    eye = jnp.eye(m, dtype=y.dtype) * 1e-6
+    return _chol_solve_batched(xtx + eye[None], xty)

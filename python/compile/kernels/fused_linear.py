@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: fused tiled matmul + bias + activation.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid is
+(M/bm, N/bn, K/bk); each step holds an (bm×bk) x-tile, (bk×bn) w-tile and
+the (bm×bn) f32 accumulator in VMEM and contracts on the MXU. The K axis
+is the innermost grid dimension so the output tile is revisited
+(accumulated) across K steps — the Pallas analogue of the CUDA
+threadblock-K loop. `interpret=True` is mandatory on the CPU PJRT plugin
+(Mosaic custom-calls are TPU-only); numerics are identical.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Tile sizes: multiples of the 128x128 MXU tile on real TPU; kept small
+# enough that x/w/out tiles fit VMEM (see vmem_footprint_bytes below).
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _kernel(x_ref, w_ref, b_ref, o_ref, *, nk, act):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...] @ w_ref[...]
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        y = o_ref[...] + b_ref[...]
+        if act == "relu":
+            y = jnp.maximum(y, 0.0)
+        elif act == "gelu":
+            y = 0.5 * y * (1.0 + jnp.tanh(0.7978845608028654 * (y + 0.044715 * y**3)))
+        o_ref[...] = y
+
+
+def _pick_tile(dim, pref):
+    """Largest divisor of `dim` that is <= pref (keeps the grid exact)."""
+    t = min(pref, dim)
+    while dim % t != 0:
+        t -= 1
+    return t
+
+
+def _pallas_linear(x, w, b, act):
+    """Raw kernel invocation (no AD)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and b.shape == (n,), (x.shape, w.shape, b.shape)
+    bm = _pick_tile(m, DEFAULT_BM)
+    bn = _pick_tile(n, DEFAULT_BN)
+    bk = _pick_tile(k, DEFAULT_BK)
+    nk = k // bk
+    return pl.pallas_call(
+        partial(_kernel, nk=nk, act=act),
+        grid=(m // bm, n // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b.reshape(1, -1))
+
+
+def _act_grad(pre, act):
+    if act == "none":
+        return jnp.ones_like(pre)
+    if act == "relu":
+        return (pre > 0.0).astype(pre.dtype)
+    if act == "gelu":
+        # d/dy of the tanh-approximated gelu
+        c = 0.7978845608028654
+        inner = c * (pre + 0.044715 * pre**3)
+        th = jnp.tanh(inner)
+        return 0.5 * (1.0 + th) + 0.5 * pre * (1.0 - th**2) * c * (1.0 + 3 * 0.044715 * pre**2)
+    raise ValueError(act)
+
+
+# The accumulating grid kernel is not AD-traceable; provide the VJP
+# explicitly (as production flash/matmul kernels do). The backward pass
+# reuses the same Pallas kernel for its two transposed matmuls, so both
+# directions run on the L1 kernel.
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _linear_vjp(act, x, w, b):
+    return _pallas_linear(x, w, b, act)
+
+
+def _linear_fwd(act, x, w, b):
+    return _pallas_linear(x, w, b, act), (x, w, b)
+
+
+def _linear_bwd(act, res, dy):
+    x, w, b = res
+    # rematerialize the pre-activation through the kernel (act="none")
+    if act == "none":
+        dpre = dy
+    else:
+        pre = _pallas_linear(x, w, b, "none")
+        dpre = dy * _act_grad(pre, act)
+    zero_n = jnp.zeros((w.shape[0],), x.dtype)
+    zero_m = jnp.zeros((w.shape[1],), x.dtype)
+    dx = _pallas_linear(dpre, w.T, zero_n, "none")
+    dw = _pallas_linear(x.T, dpre, zero_m, "none")
+    db = dpre.sum(axis=0)
+    return dx, dw, db
+
+
+_linear_vjp.defvjp(_linear_fwd, _linear_bwd)
+
+
+def fused_linear(x, w, b, act="none"):
+    """act(x @ w + b) as a Pallas kernel (differentiable). x: [M, K]."""
+    return _linear_vjp(act, x, w, b)
+
+
+def vmem_footprint_bytes(bm=DEFAULT_BM, bn=DEFAULT_BN, bk=DEFAULT_BK, dtype_bytes=4):
+    """Per-step VMEM residency estimate for the §Perf roofline notes."""
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn + bn)

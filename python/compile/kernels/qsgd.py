@@ -1,0 +1,58 @@
+"""L1 Pallas kernel: QSGD stochastic quantization.
+
+One grid step = one bucket: the bucket's values, the pre-drawn uniform
+randoms and the scalar max live in VMEM; the quantization is a pure VPU
+(elementwise) computation. Randomness comes in as an input so the kernel
+is deterministic and replayable against the rust codec.
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(v_ref, r_ref, levels_ref, signs_ref, maxs_ref, *, bits, bucket):
+    v = v_ref[...].reshape(bucket)
+    r = r_ref[...].reshape(bucket)
+    s = float(2**bits - 1)
+    mx = jnp.max(jnp.abs(v))
+    scaled = jnp.where(mx > 0.0, jnp.abs(v) / mx * s, 0.0)
+    levels = jnp.minimum(jnp.floor(scaled + r), s).astype(jnp.int32)
+    signs = jnp.where(v < 0.0, -1, 1).astype(jnp.int32)
+    levels_ref[...] = levels.reshape(1, bucket)
+    signs_ref[...] = signs.reshape(1, bucket)
+    maxs_ref[...] = mx.reshape(1, 1)
+
+
+def qsgd_quantize(values, randoms, bucket, bits):
+    """values, randoms: [N] with N divisible by bucket.
+
+    Returns (levels [N] i32, signs [N] i32, maxs [N/bucket] f32).
+    """
+    n = values.shape[0]
+    assert n % bucket == 0, "pad to a bucket multiple before calling"
+    nb = n // bucket
+    v2 = values.reshape(nb, bucket)
+    r2 = randoms.reshape(nb, bucket)
+    levels, signs, maxs = pl.pallas_call(
+        partial(_kernel, bits=bits, bucket=bucket),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, bucket), lambda i: (i, 0)),
+            pl.BlockSpec((1, bucket), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, bucket), lambda i: (i, 0)),
+            pl.BlockSpec((1, bucket), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, bucket), jnp.int32),
+            jax.ShapeDtypeStruct((nb, bucket), jnp.int32),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=True,
+    )(v2, r2)
+    return levels.reshape(n), signs.reshape(n), maxs.reshape(nb)

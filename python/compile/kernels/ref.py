@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness contract).
+
+pytest checks kernel-vs-ref with `assert_allclose`; the L2 models call the
+same functions through `kernels.dispatch`, so the oracle *is* the math the
+training artifacts ship with (the Pallas flavor is numerics-identical, see
+DESIGN.md §7).
+"""
+
+import jax.numpy as jnp
+
+
+def linear(x, w, b, act="none"):
+    """Fused linear layer: act(x @ w + b)."""
+    y = x @ w + b
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "gelu":
+        # tanh approximation (matches the pallas kernel)
+        y = 0.5 * y * (1.0 + jnp.tanh(0.7978845608028654 * (y + 0.044715 * y**3)))
+    elif act != "none":
+        raise ValueError(f"unknown activation {act}")
+    return y
+
+
+def attention(q, k, v, scale=None):
+    """Single-head scaled dot-product attention with causal mask.
+
+    q, k, v: [T, D]. Returns [T, D].
+    """
+    t, d = q.shape
+    if scale is None:
+        scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+    logits = (q @ k.T) * scale
+    causal = jnp.tril(jnp.ones((t, t), dtype=bool))
+    logits = jnp.where(causal, logits, -1e30)
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    return p @ v
+
+
+def fitpoly_normal_eqs(y, mask, x0, degree):
+    """Per-segment Vandermonde normal equations for Fit-Poly (paper §5).
+
+    y:    [S, L] padded segment values
+    mask: [S, L] 1.0 where valid
+    x0:   [S]    absolute start position of each segment
+    Returns (xtx [S, m, m], xty [S, m]) with m = degree+1, over the
+    rescaled domain t = (x - mid)/half per segment (matching
+    rust/src/linalg/polyfit.rs).
+    """
+    s, l = y.shape
+    m = degree + 1
+    lens = mask.sum(axis=1)  # [S]
+    x1 = x0 + jnp.maximum(lens - 1.0, 0.0)
+    mid = (x0 + x1) / 2.0
+    half = jnp.maximum((x1 - x0) / 2.0, 1.0)
+    pos = x0[:, None] + jnp.arange(l, dtype=y.dtype)[None, :]  # [S, L]
+    t = (pos - mid[:, None]) / half[:, None]
+    # powers [S, L, m]
+    powers = t[:, :, None] ** jnp.arange(m, dtype=y.dtype)[None, None, :]
+    powers = powers * mask[:, :, None]
+    xtx = jnp.einsum("sla,slb->sab", powers, powers)
+    xty = jnp.einsum("sla,sl->sa", powers, y * mask)
+    return xtx, xty
+
+
+def qsgd_quantize(values, randoms, max_per_bucket, bits):
+    """QSGD stochastic quantization levels (paper §3 plug-in; matches
+    rust/src/compress/value/qsgd.rs given the same uniform randoms).
+
+    values:  [N] f32
+    randoms: [N] f32 in [0,1)
+    max_per_bucket: [N] the bucket's max |v| broadcast per element
+    Returns (levels [N] int32, signs [N] int32 in {-1, 1}).
+    """
+    s = float(2**bits - 1)
+    scaled = jnp.where(
+        max_per_bucket > 0.0, jnp.abs(values) / max_per_bucket * s, 0.0
+    )
+    levels = jnp.floor(scaled + randoms).astype(jnp.int32)
+    levels = jnp.minimum(levels, jnp.int32(s))
+    signs = jnp.where(values < 0.0, -1, 1).astype(jnp.int32)
+    return levels, signs

@@ -1,0 +1,243 @@
+"""L2 models (build-time JAX): the paper's benchmark families as
+train-step graphs — an MLP classifier (ResNet-20/CIFAR stand-in, see
+DESIGN.md §4), an NCF recommender (inherently-sparse gradients, Table 2)
+and a decoder-only transformer LM (the e2e driver).
+
+Every model exposes:
+  * ``specs(cfg)``   -> [ParamSpec] (name, shape, init_std) — weights are
+    initialized on the rust side from these specs; artifacts carry no data.
+  * ``train_step(params, batch) -> (loss, grads)`` — pure function, lowered
+    once by aot.py. Python never runs at training time.
+
+Models call the L1 kernels through ``kernels.dispatch(use_pallas)``.
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple
+    init_std: float
+
+    def to_json(self):
+        return {"name": self.name, "shape": list(self.shape), "init_std": self.init_std}
+
+
+# --------------------------------------------------------------------------
+# MLP classifier (ResNet-20-on-CIFAR stand-in, ~250k params)
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class MlpConfig:
+    input_dim: int = 3072
+    hidden: tuple = (80, 48)
+    classes: int = 10
+    batch: int = 128
+    use_pallas: bool = False
+
+
+def mlp_specs(cfg: MlpConfig):
+    dims = [cfg.input_dim, *cfg.hidden, cfg.classes]
+    specs = []
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        specs.append(ParamSpec(f"w{i}", (a, b), (2.0 / a) ** 0.5))
+        specs.append(ParamSpec(f"b{i}", (b,), 0.0))
+    return specs
+
+
+def mlp_loss(params, x, y, cfg: MlpConfig):
+    k = kernels.dispatch(cfg.use_pallas)
+    h = x
+    n_layers = len(cfg.hidden) + 1
+    for i in range(n_layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        act = "relu" if i < n_layers - 1 else "none"
+        h = k.linear(h, w, b, act=act)
+    logits = h
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=-1).mean()
+    acc = (logits.argmax(axis=-1) == y).mean().astype(jnp.float32)
+    return nll, acc
+
+
+def mlp_train_step(params, x, y, cfg: MlpConfig):
+    (loss, acc), grads = jax.value_and_grad(
+        lambda p: mlp_loss(p, x, y, cfg), has_aux=True
+    )(params)
+    return loss, acc, grads
+
+
+# --------------------------------------------------------------------------
+# NCF recommender (He et al. 2017) — embedding tables + MLP tower.
+# Embedding gradients are inherently sparse: only the batch's rows are
+# nonzero (paper §6.3 "inherently sparse model").
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class NcfConfig:
+    users: int = 6000
+    items: int = 4000
+    dim: int = 16
+    hidden: tuple = (32, 16)
+    batch: int = 1024
+    use_pallas: bool = False
+
+
+def ncf_specs(cfg: NcfConfig):
+    specs = [
+        ParamSpec("user_emb", (cfg.users, cfg.dim), 0.05),
+        ParamSpec("item_emb", (cfg.items, cfg.dim), 0.05),
+    ]
+    dims = [2 * cfg.dim, *cfg.hidden, 1]
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        specs.append(ParamSpec(f"w{i}", (a, b), (2.0 / a) ** 0.5))
+        specs.append(ParamSpec(f"b{i}", (b,), 0.0))
+    return specs
+
+
+def ncf_loss(params, users, items, labels, cfg: NcfConfig):
+    k = kernels.dispatch(cfg.use_pallas)
+    ue, ie = params[0], params[1]
+    u = ue[users]  # [B, D]
+    v = ie[items]
+    h = jnp.concatenate([u, v], axis=-1)
+    n_layers = len(cfg.hidden) + 1
+    for i in range(n_layers):
+        w, b = params[2 + 2 * i], params[3 + 2 * i]
+        act = "relu" if i < n_layers - 1 else "none"
+        h = k.linear(h, w, b, act=act)
+    # GMF-style interaction added to the tower logit
+    logit = h[:, 0] + (u * v).sum(axis=-1)
+    # binary cross-entropy with logits
+    loss = jnp.mean(jnp.maximum(logit, 0.0) - logit * labels + jnp.log1p(jnp.exp(-jnp.abs(logit))))
+    hit = ((logit > 0.0).astype(jnp.float32) == labels).mean()
+    return loss, hit
+
+
+def ncf_train_step(params, users, items, labels, cfg: NcfConfig):
+    (loss, hit), grads = jax.value_and_grad(
+        lambda p: ncf_loss(p, users, items, labels, cfg), has_aux=True
+    )(params)
+    return loss, hit, grads
+
+
+# --------------------------------------------------------------------------
+# Decoder-only transformer LM (the e2e driver model)
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    vocab: int = 512
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 2
+    d_ff: int = 128
+    seq: int = 32
+    batch: int = 2
+    use_pallas: bool = False
+
+    @property
+    def head_dim(self):
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# e2e configurations (see DESIGN.md §7). FULL is the 27M-parameter
+# target; MEDIUM (~5M) is sized so a few hundred steps fit the
+# single-core CI testbed — the recorded EXPERIMENTS.md run.
+E2E = dict(vocab=8192, d_model=512, n_layers=6, n_heads=8, d_ff=2048, seq=128, batch=4)
+E2E_MEDIUM = dict(vocab=4096, d_model=256, n_layers=4, n_heads=4, d_ff=1024, seq=64, batch=4)
+
+
+def transformer_specs(cfg: TransformerConfig):
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    specs = [
+        ParamSpec("tok_emb", (v, d), 0.02),
+        ParamSpec("pos_emb", (cfg.seq, d), 0.02),
+    ]
+    for i in range(cfg.n_layers):
+        p = f"l{i}_"
+        specs += [
+            ParamSpec(p + "ln1_g", (d,), -1.0),  # init_std<0 => init to 1.0
+            ParamSpec(p + "ln1_b", (d,), 0.0),
+            ParamSpec(p + "wqkv", (d, 3 * d), (2.0 / d) ** 0.5),
+            ParamSpec(p + "bqkv", (3 * d,), 0.0),
+            ParamSpec(p + "wo", (d, d), (2.0 / d) ** 0.5 / (2 * cfg.n_layers) ** 0.5),
+            ParamSpec(p + "bo", (d,), 0.0),
+            ParamSpec(p + "ln2_g", (d,), -1.0),
+            ParamSpec(p + "ln2_b", (d,), 0.0),
+            ParamSpec(p + "wff1", (d, f), (2.0 / d) ** 0.5),
+            ParamSpec(p + "bff1", (f,), 0.0),
+            ParamSpec(p + "wff2", (f, d), (2.0 / f) ** 0.5 / (2 * cfg.n_layers) ** 0.5),
+            ParamSpec(p + "bff2", (d,), 0.0),
+        ]
+    specs += [
+        ParamSpec("lnf_g", (d,), -1.0),
+        ParamSpec("lnf_b", (d,), 0.0),
+        ParamSpec("head", (d, v), (1.0 / d) ** 0.5),
+    ]
+    return specs
+
+
+def _layer_norm(x, g, b, eps=1e-5):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def transformer_loss(params, tokens, targets, cfg: TransformerConfig):
+    k = kernels.dispatch(cfg.use_pallas)
+    it = iter(params)
+    tok_emb = next(it)
+    pos_emb = next(it)
+    b, t = tokens.shape
+    h = tok_emb[tokens] + pos_emb[None, :t, :]
+    # per (batch, head) attention over [T, hd] via double vmap
+    attn_bh = jax.vmap(jax.vmap(k.attention))
+    for _ in range(cfg.n_layers):
+        ln1_g, ln1_b = next(it), next(it)
+        wqkv, bqkv = next(it), next(it)
+        wo, bo = next(it), next(it)
+        ln2_g, ln2_b = next(it), next(it)
+        wff1, bff1 = next(it), next(it)
+        wff2, bff2 = next(it), next(it)
+
+        x = _layer_norm(h, ln1_g, ln1_b)
+        qkv = k.linear(x.reshape(b * t, -1), wqkv, bqkv).reshape(b, t, 3 * cfg.d_model)
+        q, kk, v = jnp.split(qkv, 3, axis=-1)
+        hd = cfg.head_dim
+        # [B, H, T, hd]
+        split = lambda z: z.reshape(b, t, cfg.n_heads, hd).transpose(0, 2, 1, 3)
+        o = attn_bh(split(q), split(kk), split(v))  # [B, H, T, hd]
+        o = o.transpose(0, 2, 1, 3).reshape(b * t, cfg.d_model)
+        h = h + k.linear(o, wo, bo).reshape(b, t, -1)
+
+        x = _layer_norm(h, ln2_g, ln2_b)
+        y1 = k.linear(x.reshape(b * t, -1), wff1, bff1, act="gelu")
+        h = h + k.linear(y1, wff2, bff2).reshape(b, t, -1)
+
+    lnf_g, lnf_b = next(it), next(it)
+    head = next(it)
+    x = _layer_norm(h, lnf_g, lnf_b)
+    logits = x.reshape(b * t, -1) @ head  # [B*T, V]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets.reshape(-1)[:, None], axis=-1).mean()
+    return nll
+
+
+def transformer_train_step(params, tokens, targets, cfg: TransformerConfig):
+    loss, grads = jax.value_and_grad(lambda p: transformer_loss(p, tokens, targets, cfg))(
+        params
+    )
+    # expose a dummy aux slot so all models share (loss, aux, grads) layout
+    return loss, loss, grads

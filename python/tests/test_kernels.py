@@ -1,0 +1,166 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+hypothesis sweeps shapes; assert_allclose is THE core correctness signal
+for the kernel layer (system prompt contract).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import attention as K_attn
+from compile.kernels import fitpoly as K_fitpoly
+from compile.kernels import fused_linear as K_linear
+from compile.kernels import qsgd as K_qsgd
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+# ---------------------------------------------------------------- linear
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 96),
+    n=st.integers(1, 48),
+    act=st.sampled_from(["none", "relu", "gelu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_matches_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+    got = K_linear.fused_linear(x, w, b, act=act)
+    want = ref.linear(x, w, b, act=act)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+def test_fused_linear_tiled_path():
+    # shapes that force multi-step grids in every dimension
+    rng = np.random.default_rng(0)
+    x, w, b = rand(rng, 256, 384), rand(rng, 384, 256), rand(rng, 256)
+    got = K_linear.fused_linear(x, w, b, act="relu")
+    want = ref.linear(x, w, b, act="relu")
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_footprint_under_budget():
+    # default tiles must fit a 16 MiB VMEM with ample headroom
+    assert K_linear.vmem_footprint_bytes() < 4 * 2**20
+
+
+# -------------------------------------------------------------- attention
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    t_blocks=st.integers(1, 4),
+    d=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_attention_matches_ref(t_blocks, d, seed):
+    t = 16 * t_blocks
+    rng = np.random.default_rng(seed)
+    q, k, v = rand(rng, t, d), rand(rng, t, d), rand(rng, t, d)
+    got = K_attn.attention(q, k, v, bq=16, bkv=16)
+    want = ref.attention(q, k, v)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_attention_causality():
+    # future tokens must not influence earlier outputs
+    rng = np.random.default_rng(1)
+    t, d = 32, 16
+    q, k, v = rand(rng, t, d), rand(rng, t, d), rand(rng, t, d)
+    base = np.asarray(K_attn.attention(q, k, v))
+    k2, v2 = k.copy(), v.copy()
+    k2[-1] += 100.0
+    v2[-1] -= 50.0
+    pert = np.asarray(K_attn.attention(q, k2, v2))
+    assert_allclose(base[: t - 1], pert[: t - 1], rtol=1e-5, atol=1e-5)
+    assert not np.allclose(base[-1], pert[-1])
+
+
+# ---------------------------------------------------------------- fitpoly
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    segs=st.integers(1, 6),
+    seg_len=st.sampled_from([8, 32, 64]),
+    degree=st.integers(0, 5),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fitpoly_normal_eqs_match_ref(segs, seg_len, degree, seed):
+    rng = np.random.default_rng(seed)
+    y = rand(rng, segs, seg_len)
+    lens = rng.integers(degree + 1, seg_len + 1, size=segs)
+    mask = (np.arange(seg_len)[None, :] < lens[:, None]).astype(np.float32)
+    x0 = rng.integers(0, 1000, size=segs).astype(np.float32)
+    xtx_k, xty_k = K_fitpoly.fitpoly_normal_eqs(y, mask, x0, degree)
+    xtx_r, xty_r = ref.fitpoly_normal_eqs(y, mask, x0, degree)
+    assert_allclose(np.asarray(xtx_k), np.asarray(xtx_r), rtol=1e-4, atol=1e-4)
+    assert_allclose(np.asarray(xty_k), np.asarray(xty_r), rtol=1e-4, atol=1e-4)
+
+
+def test_fitpoly_solve_recovers_polynomial():
+    # exact quadratic data -> solved coefficients reproduce the values
+    seg_len = 64
+    x0 = np.array([100.0], dtype=np.float32)
+    pos = x0[0] + np.arange(seg_len)
+    y = (0.5 * pos**2 - 3 * pos + 2).astype(np.float32)[None, :] / 1e4
+    mask = np.ones((1, seg_len), dtype=np.float32)
+    coeffs = np.asarray(K_fitpoly.fitpoly_solve(y, mask, x0, degree=2))  # [1, 3]
+    mid, half = pos[0] + (seg_len - 1) / 2, (seg_len - 1) / 2
+    t = (pos - mid) / half
+    recon = sum(coeffs[0, j] * t**j for j in range(3))
+    assert_allclose(recon, y[0], rtol=1e-3, atol=1e-5)
+
+
+# ------------------------------------------------------------------ qsgd
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nb=st.integers(1, 6),
+    bucket=st.sampled_from([16, 64, 128]),
+    bits=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qsgd_kernel_matches_ref(nb, bucket, bits, seed):
+    rng = np.random.default_rng(seed)
+    n = nb * bucket
+    values = rand(rng, n)
+    randoms = rng.random(n).astype(np.float32)
+    levels_k, signs_k, maxs_k = K_qsgd.qsgd_quantize(values, randoms, bucket, bits)
+    maxs_ref = np.abs(values.reshape(nb, bucket)).max(axis=1)
+    per_elem_max = np.repeat(maxs_ref, bucket)
+    levels_r, signs_r = ref.qsgd_quantize(values, randoms, per_elem_max, bits)
+    assert_allclose(np.asarray(maxs_k), maxs_ref, rtol=1e-6)
+    np.testing.assert_array_equal(np.asarray(levels_k), np.asarray(levels_r))
+    np.testing.assert_array_equal(np.asarray(signs_k), np.asarray(signs_r))
+
+
+def test_qsgd_unbiased_reconstruction():
+    # E[level/s * max * sign] = value across the random draw
+    n, bucket, bits = 128, 128, 4
+    rng = np.random.default_rng(3)
+    values = rand(rng, n)
+    s = 2**bits - 1
+    acc = np.zeros(n)
+    trials = 300
+    for _ in range(trials):
+        randoms = rng.random(n).astype(np.float32)
+        levels, signs, maxs = K_qsgd.qsgd_quantize(values, randoms, bucket, bits)
+        acc += np.asarray(levels) / s * maxs[0] * np.asarray(signs)
+    est = acc / trials
+    err = np.abs(est - values).max() / np.abs(values).max()
+    assert err < 0.1, err

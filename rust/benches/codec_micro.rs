@@ -1,0 +1,80 @@
+//! Codec microbenchmarks: throughput of every index/value codec and the
+//! substrate (bit I/O, hashing, top-r selection). This is the §Perf
+//! profiling driver — not tied to one paper figure.
+
+use deepreduce::compress::{index_by_name, value_by_name};
+use deepreduce::sparsify::top_r_indices;
+use deepreduce::util::benchkit::Bench;
+use deepreduce::util::bitio::BitWriter;
+use deepreduce::util::hashkit::HashFamily;
+use deepreduce::util::prng::Rng;
+use deepreduce::util::testkit::{gradient_like, sorted_support};
+
+fn main() {
+    let mut bench = Bench::new();
+    let mut rng = Rng::new(1);
+
+    // ---- substrate ----
+    let n = 1 << 20;
+    bench.run_items("prng/xoshiro u64", n as u64, {
+        let mut r = Rng::new(2);
+        move || {
+            let mut acc = 0u64;
+            for _ in 0..n {
+                acc = acc.wrapping_add(r.next_u64());
+            }
+            std::hint::black_box(acc);
+        }
+    });
+    let hf = HashFamily::new(10, 1 << 20, 3);
+    bench.run_items("hashkit/10-hash membership probe", n as u64, move || {
+        let mut acc = 0u64;
+        for i in 0..n as u64 {
+            acc = acc.wrapping_add(hf.hash((i % 10) as usize, i));
+        }
+        std::hint::black_box(acc);
+    });
+    bench.run_items("bitio/write 8-bit chunks", n as u64, move || {
+        let mut w = BitWriter::with_capacity(n);
+        for i in 0..n as u64 {
+            w.write_bits(i & 0xFF, 8);
+        }
+        std::hint::black_box(w.finish());
+    });
+
+    // ---- sparsification ----
+    let d = 1 << 20;
+    let g = gradient_like(&mut rng, d);
+    bench.run_items("topr/quickselect 1% of 1M", d as u64, || {
+        std::hint::black_box(top_r_indices(std::hint::black_box(&g), d / 100));
+    });
+
+    // ---- index codecs on a realistic support ----
+    let dd = 262_144;
+    let support = sorted_support(&mut rng, dd, dd / 100);
+    for name in ["raw", "bitmap", "rle", "huffman", "delta_varint", "bloom_p0", "bloom_p2"] {
+        let codec = index_by_name(name, 0.001, 5).unwrap();
+        let enc = codec.encode(dd, &support);
+        bench.run_items(&format!("index/{name} encode (r={})", support.len()), support.len() as u64, || {
+            std::hint::black_box(codec.encode(dd, std::hint::black_box(&support)));
+        });
+        bench.run_items(&format!("index/{name} decode"), support.len() as u64, || {
+            std::hint::black_box(codec.decode(dd, std::hint::black_box(&enc.bytes)).unwrap());
+        });
+    }
+
+    // ---- value codecs ----
+    let values = gradient_like(&mut rng, 65_536);
+    let bytes = (values.len() * 4) as u64;
+    for name in ["raw", "fp16", "deflate", "zstd", "qsgd", "fitpoly", "fitdexp", "sketch_huff"] {
+        let codec = value_by_name(name, f64::NAN, 5).unwrap();
+        let enc = codec.encode(&values);
+        bench.run_bytes(&format!("value/{name} encode (64k f32)"), bytes, || {
+            std::hint::black_box(codec.encode(std::hint::black_box(&values)));
+        });
+        bench.run_bytes(&format!("value/{name} decode"), bytes, || {
+            std::hint::black_box(codec.decode(std::hint::black_box(&enc.bytes), values.len()).unwrap());
+        });
+    }
+    println!("\ncodec_micro done: {} measurements", bench.results().len());
+}

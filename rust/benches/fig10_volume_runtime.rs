@@ -1,0 +1,78 @@
+//! Fig 10: (a) data-volume split into values vs indices for DeepReduce
+//! instantiations + SKCompress on the Top-1% of a conv gradient
+//! (d = 36864); (b) encode+decode wall-clock per method (log scale in
+//! the paper — here a table with absolute times).
+
+use deepreduce::compress::{index_by_name, value_by_name, DeepReduce};
+use deepreduce::sparsify::{Sparsifier, TopK};
+use deepreduce::util::benchkit::{fmt_duration, Bench, Table};
+use deepreduce::util::prng::Rng;
+use deepreduce::util::testkit::gradient_like;
+
+fn main() {
+    let d = 36_864;
+    let mut rng = Rng::new(10);
+    let grad = gradient_like(&mut rng, d);
+    let mut topk = TopK::new(0.01);
+    let sparse = topk.sparsify(&grad);
+    let kv = sparse.kv_wire_bytes();
+    println!("gradient d={d}, Top-1% r={} (kv baseline {kv} B)", sparse.nnz());
+
+    let methods: Vec<(&str, &str, &str, f64)> = vec![
+        ("Top-r (raw kv)", "raw", "raw", f64::NAN),
+        ("DR[RLE | ∅]", "rle", "raw", f64::NAN),
+        ("DR[Huffman | ∅]", "huffman", "raw", f64::NAN),
+        ("DR[BF-P0 | ∅]", "bloom_p0", "raw", 0.001),
+        ("DR[BF-P2 | ∅]", "bloom_p2", "raw", 0.001),
+        ("DR[∅ | Deflate]", "raw", "deflate", f64::NAN),
+        ("DR[∅ | QSGD-7b]", "raw", "qsgd", f64::NAN),
+        ("DR[∅ | Fit-Poly]", "raw", "fitpoly", f64::NAN),
+        ("DR[∅ | Fit-DExp]", "raw", "fitdexp", f64::NAN),
+        ("DR[BF-P2 | Fit-Poly]", "bloom_p2", "fitpoly", 0.001),
+        ("SKCompress", "delta_huffman", "sketch_huff", f64::NAN),
+    ];
+
+    let mut vol = Table::new(
+        "Fig 10a — volume split (bytes)",
+        &["method", "index", "values", "reorder", "total", "vs Top-r kv"],
+    );
+    let mut runtime = Table::new(
+        "Fig 10b — encode / decode wall-clock",
+        &["method", "encode", "decode", "total"],
+    );
+    let mut bench = Bench::new();
+    for (label, idx, val, fpr) in methods {
+        let dr = DeepReduce::new(
+            index_by_name(idx, fpr, 3).unwrap(),
+            value_by_name(val, f64::NAN, 3).unwrap(),
+        );
+        let c = dr.encode(&sparse, Some(&grad));
+        let b = c.breakdown();
+        vol.row(&[
+            label.to_string(),
+            b.index_bytes.to_string(),
+            b.value_bytes.to_string(),
+            b.reorder_bytes.to_string(),
+            b.total().to_string(),
+            format!("{:.3}", b.total() as f64 / kv as f64),
+        ]);
+        let enc = bench.run(&format!("{label} encode"), || {
+            std::hint::black_box(dr.encode(std::hint::black_box(&sparse), Some(&grad)));
+        });
+        let enc_t = enc.median_s();
+        let dec = bench.run(&format!("{label} decode"), || {
+            std::hint::black_box(dr.decode(std::hint::black_box(&c)).unwrap());
+        });
+        let dec_t = dec.median_s();
+        runtime.row(&[
+            label.to_string(),
+            fmt_duration(enc_t),
+            fmt_duration(dec_t),
+            fmt_duration(enc_t + dec_t),
+        ]);
+    }
+    vol.print();
+    runtime.print();
+    println!("(paper shape: every DR row below Top-r kv; QSGD fastest of the");
+    println!(" lossy coders; fit-based methods trade runtime for volume)");
+}

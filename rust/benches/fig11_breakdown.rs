@@ -1,0 +1,107 @@
+//! Fig 11: per-iteration time breakdown (fwd/bwd compute, encode/decode,
+//! communication) for NCF training at 100 Mbps / 1 Gbps / 10 Gbps links,
+//! fp32 and fp16. Compute + codec are measured on this testbed;
+//! communication time is modelled from exact wire bytes (DESIGN.md §4).
+//! Paper shape: compression wins at low bandwidth, loses its edge as the
+//! link gets faster.
+
+use deepreduce::coordinator::{CompressionSpec, ModelKind};
+use deepreduce::simnet::{allgather_time, allreduce_time, IterBreakdown, Link};
+use deepreduce::util::benchkit::Table;
+use deepreduce::xp;
+
+fn main() {
+    if !xp::need("ncf") {
+        return;
+    }
+    let steps = 15;
+    let workers = 4;
+
+    // measured: dense baseline and two DR variants
+    let base = xp::run(ModelKind::Ncf, "ncf", steps, workers, None).unwrap();
+    let dr32 = xp::run(
+        ModelKind::Ncf,
+        "ncf",
+        steps,
+        workers,
+        Some(CompressionSpec::identity("bloom_p0", 0.6, "qsgd", 7.0)),
+    )
+    .unwrap();
+    let dr16 = xp::run(
+        ModelKind::Ncf,
+        "ncf",
+        steps,
+        workers,
+        Some(CompressionSpec::identity("bloom_p0", 0.6, "fp16", f64::NAN)),
+    )
+    .unwrap();
+
+    let per_step = |r: &deepreduce::coordinator::TrainReport| {
+        (
+            r.total_compute_s() / steps as f64 / workers as f64, // per worker
+            (r.total_encode_s() + r.total_decode_s()) / steps as f64 / workers as f64,
+            r.total_bytes_per_worker() / steps as u64,
+        )
+    };
+    let (b_comp, _, b_bytes) = per_step(&base);
+    let (d32_comp, d32_codec, d32_bytes) = per_step(&dr32);
+    let (d16_comp, d16_codec, d16_bytes) = per_step(&dr16);
+
+    let mut table = Table::new(
+        "Fig 11 — NCF iteration time breakdown (modelled links)",
+        &["link", "method", "compute s", "codec s", "comm s", "total s", "speedup"],
+    );
+    for (lname, link) in
+        [("100Mbps", Link::mbps(100.0)), ("1Gbps", Link::gbps(1.0)), ("10Gbps", Link::gbps(10.0))]
+    {
+        let rows: Vec<(&str, IterBreakdown)> = vec![
+            (
+                "baseline fp32 (allreduce)",
+                IterBreakdown {
+                    compute_s: b_comp,
+                    codec_s: 0.0,
+                    comm_s: allreduce_time(b_bytes, workers, link),
+                },
+            ),
+            (
+                "baseline fp16 (allreduce)",
+                IterBreakdown {
+                    compute_s: b_comp,
+                    codec_s: 0.0,
+                    comm_s: allreduce_time(b_bytes / 2, workers, link),
+                },
+            ),
+            (
+                "DR[BF-P0|QSGD] fp32",
+                IterBreakdown {
+                    compute_s: d32_comp,
+                    codec_s: d32_codec,
+                    comm_s: allgather_time(d32_bytes, workers, link),
+                },
+            ),
+            (
+                "DR[BF-P0|fp16]",
+                IterBreakdown {
+                    compute_s: d16_comp,
+                    codec_s: d16_codec,
+                    comm_s: allgather_time(d16_bytes, workers, link),
+                },
+            ),
+        ];
+        let base_total = rows[0].1.total();
+        for (name, b) in rows {
+            table.row(&[
+                lname.to_string(),
+                name.to_string(),
+                format!("{:.4}", b.compute_s),
+                format!("{:.4}", b.codec_s),
+                format!("{:.4}", b.comm_s),
+                format!("{:.4}", b.total()),
+                format!("{:.2}x", base_total / b.total()),
+            ]);
+        }
+    }
+    table.print();
+    println!("(paper: gradient compression pays off only when comm/compute is");
+    println!(" high — i.e. the 100Mbps rows — consistent with §6.4)");
+}

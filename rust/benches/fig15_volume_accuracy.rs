@@ -1,0 +1,53 @@
+//! Fig 15 (appendix): data volume vs accuracy scatter for the Bloom
+//! policies (incl. naive) against Top-r and the baseline, on the
+//! ResNet-20 stand-in (a) and a DenseNet40-like second config with
+//! Top-0.5% (b).
+
+use deepreduce::coordinator::ModelKind;
+use deepreduce::util::benchkit::Table;
+use deepreduce::xp;
+
+fn main() {
+    if !xp::need("mlp") {
+        return;
+    }
+    let steps = xp::FIG_STEPS;
+    let workers = xp::FIG_WORKERS;
+    let fpr = 0.001;
+
+    for (panel, ratio) in [("(a) ResNet-20 stand-in, Top-1%", 0.01), ("(b) DenseNet40 stand-in, Top-0.5%", 0.005)]
+    {
+        let mut table = Table::new(
+            &format!("Fig 15 {panel} — volume vs accuracy (FPR={fpr})"),
+            &["method", "rel volume", "final acc"],
+        );
+        let base = xp::run(ModelKind::Mlp, "mlp", steps, workers, None).unwrap();
+        table.row(&["baseline".into(), xp::pct(1.0), format!("{:.4}", base.final_aux(10))]);
+        let plain =
+            xp::run(ModelKind::Mlp, "mlp", steps, workers, Some(xp::dr_index(ratio, "raw", f64::NAN)))
+                .unwrap();
+        table.row(&[
+            format!("Top-{}%", ratio * 100.0),
+            xp::pct(plain.relative_volume()),
+            format!("{:.4}", plain.final_aux(10)),
+        ]);
+        for policy in ["bloom_naive", "bloom_p0", "bloom_p1", "bloom_p2"] {
+            let r = xp::run(
+                ModelKind::Mlp,
+                "mlp",
+                steps,
+                workers,
+                Some(xp::dr_index(ratio, policy, fpr)),
+            )
+            .unwrap();
+            table.row(&[
+                policy.to_string(),
+                xp::pct(r.relative_volume()),
+                format!("{:.4}", r.final_aux(10)),
+            ]);
+        }
+        table.print();
+    }
+    println!("(paper shape: P0/P2 sit at Top-r accuracy with less volume;");
+    println!(" naive falls off the accuracy axis)");
+}

@@ -1,0 +1,57 @@
+//! Fig 6 (a,b,c): effect of the Bloom-filter FPR on accuracy and data
+//! volume for policies P0/P1/P2, with Top-r and Random-r sparsified
+//! inputs (ResNet-20/CIFAR-10 stand-in, see DESIGN.md §4).
+//!
+//! Paper shape to reproduce:
+//!   P0: accuracy flat in FPR; volume GROWS with FPR (extra positives)
+//!   P1: volume shrinks with FPR; accuracy DROPS (random support)
+//!   P2: volume shrinks with FPR; accuracy nearly flat
+
+use deepreduce::coordinator::ModelKind;
+use deepreduce::util::benchkit::Table;
+use deepreduce::xp;
+
+fn main() {
+    if !xp::need("mlp") {
+        return;
+    }
+    let steps = xp::FIG_STEPS;
+    let workers = xp::FIG_WORKERS;
+    let ratio = 0.01;
+    let fprs = [0.0001, 0.001, 0.01, 0.1];
+
+    // reference rows
+    let base = xp::run(ModelKind::Mlp, "mlp", steps, workers, None).unwrap();
+    eprintln!("baseline acc {:.4}", base.final_aux(10));
+
+    for sparsifier in ["topk", "randomk"] {
+        for policy in ["bloom_p0", "bloom_p1", "bloom_p2"] {
+            let mut table = Table::new(
+                &format!("Fig 6 — {policy} on {sparsifier}-1% ({steps} steps, {workers} workers)"),
+                &["FPR", "final acc", "rel volume", "acc vs baseline"],
+            );
+            // the plain sparsifier row (FPR = n/a)
+            let mut plain = xp::dr_index(ratio, "raw", f64::NAN);
+            plain.sparsifier = sparsifier.into();
+            let plain_r = xp::run(ModelKind::Mlp, "mlp", steps, workers, Some(plain)).unwrap();
+            table.row(&[
+                "none (raw idx)".into(),
+                format!("{:.4}", plain_r.final_aux(10)),
+                xp::pct(plain_r.relative_volume()),
+                format!("{:+.4}", plain_r.final_aux(10) - base.final_aux(10)),
+            ]);
+            for &fpr in &fprs {
+                let mut spec = xp::dr_index(ratio, policy, fpr);
+                spec.sparsifier = sparsifier.into();
+                let r = xp::run(ModelKind::Mlp, "mlp", steps, workers, Some(spec)).unwrap();
+                table.row(&[
+                    format!("{fpr}"),
+                    format!("{:.4}", r.final_aux(10)),
+                    xp::pct(r.relative_volume()),
+                    format!("{:+.4}", r.final_aux(10) - base.final_aux(10)),
+                ]);
+            }
+            table.print();
+        }
+    }
+}

@@ -1,0 +1,69 @@
+//! Fig 7: convergence timeline of the Bloom policies vs the baseline,
+//! plain Top-r, and BF-naïve (FPR = 0.001). Paper shape: all policies
+//! reach baseline accuracy; naïve suffers badly.
+
+use deepreduce::coordinator::ModelKind;
+use deepreduce::util::benchkit::Table;
+use deepreduce::xp;
+
+fn main() {
+    if !xp::need("mlp") {
+        return;
+    }
+    let steps = 80;
+    let workers = xp::FIG_WORKERS;
+    let ratio = 0.01;
+    let fpr = 0.001;
+
+    let mut runs = vec![(
+        "baseline".to_string(),
+        xp::run(ModelKind::Mlp, "mlp", steps, workers, None).unwrap(),
+    )];
+    runs.push((
+        "Top-1%".into(),
+        xp::run(ModelKind::Mlp, "mlp", steps, workers, Some(xp::dr_index(ratio, "raw", f64::NAN)))
+            .unwrap(),
+    ));
+    for policy in ["bloom_naive", "bloom_p0", "bloom_p1", "bloom_p2"] {
+        runs.push((
+            policy.to_string(),
+            xp::run(
+                ModelKind::Mlp,
+                "mlp",
+                steps,
+                workers,
+                Some(xp::dr_index(ratio, policy, fpr)),
+            )
+            .unwrap(),
+        ));
+    }
+
+    let headers: Vec<String> =
+        std::iter::once("step".to_string()).chain(runs.iter().map(|(n, _)| n.clone())).collect();
+    let headers_ref: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut table =
+        Table::new(&format!("Fig 7 — accuracy timeline (FPR={fpr})"), &headers_ref);
+    let stride = (steps / 12).max(1);
+    for s in (0..steps).step_by(stride) {
+        let mut row = vec![s.to_string()];
+        for (_, r) in &runs {
+            row.push(format!("{:.3}", r.steps[s].aux));
+        }
+        table.row(&row);
+    }
+    table.print();
+
+    let mut summary = Table::new(
+        "Fig 7 — endpoint summary",
+        &["method", "final acc", "rel volume"],
+    );
+    for (n, r) in &runs {
+        summary.row(&[
+            n.clone(),
+            format!("{:.4}", r.final_aux(10)),
+            xp::pct(r.relative_volume()),
+        ]);
+    }
+    summary.print();
+    println!("(expected: bloom_naive well below the others; P2 volume < Top-1%)");
+}

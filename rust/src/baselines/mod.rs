@@ -1,0 +1,72 @@
+//! State-of-the-art baselines the paper compares against (§6.3, §7):
+//! SketchML (Jiang et al., SIGMOD'18), SKCompress (Jiang et al., VLDB J.
+//! '20) and 3LC (Lim et al., SysML'19).
+//!
+//! Per the paper, SketchML/SKCompress "can be viewed as special cases of
+//! DeepReduce": we implement their value stage as a [`ValueCodec`]
+//! (quantile-bucket quantization ± Huffman) and their index stage as an
+//! [`IndexCodec`] (delta + varint ± Huffman), then compose them through
+//! the same framework. 3LC is a dense-tensor compressor and keeps its
+//! own interface.
+
+mod sketch;
+mod threelc;
+
+pub use sketch::{DeltaHuffmanIndex, QuantileBucketValue};
+pub use threelc::ThreeLC;
+
+use crate::compress::DeepReduce;
+
+/// SketchML: quantile-bucket values (no Huffman), delta+varint keys.
+pub fn sketchml(buckets: usize) -> DeepReduce {
+    DeepReduce::new(
+        Box::new(crate::compress::index::DeltaVarint),
+        Box::new(QuantileBucketValue::new(buckets, false)),
+    )
+}
+
+/// SKCompress: SketchML + Huffman on bucket ids and on delta-key bytes.
+pub fn skcompress(buckets: usize) -> DeepReduce {
+    DeepReduce::new(
+        Box::new(DeltaHuffmanIndex),
+        Box::new(QuantileBucketValue::new(buckets, true)),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsify::{Sparsifier, TopK};
+    use crate::util::prng::Rng;
+    use crate::util::stats::rel_l2_err;
+    use crate::util::testkit::gradient_like;
+
+    #[test]
+    fn sketchml_and_skcompress_roundtrip_with_bounded_error() {
+        let mut rng = Rng::new(400);
+        let g = gradient_like(&mut rng, 20_000);
+        let mut topk = TopK::new(0.01);
+        let sp = topk.sparsify(&g);
+        for (name, dr) in [("sketchml", sketchml(64)), ("skcompress", skcompress(64))] {
+            let c = dr.encode(&sp, Some(&g));
+            let back = dr.decode(&c).unwrap();
+            assert_eq!(back.indices(), sp.indices(), "{name}: support must be lossless");
+            let err = rel_l2_err(sp.values(), back.values());
+            assert!(err < 0.1, "{name}: rel err {err}");
+        }
+    }
+
+    #[test]
+    fn skcompress_smaller_than_sketchml() {
+        // large enough that the two 256-byte Huffman tables amortize
+        let mut rng = Rng::new(401);
+        let g = gradient_like(&mut rng, 400_000);
+        let mut topk = TopK::new(0.02);
+        let sp = topk.sparsify(&g);
+        let a = sketchml(64).encode(&sp, Some(&g)).wire_bytes();
+        let b = skcompress(64).encode(&sp, Some(&g)).wire_bytes();
+        assert!(b < a, "skcompress {b} vs sketchml {a}");
+        // both far below raw kv
+        assert!(b < sp.kv_wire_bytes() / 2);
+    }
+}

@@ -1,0 +1,253 @@
+//! SketchML / SKCompress building blocks.
+//!
+//! * [`QuantileBucketValue`] — the SketchML value stage: a non-uniform
+//!   quantile sketch maps each value to one of `q` buckets; the wire
+//!   carries the bucket centroids and per-value bucket ids (bit-packed,
+//!   or Huffman-coded for the SKCompress variant). Per the paper (§6.3)
+//!   we omit the grouped MinMaxSketch and positive/negative separation,
+//!   "as they have only minor effects".
+//! * [`DeltaHuffmanIndex`] — the SKCompress index stage: delta encoding
+//!   to varint bytes, then Huffman over those bytes (table on the wire).
+
+use crate::compress::{IndexCodec, IndexEncoding, ValueCodec, ValueEncoding};
+use crate::util::bitio::{BitReader, BitWriter};
+use crate::util::huffman::{byte_freqs, Huffman};
+use crate::util::varint;
+
+/// SketchML quantile-bucket value quantization.
+pub struct QuantileBucketValue {
+    pub buckets: usize,
+    pub huffman: bool,
+}
+
+impl QuantileBucketValue {
+    pub fn new(buckets: usize, huffman: bool) -> Self {
+        assert!((2..=256).contains(&buckets), "buckets in 2..=256");
+        Self { buckets, huffman }
+    }
+
+    fn bits(&self) -> u32 {
+        usize::BITS - (self.buckets - 1).leading_zeros()
+    }
+}
+
+impl ValueCodec for QuantileBucketValue {
+    fn name(&self) -> &'static str {
+        if self.huffman {
+            "sketch_huff"
+        } else {
+            "sketch"
+        }
+    }
+
+    fn encode(&self, values: &[f32]) -> ValueEncoding {
+        let n = values.len();
+        let q = self.buckets.min(n.max(1));
+        // exact quantile boundaries on a sorted copy (the paper's
+        // streaming quantile sketch approximates these)
+        let mut sorted: Vec<f32> = values.to_vec();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal));
+        let mut bounds = Vec::with_capacity(q + 1);
+        for i in 0..=q {
+            let pos = (i * n.saturating_sub(1)) / q.max(1);
+            bounds.push(sorted.get(pos).copied().unwrap_or(0.0));
+        }
+        // bucket ids + centroids
+        let mut ids = Vec::with_capacity(n);
+        let mut sums = vec![0.0f64; q];
+        let mut counts = vec![0u64; q];
+        for &v in values {
+            // rightmost bucket whose lower bound <= v
+            let mut b = match bounds[1..q].binary_search_by(|p| p.partial_cmp(&v).unwrap()) {
+                Ok(i) => i + 1,
+                Err(i) => i,
+            };
+            if b >= q {
+                b = q - 1;
+            }
+            ids.push(b as u8);
+            sums[b] += v as f64;
+            counts[b] += 1;
+        }
+        let centroids: Vec<f32> = (0..q)
+            .map(|b| if counts[b] > 0 { (sums[b] / counts[b] as f64) as f32 } else { 0.0 })
+            .collect();
+
+        let mut bytes = Vec::new();
+        varint::write_u64(&mut bytes, q as u64);
+        for &c in &centroids {
+            bytes.extend_from_slice(&c.to_le_bytes());
+        }
+        if self.huffman {
+            let freqs = byte_freqs(&ids);
+            let h = Huffman::from_freqs(&freqs).expect("n>0 ensured by caller paths");
+            bytes.extend_from_slice(&h.table_bytes());
+            bytes.extend_from_slice(&h.encode(&ids));
+        } else {
+            let bits = self.bits();
+            let mut w = BitWriter::with_capacity(n * bits as usize / 8 + 8);
+            for &id in &ids {
+                w.write_bits(id as u64, bits);
+            }
+            bytes.extend_from_slice(&w.finish());
+        }
+        ValueEncoding { bytes, perm: None }
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let mut pos = 0usize;
+        let q = varint::read_u64(bytes, &mut pos)? as usize;
+        anyhow::ensure!(q >= 1 && q <= 256, "bad bucket count {q}");
+        anyhow::ensure!(pos + q * 4 <= bytes.len(), "centroids truncated");
+        let mut centroids = Vec::with_capacity(q);
+        for _ in 0..q {
+            centroids.push(f32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()));
+            pos += 4;
+        }
+        let ids: Vec<u8> = if self.huffman {
+            anyhow::ensure!(pos + 256 <= bytes.len(), "huffman table truncated");
+            let mut lens = [0u8; 256];
+            lens.copy_from_slice(&bytes[pos..pos + 256]);
+            pos += 256;
+            let h = Huffman::from_lens(lens).map_err(|e| anyhow::anyhow!("{e}"))?;
+            h.decode(&bytes[pos..], n).map_err(|e| anyhow::anyhow!("{e}"))?
+        } else {
+            let bits = self.bits();
+            let mut r = BitReader::new(&bytes[pos..]);
+            (0..n).map(|_| r.read_bits(bits).map(|v| v as u8)).collect::<Result<_, _>>()?
+        };
+        ids.iter()
+            .map(|&id| {
+                anyhow::ensure!((id as usize) < q, "bucket id out of range");
+                Ok(centroids[id as usize])
+            })
+            .collect()
+    }
+}
+
+/// SKCompress index stage: deltas → varint bytes → Huffman.
+pub struct DeltaHuffmanIndex;
+
+impl IndexCodec for DeltaHuffmanIndex {
+    fn name(&self) -> &'static str {
+        "delta_huffman"
+    }
+
+    fn encode(&self, _d: usize, support: &[u32]) -> IndexEncoding {
+        // delta + varint byte stream
+        let mut raw = Vec::with_capacity(support.len() * 2);
+        let mut prev = 0u64;
+        for (k, &i) in support.iter().enumerate() {
+            let delta = if k == 0 { i as u64 } else { i as u64 - prev };
+            varint::write_u64(&mut raw, delta);
+            prev = i as u64;
+        }
+        let mut bytes = Vec::new();
+        varint::write_u64(&mut bytes, support.len() as u64);
+        varint::write_u64(&mut bytes, raw.len() as u64);
+        if raw.is_empty() {
+            return IndexEncoding { bytes, effective: support.to_vec() };
+        }
+        let h = Huffman::from_freqs(&byte_freqs(&raw)).expect("nonempty");
+        bytes.extend_from_slice(&h.table_bytes());
+        bytes.extend_from_slice(&h.encode(&raw));
+        IndexEncoding { bytes, effective: support.to_vec() }
+    }
+
+    fn decode(&self, d: usize, bytes: &[u8]) -> anyhow::Result<Vec<u32>> {
+        let mut pos = 0usize;
+        let n = varint::read_u64(bytes, &mut pos)? as usize;
+        let raw_len = varint::read_u64(bytes, &mut pos)? as usize;
+        if raw_len == 0 {
+            anyhow::ensure!(n == 0, "nonzero count with empty payload");
+            return Ok(Vec::new());
+        }
+        anyhow::ensure!(pos + 256 <= bytes.len(), "huffman table truncated");
+        let mut lens = [0u8; 256];
+        lens.copy_from_slice(&bytes[pos..pos + 256]);
+        pos += 256;
+        let h = Huffman::from_lens(lens).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let raw = h.decode(&bytes[pos..], raw_len).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut out = Vec::with_capacity(n);
+        let mut rpos = 0usize;
+        let mut acc = 0u64;
+        for k in 0..n {
+            let delta = varint::read_u64(&raw, &mut rpos)?;
+            acc = if k == 0 { delta } else { acc + delta };
+            anyhow::ensure!((acc as usize) < d, "index out of range");
+            out.push(acc as u32);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::{IndexCodec, ValueCodec};
+    use crate::util::prng::Rng;
+    use crate::util::stats::rel_l2_err;
+    use crate::util::testkit::{forall, gradient_like, sorted_support};
+
+    #[test]
+    fn quantile_buckets_roundtrip_error_drops_with_buckets() {
+        let mut rng = Rng::new(500);
+        let values = gradient_like(&mut rng, 5000);
+        let mut errs = Vec::new();
+        for q in [8usize, 64, 256] {
+            let codec = QuantileBucketValue::new(q, false);
+            let enc = codec.encode(&values);
+            let out = codec.decode(&enc.bytes, values.len()).unwrap();
+            errs.push(rel_l2_err(&values, &out));
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+        assert!(errs[2] < 0.2, "{errs:?}");
+    }
+
+    #[test]
+    fn huffman_variant_matches_plain_decode() {
+        let mut rng = Rng::new(501);
+        let values = gradient_like(&mut rng, 3000);
+        let plain = QuantileBucketValue::new(64, false);
+        let huff = QuantileBucketValue::new(64, true);
+        let a = plain.decode(&plain.encode(&values).bytes, values.len()).unwrap();
+        let b = huff.decode(&huff.encode(&values).bytes, values.len()).unwrap();
+        assert_eq!(a, b, "same buckets -> same decode");
+    }
+
+    #[test]
+    fn delta_huffman_roundtrip() {
+        forall(
+            "delta-huffman",
+            30,
+            5000,
+            |rng, size| {
+                let d = 1 + rng.below(size as u64) as usize;
+                let r = rng.below(d as u64 + 1) as usize;
+                (d, sorted_support(rng, d, r))
+            },
+            |(d, support)| {
+                let enc = DeltaHuffmanIndex.encode(*d, support);
+                let dec = DeltaHuffmanIndex.decode(*d, &enc.bytes).map_err(|e| e.to_string())?;
+                if dec == *support {
+                    Ok(())
+                } else {
+                    Err("mismatch".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn bucket_ids_bitpacked_volume() {
+        // 64 buckets -> 6 bits/value + 64*4 centroid bytes
+        let values = vec![0.5f32; 10_000];
+        let codec = QuantileBucketValue::new(64, false);
+        let enc = codec.encode(&values);
+        let expected = 1 + 64 * 4 + (10_000usize * 6).div_ceil(8);
+        assert!(enc.bytes.len() <= expected + 8, "{} vs {expected}", enc.bytes.len());
+    }
+}

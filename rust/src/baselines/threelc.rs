@@ -1,0 +1,183 @@
+//! 3LC (Lim, Andersen, Kaminsky — SysML'19): a dense-tensor traffic
+//! compressor combining
+//!  1. **3-value quantization with a sparsity multiplier s**: with
+//!     M = max|g|, each element is quantized to round(v/(s·M)) clamped
+//!     to {−1,0,1} and dequantized as v̂ = trit·s·M. Larger s widens the
+//!     zero bin ⇒ more zeros (sparsity) and more error, compensated by
+//!     error feedback upstream.
+//!  2. **Quartic (base-3⁵) encoding**: 5 trits per byte (3⁵ = 243 ≤ 256).
+//!  3. **Zero-run encoding (ZRE)**: runs of the all-zero byte (121) are
+//!     folded into the spare byte values 243–255 (run lengths 2–14).
+//!
+//! 3LC is applied to the *dense* gradient (it is a stand-alone method in
+//! the paper's Fig 9 comparison), so it has its own dense interface.
+
+use crate::util::varint;
+
+pub struct ThreeLC {
+    /// sparsity multiplier s ∈ [1, 2); the paper's Fig 9 uses s = 1
+    pub s: f32,
+}
+
+impl ThreeLC {
+    pub fn new(s: f32) -> Self {
+        assert!((1.0..2.0).contains(&s), "3LC sparsity multiplier in [1,2)");
+        Self { s }
+    }
+
+    pub fn name(&self) -> &'static str {
+        "3lc"
+    }
+
+    /// Quantize + encode a dense gradient.
+    pub fn encode(&self, grad: &[f32]) -> Vec<u8> {
+        let m = grad.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        let scale = if m > 0.0 { 1.0 / (self.s * m) } else { 0.0 };
+        // trits in {0,1,2} = value+1
+        let mut out = Vec::with_capacity(grad.len() / 4 + 16);
+        varint::write_u64(&mut out, grad.len() as u64);
+        out.extend_from_slice(&m.to_le_bytes());
+        let mut bytes = Vec::with_capacity(grad.len() / 5 + 1);
+        for chunk in grad.chunks(5) {
+            let mut b = 0u16;
+            for (k, &v) in chunk.iter().enumerate() {
+                let t = (v * scale).round().clamp(-1.0, 1.0) as i8 + 1;
+                b += (t as u16) * POW3[k];
+            }
+            debug_assert!(b < 243);
+            bytes.push(b as u8);
+        }
+        // zero-run encoding over the quartic bytes
+        let zero_byte = 121u8; // trits (1,1,1,1,1)
+        let mut i = 0usize;
+        while i < bytes.len() {
+            let b = bytes[i];
+            if b == zero_byte {
+                let mut run = 1usize;
+                while i + run < bytes.len() && bytes[i + run] == zero_byte && run < 14 {
+                    run += 1;
+                }
+                if run >= 2 {
+                    out.push(241 + run as u8); // 243..=255 for runs 2..=14
+                } else {
+                    out.push(zero_byte);
+                }
+                i += run;
+            } else {
+                out.push(b);
+                i += 1;
+            }
+        }
+        out
+    }
+
+    /// Decode to the dense gradient approximation.
+    pub fn decode(&self, bytes: &[u8]) -> anyhow::Result<Vec<f32>> {
+        let mut pos = 0usize;
+        let d = varint::read_u64(bytes, &mut pos)? as usize;
+        anyhow::ensure!(pos + 4 <= bytes.len(), "3lc header truncated");
+        let m = f32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap());
+        pos += 4;
+        let step = self.s * m;
+        let zero_byte = 121u8;
+        let mut quartic = Vec::with_capacity(d / 5 + 1);
+        for &b in &bytes[pos..] {
+            if b >= 243 {
+                let run = (b - 241) as usize;
+                quartic.extend(std::iter::repeat_n(zero_byte, run));
+            } else {
+                quartic.push(b);
+            }
+        }
+        anyhow::ensure!(quartic.len() == d.div_ceil(5), "3lc payload length mismatch");
+        let mut out = Vec::with_capacity(d);
+        'outer: for &b in &quartic {
+            let mut v = b as u16;
+            for _ in 0..5 {
+                let t = (v % 3) as i32 - 1;
+                out.push(t as f32 * step);
+                v /= 3;
+                if out.len() == d {
+                    break 'outer;
+                }
+            }
+        }
+        anyhow::ensure!(out.len() == d, "3lc decoded length mismatch");
+        Ok(out)
+    }
+}
+
+const POW3: [u16; 5] = [1, 3, 9, 27, 81];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip_quantized_values() {
+        let mut rng = Rng::new(600);
+        let g: Vec<f32> = (0..10_007).map(|_| rng.next_gaussian() as f32 * 0.1).collect();
+        let c = ThreeLC::new(1.0);
+        let enc = c.encode(&g);
+        let dec = c.decode(&enc).unwrap();
+        assert_eq!(dec.len(), g.len());
+        let m = g.iter().fold(0.0f32, |a, &v| a.max(v.abs()));
+        for (&orig, &back) in g.iter().zip(&dec) {
+            // quantization to {-sM, 0, sM} with s=1: error <= M/2
+            assert!((orig - back).abs() <= m / 2.0 + 1e-6);
+            // decoded values are exactly one of the three levels
+            assert!(back == 0.0 || (back.abs() - m).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn compresses_sparse_gradients_hard() {
+        // gradient with many small values -> mostly zero trits -> ZRE wins
+        let mut rng = Rng::new(601);
+        let g: Vec<f32> = (0..50_000)
+            .map(|_| {
+                if rng.next_f64() < 0.02 {
+                    rng.next_gaussian() as f32
+                } else {
+                    rng.next_gaussian() as f32 * 0.001
+                }
+            })
+            .collect();
+        let c = ThreeLC::new(1.0);
+        let enc = c.encode(&g);
+        // paper: 3LC reaches ~39x on such tensors; we assert > 20x
+        assert!(enc.len() * 20 < g.len() * 4, "3lc size {} vs raw {}", enc.len(), g.len() * 4);
+        let dec = c.decode(&enc).unwrap();
+        assert_eq!(dec.len(), g.len());
+    }
+
+    #[test]
+    fn higher_s_more_zeros() {
+        let mut rng = Rng::new(602);
+        let g: Vec<f32> = (0..5000).map(|_| rng.next_gaussian() as f32).collect();
+        let z1 = ThreeLC::new(1.0).decode(&ThreeLC::new(1.0).encode(&g)).unwrap();
+        let z2 = ThreeLC::new(1.9).decode(&ThreeLC::new(1.9).encode(&g)).unwrap();
+        let n1 = z1.iter().filter(|&&v| v == 0.0).count();
+        let n2 = z2.iter().filter(|&&v| v == 0.0).count();
+        assert!(n2 > n1, "s=1.9 zeros {n2} vs s=1.0 zeros {n1}");
+    }
+
+    #[test]
+    fn all_zero_input() {
+        let g = vec![0.0f32; 1000];
+        let c = ThreeLC::new(1.0);
+        let dec = c.decode(&c.encode(&g)).unwrap();
+        assert_eq!(dec, g);
+    }
+
+    #[test]
+    fn length_not_multiple_of_five() {
+        for d in [1usize, 4, 5, 6, 9, 11] {
+            let g: Vec<f32> = (0..d).map(|i| i as f32 - 2.0).collect();
+            let c = ThreeLC::new(1.0);
+            let dec = c.decode(&c.encode(&g)).unwrap();
+            assert_eq!(dec.len(), d);
+        }
+    }
+}

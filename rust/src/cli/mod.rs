@@ -1,0 +1,103 @@
+//! Hand-rolled CLI argument parsing (clap is unavailable offline).
+//!
+//! Grammar: `deepreduce <subcommand> [--key value]... [--flag]...`
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub subcommand: String,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> anyhow::Result<Self> {
+        let mut it = argv.into_iter();
+        let subcommand = it.next().unwrap_or_default();
+        let mut opts = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut pending: Option<String> = None;
+        for a in it {
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some(prev) = pending.take() {
+                    flags.push(prev);
+                }
+                if let Some((k, v)) = key.split_once('=') {
+                    opts.insert(k.to_string(), v.to_string());
+                } else {
+                    pending = Some(key.to_string());
+                }
+            } else if let Some(key) = pending.take() {
+                opts.insert(key, a);
+            } else {
+                anyhow::bail!("unexpected positional argument: {a}");
+            }
+        }
+        if let Some(prev) = pending {
+            flags.push(prev);
+        }
+        Ok(Self { subcommand, opts, flags })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> anyhow::Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => Ok(s.parse()?),
+        }
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> anyhow::Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => Ok(s.parse()?),
+        }
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn basic() {
+        let a = parse("train --model mlp --workers 8 --lr=0.1 --verbose");
+        assert_eq!(a.subcommand, "train");
+        assert_eq!(a.get("model"), Some("mlp"));
+        assert_eq!(a.get_usize("workers", 4).unwrap(), 8);
+        assert_eq!(a.get_f64("lr", 0.0).unwrap(), 0.1);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse("bench");
+        assert_eq!(a.get_usize("steps", 100).unwrap(), 100);
+        assert!(Args::parse(["x".into(), "oops".into()]).is_err());
+        let bad = parse("t --workers abc");
+        assert!(bad.get_usize("workers", 1).is_err());
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("train --ef");
+        assert!(a.flag("ef"));
+    }
+}

@@ -1,0 +1,122 @@
+//! Collective communication over an in-process, byte-counted transport.
+//!
+//! DeepReduce is oblivious to the topology (paper §3); we provide the two
+//! collectives the evaluation uses — **Allgather** (sparse payloads, what
+//! Horovod/NCCL use for variable-size tensors) and ring **Allreduce**
+//! (dense baseline) — plus a parameter-server exchange. The transport
+//! counts bytes exactly; wall-clock *network* time on a given link speed
+//! is modelled by [`crate::simnet`] (the testbed substitution described
+//! in DESIGN.md §4).
+
+mod ops;
+mod transport;
+
+pub use ops::{all_gather, all_reduce_ring, ps_exchange};
+pub use transport::{Endpoint, Network};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn allgather_collects_everyones_payload() {
+        let n = 4;
+        let net = Network::new(n);
+        let mut eps = net.endpoints();
+        let handles: Vec<_> = eps
+            .drain(..)
+            .map(|ep| {
+                thread::spawn(move || {
+                    let mine = vec![ep.rank() as u8; ep.rank() + 1];
+                    let all = all_gather(&ep, mine);
+                    (ep.rank(), all)
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rank, all) = h.join().unwrap();
+            assert_eq!(all.len(), n);
+            for (peer, blob) in all.iter().enumerate() {
+                assert_eq!(blob, &vec![peer as u8; peer + 1], "rank {rank} peer {peer}");
+            }
+        }
+        // wire accounting: each worker sends its blob to n-1 peers
+        let expect: u64 = (0..n).map(|r| ((r + 1) * (n - 1)) as u64).sum();
+        assert_eq!(net.total_bytes(), expect);
+    }
+
+    #[test]
+    fn ring_allreduce_sums_dense_tensors() {
+        let n = 4;
+        let d = 1030; // not divisible by n: exercises uneven chunks
+        let net = Network::new(n);
+        let mut eps = net.endpoints();
+        let handles: Vec<_> = eps
+            .drain(..)
+            .map(|ep| {
+                thread::spawn(move || {
+                    let mut x: Vec<f32> = (0..d).map(|i| (i * (ep.rank() + 1)) as f32).collect();
+                    all_reduce_ring(&ep, &mut x);
+                    x
+                })
+            })
+            .collect();
+        let results: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let factor: f32 = (1..=n as u32).sum::<u32>() as f32; // 1+2+3+4
+        for x in &results {
+            for (i, &v) in x.iter().enumerate() {
+                assert_eq!(v, i as f32 * factor);
+            }
+        }
+        // ring allreduce moves 2*(n-1)/n * payload per worker
+        let payload = (d * 4) as f64;
+        let expected = (2.0 * (n as f64 - 1.0) / n as f64 * payload * n as f64) as u64;
+        let got = net.total_bytes();
+        // chunk-boundary padding allows small deviation
+        assert!(
+            (got as f64 - expected as f64).abs() / (expected as f64) < 0.02,
+            "wire {got} vs model {expected}"
+        );
+    }
+
+    #[test]
+    fn ps_exchange_aggregates_and_broadcasts() {
+        let n = 3;
+        let net = Network::new(n);
+        let mut eps = net.endpoints();
+        let handles: Vec<_> = eps
+            .drain(..)
+            .map(|ep| {
+                thread::spawn(move || {
+                    let mine = vec![(ep.rank() + 1) as u8; 4];
+                    ps_exchange(&ep, mine, |blobs| {
+                        // server reduction: elementwise sum
+                        let mut acc = vec![0u8; 4];
+                        for b in blobs {
+                            for (a, &v) in acc.iter_mut().zip(b.iter()) {
+                                *a += v;
+                            }
+                        }
+                        acc
+                    })
+                })
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(h.join().unwrap(), vec![6u8; 4]); // 1+2+3
+        }
+    }
+
+    #[test]
+    fn single_worker_noop() {
+        let net = Network::new(1);
+        let ep = net.endpoints().pop().unwrap();
+        let all = all_gather(&ep, vec![42]);
+        assert_eq!(all, vec![vec![42]]);
+        let mut x = vec![1.0f32, 2.0];
+        all_reduce_ring(&ep, &mut x);
+        assert_eq!(x, vec![1.0, 2.0]);
+        assert_eq!(net.total_bytes(), 0);
+    }
+}

@@ -1,0 +1,146 @@
+//! In-process transport: N ranks, a blocking channel per ordered pair,
+//! and exact byte accounting. Stands in for NCCL/Gloo point-to-point
+//! (DESIGN.md §4 substitution table).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+
+/// The fabric: construct once, hand one [`Endpoint`] to each worker
+/// thread.
+pub struct Network {
+    n: usize,
+    endpoints: std::sync::Mutex<Vec<Endpoint>>,
+    bytes: Arc<AtomicU64>,
+}
+
+impl Network {
+    pub fn new(n: usize) -> Self {
+        assert!(n >= 1);
+        let bytes = Arc::new(AtomicU64::new(0));
+        // txs[dst][src], rxs[dst][src]
+        let mut txs: Vec<Vec<Option<Sender<Vec<u8>>>>> = (0..n)
+            .map(|_| (0..n).map(|_| None).collect())
+            .collect();
+        let mut rxs: Vec<Vec<Option<Receiver<Vec<u8>>>>> = (0..n)
+            .map(|_| (0..n).map(|_| None).collect())
+            .collect();
+        for dst in 0..n {
+            for src in 0..n {
+                let (tx, rx) = channel();
+                txs[dst][src] = Some(tx);
+                rxs[dst][src] = Some(rx);
+            }
+        }
+        // endpoint r holds: senders-to-every-dst (keyed dst), receivers-from-every-src
+        let mut endpoints = Vec::with_capacity(n);
+        let mut rxs_iter: Vec<Vec<Option<Receiver<Vec<u8>>>>> = rxs;
+        for rank in 0..n {
+            let to: Vec<Sender<Vec<u8>>> =
+                (0..n).map(|dst| txs[dst][rank].clone().unwrap()).collect();
+            let from: Vec<Receiver<Vec<u8>>> =
+                (0..n).map(|src| rxs_iter[rank][src].take().unwrap()).collect();
+            endpoints.push(Endpoint { rank, n, to, from, bytes: Arc::clone(&bytes) });
+        }
+        Self { n, endpoints: std::sync::Mutex::new(endpoints), bytes }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Take all endpoints (once). Ordered by rank.
+    pub fn endpoints(&self) -> Vec<Endpoint> {
+        std::mem::take(&mut *self.endpoints.lock().unwrap())
+    }
+
+    /// Total bytes that crossed the fabric so far.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+
+    pub fn reset_bytes(&self) {
+        self.bytes.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A rank's handle onto the fabric.
+pub struct Endpoint {
+    rank: usize,
+    n: usize,
+    to: Vec<Sender<Vec<u8>>>,
+    from: Vec<Receiver<Vec<u8>>>,
+    bytes: Arc<AtomicU64>,
+}
+
+impl Endpoint {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.n
+    }
+
+    /// Blocking point-to-point send.
+    pub fn send(&self, dst: usize, payload: Vec<u8>) {
+        assert_ne!(dst, self.rank, "self-send not allowed");
+        self.bytes.fetch_add(payload.len() as u64, Ordering::Relaxed);
+        self.to[dst].send(payload).expect("peer hung up");
+    }
+
+    /// Blocking receive from a specific source rank.
+    pub fn recv(&self, src: usize) -> Vec<u8> {
+        assert_ne!(src, self.rank);
+        self.from[src].recv().expect("peer hung up")
+    }
+
+    /// Bytes sent across the whole fabric (shared counter).
+    pub fn fabric_bytes(&self) -> u64 {
+        self.bytes.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    #[test]
+    fn pairwise_ordering_preserved() {
+        let net = Network::new(2);
+        let mut eps = net.endpoints();
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        let t = thread::spawn(move || {
+            for i in 0..100u8 {
+                a.send(1, vec![i]);
+            }
+        });
+        for i in 0..100u8 {
+            assert_eq!(b.recv(0), vec![i]);
+        }
+        t.join().unwrap();
+        assert_eq!(net.total_bytes(), 100);
+    }
+
+    #[test]
+    fn bidirectional_no_deadlock() {
+        let net = Network::new(2);
+        let mut eps = net.endpoints();
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        let big = vec![0u8; 1 << 16];
+        let big2 = big.clone();
+        let t1 = thread::spawn(move || {
+            a.send(1, big);
+            a.recv(1)
+        });
+        let t2 = thread::spawn(move || {
+            b.send(0, big2);
+            b.recv(0)
+        });
+        assert_eq!(t1.join().unwrap().len(), 1 << 16);
+        assert_eq!(t2.join().unwrap().len(), 1 << 16);
+    }
+}

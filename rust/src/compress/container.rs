@@ -1,0 +1,249 @@
+//! Wire container: the single blob DeepReduce hands to the communication
+//! library (paper §3 — "combines in one container the compressed index
+//! and value structures, the reordering information and any required
+//! metadata").
+//!
+//! Layout (all integers LEB128 unless noted):
+//! ```text
+//! magic "DR1\n" | d | num_values | idx name | val name
+//! | idx len | idx bytes | val len | val bytes
+//! | perm flag (0/1) [| perm bit-width | packed perm]
+//! | crc32 (LE u32, over everything before it)
+//! ```
+
+use crate::util::bitio::{BitReader, BitWriter};
+use crate::util::varint;
+
+const MAGIC: &[u8; 4] = b"DR1\n";
+
+/// Decoded container. `perm[j]` = original position of wire value j.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Container {
+    pub dense_len: usize,
+    pub num_values: usize,
+    pub index_codec: String,
+    pub value_codec: String,
+    pub index_bytes: Vec<u8>,
+    pub value_bytes: Vec<u8>,
+    pub perm: Option<Vec<u32>>,
+    /// cached header size for the volume breakdown
+    header_bytes: usize,
+    reorder_bytes: usize,
+}
+
+impl Container {
+    pub fn pack(
+        dense_len: usize,
+        num_values: usize,
+        index_codec: &str,
+        value_codec: &str,
+        index_bytes: &[u8],
+        value_bytes: &[u8],
+        perm: Option<&[u32]>,
+    ) -> Self {
+        Self {
+            dense_len,
+            num_values,
+            index_codec: index_codec.to_string(),
+            value_codec: value_codec.to_string(),
+            index_bytes: index_bytes.to_vec(),
+            value_bytes: value_bytes.to_vec(),
+            perm: perm.map(|p| p.to_vec()),
+            header_bytes: 0,
+            reorder_bytes: 0,
+        }
+    }
+
+    /// Serialize to the wire format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(
+            32 + self.index_bytes.len() + self.value_bytes.len() + self.index_codec.len(),
+        );
+        out.extend_from_slice(MAGIC);
+        varint::write_u64(&mut out, self.dense_len as u64);
+        varint::write_u64(&mut out, self.num_values as u64);
+        write_str(&mut out, &self.index_codec);
+        write_str(&mut out, &self.value_codec);
+        varint::write_u64(&mut out, self.index_bytes.len() as u64);
+        out.extend_from_slice(&self.index_bytes);
+        varint::write_u64(&mut out, self.value_bytes.len() as u64);
+        out.extend_from_slice(&self.value_bytes);
+        match &self.perm {
+            None => out.push(0),
+            Some(p) => {
+                out.push(1);
+                // ⌈log₂ n⌉ bits per entry (paper §5.1)
+                let width = perm_width(p.len());
+                out.push(width as u8);
+                let mut w = BitWriter::with_capacity(p.len() * width as usize / 8 + 8);
+                for &v in p {
+                    w.write_bits(v as u64, width);
+                }
+                let bits = w.finish();
+                varint::write_u64(&mut out, bits.len() as u64);
+                out.extend_from_slice(&bits);
+            }
+        }
+        let crc = crc32fast_hash(&out);
+        out.extend_from_slice(&crc.to_le_bytes());
+        out
+    }
+
+    /// Parse from the wire format, verifying the checksum.
+    pub fn from_bytes(buf: &[u8]) -> anyhow::Result<Self> {
+        anyhow::ensure!(buf.len() >= 8, "container too short");
+        let (body, crc_bytes) = buf.split_at(buf.len() - 4);
+        let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+        let got = crc32fast_hash(body);
+        anyhow::ensure!(want == got, "container checksum mismatch");
+        anyhow::ensure!(&body[..4] == MAGIC, "bad container magic");
+        let mut pos = 4usize;
+        let dense_len = varint::read_u64(body, &mut pos)? as usize;
+        let num_values = varint::read_u64(body, &mut pos)? as usize;
+        let index_codec = read_str(body, &mut pos)?;
+        let value_codec = read_str(body, &mut pos)?;
+        let ilen = varint::read_u64(body, &mut pos)? as usize;
+        anyhow::ensure!(pos + ilen <= body.len(), "index section truncated");
+        let index_bytes = body[pos..pos + ilen].to_vec();
+        pos += ilen;
+        let vlen = varint::read_u64(body, &mut pos)? as usize;
+        anyhow::ensure!(pos + vlen <= body.len(), "value section truncated");
+        let value_bytes = body[pos..pos + vlen].to_vec();
+        pos += vlen;
+        let header_bytes = pos - ilen - vlen + 4; // all non-payload so far + crc
+        let flag = *body.get(pos).ok_or_else(|| anyhow::anyhow!("missing perm flag"))?;
+        pos += 1;
+        let (perm, reorder_bytes) = if flag == 1 {
+            let width = *body.get(pos).ok_or_else(|| anyhow::anyhow!("missing perm width"))?
+                as u32;
+            pos += 1;
+            anyhow::ensure!((1..=32).contains(&width), "bad perm width {width}");
+            let blen = varint::read_u64(body, &mut pos)? as usize;
+            anyhow::ensure!(pos + blen <= body.len(), "perm section truncated");
+            let mut r = BitReader::new(&body[pos..pos + blen]);
+            let mut p = Vec::with_capacity(num_values);
+            for _ in 0..num_values {
+                p.push(r.read_bits(width)? as u32);
+            }
+            pos += blen;
+            (Some(p), blen + 2)
+        } else {
+            (None, 0)
+        };
+        anyhow::ensure!(pos == body.len(), "trailing bytes in container");
+        Ok(Self {
+            dense_len,
+            num_values,
+            index_codec,
+            value_codec,
+            index_bytes,
+            value_bytes,
+            perm,
+            header_bytes,
+            reorder_bytes,
+        })
+    }
+
+    /// Total wire size without materializing `to_bytes`.
+    pub fn wire_bytes(&self) -> usize {
+        self.to_bytes().len()
+    }
+
+    /// Volume split for Fig 10a. (Header includes codec names + crc.)
+    pub fn breakdown(&self) -> super::VolumeBreakdown {
+        let total = self.wire_bytes();
+        let reorder = match &self.perm {
+            Some(p) => {
+                let width = perm_width(p.len()) as usize;
+                (p.len() * width).div_ceil(8) + 2
+            }
+            None => 0,
+        };
+        super::VolumeBreakdown {
+            index_bytes: self.index_bytes.len(),
+            value_bytes: self.value_bytes.len(),
+            reorder_bytes: reorder,
+            header_bytes: total - self.index_bytes.len() - self.value_bytes.len() - reorder,
+        }
+    }
+}
+
+fn perm_width(n: usize) -> u32 {
+    if n <= 1 {
+        1
+    } else {
+        usize::BITS - (n - 1).leading_zeros()
+    }
+}
+
+fn write_str(out: &mut Vec<u8>, s: &str) {
+    varint::write_u64(out, s.len() as u64);
+    out.extend_from_slice(s.as_bytes());
+}
+
+fn read_str(buf: &[u8], pos: &mut usize) -> anyhow::Result<String> {
+    let n = varint::read_u64(buf, pos)? as usize;
+    anyhow::ensure!(*pos + n <= buf.len(), "string truncated");
+    let s = std::str::from_utf8(&buf[*pos..*pos + n])?.to_string();
+    *pos += n;
+    Ok(s)
+}
+
+fn crc32fast_hash(data: &[u8]) -> u32 {
+    let mut h = crc32fast::Hasher::new();
+    h.update(data);
+    h.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_with_and_without_perm() {
+        let c = Container::pack(1000, 3, "bitmap", "fitpoly", &[1, 2, 3], &[9; 10], Some(&[2, 0, 1]));
+        let bytes = c.to_bytes();
+        let back = Container::from_bytes(&bytes).unwrap();
+        assert_eq!(back.dense_len, 1000);
+        assert_eq!(back.num_values, 3);
+        assert_eq!(back.index_codec, "bitmap");
+        assert_eq!(back.perm, Some(vec![2, 0, 1]));
+        assert_eq!(back.index_bytes, vec![1, 2, 3]);
+
+        let c2 = Container::pack(10, 0, "raw", "raw", &[], &[], None);
+        let back2 = Container::from_bytes(&c2.to_bytes()).unwrap();
+        assert_eq!(back2.perm, None);
+        assert_eq!(back2.num_values, 0);
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let c = Container::pack(100, 1, "raw", "raw", &[5], &[6], None);
+        let mut bytes = c.to_bytes();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        assert!(Container::from_bytes(&bytes).is_err());
+        // truncation
+        let ok = c.to_bytes();
+        assert!(Container::from_bytes(&ok[..ok.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn breakdown_sums_to_total() {
+        let c = Container::pack(5000, 4, "bloom_p2", "qsgd", &[0; 100], &[0; 50], Some(&[3, 1, 0, 2]));
+        let b = c.breakdown();
+        assert_eq!(b.total(), c.wire_bytes());
+        assert_eq!(b.index_bytes, 100);
+        assert_eq!(b.value_bytes, 50);
+        assert!(b.reorder_bytes >= 1);
+    }
+
+    #[test]
+    fn perm_width_is_ceil_log2() {
+        assert_eq!(perm_width(1), 1);
+        assert_eq!(perm_width(2), 1);
+        assert_eq!(perm_width(3), 2);
+        assert_eq!(perm_width(369), 9);
+        assert_eq!(perm_width(65536), 16);
+    }
+}

@@ -1,0 +1,106 @@
+//! Index-compression module (paper §3): encapsulates the two equivalent
+//! support-set representations (integer array / bitmap) and the codecs
+//! over them — raw keys, bitmap, bit-level RLE, Huffman over index byte
+//! planes, delta+varint, and the Bloom-filter family (§4).
+
+mod bloom;
+mod plain;
+
+pub use bloom::{BloomFilter, BloomIndex, BloomPolicy};
+pub use plain::{BitmapIndex, DeltaVarint, HuffmanIndex, RawIndex, RleIndex};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::IndexCodec;
+    use crate::util::prng::Rng;
+    use crate::util::testkit::{forall, sorted_support};
+
+    fn all_lossless() -> Vec<Box<dyn IndexCodec>> {
+        vec![
+            Box::new(RawIndex),
+            Box::new(BitmapIndex),
+            Box::new(RleIndex),
+            Box::new(HuffmanIndex),
+            Box::new(DeltaVarint),
+        ]
+    }
+
+    #[test]
+    fn lossless_codecs_roundtrip_random_supports() {
+        forall(
+            "index-roundtrip",
+            40,
+            3000,
+            |rng, size| {
+                let d = 1 + rng.below(size as u64) as usize;
+                let r = rng.below(d as u64 + 1) as usize;
+                (d, sorted_support(rng, d, r))
+            },
+            |(d, support)| {
+                for codec in all_lossless() {
+                    let enc = codec.encode(*d, support);
+                    if enc.effective != *support {
+                        return Err(format!("{}: effective != input", codec.name()));
+                    }
+                    let dec = codec
+                        .decode(*d, &enc.bytes)
+                        .map_err(|e| format!("{}: {e}", codec.name()))?;
+                    if dec != *support {
+                        return Err(format!(
+                            "{}: decode mismatch ({} vs {} items)",
+                            codec.name(),
+                            dec.len(),
+                            support.len()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn edge_cases_empty_full_single() {
+        for codec in all_lossless() {
+            for (d, support) in [
+                (1usize, vec![]),
+                (1, vec![0u32]),
+                (100, vec![]),
+                (100, (0..100u32).collect::<Vec<_>>()),
+                (64, vec![63]),
+                (65, vec![0, 64]),
+            ] {
+                let enc = codec.encode(d, &support);
+                let dec = codec.decode(d, &enc.bytes).unwrap();
+                assert_eq!(dec, support, "codec {} d={d}", codec.name());
+            }
+        }
+    }
+
+    #[test]
+    fn clustered_indices_compress_well_with_rle() {
+        // contiguous support: RLE should beat raw 4-byte keys massively
+        let d = 100_000;
+        let support: Vec<u32> = (40_000..41_000u32).collect();
+        let rle = RleIndex.encode(d, &support);
+        let raw = RawIndex.encode(d, &support);
+        assert!(rle.bytes.len() * 20 < raw.bytes.len(), "rle {} raw {}", rle.bytes.len(), raw.bytes.len());
+    }
+
+    #[test]
+    fn uniform_random_sizes_sane() {
+        let mut rng = Rng::new(90);
+        let d = 36864; // the paper's Fig 10 conv gradient
+        let r = 369; // top 1%
+        let support = sorted_support(&mut rng, d, r);
+        let bitmap = BitmapIndex.encode(d, &support).bytes.len();
+        assert_eq!(bitmap, d.div_ceil(8) + crate::util::varint::encoded_len(d as u64));
+        let raw = RawIndex.encode(d, &support).bytes.len();
+        assert_eq!(raw, r * 4);
+        let delta = DeltaVarint.encode(d, &support).bytes.len();
+        assert!(delta < raw, "delta {delta} raw {raw}");
+        let huff = HuffmanIndex.encode(d, &support).bytes.len();
+        assert!(huff < raw, "huffman {huff} raw {raw}");
+    }
+}

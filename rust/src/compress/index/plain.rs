@@ -1,0 +1,282 @@
+//! Lossless index codecs: raw keys, bitmap, bit-level RLE, Huffman over
+//! byte planes, delta+varint.
+
+use crate::compress::{IndexCodec, IndexEncoding};
+use crate::tensor::Bitmap;
+use crate::util::bitio::{BitReader, BitWriter};
+use crate::util::elias::{gamma_decode, gamma_encode};
+use crate::util::huffman::Huffman;
+use crate::util::varint;
+
+/// Raw u32 little-endian keys — the `(key, value)` baseline of Fig 1b.
+pub struct RawIndex;
+
+impl IndexCodec for RawIndex {
+    fn name(&self) -> &'static str {
+        "raw"
+    }
+
+    fn encode(&self, _d: usize, support: &[u32]) -> IndexEncoding {
+        let mut bytes = Vec::with_capacity(support.len() * 4);
+        for &i in support {
+            bytes.extend_from_slice(&i.to_le_bytes());
+        }
+        IndexEncoding { bytes, effective: support.to_vec() }
+    }
+
+    fn decode(&self, d: usize, bytes: &[u8]) -> anyhow::Result<Vec<u32>> {
+        anyhow::ensure!(bytes.len() % 4 == 0, "raw index bytes not multiple of 4");
+        let out: Vec<u32> = bytes
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        anyhow::ensure!(out.iter().all(|&i| (i as usize) < d), "index out of range");
+        Ok(out)
+    }
+}
+
+/// Dense bitmap: d bits, `B[i]=1` iff i ∈ S (Fig 1c's index half).
+pub struct BitmapIndex;
+
+impl IndexCodec for BitmapIndex {
+    fn name(&self) -> &'static str {
+        "bitmap"
+    }
+
+    fn encode(&self, d: usize, support: &[u32]) -> IndexEncoding {
+        let bm = Bitmap::from_indices(d, support);
+        let mut bytes = Vec::with_capacity(d / 8 + 9);
+        varint::write_u64(&mut bytes, d as u64);
+        for w in bm.words() {
+            bytes.extend_from_slice(&w.to_le_bytes());
+        }
+        // trim to ceil(d/8) payload bytes
+        let header = bytes.len() - bm.words().len() * 8;
+        bytes.truncate(header + d.div_ceil(8));
+        IndexEncoding { bytes, effective: support.to_vec() }
+    }
+
+    fn decode(&self, d: usize, bytes: &[u8]) -> anyhow::Result<Vec<u32>> {
+        let mut pos = 0usize;
+        let stored_d = varint::read_u64(bytes, &mut pos)? as usize;
+        anyhow::ensure!(stored_d == d, "bitmap d mismatch: {stored_d} vs {d}");
+        let payload = &bytes[pos..];
+        anyhow::ensure!(payload.len() == d.div_ceil(8), "bitmap payload size");
+        let mut words = vec![0u64; d.div_ceil(64)];
+        for (i, &b) in payload.iter().enumerate() {
+            words[i / 8] |= (b as u64) << ((i % 8) * 8);
+        }
+        Ok(Bitmap::from_words(words, d).to_indices())
+    }
+}
+
+/// Bit-level run-length encoding over the support bitmap (paper §2):
+/// alternating run lengths, Elias-gamma coded; the first run's bit value
+/// is stored explicitly. Wins when indices are clustered.
+pub struct RleIndex;
+
+impl IndexCodec for RleIndex {
+    fn name(&self) -> &'static str {
+        "rle"
+    }
+
+    fn encode(&self, d: usize, support: &[u32]) -> IndexEncoding {
+        let bm = Bitmap::from_indices(d, support);
+        let mut w = BitWriter::new();
+        let mut first = true;
+        for (bit, len) in bm.runs() {
+            if first {
+                w.write_bit(bit);
+                first = false;
+            }
+            gamma_encode(&mut w, len as u64);
+        }
+        let mut bytes = Vec::new();
+        varint::write_u64(&mut bytes, d as u64);
+        bytes.extend_from_slice(&w.finish());
+        IndexEncoding { bytes, effective: support.to_vec() }
+    }
+
+    fn decode(&self, d: usize, bytes: &[u8]) -> anyhow::Result<Vec<u32>> {
+        let mut pos = 0usize;
+        let stored_d = varint::read_u64(bytes, &mut pos)? as usize;
+        anyhow::ensure!(stored_d == d, "rle d mismatch");
+        let mut out = Vec::new();
+        if d == 0 {
+            return Ok(out);
+        }
+        let mut r = BitReader::new(&bytes[pos..]);
+        let mut bit = r.read_bit()?;
+        let mut covered = 0usize;
+        while covered < d {
+            let len = gamma_decode(&mut r)? as usize;
+            anyhow::ensure!(covered + len <= d, "rle runs exceed d");
+            if bit {
+                out.extend((covered..covered + len).map(|i| i as u32));
+            }
+            covered += len;
+            bit = !bit;
+        }
+        Ok(out)
+    }
+}
+
+/// Huffman over index byte planes (paper §11, "Huffman Encoding"): each
+/// 32-bit key is split into 4 little-endian bytes and coded with a
+/// Huffman table built from the *model domain* `0..d-1` — a pre-defined
+/// codec both sides derive from `d`, so no table travels on the wire.
+pub struct HuffmanIndex;
+
+impl HuffmanIndex {
+    /// Byte frequencies of the little-endian representation of all
+    /// integers in [0, d) — computed analytically per byte plane, then
+    /// summed (the paper builds one codec over all unpacked bytes).
+    fn domain_codec(d: usize) -> Huffman {
+        let mut freqs = [0u64; 256];
+        for plane in 0..4u32 {
+            plane_freqs(d as u64, plane, &mut freqs);
+        }
+        Huffman::from_freqs(&freqs).expect("domain is nonempty")
+    }
+}
+
+/// Accumulate frequency of each byte value in plane `p` (LE) over 0..d.
+fn plane_freqs(d: u64, plane: u32, freqs: &mut [u64; 256]) {
+    let shift = plane * 8;
+    // value v at plane p appears for i in [0,d) with ((i >> shift) & 0xFF) == v
+    // count = full_cycles * 2^shift + partial
+    let block = 1u64 << shift; // consecutive run length per byte value
+    let cycle = block * 256;
+    let full_cycles = d / cycle;
+    let rem = d % cycle;
+    for (v, f) in freqs.iter_mut().enumerate() {
+        let mut c = full_cycles * block;
+        let v_start = v as u64 * block;
+        if rem > v_start {
+            c += (rem - v_start).min(block);
+        }
+        *f += c;
+    }
+}
+
+impl IndexCodec for HuffmanIndex {
+    fn name(&self) -> &'static str {
+        "huffman"
+    }
+
+    fn encode(&self, d: usize, support: &[u32]) -> IndexEncoding {
+        let codec = Self::domain_codec(d);
+        let mut w = BitWriter::new();
+        for &i in support {
+            for b in i.to_le_bytes() {
+                codec.encode_symbol(&mut w, b);
+            }
+        }
+        let mut bytes = Vec::new();
+        varint::write_u64(&mut bytes, support.len() as u64);
+        bytes.extend_from_slice(&w.finish());
+        IndexEncoding { bytes, effective: support.to_vec() }
+    }
+
+    fn decode(&self, d: usize, bytes: &[u8]) -> anyhow::Result<Vec<u32>> {
+        let mut pos = 0usize;
+        let n = varint::read_u64(bytes, &mut pos)? as usize;
+        let codec = Self::domain_codec(d);
+        let mut r = BitReader::new(&bytes[pos..]);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let mut le = [0u8; 4];
+            for slot in le.iter_mut() {
+                *slot = codec.decode_symbol(&mut r)?;
+            }
+            let v = u32::from_le_bytes(le);
+            anyhow::ensure!((v as usize) < d, "huffman index out of range");
+            out.push(v);
+        }
+        Ok(out)
+    }
+}
+
+/// Delta encoding + LEB128 varints (the SketchML/SKCompress index style):
+/// store `S[0], S[1]-S[0], ...`; ascending input makes deltas small.
+pub struct DeltaVarint;
+
+impl IndexCodec for DeltaVarint {
+    fn name(&self) -> &'static str {
+        "delta_varint"
+    }
+
+    fn encode(&self, _d: usize, support: &[u32]) -> IndexEncoding {
+        let mut bytes = Vec::with_capacity(support.len() * 2 + 9);
+        varint::write_u64(&mut bytes, support.len() as u64);
+        let mut prev = 0u64;
+        for (k, &i) in support.iter().enumerate() {
+            let delta = if k == 0 { i as u64 } else { i as u64 - prev };
+            varint::write_u64(&mut bytes, delta);
+            prev = i as u64;
+        }
+        IndexEncoding { bytes, effective: support.to_vec() }
+    }
+
+    fn decode(&self, d: usize, bytes: &[u8]) -> anyhow::Result<Vec<u32>> {
+        let mut pos = 0usize;
+        let n = varint::read_u64(bytes, &mut pos)? as usize;
+        let mut out = Vec::with_capacity(n);
+        let mut acc = 0u64;
+        for k in 0..n {
+            let delta = varint::read_u64(bytes, &mut pos)?;
+            acc = if k == 0 { delta } else { acc + delta };
+            anyhow::ensure!((acc as usize) < d, "delta index out of range");
+            out.push(acc as u32);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::IndexCodec;
+
+    #[test]
+    fn plane_freqs_match_bruteforce() {
+        for d in [1usize, 255, 256, 257, 1000, 65536, 70000] {
+            for plane in 0..4u32 {
+                let mut fast = [0u64; 256];
+                plane_freqs(d as u64, plane, &mut fast);
+                let mut slow = [0u64; 256];
+                for i in 0..d as u64 {
+                    slow[((i >> (plane * 8)) & 0xFF) as usize] += 1;
+                }
+                assert_eq!(fast, slow, "d={d} plane={plane}");
+            }
+        }
+    }
+
+    #[test]
+    fn huffman_beats_raw_for_small_domains() {
+        // d = 36864 -> top two byte planes are almost always zero
+        let d = 36864;
+        let support: Vec<u32> = (0..d as u32).step_by(100).collect();
+        let h = HuffmanIndex.encode(d, &support);
+        let raw = RawIndex.encode(d, &support);
+        assert!((h.bytes.len() as f64) < 0.7 * raw.bytes.len() as f64, "{} vs {}", h.bytes.len(), raw.bytes.len());
+        assert_eq!(HuffmanIndex.decode(d, &h.bytes).unwrap(), support);
+    }
+
+    #[test]
+    fn rle_first_bit_one() {
+        // support starting at 0 exercises the first-run=1 branch
+        let support = vec![0u32, 1, 2, 50];
+        let enc = RleIndex.encode(60, &support);
+        assert_eq!(RleIndex.decode(60, &enc.bytes).unwrap(), support);
+    }
+
+    #[test]
+    fn decode_validates_domain() {
+        let enc = RawIndex.encode(100, &[99]);
+        assert!(RawIndex.decode(50, &enc.bytes).is_err());
+        let enc = DeltaVarint.encode(100, &[99]);
+        assert!(DeltaVarint.decode(50, &enc.bytes).is_err());
+    }
+}

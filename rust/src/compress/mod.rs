@@ -1,0 +1,272 @@
+//! The DeepReduce framework (paper §3): a sparse tensor is decomposed
+//! into an index set and a value array, each compressed independently by
+//! pluggable codecs, then packed into a self-describing wire container.
+//!
+//! ```text
+//!  SparseTensor ──► IndexCodec ──► index bytes ─┐
+//!        │             │ effective support S̃    ├─► Container ─► transport
+//!        └─► gather ─► ValueCodec ─► value bytes┘
+//!                        │ optional reorder (sorted fits)
+//! ```
+//!
+//! Index codecs may be lossy in the *support* (Bloom policies P1/P2
+//! reconstruct S̃ ≠ S); value codecs may be lossy in the *values*
+//! (QSGD, curve fits). The framework wires the two together, including
+//! the paper's §5.1 reorder mapping for order-destroying value codecs.
+
+pub mod container;
+pub mod index;
+pub mod value;
+
+use crate::tensor::SparseTensor;
+pub use container::Container;
+
+/// Result of index encoding.
+pub struct IndexEncoding {
+    pub bytes: Vec<u8>,
+    /// The support the decoder will reconstruct (ascending). For lossless
+    /// codecs this equals the input support; Bloom policies return P (P0)
+    /// or S̃ (P1/P2), and the framework gathers values for it.
+    pub effective: Vec<u32>,
+}
+
+/// Compresses the support set S of a sparse gradient over domain [0, d).
+pub trait IndexCodec: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Whether the reconstructed support always equals the input support.
+    fn lossless(&self) -> bool {
+        true
+    }
+
+    fn encode(&self, d: usize, support: &[u32]) -> IndexEncoding;
+
+    /// Reconstruct the (effective) support, ascending.
+    fn decode(&self, d: usize, bytes: &[u8]) -> anyhow::Result<Vec<u32>>;
+}
+
+/// Result of value encoding.
+pub struct ValueEncoding {
+    pub bytes: Vec<u8>,
+    /// If the codec reordered values (e.g. sorted them), `perm[j]` is the
+    /// original position of the j-th decoded value; the framework
+    /// transmits it bit-packed at ⌈log₂ n⌉ bits/entry (paper §5.1).
+    pub perm: Option<Vec<u32>>,
+}
+
+/// Compresses the value array V.
+pub trait ValueCodec: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Whether decoded values are bit-exact.
+    fn lossless(&self) -> bool {
+        false
+    }
+
+    fn encode(&self, values: &[f32]) -> ValueEncoding;
+
+    /// Decode exactly `n` values in wire order (before un-permutation).
+    fn decode(&self, bytes: &[u8], n: usize) -> anyhow::Result<Vec<f32>>;
+}
+
+/// A DeepReduce instantiation `DR_idx^val`.
+pub struct DeepReduce {
+    pub index: Box<dyn IndexCodec>,
+    pub value: Box<dyn ValueCodec>,
+}
+
+/// Volume breakdown of one encoded tensor, for the Fig 10a accounting.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct VolumeBreakdown {
+    pub index_bytes: usize,
+    pub value_bytes: usize,
+    pub reorder_bytes: usize,
+    pub header_bytes: usize,
+}
+
+impl VolumeBreakdown {
+    pub fn total(&self) -> usize {
+        self.index_bytes + self.value_bytes + self.reorder_bytes + self.header_bytes
+    }
+}
+
+impl DeepReduce {
+    pub fn new(index: Box<dyn IndexCodec>, value: Box<dyn ValueCodec>) -> Self {
+        Self { index, value }
+    }
+
+    pub fn name(&self) -> String {
+        format!("DR[{}|{}]", self.index.name(), self.value.name())
+    }
+
+    /// Encode a sparse gradient. `dense` is the original gradient the
+    /// sparse tensor was drawn from (GRACE exposes it; Bloom policies
+    /// P0/P1/P2 read original values at false-positive positions). When
+    /// `None`, positions outside the input support decode as 0.
+    pub fn encode(&self, sparse: &SparseTensor, dense: Option<&[f32]>) -> Container {
+        let d = sparse.dense_len();
+        let idx_enc = self.index.encode(d, sparse.indices());
+
+        // Gather the value array for the effective support.
+        let values: Vec<f32> = if idx_enc.effective == sparse.indices() {
+            sparse.values().to_vec()
+        } else {
+            match dense {
+                Some(g) => idx_enc.effective.iter().map(|&i| g[i as usize]).collect(),
+                None => {
+                    // merge-join sparse values onto the effective support
+                    let mut out = vec![0.0f32; idx_enc.effective.len()];
+                    let (mut a, mut b) = (0usize, 0usize);
+                    let (si, sv) = (sparse.indices(), sparse.values());
+                    while a < idx_enc.effective.len() && b < si.len() {
+                        use std::cmp::Ordering::*;
+                        match idx_enc.effective[a].cmp(&si[b]) {
+                            Less => a += 1,
+                            Greater => b += 1,
+                            Equal => {
+                                out[a] = sv[b];
+                                a += 1;
+                                b += 1;
+                            }
+                        }
+                    }
+                    out
+                }
+            }
+        };
+
+        let val_enc = self.value.encode(&values);
+        Container::pack(
+            d,
+            values.len(),
+            self.index.name(),
+            self.value.name(),
+            &idx_enc.bytes,
+            &val_enc.bytes,
+            val_enc.perm.as_deref(),
+        )
+    }
+
+    /// Decode a container back to a sparse gradient.
+    pub fn decode(&self, c: &Container) -> anyhow::Result<SparseTensor> {
+        anyhow::ensure!(
+            c.index_codec == self.index.name() && c.value_codec == self.value.name(),
+            "container codec mismatch: {}/{} vs {}/{}",
+            c.index_codec,
+            c.value_codec,
+            self.index.name(),
+            self.value.name()
+        );
+        let support = self.index.decode(c.dense_len, &c.index_bytes)?;
+        anyhow::ensure!(
+            support.len() == c.num_values,
+            "support length {} != value count {}",
+            support.len(),
+            c.num_values
+        );
+        let wire_values = self.value.decode(&c.value_bytes, c.num_values)?;
+        let values = match &c.perm {
+            Some(perm) => {
+                anyhow::ensure!(perm.len() == wire_values.len(), "perm length mismatch");
+                let mut out = vec![0.0f32; wire_values.len()];
+                for (j, &p) in perm.iter().enumerate() {
+                    anyhow::ensure!((p as usize) < out.len(), "perm out of range");
+                    out[p as usize] = wire_values[j];
+                }
+                out
+            }
+            None => wire_values,
+        };
+        Ok(SparseTensor::new(c.dense_len, support, values))
+    }
+
+    /// Convenience: encode then report the wire volume split.
+    pub fn volume(&self, sparse: &SparseTensor, dense: Option<&[f32]>) -> VolumeBreakdown {
+        self.encode(sparse, dense).breakdown()
+    }
+}
+
+/// Build an index codec by name. `param` is codec-specific:
+/// FPR for bloom variants (default 0.001 if NaN).
+pub fn index_by_name(name: &str, param: f64, seed: u64) -> Option<Box<dyn IndexCodec>> {
+    let fpr = if param.is_nan() || param <= 0.0 { 0.001 } else { param };
+    match name {
+        "raw" | "keys" => Some(Box::new(index::RawIndex)),
+        "bitmap" => Some(Box::new(index::BitmapIndex)),
+        "rle" => Some(Box::new(index::RleIndex)),
+        "huffman" => Some(Box::new(index::HuffmanIndex)),
+        "delta_varint" | "delta" => Some(Box::new(index::DeltaVarint)),
+        "bloom_naive" => Some(Box::new(index::BloomIndex::new(index::BloomPolicy::Naive, fpr, seed))),
+        "bloom_p0" => Some(Box::new(index::BloomIndex::new(index::BloomPolicy::P0, fpr, seed))),
+        "bloom_p1" => Some(Box::new(index::BloomIndex::new(index::BloomPolicy::P1, fpr, seed))),
+        "bloom_p2" => Some(Box::new(index::BloomIndex::new(index::BloomPolicy::P2, fpr, seed))),
+        // SKCompress index stage (baselines module, same trait)
+        "delta_huffman" => Some(Box::new(crate::baselines::DeltaHuffmanIndex)),
+        _ => None,
+    }
+}
+
+/// Build a value codec by name. `param` is codec-specific: quantization
+/// bits for qsgd, polynomial degree for fitpoly.
+pub fn value_by_name(name: &str, param: f64, seed: u64) -> Option<Box<dyn ValueCodec>> {
+    match name {
+        "raw" | "none" | "fp32" => Some(Box::new(value::RawValue)),
+        "fp16" => Some(Box::new(value::Fp16Value)),
+        "deflate" => Some(Box::new(value::DeflateValue::default())),
+        "zstd" => Some(Box::new(value::ZstdValue::default())),
+        "qsgd" => {
+            let bits = if param.is_nan() || param <= 0.0 { 7 } else { param as u32 };
+            Some(Box::new(value::QsgdValue::new(bits, 512, seed)))
+        }
+        "fitpoly" => {
+            let deg = if param.is_nan() || param <= 0.0 { 5 } else { param as usize };
+            Some(Box::new(value::FitPolyValue::new(deg)))
+        }
+        "fitdexp" => Some(Box::new(value::FitDExpValue::default())),
+        // SketchML / SKCompress value stages (baselines module)
+        "sketch" => {
+            let q = if param.is_nan() || param <= 0.0 { 64 } else { param as usize };
+            Some(Box::new(crate::baselines::QuantileBucketValue::new(q, false)))
+        }
+        "sketch_huff" => {
+            let q = if param.is_nan() || param <= 0.0 { 64 } else { param as usize };
+            Some(Box::new(crate::baselines::QuantileBucketValue::new(q, true)))
+        }
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::testkit::gradient_like;
+
+    /// Lossless-index + raw-value pipelines must roundtrip exactly.
+    #[test]
+    fn lossless_pipeline_roundtrips_exactly() {
+        let mut rng = Rng::new(80);
+        for idx_name in ["raw", "bitmap", "rle", "huffman", "delta_varint"] {
+            for _ in 0..5 {
+                let d = 200 + rng.below(2000) as usize;
+                let g = gradient_like(&mut rng, d);
+                let mut topk = crate::sparsify::TopK::new(0.05);
+                use crate::sparsify::Sparsifier;
+                let sp = topk.sparsify(&g);
+                let dr = DeepReduce::new(
+                    index_by_name(idx_name, f64::NAN, 1).unwrap(),
+                    value_by_name("raw", f64::NAN, 1).unwrap(),
+                );
+                let c = dr.encode(&sp, Some(&g));
+                let back = dr.decode(&c).unwrap();
+                assert_eq!(back, sp, "codec {idx_name}");
+            }
+        }
+    }
+
+    #[test]
+    fn factory_rejects_unknown() {
+        assert!(index_by_name("nope", 0.0, 0).is_none());
+        assert!(value_by_name("nope", 0.0, 0).is_none());
+    }
+}

@@ -1,0 +1,173 @@
+//! General-purpose value codecs: raw f32, fp16 cast, Deflate (RFC 1951,
+//! the paper's §3 example) and Zstd.
+
+use crate::compress::{ValueCodec, ValueEncoding};
+use crate::util::f16;
+
+/// Uncompressed little-endian f32 — the bypass option.
+pub struct RawValue;
+
+impl ValueCodec for RawValue {
+    fn name(&self) -> &'static str {
+        "raw"
+    }
+
+    fn lossless(&self) -> bool {
+        true
+    }
+
+    fn encode(&self, values: &[f32]) -> ValueEncoding {
+        let mut bytes = Vec::with_capacity(values.len() * 4);
+        for &v in values {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        ValueEncoding { bytes, perm: None }
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(bytes.len() == n * 4, "raw value size mismatch");
+        Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+/// IEEE binary16 cast — the fp16 rows of Fig 11.
+pub struct Fp16Value;
+
+impl ValueCodec for Fp16Value {
+    fn name(&self) -> &'static str {
+        "fp16"
+    }
+
+    fn encode(&self, values: &[f32]) -> ValueEncoding {
+        let mut bytes = Vec::with_capacity(values.len() * 2);
+        for &v in values {
+            bytes.extend_from_slice(&f16::f32_to_f16_bits(v).to_le_bytes());
+        }
+        ValueEncoding { bytes, perm: None }
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
+        anyhow::ensure!(bytes.len() == n * 2, "fp16 value size mismatch");
+        Ok(bytes
+            .chunks_exact(2)
+            .map(|c| f16::f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+            .collect())
+    }
+}
+
+/// Deflate over the f32 byte stream (flate2). Lossless; compression on
+/// float gradients is modest (the paper uses it as the generic option).
+pub struct DeflateValue {
+    pub level: u32,
+}
+
+impl Default for DeflateValue {
+    fn default() -> Self {
+        Self { level: 6 }
+    }
+}
+
+impl ValueCodec for DeflateValue {
+    fn name(&self) -> &'static str {
+        "deflate"
+    }
+
+    fn lossless(&self) -> bool {
+        true
+    }
+
+    fn encode(&self, values: &[f32]) -> ValueEncoding {
+        use flate2::write::DeflateEncoder;
+        use std::io::Write;
+        let mut raw = Vec::with_capacity(values.len() * 4);
+        for &v in values {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        let mut enc = DeflateEncoder::new(Vec::new(), flate2::Compression::new(self.level));
+        enc.write_all(&raw).expect("in-memory deflate cannot fail");
+        ValueEncoding { bytes: enc.finish().expect("deflate finish"), perm: None }
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
+        use flate2::read::DeflateDecoder;
+        use std::io::Read;
+        let mut raw = Vec::with_capacity(n * 4);
+        DeflateDecoder::new(bytes).read_to_end(&mut raw)?;
+        anyhow::ensure!(raw.len() == n * 4, "deflate payload size mismatch");
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+/// Zstandard over the f32 byte stream — a stronger general coder than
+/// Deflate at similar speed; included as a framework plug-in.
+pub struct ZstdValue {
+    pub level: i32,
+}
+
+impl Default for ZstdValue {
+    fn default() -> Self {
+        Self { level: 3 }
+    }
+}
+
+impl ValueCodec for ZstdValue {
+    fn name(&self) -> &'static str {
+        "zstd"
+    }
+
+    fn lossless(&self) -> bool {
+        true
+    }
+
+    fn encode(&self, values: &[f32]) -> ValueEncoding {
+        let mut raw = Vec::with_capacity(values.len() * 4);
+        for &v in values {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        let bytes = zstd::bulk::compress(&raw, self.level).expect("in-memory zstd");
+        ValueEncoding { bytes, perm: None }
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
+        let raw = zstd::bulk::decompress(bytes, n * 4 + 16)?;
+        anyhow::ensure!(raw.len() == n * 4, "zstd payload size mismatch");
+        Ok(raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::ValueCodec;
+
+    #[test]
+    fn deflate_compresses_repetitive_values() {
+        let values = vec![0.125f32; 10_000];
+        let enc = DeflateValue::default().encode(&values);
+        assert!(enc.bytes.len() < 1000, "deflate size {}", enc.bytes.len());
+        let back = DeflateValue::default().decode(&enc.bytes, values.len()).unwrap();
+        assert_eq!(back, values);
+    }
+
+    #[test]
+    fn zstd_compresses_repetitive_values() {
+        let values = vec![0.5f32; 10_000];
+        let enc = ZstdValue::default().encode(&values);
+        assert!(enc.bytes.len() < 1000, "zstd size {}", enc.bytes.len());
+        let back = ZstdValue::default().decode(&enc.bytes, values.len()).unwrap();
+        assert_eq!(back, values);
+    }
+
+    #[test]
+    fn fp16_halves_volume() {
+        let values = vec![1.0f32; 100];
+        assert_eq!(Fp16Value.encode(&values).bytes.len(), 200);
+        assert_eq!(RawValue.encode(&values).bytes.len(), 400);
+    }
+
+    #[test]
+    fn decode_size_validation() {
+        assert!(RawValue.decode(&[0u8; 7], 2).is_err());
+        assert!(Fp16Value.decode(&[0u8; 3], 2).is_err());
+    }
+}

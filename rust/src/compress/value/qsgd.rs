@@ -1,0 +1,175 @@
+//! QSGD value quantization (Alistarh et al., NeurIPS 2017), the paper's
+//! existing-method value plug-in (§3, §6.3).
+//!
+//! Values are split into buckets of `bucket` elements; within a bucket,
+//! each value v is stochastically quantized to one of `s = 2^bits − 1`
+//! levels of |v|/‖bucket‖∞:
+//!   `level = floor(|v|/max * s + u)`, u ~ U[0,1)
+//! The wire carries the bucket max (f32), then per value a sign bit and
+//! the level in Elias-gamma (level+1, since gamma needs v ≥ 1).
+//! Unbiased: E[decode] = value.
+
+use crate::compress::{ValueCodec, ValueEncoding};
+use crate::util::bitio::{BitReader, BitWriter};
+use crate::util::elias::{gamma_decode, gamma_encode};
+use crate::util::prng::Rng;
+use crate::util::varint;
+use std::sync::Mutex;
+
+pub struct QsgdValue {
+    pub bits: u32,
+    pub bucket: usize,
+    rng: Mutex<Rng>,
+}
+
+impl QsgdValue {
+    pub fn new(bits: u32, bucket: usize, seed: u64) -> Self {
+        assert!((1..=16).contains(&bits), "qsgd bits in 1..=16");
+        assert!(bucket > 0);
+        Self { bits, bucket, rng: Mutex::new(Rng::new(seed)) }
+    }
+
+    fn levels(&self) -> u32 {
+        (1u32 << self.bits) - 1
+    }
+}
+
+impl ValueCodec for QsgdValue {
+    fn name(&self) -> &'static str {
+        "qsgd"
+    }
+
+    fn encode(&self, values: &[f32]) -> ValueEncoding {
+        let s = self.levels() as f32;
+        let mut rng = self.rng.lock().unwrap();
+        let mut head = Vec::new();
+        varint::write_u64(&mut head, self.bits as u64);
+        varint::write_u64(&mut head, self.bucket as u64);
+        let mut w = BitWriter::with_capacity(values.len() / 2);
+        for chunk in values.chunks(self.bucket) {
+            let max = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            head.extend_from_slice(&max.to_le_bytes());
+            for &v in chunk {
+                w.write_bit(v < 0.0);
+                let level = if max > 0.0 {
+                    let t = (v.abs() / max) * s + rng.next_f32();
+                    (t as u32).min(self.levels())
+                } else {
+                    0
+                };
+                gamma_encode(&mut w, level as u64 + 1);
+            }
+        }
+        let mut bytes = head;
+        bytes.extend_from_slice(&w.finish());
+        ValueEncoding { bytes, perm: None }
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
+        let mut pos = 0usize;
+        let bits = varint::read_u64(bytes, &mut pos)? as u32;
+        let bucket = varint::read_u64(bytes, &mut pos)? as usize;
+        anyhow::ensure!(bits == self.bits && bucket == self.bucket, "qsgd param mismatch");
+        let s = ((1u32 << bits) - 1) as f32;
+        let nbuckets = n.div_ceil(bucket);
+        anyhow::ensure!(pos + nbuckets * 4 <= bytes.len(), "qsgd maxima truncated");
+        let mut maxima = Vec::with_capacity(nbuckets);
+        for _ in 0..nbuckets {
+            maxima.push(f32::from_le_bytes(bytes[pos..pos + 4].try_into().unwrap()));
+            pos += 4;
+        }
+        let mut r = BitReader::new(&bytes[pos..]);
+        let mut out = Vec::with_capacity(n);
+        for i in 0..n {
+            let neg = r.read_bit()?;
+            let level = (gamma_decode(&mut r)? - 1) as f32;
+            let max = maxima[i / bucket];
+            let mag = max * level / s;
+            out.push(if neg { -mag } else { mag });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::ValueCodec;
+    use crate::util::prng::Rng;
+    use crate::util::stats::rel_l2_err;
+
+    #[test]
+    fn roundtrip_shape_and_bounds() {
+        let mut rng = Rng::new(200);
+        let values: Vec<f32> = (0..5000).map(|_| rng.next_gaussian() as f32).collect();
+        let q = QsgdValue::new(7, 512, 1);
+        let enc = q.encode(&values);
+        let out = q.decode(&enc.bytes, values.len()).unwrap();
+        assert_eq!(out.len(), values.len());
+        // 7-bit quantization: decoded magnitude within one level of source
+        for (chunk_i, chunk) in values.chunks(512).enumerate() {
+            let max = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            let step = max / 127.0;
+            for (j, &v) in chunk.iter().enumerate() {
+                let o = out[chunk_i * 512 + j];
+                assert!((v - o).abs() <= step + 1e-6, "v={v} o={o} step={step}");
+                if o != 0.0 {
+                    assert_eq!(v < 0.0, o < 0.0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unbiasedness() {
+        // E[Q(v)] = v over the stochastic rounding
+        let v = 0.3f32;
+        let values = vec![v, 1.0]; // second value pins the bucket max to 1
+        let mut acc = 0.0f64;
+        let trials = 4000;
+        for t in 0..trials {
+            let q = QsgdValue::new(3, 2, t as u64);
+            let out = q.decode(&q.encode(&values).bytes, 2).unwrap();
+            acc += out[0] as f64;
+        }
+        let mean = acc / trials as f64;
+        assert!((mean - v as f64).abs() < 0.01, "mean {mean}");
+    }
+
+    #[test]
+    fn more_bits_less_error() {
+        let mut rng = Rng::new(201);
+        let values: Vec<f32> = (0..2000).map(|_| rng.next_gaussian() as f32).collect();
+        let mut errs = Vec::new();
+        for bits in [2u32, 4, 8] {
+            let q = QsgdValue::new(bits, 256, 5);
+            let out = q.decode(&q.encode(&values).bytes, values.len()).unwrap();
+            errs.push(rel_l2_err(&values, &out));
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn compresses_vs_raw() {
+        let mut rng = Rng::new(202);
+        // gradient-like: most values far below the bucket max
+        let values: Vec<f32> =
+            (0..10_000).map(|_| (rng.next_gaussian() as f32) * 0.01).collect();
+        let q = QsgdValue::new(7, 512, 1);
+        let enc = q.encode(&values);
+        assert!(
+            enc.bytes.len() * 2 < values.len() * 4,
+            "qsgd {} vs raw {}",
+            enc.bytes.len(),
+            values.len() * 4
+        );
+    }
+
+    #[test]
+    fn zero_bucket_handled() {
+        let values = vec![0.0f32; 600];
+        let q = QsgdValue::new(7, 512, 1);
+        let out = q.decode(&q.encode(&values).bytes, 600).unwrap();
+        assert!(out.iter().all(|&v| v == 0.0));
+    }
+}

@@ -1,0 +1,147 @@
+//! Training metrics: per-step losses, exact wire-byte accounting and
+//! codec timing — the raw material for every paper figure.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, Default)]
+pub struct StepMetrics {
+    pub step: usize,
+    pub loss: f32,
+    /// accuracy / hit-rate / aux metric averaged over workers
+    pub aux: f32,
+    /// compressed bytes one worker contributes this step (container sizes)
+    pub bytes_per_worker: u64,
+    /// uncompressed dense gradient bytes (baseline volume)
+    pub dense_bytes: u64,
+    pub encode_s: f64,
+    pub decode_s: f64,
+    /// train-step (fwd+bwd) execution time summed over workers
+    pub compute_s: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    pub name: String,
+    pub workers: usize,
+    pub steps: Vec<StepMetrics>,
+}
+
+impl TrainReport {
+    pub fn final_loss(&self) -> f32 {
+        self.steps.last().map(|s| s.loss).unwrap_or(f32::NAN)
+    }
+
+    /// Mean aux metric over the last `k` steps (the "best quality" proxy).
+    pub fn final_aux(&self, k: usize) -> f32 {
+        let n = self.steps.len();
+        if n == 0 {
+            return f32::NAN;
+        }
+        let tail = &self.steps[n.saturating_sub(k)..];
+        tail.iter().map(|s| s.aux).sum::<f32>() / tail.len() as f32
+    }
+
+    /// Total compressed bytes per worker over the run.
+    pub fn total_bytes_per_worker(&self) -> u64 {
+        self.steps.iter().map(|s| s.bytes_per_worker).sum()
+    }
+
+    /// Volume relative to the no-compression baseline (the y-axis of
+    /// Fig 6/9/15 and Table 2).
+    pub fn relative_volume(&self) -> f64 {
+        let dense: u64 = self.steps.iter().map(|s| s.dense_bytes).sum();
+        if dense == 0 {
+            return f64::NAN;
+        }
+        self.total_bytes_per_worker() as f64 / dense as f64
+    }
+
+    pub fn total_encode_s(&self) -> f64 {
+        self.steps.iter().map(|s| s.encode_s).sum()
+    }
+
+    pub fn total_decode_s(&self) -> f64 {
+        self.steps.iter().map(|s| s.decode_s).sum()
+    }
+
+    pub fn total_compute_s(&self) -> f64 {
+        self.steps.iter().map(|s| s.compute_s).sum()
+    }
+
+    /// JSON dump for post-processing / plotting.
+    pub fn to_json(&self) -> Json {
+        let steps: Vec<Json> = self
+            .steps
+            .iter()
+            .map(|s| {
+                let mut m = BTreeMap::new();
+                m.insert("step".into(), Json::Num(s.step as f64));
+                m.insert("loss".into(), Json::Num(s.loss as f64));
+                m.insert("aux".into(), Json::Num(s.aux as f64));
+                m.insert("bytes".into(), Json::Num(s.bytes_per_worker as f64));
+                m.insert("dense_bytes".into(), Json::Num(s.dense_bytes as f64));
+                m.insert("encode_s".into(), Json::Num(s.encode_s));
+                m.insert("decode_s".into(), Json::Num(s.decode_s));
+                m.insert("compute_s".into(), Json::Num(s.compute_s));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = BTreeMap::new();
+        top.insert("name".into(), Json::Str(self.name.clone()));
+        top.insert("workers".into(), Json::Num(self.workers as f64));
+        top.insert("relative_volume".into(), Json::Num(self.relative_volume()));
+        top.insert("final_loss".into(), Json::Num(self.final_loss() as f64));
+        top.insert("steps".into(), Json::Arr(steps));
+        Json::Obj(top)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> TrainReport {
+        TrainReport {
+            name: "t".into(),
+            workers: 2,
+            steps: (0..10)
+                .map(|i| StepMetrics {
+                    step: i,
+                    loss: 10.0 - i as f32,
+                    aux: i as f32 / 10.0,
+                    bytes_per_worker: 100,
+                    dense_bytes: 1000,
+                    encode_s: 0.01,
+                    decode_s: 0.02,
+                    compute_s: 0.1,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn aggregates() {
+        let r = sample();
+        assert_eq!(r.final_loss(), 1.0);
+        assert!((r.final_aux(3) - 0.8).abs() < 1e-6);
+        assert_eq!(r.total_bytes_per_worker(), 1000);
+        assert!((r.relative_volume() - 0.1).abs() < 1e-9);
+        assert!((r.total_encode_s() - 0.1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn json_roundtrips() {
+        let j = sample().to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("workers").unwrap().as_usize(), Some(2));
+        assert_eq!(parsed.get("steps").unwrap().as_arr().unwrap().len(), 10);
+    }
+
+    #[test]
+    fn empty_report() {
+        let r = TrainReport::default();
+        assert!(r.final_loss().is_nan());
+        assert!(r.relative_volume().is_nan());
+    }
+}

@@ -1,0 +1,14 @@
+//! L3 coordinator: the data-parallel training loop with DeepReduce on
+//! the gradient exchange path.
+//!
+//! Per step, per worker: execute the train-step artifact on the worker's
+//! shard → per-tensor error-feedback → sparsify → DeepReduce encode →
+//! (byte-counted) allgather → decode → aggregate → optimizer. The leader
+//! owns the parameters (rust is the parameter store; artifacts are
+//! stateless).
+
+mod metrics;
+mod trainer;
+
+pub use metrics::{StepMetrics, TrainReport};
+pub use trainer::{CompressionSpec, ModelKind, TrainConfig, Trainer};

@@ -1,0 +1,360 @@
+//! The distributed trainer (leader + n simulated workers).
+
+use super::metrics::{StepMetrics, TrainReport};
+use crate::compress::{index_by_name, value_by_name, DeepReduce};
+use crate::runtime::{Artifact, BatchInput};
+use crate::sparsify::{self, ErrorFeedback, Sparsifier};
+use crate::tensor::{SparseTensor, Tensor};
+use std::time::Instant;
+
+/// Which benchmark family an artifact belongs to (drives the dataset).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelKind {
+    Mlp,
+    Ncf,
+    Transformer,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "mlp" | "cifar" => ModelKind::Mlp,
+            "ncf" => ModelKind::Ncf,
+            "transformer" | "lm" => ModelKind::Transformer,
+            _ => return None,
+        })
+    }
+}
+
+/// One DeepReduce instantiation on the gradient path.
+#[derive(Clone, Debug)]
+pub struct CompressionSpec {
+    /// sparsifier name (`topk`, `randomk`, `threshold`, `identity`)
+    pub sparsifier: String,
+    /// r/d for topk/randomk; τ for threshold
+    pub ratio: f64,
+    /// index codec name (see `compress::index_by_name`)
+    pub index: String,
+    /// index codec parameter (FPR for bloom)
+    pub index_param: f64,
+    /// value codec name (see `compress::value_by_name`)
+    pub value: String,
+    /// value codec parameter (bits for qsgd, degree for fitpoly)
+    pub value_param: f64,
+    /// error-feedback memory compensation (paper §6.3 enables it)
+    pub error_feedback: bool,
+    /// tensors smaller than this bypass compression (biases etc.)
+    pub min_compress: usize,
+    pub seed: u64,
+}
+
+impl CompressionSpec {
+    /// `DR_idx^val` on top of Top-r, the paper's default arrangement.
+    pub fn topk(ratio: f64, index: &str, index_param: f64, value: &str, value_param: f64) -> Self {
+        Self {
+            sparsifier: "topk".into(),
+            ratio,
+            index: index.into(),
+            index_param,
+            value: value.into(),
+            value_param,
+            error_feedback: true,
+            min_compress: 1024,
+            seed: 0xDEE9,
+        }
+    }
+
+    /// For inherently sparse models (NCF): no explicit sparsifier.
+    pub fn identity(index: &str, index_param: f64, value: &str, value_param: f64) -> Self {
+        let mut s = Self::topk(1.0, index, index_param, value, value_param);
+        s.sparsifier = "identity".into();
+        s.error_feedback = false;
+        s
+    }
+
+    pub fn build_sparsifier(&self, worker_seed: u64) -> anyhow::Result<Box<dyn Sparsifier>> {
+        sparsify::by_name(&self.sparsifier, self.ratio, self.seed ^ worker_seed)
+            .ok_or_else(|| anyhow::anyhow!("unknown sparsifier {}", self.sparsifier))
+    }
+
+    pub fn build_codec(&self) -> anyhow::Result<DeepReduce> {
+        Ok(DeepReduce::new(
+            index_by_name(&self.index, self.index_param, self.seed)
+                .ok_or_else(|| anyhow::anyhow!("unknown index codec {}", self.index))?,
+            value_by_name(&self.value, self.value_param, self.seed)
+                .ok_or_else(|| anyhow::anyhow!("unknown value codec {}", self.value))?,
+        ))
+    }
+
+    pub fn label(&self) -> String {
+        format!("DR[{}+{}|{}]", self.sparsifier, self.index, self.value)
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub model: ModelKind,
+    /// artifact name under `artifacts/`
+    pub artifact: String,
+    pub workers: usize,
+    pub steps: usize,
+    pub optimizer: String,
+    pub lr: f32,
+    /// None = dense no-compression baseline
+    pub compression: Option<CompressionSpec>,
+    /// dense 3LC path (Fig 9 stand-alone baseline): sparsity multiplier
+    pub dense_3lc: Option<f32>,
+    pub seed: u64,
+    /// print a progress line every k steps (0 = silent)
+    pub log_every: usize,
+}
+
+impl TrainConfig {
+    pub fn new(model: ModelKind, artifact: &str) -> Self {
+        Self {
+            model,
+            artifact: artifact.to_string(),
+            workers: 4,
+            steps: 100,
+            optimizer: match model {
+                ModelKind::Mlp => "momentum".into(),
+                _ => "adam".into(),
+            },
+            lr: match model {
+                ModelKind::Ncf => 0.01,
+                ModelKind::Transformer => 0.003,
+                ModelKind::Mlp => 0.05,
+            },
+            compression: None,
+            dense_3lc: None,
+            seed: 42,
+            log_every: 0,
+        }
+    }
+}
+
+enum Shard {
+    Images(crate::data::SynthImages),
+    Ncf(crate::data::SynthNcf),
+    Corpus(crate::data::TinyCorpus),
+}
+
+impl Shard {
+    fn next_batch(&mut self) -> Vec<BatchInput> {
+        match self {
+            Shard::Images(d) => d.next_batch(),
+            Shard::Ncf(d) => d.next_batch(),
+            Shard::Corpus(d) => d.next_batch(),
+        }
+    }
+}
+
+pub struct Trainer {
+    cfg: TrainConfig,
+    artifact: Artifact,
+    params: Vec<Tensor>,
+    opt: Box<dyn crate::optim::Optimizer>,
+    shards: Vec<Shard>,
+    sparsifiers: Vec<Box<dyn Sparsifier>>,
+    codec: Option<DeepReduce>,
+    threelc: Option<crate::baselines::ThreeLC>,
+    /// ef[worker][tensor]
+    ef: Vec<Vec<ErrorFeedback>>,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainConfig) -> anyhow::Result<Self> {
+        let artifact = Artifact::load_default(&cfg.artifact)?;
+        let params = artifact.init_params(cfg.seed);
+        let opt = crate::optim::by_name(&cfg.optimizer, cfg.lr)
+            .ok_or_else(|| anyhow::anyhow!("unknown optimizer {}", cfg.optimizer))?;
+        let man = &artifact.manifest;
+        let cu = |k: &str| -> anyhow::Result<usize> {
+            man.config_usize(k).ok_or_else(|| anyhow::anyhow!("manifest missing config {k}"))
+        };
+        let mut shards = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            shards.push(match cfg.model {
+                ModelKind::Mlp => Shard::Images(crate::data::SynthImages::shard(
+                    cu("input_dim")?,
+                    cu("classes")?,
+                    cu("batch")?,
+                    cfg.seed,
+                    w,
+                )),
+                ModelKind::Ncf => Shard::Ncf(crate::data::SynthNcf::shard(
+                    cu("users")?,
+                    cu("items")?,
+                    cu("batch")?,
+                    cfg.seed,
+                    w,
+                )),
+                ModelKind::Transformer => Shard::Corpus(crate::data::TinyCorpus::shard(
+                    cu("vocab")?,
+                    cu("seq")?,
+                    cu("batch")?,
+                    cfg.seed,
+                    w,
+                )),
+            });
+        }
+        let threelc = cfg.dense_3lc.map(crate::baselines::ThreeLC::new);
+        let ef_all = |params: &[Tensor]| {
+            (0..cfg.workers)
+                .map(|_| params.iter().map(|p| ErrorFeedback::new(p.numel())).collect::<Vec<_>>())
+                .collect::<Vec<_>>()
+        };
+        let (sparsifiers, codec, ef) = match &cfg.compression {
+            None if threelc.is_some() => (Vec::new(), None, ef_all(&params)),
+            None => (Vec::new(), None, Vec::new()),
+            Some(spec) => {
+                let sp = (0..cfg.workers)
+                    .map(|w| spec.build_sparsifier(w as u64))
+                    .collect::<anyhow::Result<Vec<_>>>()?;
+                let codec = spec.build_codec()?;
+                let ef = (0..cfg.workers)
+                    .map(|_| {
+                        params.iter().map(|p| ErrorFeedback::new(p.numel())).collect::<Vec<_>>()
+                    })
+                    .collect();
+                (sp, Some(codec), ef)
+            }
+        };
+        Ok(Self { cfg, artifact, params, opt, shards, sparsifiers, codec, threelc, ef })
+    }
+
+    pub fn params(&self) -> &[Tensor] {
+        &self.params
+    }
+
+    pub fn artifact(&self) -> &Artifact {
+        &self.artifact
+    }
+
+    /// Run the configured number of steps, returning the full report.
+    pub fn run(&mut self) -> anyhow::Result<TrainReport> {
+        let mut report = TrainReport {
+            name: self
+                .cfg
+                .compression
+                .as_ref()
+                .map(|c| c.label())
+                .unwrap_or_else(|| {
+                    if self.threelc.is_some() { "3lc".into() } else { "baseline".into() }
+                }),
+            workers: self.cfg.workers,
+            steps: Vec::with_capacity(self.cfg.steps),
+        };
+        for step in 0..self.cfg.steps {
+            let m = self.step(step)?;
+            if self.cfg.log_every > 0 && step % self.cfg.log_every == 0 {
+                eprintln!(
+                    "[{}] step {:>5}  loss {:.4}  aux {:.4}  bytes/worker {}",
+                    report.name, step, m.loss, m.aux, m.bytes_per_worker
+                );
+            }
+            report.steps.push(m);
+        }
+        Ok(report)
+    }
+
+    /// One synchronous data-parallel step across all workers.
+    pub fn step(&mut self, step: usize) -> anyhow::Result<StepMetrics> {
+        let n = self.cfg.workers;
+        let total_params = self.artifact.manifest.total_params();
+        let mut agg: Vec<Vec<f32>> = self.params.iter().map(|p| vec![0.0; p.numel()]).collect();
+        let mut metrics = StepMetrics {
+            step,
+            dense_bytes: (total_params * 4) as u64, // one worker's dense payload
+            ..Default::default()
+        };
+        for w in 0..n {
+            let batch = self.shards[w].next_batch();
+            let t0 = Instant::now();
+            let out = self.artifact.train_step(&self.params, &batch)?;
+            metrics.compute_s += t0.elapsed().as_secs_f64();
+            metrics.loss += out.loss / n as f32;
+            metrics.aux += out.aux / n as f32;
+
+            match (&self.codec, self.cfg.compression.as_ref()) {
+                (Some(codec), Some(spec)) => {
+                    for (ti, grad) in out.grads.iter().enumerate() {
+                        let flat = grad.data();
+                        if flat.len() < spec.min_compress {
+                            // bypass: raw kv on the wire
+                            metrics.bytes_per_worker += (flat.len() * 4) as u64;
+                            for (a, &g) in agg[ti].iter_mut().zip(flat) {
+                                *a += g;
+                            }
+                            continue;
+                        }
+                        let corrected: Vec<f32> = if spec.error_feedback {
+                            self.ef[w][ti].apply(flat)
+                        } else {
+                            flat.to_vec()
+                        };
+                        let sp = self.sparsifiers[w].sparsify(&corrected);
+                        let t1 = Instant::now();
+                        let container = codec.encode(&sp, Some(&corrected));
+                        metrics.encode_s += t1.elapsed().as_secs_f64();
+                        metrics.bytes_per_worker += container.wire_bytes() as u64;
+                        let t2 = Instant::now();
+                        let decoded: SparseTensor = codec.decode(&container)?;
+                        metrics.decode_s += t2.elapsed().as_secs_f64();
+                        if spec.error_feedback {
+                            // residual vs what was actually reconstructed
+                            self.ef[w][ti].update(&corrected, &decoded);
+                        }
+                        decoded.add_into(&mut agg[ti]);
+                    }
+                }
+                _ if self.threelc.is_some() => {
+                    let tlc = self.threelc.as_ref().unwrap();
+                    for (ti, grad) in out.grads.iter().enumerate() {
+                        let corrected = self.ef[w][ti].apply(grad.data());
+                        let t1 = Instant::now();
+                        let enc = tlc.encode(&corrected);
+                        metrics.encode_s += t1.elapsed().as_secs_f64();
+                        metrics.bytes_per_worker += enc.len() as u64;
+                        let t2 = Instant::now();
+                        let dec = tlc.decode(&enc)?;
+                        metrics.decode_s += t2.elapsed().as_secs_f64();
+                        let kept = SparseTensor::from_dense(&dec);
+                        self.ef[w][ti].update(&corrected, &kept);
+                        for (a, &g) in agg[ti].iter_mut().zip(&dec) {
+                            *a += g;
+                        }
+                    }
+                }
+                _ => {
+                    // dense baseline: full gradient on the wire
+                    metrics.bytes_per_worker += (total_params * 4) as u64 / n as u64;
+                    for (ti, grad) in out.grads.iter().enumerate() {
+                        for (a, &g) in agg[ti].iter_mut().zip(grad.data()) {
+                            *a += g;
+                        }
+                    }
+                }
+            }
+        }
+        // bytes_per_worker accumulated across workers -> average
+        if self.codec.is_some() || self.threelc.is_some() {
+            metrics.bytes_per_worker /= n as u64;
+        } else {
+            metrics.bytes_per_worker = (total_params * 4) as u64;
+        }
+        // average + apply
+        let grads: Vec<Tensor> = agg
+            .into_iter()
+            .zip(&self.params)
+            .map(|(mut v, p)| {
+                for x in v.iter_mut() {
+                    *x /= n as f32;
+                }
+                Tensor::new(p.shape().to_vec(), v)
+            })
+            .collect();
+        self.opt.step(&mut self.params, &grads);
+        Ok(metrics)
+    }
+}

@@ -1,0 +1,290 @@
+//! Synthetic datasets with the statistics the experiments need
+//! (DESIGN.md §4 substitution table): cluster images for classification,
+//! Zipf implicit-feedback interactions for NCF, and a Markov token
+//! corpus for the LM. All deterministic in the seed, shardable by
+//! worker rank.
+
+use crate::runtime::artifact::BatchInput;
+use crate::util::prng::Rng;
+
+/// Classification batches: K Gaussian clusters in input space, one per
+/// class (learnable but not trivial: cluster spread ~ separation).
+pub struct SynthImages {
+    dim: usize,
+    classes: usize,
+    batch: usize,
+    means: Vec<Vec<f32>>,
+    rng: Rng,
+    noise: f32,
+}
+
+impl SynthImages {
+    pub fn new(dim: usize, classes: usize, batch: usize, seed: u64) -> Self {
+        // class means drawn once from the SAME seed on every worker,
+        // worker rank only perturbs the sampling stream
+        let mut meta = Rng::new(seed ^ 0xDA7A_0001);
+        // separation scaled by 1/sqrt(dim) so the Bayes accuracy is
+        // meaningfully below 1 — otherwise every compressor looks equal
+        // and the Fig 6/7 comparisons degenerate
+        let scale = 3.0 / (dim as f32).sqrt();
+        let means = (0..classes)
+            .map(|_| (0..dim).map(|_| meta.next_gaussian() as f32 * scale).collect())
+            .collect();
+        Self { dim, classes, batch, means, rng: Rng::new(seed), noise: 1.0 }
+    }
+
+    pub fn shard(dim: usize, classes: usize, batch: usize, seed: u64, rank: usize) -> Self {
+        let mut s = Self::new(dim, classes, batch, seed);
+        s.rng = Rng::new(seed.wrapping_add(0x9E37 * (rank as u64 + 1)));
+        s
+    }
+
+    /// Next batch as artifact inputs [x, y].
+    pub fn next_batch(&mut self) -> Vec<BatchInput> {
+        let mut x = Vec::with_capacity(self.batch * self.dim);
+        let mut y = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let c = self.rng.below(self.classes as u64) as usize;
+            y.push(c as i32);
+            for j in 0..self.dim {
+                x.push(self.means[c][j] + self.rng.next_gaussian() as f32 * self.noise);
+            }
+        }
+        vec![BatchInput::F32(x), BatchInput::I32(y)]
+    }
+}
+
+/// NCF implicit feedback: Zipf-popular users/items; label from a latent
+/// dot-product model (so the task is learnable) + negative sampling.
+pub struct SynthNcf {
+    users: usize,
+    items: usize,
+    batch: usize,
+    user_lat: Vec<Vec<f32>>,
+    item_lat: Vec<Vec<f32>>,
+    rng: Rng,
+}
+
+impl SynthNcf {
+    pub fn new(users: usize, items: usize, batch: usize, seed: u64) -> Self {
+        let dim = 4;
+        let mut meta = Rng::new(seed ^ 0xDA7A_0002);
+        let user_lat =
+            (0..users).map(|_| (0..dim).map(|_| meta.next_gaussian() as f32).collect()).collect();
+        let item_lat =
+            (0..items).map(|_| (0..dim).map(|_| meta.next_gaussian() as f32).collect()).collect();
+        Self { users, items, batch, user_lat, item_lat, rng: Rng::new(seed) }
+    }
+
+    pub fn shard(users: usize, items: usize, batch: usize, seed: u64, rank: usize) -> Self {
+        let mut s = Self::new(users, items, batch, seed);
+        s.rng = Rng::new(seed.wrapping_add(0x9E37 * (rank as u64 + 1)));
+        s
+    }
+
+    fn zipf(&mut self, n: usize) -> usize {
+        // log-uniform draw over [0, n): Zipf-like popularity skew (low
+        // ids are much more frequent), which is what drives the paper's
+        // inherent embedding-gradient sparsity pattern
+        let u = self.rng.next_f64();
+        let h = (n as f64).ln();
+        (((h * u).exp() - 1.0).min(n as f64 - 1.0)) as usize
+    }
+
+    pub fn next_batch(&mut self) -> Vec<BatchInput> {
+        let mut users = Vec::with_capacity(self.batch);
+        let mut items = Vec::with_capacity(self.batch);
+        let mut labels = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            let u = self.zipf(self.users);
+            let i = self.zipf(self.items);
+            let dot: f32 =
+                self.user_lat[u].iter().zip(&self.item_lat[i]).map(|(a, b)| a * b).sum();
+            let p = 1.0 / (1.0 + (-dot as f64).exp());
+            labels.push((self.rng.next_f64() < p) as i32 as f32);
+            users.push(u as i32);
+            items.push(i as i32);
+        }
+        vec![BatchInput::I32(users), BatchInput::I32(items), BatchInput::F32(labels)]
+    }
+}
+
+/// Markov-chain token corpus: each token's successor distribution is
+/// concentrated on few tokens, so an LM can reduce loss well below
+/// ln(vocab).
+pub struct TinyCorpus {
+    vocab: usize,
+    seq: usize,
+    batch: usize,
+    /// per-token: 4 likely successors
+    succ: Vec<[u32; 4]>,
+    rng: Rng,
+    state: u32,
+}
+
+impl TinyCorpus {
+    pub fn new(vocab: usize, seq: usize, batch: usize, seed: u64) -> Self {
+        let mut meta = Rng::new(seed ^ 0xDA7A_0003);
+        let succ = (0..vocab)
+            .map(|_| {
+                [
+                    meta.below(vocab as u64) as u32,
+                    meta.below(vocab as u64) as u32,
+                    meta.below(vocab as u64) as u32,
+                    meta.below(vocab as u64) as u32,
+                ]
+            })
+            .collect();
+        Self { vocab, seq, batch, succ, rng: Rng::new(seed), state: 0 }
+    }
+
+    pub fn shard(vocab: usize, seq: usize, batch: usize, seed: u64, rank: usize) -> Self {
+        let mut s = Self::new(vocab, seq, batch, seed);
+        s.rng = Rng::new(seed.wrapping_add(0x9E37 * (rank as u64 + 1)));
+        s.state = s.rng.below(vocab as u64) as u32;
+        s
+    }
+
+    fn next_token(&mut self) -> u32 {
+        // 90%: one of the 4 designated successors; 10%: uniform
+        let t = if self.rng.next_f64() < 0.9 {
+            self.succ[self.state as usize][self.rng.below(4) as usize]
+        } else {
+            self.rng.below(self.vocab as u64) as u32
+        };
+        self.state = t;
+        t
+    }
+
+    /// Next batch as artifact inputs [tokens, targets] (targets are the
+    /// next-token shift).
+    pub fn next_batch(&mut self) -> Vec<BatchInput> {
+        let n = self.batch * self.seq;
+        let mut tokens = Vec::with_capacity(n);
+        let mut targets = Vec::with_capacity(n);
+        for _ in 0..self.batch {
+            let mut prev = self.next_token() as i32;
+            for _ in 0..self.seq {
+                let next = self.next_token() as i32;
+                tokens.push(prev);
+                targets.push(next);
+                prev = next;
+            }
+        }
+        vec![BatchInput::I32(tokens), BatchInput::I32(targets)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::BatchInput;
+
+    #[test]
+    fn images_learnable_structure() {
+        let mut d = SynthImages::new(16, 4, 256, 7);
+        let batch = d.next_batch();
+        let (BatchInput::F32(x), BatchInput::I32(y)) = (&batch[0], &batch[1]) else {
+            panic!("wrong input kinds")
+        };
+        assert_eq!(x.len(), 256 * 16);
+        assert_eq!(y.len(), 256);
+        assert!(y.iter().all(|&c| (0..4).contains(&c)));
+        // same-class samples are closer to their mean than to others
+        // (statistically): check intra vs inter distance
+        let mean_of = |c: i32| -> Vec<f32> {
+            let rows: Vec<&[f32]> = y
+                .iter()
+                .enumerate()
+                .filter(|(_, &yc)| yc == c)
+                .map(|(i, _)| &x[i * 16..(i + 1) * 16])
+                .collect();
+            let mut m = vec![0.0f32; 16];
+            for r in &rows {
+                for (a, &b) in m.iter_mut().zip(*r) {
+                    *a += b;
+                }
+            }
+            m.iter_mut().for_each(|v| *v /= rows.len().max(1) as f32);
+            m
+        };
+        let m0 = mean_of(0);
+        let m1 = mean_of(1);
+        let dist: f32 = m0.iter().zip(&m1).map(|(a, b)| (a - b).powi(2)).sum();
+        assert!(dist > 0.05, "class means collapsed: {dist}");
+    }
+
+    #[test]
+    fn shards_differ_but_share_structure() {
+        let mut a = SynthImages::shard(8, 2, 32, 5, 0);
+        let mut b = SynthImages::shard(8, 2, 32, 5, 1);
+        assert_eq!(a.means, b.means);
+        let ba = a.next_batch();
+        let bb = b.next_batch();
+        let (BatchInput::F32(xa), BatchInput::F32(xb)) = (&ba[0], &bb[0]) else { panic!() };
+        assert_ne!(xa, xb);
+    }
+
+    #[test]
+    fn ncf_labels_correlate_with_latent() {
+        let mut d = SynthNcf::new(100, 80, 2000, 11);
+        let batch = d.next_batch();
+        let (BatchInput::I32(us), BatchInput::I32(is_), BatchInput::F32(ls)) =
+            (&batch[0], &batch[1], &batch[2])
+        else {
+            panic!()
+        };
+        // positives should have higher latent dot on average
+        let mut pos = 0.0f64;
+        let mut npos = 0;
+        let mut neg = 0.0f64;
+        let mut nneg = 0;
+        for k in 0..us.len() {
+            let dot: f32 = d.user_lat[us[k] as usize]
+                .iter()
+                .zip(&d.item_lat[is_[k] as usize])
+                .map(|(a, b)| a * b)
+                .sum();
+            if ls[k] > 0.5 {
+                pos += dot as f64;
+                npos += 1;
+            } else {
+                neg += dot as f64;
+                nneg += 1;
+            }
+        }
+        assert!(npos > 100 && nneg > 100);
+        assert!(pos / npos as f64 > neg / nneg as f64 + 0.2);
+    }
+
+    #[test]
+    fn corpus_is_predictable() {
+        let mut d = TinyCorpus::new(64, 32, 4, 13);
+        let batch = d.next_batch();
+        let (BatchInput::I32(toks), BatchInput::I32(tgts)) = (&batch[0], &batch[1]) else {
+            panic!()
+        };
+        assert_eq!(toks.len(), 128);
+        assert_eq!(tgts.len(), 128);
+        // shifted relationship within each row
+        for b in 0..4 {
+            for t in 0..31 {
+                assert_eq!(toks[b * 32 + t + 1], tgts[b * 32 + t]);
+            }
+        }
+        // successor concentration: most transitions use the 4 designated
+        let mut hits = 0;
+        let mut total = 0;
+        for b in 0..4 {
+            for t in 0..31 {
+                let cur = toks[b * 32 + t] as usize;
+                let nxt = tgts[b * 32 + t] as u32;
+                total += 1;
+                if d.succ[cur].contains(&nxt) {
+                    hits += 1;
+                }
+            }
+        }
+        assert!(hits * 10 >= total * 7, "{hits}/{total}");
+    }
+}

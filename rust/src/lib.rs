@@ -1,0 +1,19 @@
+//! DeepReduce: a sparse-tensor communication framework for distributed
+//! deep learning — Rust + JAX + Pallas reproduction.
+//!
+//! See DESIGN.md for the architecture and the per-experiment index.
+
+pub mod baselines;
+pub mod collective;
+pub mod cli;
+pub mod compress;
+pub mod coordinator;
+pub mod data;
+pub mod linalg;
+pub mod optim;
+pub mod runtime;
+pub mod simnet;
+pub mod sparsify;
+pub mod tensor;
+pub mod util;
+pub mod xp;

@@ -1,0 +1,237 @@
+//! Double-exponential regression `y = a·e^{bx} + c·e^{dx}` (Fit-DExp,
+//! paper §5 "Nonlinear regression") via Levenberg–Marquardt.
+//!
+//! The sorted gradient curve is monotone and convex-ish, which a sum of
+//! two exponentials captures with 4 parameters. The x-domain is rescaled
+//! to [0, 1] for conditioning; scale is implicit (the decoder knows n).
+
+use super::cholesky_solve;
+
+/// Fitted double-exponential model over `n` points (x rescaled to [0,1]).
+#[derive(Clone, Debug, PartialEq)]
+pub struct DoubleExp {
+    pub a: f32,
+    pub b: f32,
+    pub c: f32,
+    pub d: f32,
+}
+
+impl DoubleExp {
+    /// Evaluate at rescaled position t ∈ [0, 1].
+    #[inline]
+    pub fn eval_t(&self, t: f64) -> f32 {
+        (self.a as f64 * (self.b as f64 * t).exp() + self.c as f64 * (self.d as f64 * t).exp())
+            as f32
+    }
+
+    /// Evaluate at integer position i of n.
+    #[inline]
+    pub fn eval(&self, i: usize, n: usize) -> f32 {
+        let t = if n > 1 { i as f64 / (n - 1) as f64 } else { 0.0 };
+        self.eval_t(t)
+    }
+
+    pub fn wire_bytes(&self) -> usize {
+        16
+    }
+}
+
+/// Fit the model to `y` (positions 0..n rescaled to [0,1]).
+/// Returns the fit and its sum of squared errors.
+pub fn fit_double_exp(y: &[f64], max_iters: usize) -> Option<(DoubleExp, f64)> {
+    let n = y.len();
+    if n < 4 {
+        return None;
+    }
+    let ts: Vec<f64> = (0..n).map(|i| i as f64 / (n - 1) as f64).collect();
+
+    // Multi-start: the loss surface has local minima, so try a few
+    // structurally different initializations and keep the best fit.
+    let y0 = y[0];
+    let y1 = y[n - 1];
+    let ybar = y.iter().sum::<f64>() / n as f64;
+    let e4 = 4.0f64.exp();
+    let mut starts: Vec<[f64; 4]> = vec![
+        // fast + slow decaying pair
+        [0.75 * y0, decay_guess(y, &ts), 0.25 * y0, 0.0],
+        // endpoint-anchored: a e^{bt} decays from y0; c e^{dt} grows to y1
+        [y0, -4.0, y1 / e4, 4.0],
+        // constant-ish slow component plus the transient above it
+        [y0 - ybar, -3.0, ybar, 0.0],
+    ];
+    if y0.abs() < 1e-30 {
+        starts.push([y1, 1.0, -y1, 0.5]);
+    }
+    let mut overall: Option<([f64; 4], f64)> = None;
+    for p0 in starts {
+        let (p, s) = lm_from(p0, y, &ts, max_iters);
+        if overall.as_ref().is_none_or(|(_, bs)| s < *bs) {
+            overall = Some((p, s));
+        }
+    }
+    let best = overall?.0;
+    finalize(best, y, &ts)
+}
+
+fn lm_from(mut p: [f64; 4], y: &[f64], ts: &[f64], max_iters: usize) -> ([f64; 4], f64) {
+    let mut lambda = 1e-3;
+    let mut best = p;
+    let mut best_sse = sse(&p, y, ts);
+    let mut stall = 0u32; // §Perf: stop after 4 near-zero-improvement steps
+    for _ in 0..max_iters {
+        // Jacobian and residuals at p
+        let (jtj, jtr) = normal_eqs(&p, y, ts);
+        // LM step: (JᵀJ + λ diag(JᵀJ)) δ = Jᵀr
+        let mut aug = jtj.clone();
+        for i in 0..4 {
+            aug[i * 4 + i] += lambda * jtj[i * 4 + i].max(1e-12);
+        }
+        let Some(delta) = cholesky_solve(&aug, &jtr, 4) else {
+            lambda *= 10.0;
+            continue;
+        };
+        let cand = [
+            p[0] + delta[0],
+            (p[1] + delta[1]).clamp(-60.0, 60.0),
+            p[2] + delta[2],
+            (p[3] + delta[3]).clamp(-60.0, 60.0),
+        ];
+        let cand_sse = sse(&cand, y, ts);
+        if cand_sse.is_finite() && cand_sse < best_sse {
+            if best_sse - cand_sse < 1e-6 * best_sse {
+                stall += 1;
+            } else {
+                stall = 0;
+            }
+            p = cand;
+            best = cand;
+            best_sse = cand_sse;
+            lambda = (lambda * 0.3).max(1e-12);
+            if best_sse < 1e-24 || stall >= 4 {
+                break;
+            }
+        } else {
+            lambda = (lambda * 10.0).min(1e12);
+            if lambda >= 1e12 {
+                break;
+            }
+        }
+    }
+    (best, best_sse)
+}
+
+fn finalize(best: [f64; 4], y: &[f64], ts: &[f64]) -> Option<(DoubleExp, f64)> {
+    let model =
+        DoubleExp { a: best[0] as f32, b: best[1] as f32, c: best[2] as f32, d: best[3] as f32 };
+    // recompute SSE with f32-truncated params (what the wire carries)
+    let sse_f32: f64 = y
+        .iter()
+        .zip(ts)
+        .map(|(&yi, &t)| (yi - model.eval_t(t) as f64).powi(2))
+        .sum();
+    Some((model, sse_f32))
+}
+
+fn decay_guess(y: &[f64], ts: &[f64]) -> f64 {
+    // crude log-slope between the first and middle positive samples
+    let n = y.len();
+    let m = n / 2;
+    if y[0].abs() > 1e-12 && y[m].abs() > 1e-12 && (y[0] > 0.0) == (y[m] > 0.0) {
+        let ratio: f64 = y[m] / y[0];
+        if ratio > 0.0 {
+            return (ratio.ln() / (ts[m] - ts[0])).clamp(-60.0, 60.0);
+        }
+    }
+    -1.0
+}
+
+fn sse(p: &[f64; 4], y: &[f64], ts: &[f64]) -> f64 {
+    y.iter()
+        .zip(ts)
+        .map(|(&yi, &t)| {
+            let f = p[0] * (p[1] * t).exp() + p[2] * (p[3] * t).exp();
+            (yi - f).powi(2)
+        })
+        .sum()
+}
+
+/// Build JᵀJ (4x4) and Jᵀr for the residual r = y - f(p).
+fn normal_eqs(p: &[f64; 4], y: &[f64], ts: &[f64]) -> (Vec<f64>, Vec<f64>) {
+    let mut jtj = vec![0.0f64; 16];
+    let mut jtr = vec![0.0f64; 4];
+    for (&yi, &t) in y.iter().zip(ts) {
+        let e1 = (p[1] * t).exp();
+        let e2 = (p[3] * t).exp();
+        let f = p[0] * e1 + p[2] * e2;
+        let r = yi - f;
+        // df/da, df/db, df/dc, df/dd
+        let j = [e1, p[0] * t * e1, e2, p[2] * t * e2];
+        for a in 0..4 {
+            for b in a..4 {
+                jtj[a * 4 + b] += j[a] * j[b];
+            }
+            jtr[a] += j[a] * r;
+        }
+    }
+    for a in 0..4 {
+        for b in 0..a {
+            jtj[a * 4 + b] = jtj[b * 4 + a];
+        }
+    }
+    (jtj, jtr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn recovers_exact_double_exponential() {
+        let n = 200;
+        let truth = DoubleExp { a: 2.0, b: -3.0, c: 0.5, d: -0.2 };
+        let y: Vec<f64> =
+            (0..n).map(|i| truth.eval_t(i as f64 / (n - 1) as f64) as f64).collect();
+        let (fit, sse) = fit_double_exp(&y, 200).unwrap();
+        assert!(sse < 1e-8, "sse {sse}, fit {fit:?}");
+    }
+
+    #[test]
+    fn fits_sorted_gradient_shape() {
+        // descending heavy-tailed curve: like sorted top-r magnitudes
+        let mut rng = Rng::new(70);
+        let n = 1000;
+        let y: Vec<f64> = (0..n)
+            .map(|i| {
+                let t = i as f64 / (n - 1) as f64;
+                2.0 * (-5.0 * t).exp() + 0.05 * (-0.5 * t).exp()
+                    + rng.next_gaussian() * 1e-4
+            })
+            .collect();
+        let (fit, sse) = fit_double_exp(&y, 100).unwrap();
+        let norm: f64 = y.iter().map(|v| v * v).sum();
+        assert!(sse / norm < 1e-3, "relative sse {}", sse / norm);
+        // spot check monotone-ish decay
+        assert!(fit.eval(0, n) > fit.eval(n - 1, n));
+    }
+
+    #[test]
+    fn too_few_points_rejected() {
+        assert!(fit_double_exp(&[1.0, 2.0, 3.0], 10).is_none());
+    }
+
+    #[test]
+    fn handles_negative_curves() {
+        // negative-value segment (sorted ascending negatives)
+        let n = 100;
+        let y: Vec<f64> = (0..n)
+            .map(|i| {
+                let t = i as f64 / (n - 1) as f64;
+                -0.01 - 1.5 * (3.0 * (t - 1.0)).exp()
+            })
+            .collect();
+        let (_, sse) = fit_double_exp(&y, 150).unwrap();
+        let norm: f64 = y.iter().map(|v| v * v).sum();
+        assert!(sse / norm < 0.05, "relative sse {}", sse / norm);
+    }
+}

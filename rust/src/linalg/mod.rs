@@ -1,0 +1,112 @@
+//! Small dense linear algebra for the curve-fitting value compressors:
+//! Cholesky solves of the (tiny) normal equations for polynomial least
+//! squares, and a Levenberg–Marquardt loop for the double-exponential
+//! model. Everything here is ≤ 8×8, so simplicity beats blocking.
+
+mod gauss_newton;
+mod polyfit;
+
+pub use gauss_newton::{fit_double_exp, DoubleExp};
+pub use polyfit::{polyfit, polyval, PolyFit};
+
+/// Solve `A x = b` for symmetric positive-definite `A` (row-major n×n)
+/// via Cholesky with diagonal regularization on failure.
+/// Returns None if A is irreparably singular.
+pub fn cholesky_solve(a: &[f64], b: &[f64], n: usize) -> Option<Vec<f64>> {
+    assert_eq!(a.len(), n * n);
+    assert_eq!(b.len(), n);
+    let mut lam = 0.0f64;
+    let scale = (0..n).map(|i| a[i * n + i].abs()).fold(0.0f64, f64::max).max(1e-300);
+    for _ in 0..8 {
+        if let Some(x) = try_cholesky(a, b, n, lam) {
+            return Some(x);
+        }
+        lam = if lam == 0.0 { scale * 1e-12 } else { lam * 100.0 };
+    }
+    None
+}
+
+fn try_cholesky(a: &[f64], b: &[f64], n: usize, lam: f64) -> Option<Vec<f64>> {
+    // L lower-triangular, A + lam*I = L L^T
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[i * n + j] + if i == j { lam } else { 0.0 };
+            for k in 0..j {
+                s -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    return None;
+                }
+                l[i * n + i] = s.sqrt();
+            } else {
+                l[i * n + j] = s / l[j * n + j];
+            }
+        }
+    }
+    // forward solve L y = b
+    let mut y = vec![0.0f64; n];
+    for i in 0..n {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i * n + k] * y[k];
+        }
+        y[i] = s / l[i * n + i];
+    }
+    // back solve L^T x = y
+    let mut x = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let mut s = y[i];
+        for k in (i + 1)..n {
+            s -= l[k * n + i] * x[k];
+        }
+        x[i] = s / l[i * n + i];
+    }
+    if x.iter().all(|v| v.is_finite()) {
+        Some(x)
+    } else {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn solves_spd_system() {
+        // A = [[4,2],[2,3]], b = [2,5] -> x = [-0.5, 2]
+        let a = [4.0, 2.0, 2.0, 3.0];
+        let b = [2.0, 5.0];
+        let x = cholesky_solve(&a, &b, 2).unwrap();
+        assert!((x[0] + 0.5).abs() < 1e-12);
+        assert!((x[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn regularizes_near_singular() {
+        // rank-1 matrix; regularization should still produce finite output
+        let a = [1.0, 1.0, 1.0, 1.0];
+        let b = [2.0, 2.0];
+        let x = cholesky_solve(&a, &b, 2).unwrap();
+        assert!(x.iter().all(|v| v.is_finite()));
+        // solution approximately satisfies the system in least-norm sense
+        let r0 = a[0] * x[0] + a[1] * x[1] - b[0];
+        assert!(r0.abs() < 1e-3);
+    }
+
+    #[test]
+    fn identity_solve() {
+        let n = 5;
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let b: Vec<f64> = (0..n).map(|i| i as f64).collect();
+        let x = cholesky_solve(&a, &b, n).unwrap();
+        for i in 0..n {
+            assert!((x[i] - b[i]).abs() < 1e-14);
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Polynomial least-squares fitting (the Fit-Poly primitive, paper §5).
+//!
+//! Fits `y ≈ Σ c_k x^k` over a segment by solving the Vandermonde normal
+//! equations `(XᵀX) c = Xᵀy` with Cholesky. The x-domain is rescaled to
+//! [-1, 1] before fitting to keep XᵀX well-conditioned at degree 5 — the
+//! scale parameters are part of the serialized model.
+
+use super::cholesky_solve;
+
+/// A fitted polynomial over a segment `[x0, x1]` (inclusive indices).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PolyFit {
+    /// coefficients in the *rescaled* domain t ∈ [-1, 1], low order first
+    pub coeffs: Vec<f32>,
+    /// domain mapping: t = (x - mid) / half
+    pub mid: f32,
+    pub half: f32,
+}
+
+impl PolyFit {
+    /// Evaluate at integer position x.
+    #[inline]
+    pub fn eval(&self, x: f64) -> f32 {
+        let t = ((x - self.mid as f64) / self.half as f64).clamp(-1.5, 1.5);
+        // Horner
+        let mut acc = 0.0f64;
+        for &c in self.coeffs.iter().rev() {
+            acc = acc * t + c as f64;
+        }
+        acc as f32
+    }
+
+    /// Serialized size in bytes (coeffs + domain), for volume accounting.
+    pub fn wire_bytes(&self) -> usize {
+        4 * self.coeffs.len() + 8
+    }
+}
+
+/// Fit a degree-`deg` polynomial to `y[i]` at positions `x0 + i`.
+/// Returns None only if the system is irreparably singular.
+pub fn polyfit(x0: usize, y: &[f64], deg: usize) -> Option<PolyFit> {
+    let n = y.len();
+    assert!(n >= 1);
+    let deg = deg.min(n - 1); // cannot fit degree above n-1
+    let m = deg + 1;
+    let x1 = x0 + n - 1;
+    let mid = (x0 + x1) as f64 / 2.0;
+    let half = ((x1 - x0) as f64 / 2.0).max(1.0);
+
+    // accumulate normal equations
+    let mut xtx = vec![0.0f64; m * m];
+    let mut xty = vec![0.0f64; m];
+    let mut powers = vec![0.0f64; m];
+    for (i, &yi) in y.iter().enumerate() {
+        let t = ((x0 + i) as f64 - mid) / half;
+        let mut p = 1.0;
+        for slot in powers.iter_mut() {
+            *slot = p;
+            p *= t;
+        }
+        for a in 0..m {
+            for b in a..m {
+                xtx[a * m + b] += powers[a] * powers[b];
+            }
+            xty[a] += powers[a] * yi;
+        }
+    }
+    // mirror lower triangle
+    for a in 0..m {
+        for b in 0..a {
+            xtx[a * m + b] = xtx[b * m + a];
+        }
+    }
+    let c = cholesky_solve(&xtx, &xty, m)?;
+    Some(PolyFit {
+        coeffs: c.iter().map(|&v| v as f32).collect(),
+        mid: mid as f32,
+        half: half as f32,
+    })
+}
+
+/// Evaluate a fitted polynomial at all integer positions `x0..x0+n`.
+pub fn polyval(fit: &PolyFit, x0: usize, n: usize) -> Vec<f32> {
+    (0..n).map(|i| fit.eval((x0 + i) as f64)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn exact_on_polynomial_data() {
+        // y = 2 - 3x + 0.5x^2 sampled on x = 10..40
+        let x0 = 10;
+        let y: Vec<f64> =
+            (0..30).map(|i| ((x0 + i) as f64).powi(2) * 0.5 - 3.0 * (x0 + i) as f64 + 2.0).collect();
+        let fit = polyfit(x0, &y, 2).unwrap();
+        let z = polyval(&fit, x0, 30);
+        for (i, (&yi, &zi)) in y.iter().zip(&z).enumerate() {
+            assert!((yi - zi as f64).abs() < 1e-2 * (1.0 + yi.abs()), "i={i}: {yi} vs {zi}");
+        }
+    }
+
+    #[test]
+    fn constant_and_single_point() {
+        let fit = polyfit(0, &[5.0], 5).unwrap();
+        assert_eq!(fit.eval(0.0), 5.0);
+        let fit = polyfit(100, &[3.0, 3.0, 3.0], 0).unwrap();
+        assert!((fit.eval(101.0) - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn degree_clamped_to_points() {
+        // 2 points, degree 5 -> line through both
+        let fit = polyfit(0, &[0.0, 10.0], 5).unwrap();
+        assert_eq!(fit.coeffs.len(), 2);
+        assert!((fit.eval(0.0) - 0.0).abs() < 1e-5);
+        assert!((fit.eval(1.0) - 10.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn noisy_fit_beats_mean_baseline() {
+        let mut rng = Rng::new(60);
+        // monotone sorted-gradient-like curve + noise
+        let n = 500;
+        let y: Vec<f64> = (0..n)
+            .map(|i| {
+                let t = i as f64 / n as f64;
+                (1.0 - t).powi(3) * 2.0 + rng.next_gaussian() * 0.01
+            })
+            .collect();
+        let fit = polyfit(0, &y, 5).unwrap();
+        let z = polyval(&fit, 0, n);
+        let mean = y.iter().sum::<f64>() / n as f64;
+        let sse_fit: f64 = y.iter().zip(&z).map(|(&a, &b)| (a - b as f64).powi(2)).sum();
+        let sse_mean: f64 = y.iter().map(|&a| (a - mean).powi(2)).sum();
+        assert!(sse_fit < sse_mean * 0.05, "fit {sse_fit} vs mean {sse_mean}");
+    }
+
+    #[test]
+    fn large_offset_domain_is_stable() {
+        // regression guard: raw Vandermonde at x~1e6 would blow up
+        let x0 = 1_000_000;
+        let y: Vec<f64> = (0..100).map(|i| 0.001 * i as f64).collect();
+        let fit = polyfit(x0, &y, 3).unwrap();
+        let z = polyval(&fit, x0, 100);
+        for (&yi, &zi) in y.iter().zip(&z) {
+            assert!((yi - zi as f64).abs() < 1e-3);
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! DeepReduce leader entrypoint.
+//!
+//! Subcommands:
+//!   train   — run distributed training with a DeepReduce instantiation
+//!   smoke   — load the pallas smoke artifact through PJRT and execute it
+//!   codecs  — quick codec volume table on a synthetic sparse gradient
+//!   info    — list artifacts and their manifests
+
+use deepreduce::cli::Args;
+use deepreduce::compress::{index_by_name, value_by_name, DeepReduce};
+use deepreduce::coordinator::{CompressionSpec, ModelKind, TrainConfig, Trainer};
+use deepreduce::runtime;
+use deepreduce::sparsify::{Sparsifier, TopK};
+use deepreduce::util::benchkit::Table;
+use deepreduce::util::prng::Rng;
+use deepreduce::util::testkit::gradient_like;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        eprintln!("usage: deepreduce <train|smoke|codecs|info> [--opts]");
+        std::process::exit(2);
+    }
+    let args = match Args::parse(argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match args.subcommand.as_str() {
+        "train" => cmd_train(&args),
+        "smoke" => cmd_smoke(),
+        "codecs" => cmd_codecs(&args),
+        "info" => cmd_info(),
+        other => {
+            eprintln!("unknown subcommand {other}");
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn cmd_train(args: &Args) -> anyhow::Result<()> {
+    let model_name = args.get_or("model", "mlp");
+    let model = ModelKind::parse(&model_name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {model_name}"))?;
+    let artifact = args.get_or(
+        "artifact",
+        match model {
+            ModelKind::Mlp => "mlp",
+            ModelKind::Ncf => "ncf",
+            ModelKind::Transformer => "transformer_small",
+        },
+    );
+    let mut cfg = TrainConfig::new(model, &artifact);
+    cfg.workers = args.get_usize("workers", 4)?;
+    cfg.steps = args.get_usize("steps", 100)?;
+    cfg.lr = args.get_f64("lr", cfg.lr as f64)? as f32;
+    cfg.optimizer = args.get_or("optimizer", &cfg.optimizer);
+    cfg.seed = args.get_usize("seed", 42)? as u64;
+    cfg.log_every = args.get_usize("log-every", 10)?;
+    let index = args.get_or("index", "");
+    let value = args.get_or("value", "");
+    if !index.is_empty() || !value.is_empty() {
+        let idx = if index.is_empty() { "raw".to_string() } else { index };
+        let val = if value.is_empty() { "raw".to_string() } else { value };
+        let mut spec = if args.get_or("sparsifier", "topk") == "identity" {
+            CompressionSpec::identity(
+                &idx,
+                args.get_f64("fpr", 0.001)?,
+                &val,
+                args.get_f64("value-param", f64::NAN)?,
+            )
+        } else {
+            CompressionSpec::topk(
+                args.get_f64("ratio", 0.01)?,
+                &idx,
+                args.get_f64("fpr", 0.001)?,
+                &val,
+                args.get_f64("value-param", f64::NAN)?,
+            )
+        };
+        spec.sparsifier = args.get_or("sparsifier", &spec.sparsifier);
+        spec.error_feedback = !args.flag("no-ef");
+        cfg.compression = Some(spec);
+    }
+    let mut trainer = Trainer::new(cfg)?;
+    let report = trainer.run()?;
+    println!("{}", report.to_json().to_string());
+    eprintln!(
+        "final loss {:.4}  aux {:.4}  relative volume {:.4}",
+        report.final_loss(),
+        report.final_aux(10),
+        report.relative_volume()
+    );
+    Ok(())
+}
+
+fn cmd_smoke() -> anyhow::Result<()> {
+    anyhow::ensure!(
+        runtime::artifact_available("pallas_smoke"),
+        "run `make artifacts` first"
+    );
+    let art = runtime::Artifact::load_default("pallas_smoke")?;
+    let params = art.init_params(1);
+    let batch_cfg = art.manifest.config_usize("batch").unwrap_or(16);
+    let input_dim = art.manifest.config_usize("input_dim").unwrap_or(64);
+    let classes = art.manifest.config_usize("classes").unwrap_or(8);
+    let mut data = deepreduce::data::SynthImages::new(input_dim, classes, batch_cfg, 7);
+    let out = art.train_step(&params, &data.next_batch())?;
+    anyhow::ensure!(out.loss.is_finite(), "non-finite loss");
+    println!(
+        "pallas smoke OK: loss={:.4} acc={:.4} grads={} tensors",
+        out.loss,
+        out.aux,
+        out.grads.len()
+    );
+    Ok(())
+}
+
+fn cmd_codecs(args: &Args) -> anyhow::Result<()> {
+    let d = args.get_usize("dim", 36_864)?;
+    let ratio = args.get_f64("ratio", 0.01)?;
+    let mut rng = Rng::new(7);
+    let g = gradient_like(&mut rng, d);
+    let mut topk = TopK::new(ratio);
+    let sp = topk.sparsify(&g);
+    let mut table = Table::new(
+        &format!("codec volumes, d={d}, top-{}%", ratio * 100.0),
+        &["instantiation", "index B", "value B", "reorder B", "total B", "vs kv"],
+    );
+    let combos = [
+        ("raw", "raw"),
+        ("bitmap", "raw"),
+        ("rle", "raw"),
+        ("huffman", "raw"),
+        ("delta_varint", "raw"),
+        ("bloom_p0", "raw"),
+        ("bloom_p2", "raw"),
+        ("raw", "deflate"),
+        ("raw", "qsgd"),
+        ("raw", "fitpoly"),
+        ("raw", "fitdexp"),
+        ("bloom_p2", "fitpoly"),
+    ];
+    for (i, v) in combos {
+        let dr = DeepReduce::new(
+            index_by_name(i, 0.001, 1).unwrap(),
+            value_by_name(v, f64::NAN, 1).unwrap(),
+        );
+        let b = dr.volume(&sp, Some(&g));
+        table.row(&[
+            dr.name(),
+            b.index_bytes.to_string(),
+            b.value_bytes.to_string(),
+            b.reorder_bytes.to_string(),
+            b.total().to_string(),
+            format!("{:.3}", b.total() as f64 / sp.kv_wire_bytes() as f64),
+        ]);
+    }
+    table.print();
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    let dir = runtime::artifacts_dir();
+    anyhow::ensure!(dir.exists(), "artifacts dir {dir:?} missing; run `make artifacts`");
+    let mut table = Table::new("artifacts", &["name", "kind", "params", "total", "inputs"]);
+    let mut entries: Vec<_> = std::fs::read_dir(&dir)?
+        .filter_map(|e| e.ok())
+        .map(|e| e.path())
+        .filter(|p| p.extension().and_then(|e| e.to_str()) == Some("json"))
+        .collect();
+    entries.sort();
+    for p in entries {
+        let m = runtime::Manifest::parse(&std::fs::read_to_string(&p)?)?;
+        table.row(&[
+            m.name.clone(),
+            m.kind.clone(),
+            m.params.len().to_string(),
+            m.total_params().to_string(),
+            m.inputs.iter().map(|i| i.name.as_str()).collect::<Vec<_>>().join(","),
+        ]);
+    }
+    table.print();
+    Ok(())
+}

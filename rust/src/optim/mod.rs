@@ -1,0 +1,179 @@
+//! Optimizers (rust is the parameter server of record; artifacts only
+//! compute gradients). SGD, SGD-momentum (the paper's CNN benchmarks)
+//! and Adam (NCF, Table 1).
+
+use crate::tensor::Tensor;
+
+pub trait Optimizer: Send {
+    /// Apply one update step: `params[i] -= step(grads[i])`.
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]);
+
+    fn name(&self) -> &'static str;
+
+    fn set_lr(&mut self, lr: f32);
+}
+
+/// Plain SGD.
+pub struct Sgd {
+    pub lr: f32,
+}
+
+impl Optimizer for Sgd {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        for (p, g) in params.iter_mut().zip(grads) {
+            for (w, &dg) in p.data_mut().iter_mut().zip(g.data()) {
+                *w -= self.lr * dg;
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+/// SGD with (heavy-ball) momentum — "SGD-M" in paper Table 1.
+pub struct Momentum {
+    pub lr: f32,
+    pub beta: f32,
+    velocity: Vec<Vec<f32>>,
+}
+
+impl Momentum {
+    pub fn new(lr: f32, beta: f32) -> Self {
+        Self { lr, beta, velocity: Vec::new() }
+    }
+}
+
+impl Optimizer for Momentum {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        if self.velocity.is_empty() {
+            self.velocity = params.iter().map(|p| vec![0.0; p.numel()]).collect();
+        }
+        for ((p, g), v) in params.iter_mut().zip(grads).zip(&mut self.velocity) {
+            for ((w, &dg), vel) in p.data_mut().iter_mut().zip(g.data()).zip(v.iter_mut()) {
+                *vel = self.beta * *vel + dg;
+                *w -= self.lr * *vel;
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "momentum"
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+/// Adam (Kingma & Ba), defaults β₁=0.9 β₂=0.999 ε=1e-8.
+pub struct Adam {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    t: u64,
+    m: Vec<Vec<f32>>,
+    v: Vec<Vec<f32>>,
+}
+
+impl Adam {
+    pub fn new(lr: f32) -> Self {
+        Self { lr, beta1: 0.9, beta2: 0.999, eps: 1e-8, t: 0, m: Vec::new(), v: Vec::new() }
+    }
+}
+
+impl Optimizer for Adam {
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        if self.m.is_empty() {
+            self.m = params.iter().map(|p| vec![0.0; p.numel()]).collect();
+            self.v = params.iter().map(|p| vec![0.0; p.numel()]).collect();
+        }
+        self.t += 1;
+        let bc1 = 1.0 - self.beta1.powi(self.t as i32);
+        let bc2 = 1.0 - self.beta2.powi(self.t as i32);
+        for (((p, g), m), v) in params.iter_mut().zip(grads).zip(&mut self.m).zip(&mut self.v) {
+            for (((w, &dg), mi), vi) in
+                p.data_mut().iter_mut().zip(g.data()).zip(m.iter_mut()).zip(v.iter_mut())
+            {
+                *mi = self.beta1 * *mi + (1.0 - self.beta1) * dg;
+                *vi = self.beta2 * *vi + (1.0 - self.beta2) * dg * dg;
+                let mhat = *mi / bc1;
+                let vhat = *vi / bc2;
+                *w -= self.lr * mhat / (vhat.sqrt() + self.eps);
+            }
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "adam"
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.lr = lr;
+    }
+}
+
+/// Factory used by the config system.
+pub fn by_name(name: &str, lr: f32) -> Option<Box<dyn Optimizer>> {
+    match name {
+        "sgd" => Some(Box::new(Sgd { lr })),
+        "momentum" | "sgdm" | "sgd-m" => Some(Box::new(Momentum::new(lr, 0.9))),
+        "adam" => Some(Box::new(Adam::new(lr))),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quadratic_descends(opt: &mut dyn Optimizer) -> f32 {
+        // minimize f(w) = ||w - 3||^2 from w=0
+        let mut params = vec![Tensor::from_vec(vec![0.0f32; 4])];
+        for _ in 0..200 {
+            let grads = vec![Tensor::from_vec(
+                params[0].data().iter().map(|&w| 2.0 * (w - 3.0)).collect(),
+            )];
+            opt.step(&mut params, &grads);
+        }
+        params[0].data().iter().map(|&w| (w - 3.0).abs()).fold(0.0, f32::max)
+    }
+
+    #[test]
+    fn all_optimizers_converge_on_quadratic() {
+        assert!(quadratic_descends(&mut Sgd { lr: 0.1 }) < 1e-3);
+        assert!(quadratic_descends(&mut Momentum::new(0.05, 0.9)) < 1e-3);
+        assert!(quadratic_descends(&mut Adam::new(0.3)) < 1e-2);
+    }
+
+    #[test]
+    fn momentum_accelerates_vs_sgd() {
+        // same lr: momentum reaches closer in fewer steps
+        let run = |opt: &mut dyn Optimizer, steps: usize| {
+            let mut params = vec![Tensor::from_vec(vec![0.0f32])];
+            for _ in 0..steps {
+                let grads =
+                    vec![Tensor::from_vec(vec![2.0 * (params[0].data()[0] - 3.0)])];
+                opt.step(&mut params, &grads);
+            }
+            (params[0].data()[0] - 3.0).abs()
+        };
+        let sgd = run(&mut Sgd { lr: 0.01 }, 50);
+        let mom = run(&mut Momentum::new(0.01, 0.9), 50);
+        assert!(mom < sgd, "momentum {mom} vs sgd {sgd}");
+    }
+
+    #[test]
+    fn factory() {
+        for n in ["sgd", "momentum", "adam"] {
+            assert!(by_name(n, 0.1).is_some());
+        }
+        assert!(by_name("nope", 0.1).is_none());
+    }
+}

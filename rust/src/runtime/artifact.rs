@@ -1,0 +1,161 @@
+//! A loaded artifact: HLO text compiled on the PJRT CPU client, plus its
+//! manifest. Mirrors /opt/xla-example/load_hlo (text → proto → compile →
+//! execute; the text parser reassigns instruction ids, which is why text
+//! is the interchange format — see DESIGN.md §2).
+
+use super::manifest::Manifest;
+use crate::tensor::Tensor;
+use crate::util::prng::Rng;
+use std::path::Path;
+
+/// Batch input for one execution: either f32 or i32 payloads matching the
+/// manifest's input specs in order.
+#[derive(Clone, Debug)]
+pub enum BatchInput {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Outputs of a train-step execution.
+#[derive(Clone, Debug)]
+pub struct StepOutput {
+    pub loss: f32,
+    /// model-specific auxiliary metric (accuracy / hit-rate / loss again)
+    pub aux: f32,
+    pub grads: Vec<Tensor>,
+}
+
+pub struct Artifact {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Load `<dir>/<name>.hlo.txt` + manifest and compile it.
+    pub fn load(dir: &Path, name: &str) -> anyhow::Result<Self> {
+        let man_text = std::fs::read_to_string(dir.join(format!("{name}.manifest.json")))?;
+        let manifest = Manifest::parse(&man_text)?;
+        let client = xla::PjRtClient::cpu()?;
+        let hlo_path = dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client.compile(&comp)?;
+        Ok(Self { manifest, client, exe })
+    }
+
+    /// Load from the default artifacts directory.
+    pub fn load_default(name: &str) -> anyhow::Result<Self> {
+        Self::load(&super::artifacts_dir(), name)
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Initialize parameters from the manifest specs (deterministic).
+    pub fn init_params(&self, seed: u64) -> Vec<Tensor> {
+        let mut rng = Rng::new(seed);
+        self.manifest
+            .params
+            .iter()
+            .map(|spec| {
+                let n = spec.numel();
+                let data: Vec<f32> = if spec.init_std < 0.0 {
+                    vec![1.0; n] // layer-norm gains
+                } else if spec.init_std == 0.0 {
+                    vec![0.0; n]
+                } else {
+                    (0..n)
+                        .map(|_| (rng.next_gaussian() * spec.init_std) as f32)
+                        .collect()
+                };
+                Tensor::new(spec.shape.clone(), data)
+            })
+            .collect()
+    }
+
+    fn literal_f32(&self, shape: &[usize], data: &[f32]) -> anyhow::Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&s| s as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+    }
+
+    fn literal_i32(&self, shape: &[usize], data: &[i32]) -> anyhow::Result<xla::Literal> {
+        let dims: Vec<i64> = shape.iter().map(|&s| s as i64).collect();
+        Ok(xla::Literal::vec1(data).reshape(&dims)?)
+    }
+
+    /// Execute a `train_step` artifact: params in manifest order plus the
+    /// batch inputs. Returns loss, aux and per-parameter gradients.
+    pub fn train_step(&self, params: &[Tensor], batch: &[BatchInput]) -> anyhow::Result<StepOutput> {
+        anyhow::ensure!(self.manifest.kind == "train_step", "not a train_step artifact");
+        anyhow::ensure!(params.len() == self.manifest.params.len(), "param arity mismatch");
+        anyhow::ensure!(batch.len() == self.manifest.inputs.len(), "input arity mismatch");
+        let mut literals = Vec::with_capacity(params.len() + batch.len());
+        for (t, spec) in params.iter().zip(&self.manifest.params) {
+            anyhow::ensure!(t.shape() == spec.shape.as_slice(), "param {} shape", spec.name);
+            literals.push(self.literal_f32(t.shape(), t.data())?);
+        }
+        for (b, spec) in batch.iter().zip(&self.manifest.inputs) {
+            match (b, spec.dtype.as_str()) {
+                (BatchInput::F32(v), "float32") => {
+                    anyhow::ensure!(v.len() == spec.numel(), "input {} size", spec.name);
+                    literals.push(self.literal_f32(&spec.shape, v)?);
+                }
+                (BatchInput::I32(v), "int32") => {
+                    anyhow::ensure!(v.len() == spec.numel(), "input {} size", spec.name);
+                    literals.push(self.literal_i32(&spec.shape, v)?);
+                }
+                (got, want) => {
+                    anyhow::bail!("input {}: dtype {want} vs provided {got:?}", spec.name)
+                }
+            }
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        anyhow::ensure!(
+            outs.len() == 2 + self.manifest.params.len(),
+            "output arity: got {}, want {}",
+            outs.len(),
+            2 + self.manifest.params.len()
+        );
+        let loss = outs[0].to_vec::<f32>()?[0];
+        let aux = outs[1].to_vec::<f32>()?[0];
+        let grads = outs[2..]
+            .iter()
+            .zip(&self.manifest.params)
+            .map(|(l, spec)| -> anyhow::Result<Tensor> {
+                Ok(Tensor::new(spec.shape.clone(), l.to_vec::<f32>()?))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(StepOutput { loss, aux, grads })
+    }
+
+    /// Execute a `kernel` artifact with raw f32 inputs; returns the raw
+    /// f32/i32 outputs as flat f32 tensors (i32 outputs are converted).
+    pub fn run_kernel(&self, inputs: &[BatchInput]) -> anyhow::Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(self.manifest.kind == "kernel", "not a kernel artifact");
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (b, spec) in inputs.iter().zip(&self.manifest.inputs) {
+            match b {
+                BatchInput::F32(v) => literals.push(self.literal_f32(&spec.shape, v)?),
+                BatchInput::I32(v) => literals.push(self.literal_i32(&spec.shape, v)?),
+            }
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let outs = result.to_tuple()?;
+        outs.iter()
+            .map(|l| -> anyhow::Result<Vec<f32>> {
+                match l.ty()? {
+                    xla::ElementType::F32 => Ok(l.to_vec::<f32>()?),
+                    xla::ElementType::S32 => {
+                        Ok(l.to_vec::<i32>()?.into_iter().map(|v| v as f32).collect())
+                    }
+                    other => anyhow::bail!("unsupported kernel output type {other:?}"),
+                }
+            })
+            .collect()
+    }
+}

@@ -1,0 +1,180 @@
+//! Artifact manifests: the JSON contract written by `python/compile/aot.py`.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// >0: normal(0, std); ==0: zeros; <0: ones (layer-norm gains)
+    pub init_std: f64,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct InputSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl InputSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub name: String,
+    pub kind: String,
+    pub params: Vec<ParamSpec>,
+    pub inputs: Vec<InputSpec>,
+    pub outputs: Vec<String>,
+    pub config: BTreeMap<String, Json>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> anyhow::Result<Self> {
+        let j = Json::parse(text)?;
+        let get_str = |k: &str| -> anyhow::Result<String> {
+            Ok(j.get(k)
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow::anyhow!("manifest missing string '{k}'"))?
+                .to_string())
+        };
+        let shape_of = |v: &Json| -> anyhow::Result<Vec<usize>> {
+            v.as_arr()
+                .ok_or_else(|| anyhow::anyhow!("shape not an array"))?
+                .iter()
+                .map(|x| x.as_usize().ok_or_else(|| anyhow::anyhow!("bad shape entry")))
+                .collect()
+        };
+        let params = j
+            .get("params")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing params"))?
+            .iter()
+            .map(|p| -> anyhow::Result<ParamSpec> {
+                Ok(ParamSpec {
+                    name: p
+                        .get("name")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow::anyhow!("param missing name"))?
+                        .to_string(),
+                    shape: shape_of(p.get("shape").ok_or_else(|| anyhow::anyhow!("no shape"))?)?,
+                    init_std: p
+                        .get("init_std")
+                        .and_then(|v| v.as_f64())
+                        .ok_or_else(|| anyhow::anyhow!("param missing init_std"))?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let inputs = j
+            .get("inputs")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing inputs"))?
+            .iter()
+            .map(|p| -> anyhow::Result<InputSpec> {
+                Ok(InputSpec {
+                    name: p
+                        .get("name")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow::anyhow!("input missing name"))?
+                        .to_string(),
+                    shape: shape_of(p.get("shape").ok_or_else(|| anyhow::anyhow!("no shape"))?)?,
+                    dtype: p
+                        .get("dtype")
+                        .and_then(|v| v.as_str())
+                        .ok_or_else(|| anyhow::anyhow!("input missing dtype"))?
+                        .to_string(),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let outputs = j
+            .get("outputs")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("manifest missing outputs"))?
+            .iter()
+            .map(|v| {
+                v.as_str()
+                    .map(String::from)
+                    .ok_or_else(|| anyhow::anyhow!("bad output name"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        let config = match j.get("config") {
+            Some(Json::Obj(m)) => m.clone(),
+            _ => BTreeMap::new(),
+        };
+        Ok(Self { name: get_str("name")?, kind: get_str("kind")?, params, inputs, outputs, config })
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    pub fn config_usize(&self, key: &str) -> Option<usize> {
+        self.config.get(key).and_then(|v| v.as_usize())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "name": "mlp", "kind": "train_step",
+      "params": [
+        {"name": "w0", "shape": [4, 2], "init_std": 0.5},
+        {"name": "b0", "shape": [2], "init_std": 0.0}
+      ],
+      "inputs": [
+        {"name": "x", "shape": [8, 4], "dtype": "float32"},
+        {"name": "y", "shape": [8], "dtype": "int32"}
+      ],
+      "outputs": ["loss", "aux", "grad_w0", "grad_b0"],
+      "config": {"batch": 8, "use_pallas": false}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "mlp");
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].numel(), 8);
+        assert_eq!(m.total_params(), 10);
+        assert_eq!(m.inputs[1].dtype, "int32");
+        assert_eq!(m.outputs.len(), 4);
+        assert_eq!(m.config_usize("batch"), Some(8));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+
+    #[test]
+    fn parses_real_artifacts_when_present() {
+        let dir = crate::runtime::artifacts_dir();
+        if !dir.exists() {
+            return; // make artifacts not run yet
+        }
+        for entry in std::fs::read_dir(&dir).unwrap() {
+            let p = entry.unwrap().path();
+            if p.extension().and_then(|e| e.to_str()) == Some("json") {
+                let text = std::fs::read_to_string(&p).unwrap();
+                let m = Manifest::parse(&text).unwrap_or_else(|e| panic!("{p:?}: {e}"));
+                if m.kind == "train_step" {
+                    assert_eq!(m.outputs.len(), 2 + m.params.len(), "{}", m.name);
+                }
+            }
+        }
+    }
+}

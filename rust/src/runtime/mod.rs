@@ -1,0 +1,27 @@
+//! Runtime boundary: load AOT artifacts (HLO text + JSON manifest) and
+//! execute them on the PJRT CPU client from the L3 hot path.
+//!
+//! Python runs only at `make artifacts` time; this module is the entire
+//! training-time interface to the compiled models.
+
+pub mod artifact;
+mod manifest;
+
+pub use artifact::{Artifact, BatchInput, StepOutput};
+pub use manifest::{InputSpec, Manifest, ParamSpec};
+
+/// Default artifacts directory relative to the repo root, overridable via
+/// `DEEPREDUCE_ARTIFACTS`.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("DEEPREDUCE_ARTIFACTS")
+        .map(Into::into)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}
+
+/// True when the named artifact pair is present (tests skip politely when
+/// `make artifacts` has not run).
+pub fn artifact_available(name: &str) -> bool {
+    let dir = artifacts_dir();
+    dir.join(format!("{name}.hlo.txt")).exists()
+        && dir.join(format!("{name}.manifest.json")).exists()
+}

@@ -1,0 +1,132 @@
+//! Analytic network-time model (the testbed substitution for the paper's
+//! 100 Mbps–10 Gbps link sweep in Fig 11).
+//!
+//! The paper varies bandwidth and reports per-iteration wall time broken
+//! into forward/backward compute, encode/decode, and communication. The
+//! first two are *measured* on this testbed; communication time is
+//! *modelled* from exact wire byte counts with the standard α–β model:
+//! `T = steps·α + bytes_on_busiest_link/β`.
+
+/// A link configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct Link {
+    /// bandwidth, bytes/second
+    pub bandwidth_bps: f64,
+    /// per-message latency, seconds (α)
+    pub latency_s: f64,
+}
+
+impl Link {
+    pub fn mbps(mb: f64) -> Self {
+        Self { bandwidth_bps: mb * 1e6 / 8.0, latency_s: 50e-6 }
+    }
+
+    pub fn gbps(gb: f64) -> Self {
+        Self { bandwidth_bps: gb * 1e9 / 8.0, latency_s: 25e-6 }
+    }
+}
+
+/// Time for a ring allreduce of a dense payload of `bytes` across `n`
+/// workers: 2(n−1) steps, each moving `bytes/n` per link.
+pub fn allreduce_time(bytes: u64, n: usize, link: Link) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let steps = 2 * (n - 1);
+    steps as f64 * link.latency_s
+        + (2.0 * (n as f64 - 1.0) / n as f64) * bytes as f64 / link.bandwidth_bps
+}
+
+/// Time for an allgather where each worker contributes `blob_bytes`:
+/// every worker receives (n−1) blobs; with full-duplex links and a ring
+/// schedule this is (n−1) steps of `blob_bytes` each.
+pub fn allgather_time(blob_bytes: u64, n: usize, link: Link) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    (n - 1) as f64 * (link.latency_s + blob_bytes as f64 / link.bandwidth_bps)
+}
+
+/// Parameter-server exchange: server ingests n−1 blobs and broadcasts the
+/// aggregate; the server link is the bottleneck.
+pub fn ps_time(up_bytes: u64, down_bytes: u64, n: usize, link: Link) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    2.0 * link.latency_s
+        + ((n - 1) as f64 * up_bytes as f64 + (n - 1) as f64 * down_bytes as f64)
+            / link.bandwidth_bps
+}
+
+/// One Fig-11 style iteration breakdown (seconds).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct IterBreakdown {
+    pub compute_s: f64,
+    pub codec_s: f64,
+    pub comm_s: f64,
+}
+
+impl IterBreakdown {
+    pub fn total(&self) -> f64 {
+        self.compute_s + self.codec_s + self.comm_s
+    }
+
+    /// Speedup of this breakdown relative to a baseline.
+    pub fn speedup_vs(&self, baseline: &IterBreakdown) -> f64 {
+        baseline.total() / self.total()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bandwidth_scaling() {
+        // 10x the bandwidth -> ~10x less comm time (latency negligible at MB sizes)
+        let b = 10_000_000u64;
+        let slow = allgather_time(b, 4, Link::mbps(100.0));
+        let fast = allgather_time(b, 4, Link::gbps(1.0));
+        assert!((slow / fast - 10.0).abs() < 0.5, "ratio {}", slow / fast);
+    }
+
+    #[test]
+    fn allreduce_asymptotics() {
+        // ring allreduce per-worker traffic is bandwidth-optimal: ~2x
+        // payload regardless of n (for large n)
+        let link = Link::gbps(10.0);
+        let t4 = allreduce_time(1 << 24, 4, link);
+        let t16 = allreduce_time(1 << 24, 16, link);
+        assert!(t16 < t4 * 1.5, "t16 {t16} vs t4 {t4}");
+    }
+
+    #[test]
+    fn compression_crossover_shape() {
+        // Fig 11's qualitative claim: compression helps at low bandwidth,
+        // not when links are fast relative to codec cost.
+        let n = 4;
+        let dense = 127_000_000u64; // NCF-sized fp32 gradient
+        let sparse_blob = dense / 20; // top-10% + container overhead
+        let codec_cost = 0.8; // seconds of encode+decode (measured elsewhere)
+        for (link, expect_win) in [(Link::mbps(100.0), true), (Link::gbps(10.0), false)] {
+            let baseline = IterBreakdown {
+                compute_s: 1.0,
+                codec_s: 0.0,
+                comm_s: allreduce_time(dense, n, link),
+            };
+            let dr = IterBreakdown {
+                compute_s: 1.0,
+                codec_s: codec_cost,
+                comm_s: allgather_time(sparse_blob, n, link),
+            };
+            assert_eq!(dr.total() < baseline.total(), expect_win, "link {link:?}");
+        }
+    }
+
+    #[test]
+    fn single_worker_zero_comm() {
+        assert_eq!(allreduce_time(1 << 20, 1, Link::gbps(1.0)), 0.0);
+        assert_eq!(allgather_time(1 << 20, 1, Link::gbps(1.0)), 0.0);
+        assert_eq!(ps_time(1, 1, 1, Link::gbps(1.0)), 0.0);
+    }
+}

@@ -1,0 +1,117 @@
+//! Error-feedback / memory compensation (Stich et al. 2018; Karimireddy
+//! et al. 2019). The paper enables memory compensation for all methods in
+//! §6.3: the residual `g - C(g)` is accumulated locally and added to the
+//! next step's gradient before compression.
+
+use crate::tensor::SparseTensor;
+
+/// Per-tensor residual memory.
+#[derive(Clone, Debug)]
+pub struct ErrorFeedback {
+    residual: Vec<f32>,
+    /// residual decay (1.0 = classic EF)
+    pub beta: f32,
+}
+
+impl ErrorFeedback {
+    pub fn new(dim: usize) -> Self {
+        Self { residual: vec![0.0; dim], beta: 1.0 }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.residual.len()
+    }
+
+    /// `corrected = grad + beta * residual` (into a fresh buffer).
+    pub fn apply(&self, grad: &[f32]) -> Vec<f32> {
+        assert_eq!(grad.len(), self.residual.len());
+        grad.iter().zip(&self.residual).map(|(&g, &m)| g + self.beta * m).collect()
+    }
+
+    /// After compressing `corrected` into `kept`, store the residual
+    /// `corrected - kept`.
+    pub fn update(&mut self, corrected: &[f32], kept: &SparseTensor) {
+        assert_eq!(corrected.len(), self.residual.len());
+        assert_eq!(kept.dense_len(), self.residual.len());
+        self.residual.copy_from_slice(corrected);
+        for (&i, &v) in kept.indices().iter().zip(kept.values()) {
+            self.residual[i as usize] -= v;
+        }
+    }
+
+    pub fn residual(&self) -> &[f32] {
+        &self.residual
+    }
+
+    pub fn reset(&mut self) {
+        self.residual.iter_mut().for_each(|x| *x = 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsify::{Sparsifier, TopK};
+    use crate::util::prng::Rng;
+    use crate::util::stats::l2_sq;
+
+    #[test]
+    fn residual_tracks_uncompressed_mass() {
+        let mut ef = ErrorFeedback::new(4);
+        let g = vec![1.0f32, 10.0, 0.5, -3.0];
+        let corrected = ef.apply(&g);
+        assert_eq!(corrected, g); // empty memory
+        let kept = SparseTensor::new(4, vec![1, 3], vec![10.0, -3.0]);
+        ef.update(&corrected, &kept);
+        assert_eq!(ef.residual(), &[1.0, 0.0, 0.5, 0.0]);
+        // next round: residual folded in
+        let g2 = vec![0.0f32; 4];
+        let c2 = ef.apply(&g2);
+        assert_eq!(c2, &[1.0, 0.0, 0.5, 0.0]);
+    }
+
+    #[test]
+    fn ef_preserves_total_signal_over_time() {
+        // With EF + Top-r, the sum of transmitted values converges to the
+        // sum of gradients (no mass is permanently lost).
+        let mut rng = Rng::new(50);
+        let d = 200;
+        let mut ef = ErrorFeedback::new(d);
+        let mut topk = TopK::new(0.05);
+        let mut sent_sum = vec![0.0f64; d];
+        let mut grad_sum = vec![0.0f64; d];
+        for _ in 0..400 {
+            let g: Vec<f32> = (0..d).map(|_| rng.next_gaussian() as f32 * 0.1).collect();
+            for (a, &b) in grad_sum.iter_mut().zip(&g) {
+                *a += b as f64;
+            }
+            let corrected = ef.apply(&g);
+            let kept = topk.sparsify(&corrected);
+            ef.update(&corrected, &kept);
+            for (&i, &v) in kept.indices().iter().zip(kept.values()) {
+                sent_sum[i as usize] += v as f64;
+            }
+        }
+        // residual bounds the difference
+        let diff: f64 = grad_sum
+            .iter()
+            .zip(&sent_sum)
+            .map(|(&a, &b)| (a - b).powi(2))
+            .sum::<f64>()
+            .sqrt();
+        let res_norm = l2_sq(ef.residual()).sqrt();
+        assert!(
+            (diff - res_norm).abs() < 1e-3 * (1.0 + res_norm),
+            "diff {diff} vs residual norm {res_norm}"
+        );
+    }
+
+    #[test]
+    fn beta_scales_memory() {
+        let mut ef = ErrorFeedback::new(2);
+        ef.beta = 0.5;
+        let kept = SparseTensor::new(2, vec![], vec![]);
+        ef.update(&[2.0, 4.0], &kept);
+        assert_eq!(ef.apply(&[0.0, 0.0]), &[1.0, 2.0]);
+    }
+}

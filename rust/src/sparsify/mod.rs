@@ -1,0 +1,77 @@
+//! Gradient sparsifiers (δ-compressors) and error-feedback memory.
+//!
+//! DeepReduce sits *behind* a sparsifier: the input to the framework is
+//! either an explicitly sparsified gradient (Top-r / Random-r, as in
+//! GRACE) or an inherently sparse one (identity). Per paper §2, both
+//! Top-r and Random-r are δ-compressors with δ = r/d.
+
+mod memory;
+mod randomk;
+mod threshold;
+mod topk;
+
+pub use memory::ErrorFeedback;
+pub use randomk::RandomK;
+pub use threshold::Threshold;
+pub use topk::{top_r_indices, TopK};
+
+use crate::tensor::SparseTensor;
+use crate::util::prng::Rng;
+
+/// A sparsifier maps a dense gradient to a sparse one.
+pub trait Sparsifier: Send {
+    /// Select the support and produce the sparse gradient.
+    fn sparsify(&mut self, grad: &[f32]) -> SparseTensor;
+
+    /// Human-readable name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Identity "sparsifier" for inherently sparse gradients: keeps exactly
+/// the nonzero elements (paper: NCF gradients are ~40% zeros).
+#[derive(Clone, Debug, Default)]
+pub struct Identity;
+
+impl Sparsifier for Identity {
+    fn sparsify(&mut self, grad: &[f32]) -> SparseTensor {
+        SparseTensor::from_dense(grad)
+    }
+
+    fn name(&self) -> &'static str {
+        "identity"
+    }
+}
+
+/// Build a sparsifier by name (config system entry point).
+/// `ratio` is r/d for topk/randomk, the absolute threshold for threshold.
+pub fn by_name(name: &str, ratio: f64, seed: u64) -> Option<Box<dyn Sparsifier>> {
+    match name {
+        "topk" | "top-r" | "topr" => Some(Box::new(TopK::new(ratio))),
+        "randomk" | "rand-r" | "randr" => Some(Box::new(RandomK::new(ratio, Rng::new(seed)))),
+        "threshold" => Some(Box::new(Threshold::new(ratio as f32))),
+        "identity" | "none" => Some(Box::new(Identity)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_keeps_nonzeros() {
+        let g = vec![0.0f32, 1.0, 0.0, -2.0];
+        let s = Identity.sparsify(&g);
+        assert_eq!(s.nnz(), 2);
+        assert_eq!(s.to_dense().data(), g.as_slice());
+    }
+
+    #[test]
+    fn factory() {
+        assert!(by_name("topk", 0.01, 0).is_some());
+        assert!(by_name("randomk", 0.01, 0).is_some());
+        assert!(by_name("threshold", 0.5, 0).is_some());
+        assert!(by_name("identity", 0.0, 0).is_some());
+        assert!(by_name("nope", 0.0, 0).is_none());
+    }
+}

@@ -1,0 +1,101 @@
+//! Random-r sparsifier (Stich et al. 2018): keep r uniformly random
+//! coordinates. Unbiased when rescaled by d/r; the paper uses the plain
+//! (biased) variant inside GRACE, which we mirror, with optional
+//! rescaling for the unbiased form.
+
+use super::Sparsifier;
+use crate::tensor::SparseTensor;
+use crate::util::prng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct RandomK {
+    ratio: f64,
+    rng: Rng,
+    /// rescale kept values by d/r to make the compressor unbiased
+    pub unbiased: bool,
+}
+
+impl RandomK {
+    pub fn new(ratio: f64, rng: Rng) -> Self {
+        assert!(ratio > 0.0 && ratio <= 1.0);
+        Self { ratio, rng, unbiased: false }
+    }
+
+    pub fn r_for(&self, d: usize) -> usize {
+        ((d as f64 * self.ratio).round() as usize).clamp(1, d)
+    }
+}
+
+impl Sparsifier for RandomK {
+    fn sparsify(&mut self, grad: &[f32]) -> SparseTensor {
+        let d = grad.len();
+        let r = self.r_for(d);
+        let mut idx = self.rng.sample_indices(d, r);
+        idx.sort_unstable();
+        let mut sp = SparseTensor::gather(grad, &idx);
+        if self.unbiased {
+            let scale = d as f32 / r as f32;
+            for v in sp.values_mut() {
+                *v *= scale;
+            }
+        }
+        sp
+    }
+
+    fn name(&self) -> &'static str {
+        "randomk"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::stats::l2_sq;
+    use crate::util::testkit::gradient_like;
+
+    #[test]
+    fn selects_r_distinct_sorted() {
+        let mut s = RandomK::new(0.2, Rng::new(1));
+        let g = vec![1.0f32; 1000];
+        let sp = s.sparsify(&g);
+        assert_eq!(sp.nnz(), 200);
+        assert!(sp.indices().windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn expected_error_matches_remark1() {
+        // E||g - Randr(g)||^2 = (1 - r/d)||g||^2 over the sampling
+        let mut rng = Rng::new(31);
+        let g = gradient_like(&mut rng, 400);
+        let norm = l2_sq(&g);
+        let trials = 300;
+        let mut acc = 0.0;
+        let mut s = RandomK::new(0.25, Rng::new(99));
+        for _ in 0..trials {
+            let sp = s.sparsify(&g);
+            let dense = sp.to_dense();
+            acc += g
+                .iter()
+                .zip(dense.data())
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum::<f64>();
+        }
+        let mean_err = acc / trials as f64;
+        let expected = (1.0 - 0.25) * norm;
+        assert!(
+            (mean_err - expected).abs() / expected < 0.1,
+            "mean {mean_err} vs expected {expected}"
+        );
+    }
+
+    #[test]
+    fn unbiased_rescaling() {
+        let mut s = RandomK::new(0.5, Rng::new(2));
+        s.unbiased = true;
+        let g = vec![1.0f32; 10];
+        let sp = s.sparsify(&g);
+        for &v in sp.values() {
+            assert_eq!(v, 2.0);
+        }
+    }
+}

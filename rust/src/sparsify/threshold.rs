@@ -1,0 +1,92 @@
+//! Hard-threshold sparsifier (Strom 2015; Dryden et al. 2016 use an
+//! adaptive variant): keep elements with |g[i]| >= τ. Output sparsity is
+//! data-dependent, which exercises the variable-r paths of the codecs.
+
+use super::Sparsifier;
+use crate::tensor::SparseTensor;
+
+#[derive(Clone, Debug)]
+pub struct Threshold {
+    tau: f32,
+    /// if set, adapt τ each call to target this fraction of elements
+    /// (simple multiplicative control, Dryden-style)
+    pub target_ratio: Option<f64>,
+}
+
+impl Threshold {
+    pub fn new(tau: f32) -> Self {
+        assert!(tau >= 0.0);
+        Self { tau, target_ratio: None }
+    }
+
+    pub fn adaptive(tau0: f32, target_ratio: f64) -> Self {
+        assert!((0.0..=1.0).contains(&target_ratio));
+        Self { tau: tau0, target_ratio: Some(target_ratio) }
+    }
+
+    pub fn tau(&self) -> f32 {
+        self.tau
+    }
+}
+
+impl Sparsifier for Threshold {
+    fn sparsify(&mut self, grad: &[f32]) -> SparseTensor {
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for (i, &x) in grad.iter().enumerate() {
+            if x.abs() >= self.tau && x != 0.0 {
+                indices.push(i as u32);
+                values.push(x);
+            }
+        }
+        if let Some(target) = self.target_ratio {
+            // proportional control toward the target keep-fraction
+            let got = indices.len() as f64 / grad.len().max(1) as f64;
+            if got > 0.0 {
+                let adj = (got / target).clamp(0.5, 2.0) as f32;
+                self.tau = (self.tau * adj.sqrt()).max(1e-12);
+            } else {
+                self.tau *= 0.5;
+            }
+        }
+        SparseTensor::new(grad.len(), indices, values)
+    }
+
+    fn name(&self) -> &'static str {
+        "threshold"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn keeps_only_above_tau() {
+        let g = vec![0.1f32, -0.5, 0.04, 2.0, 0.0];
+        let mut s = Threshold::new(0.1);
+        let sp = s.sparsify(&g);
+        assert_eq!(sp.indices(), &[0, 1, 3]);
+    }
+
+    #[test]
+    fn adaptive_converges_to_target() {
+        let mut rng = Rng::new(40);
+        let mut s = Threshold::adaptive(1.0, 0.1);
+        let mut last_ratio = 0.0;
+        for _ in 0..60 {
+            let g: Vec<f32> = (0..2000).map(|_| rng.next_gaussian() as f32).collect();
+            let sp = s.sparsify(&g);
+            last_ratio = sp.nnz() as f64 / g.len() as f64;
+        }
+        assert!((last_ratio - 0.1).abs() < 0.05, "ratio {last_ratio}");
+    }
+
+    #[test]
+    fn zero_elements_never_kept() {
+        let g = vec![0.0f32; 100];
+        let mut s = Threshold::new(0.0);
+        assert_eq!(s.sparsify(&g).nnz(), 0);
+    }
+}

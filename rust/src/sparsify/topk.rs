@@ -1,0 +1,196 @@
+//! Top-r sparsifier: keep the r highest-magnitude elements (Aji &
+//! Heafield 2017; Alistarh et al. 2018). δ-compressor with the smallest
+//! error among r-sparsifiers (paper Remark 1).
+//!
+//! Selection is O(d) expected via quickselect on |g| rather than a full
+//! sort — this is the L3 hot path for every training step.
+
+use super::Sparsifier;
+use crate::tensor::SparseTensor;
+
+#[derive(Clone, Debug)]
+pub struct TopK {
+    /// fraction r/d in (0, 1]
+    ratio: f64,
+}
+
+impl TopK {
+    pub fn new(ratio: f64) -> Self {
+        assert!(ratio > 0.0 && ratio <= 1.0, "top-k ratio must be in (0,1]: {ratio}");
+        Self { ratio }
+    }
+
+    /// Number of kept elements for a gradient of dimensionality d
+    /// (at least 1, as in GRACE).
+    pub fn r_for(&self, d: usize) -> usize {
+        ((d as f64 * self.ratio).round() as usize).clamp(1, d)
+    }
+}
+
+impl Sparsifier for TopK {
+    fn sparsify(&mut self, grad: &[f32]) -> SparseTensor {
+        let d = grad.len();
+        let r = self.r_for(d);
+        let idx = top_r_indices(grad, r);
+        SparseTensor::gather(grad, &idx)
+    }
+
+    fn name(&self) -> &'static str {
+        "topk"
+    }
+}
+
+/// Indices of the r largest |values|, returned sorted ascending.
+/// Ties at the threshold magnitude are broken by lower index (so the
+/// result is deterministic and exactly r elements).
+pub fn top_r_indices(grad: &[f32], r: usize) -> Vec<u32> {
+    let d = grad.len();
+    assert!(r <= d);
+    if r == d {
+        return (0..d as u32).collect();
+    }
+    if r == 0 {
+        return Vec::new();
+    }
+    // quickselect over an index permutation on key |grad[i]| descending
+    let mut idx: Vec<u32> = (0..d as u32).collect();
+    let key = |i: u32| {
+        let v = grad[i as usize].abs();
+        // NaN-safe total order: NaN sorts lowest
+        if v.is_nan() {
+            f32::NEG_INFINITY
+        } else {
+            v
+        }
+    };
+    // partition so the first r entries have the largest keys
+    let mut lo = 0usize;
+    let mut hi = d;
+    let mut rng = crate::util::prng::SplitMix64::new(0x7091_D00D ^ d as u64);
+    while hi - lo > 1 {
+        // median-of-3-ish random pivot
+        let p = lo + (rng.next_u64() as usize) % (hi - lo);
+        let pivot = key(idx[p]);
+        // three-way partition (descending): [> pivot | == pivot | < pivot]
+        let mut i = lo;
+        let mut j = lo;
+        let mut k = hi;
+        while j < k {
+            let kj = key(idx[j]);
+            if kj > pivot {
+                idx.swap(i, j);
+                i += 1;
+                j += 1;
+            } else if kj < pivot {
+                k -= 1;
+                idx.swap(j, k);
+            } else {
+                j += 1;
+            }
+        }
+        if r <= i {
+            hi = i;
+        } else if r >= j {
+            lo = j;
+        } else {
+            // boundary falls inside the == pivot band: tie-break by index.
+            // sort the band ascending by index and cut at r.
+            idx[i..j].sort_unstable();
+            break;
+        }
+    }
+    let mut out = idx[..r].to_vec();
+    out.sort_unstable();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use crate::util::testkit::{forall, gradient_like};
+
+    fn top_r_reference(grad: &[f32], r: usize) -> Vec<u32> {
+        let mut idx: Vec<u32> = (0..grad.len() as u32).collect();
+        idx.sort_by(|&a, &b| {
+            let ka = grad[a as usize].abs();
+            let kb = grad[b as usize].abs();
+            kb.partial_cmp(&ka).unwrap().then(a.cmp(&b))
+        });
+        let mut out = idx[..r].to_vec();
+        out.sort_unstable();
+        out
+    }
+
+    #[test]
+    fn matches_reference_on_random() {
+        forall(
+            "topk-vs-sort",
+            60,
+            2000,
+            |rng, size| {
+                let n = 1 + rng.below(size as u64) as usize;
+                let r = 1 + rng.below(n as u64) as usize;
+                (gradient_like(rng, n), r)
+            },
+            |(g, r)| {
+                let fast = top_r_indices(g, *r);
+                let slow = top_r_reference(g, *r);
+                // selected magnitudes must match even if tie indices differ
+                let mag = |ix: &[u32]| {
+                    let mut m: Vec<f32> = ix.iter().map(|&i| g[i as usize].abs()).collect();
+                    m.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                    m
+                };
+                if mag(&fast) == mag(&slow) && fast.len() == *r {
+                    Ok(())
+                } else {
+                    Err(format!("fast {fast:?} != slow {slow:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn exact_on_distinct_values() {
+        let g = vec![0.1f32, -5.0, 0.3, 2.0, -0.2];
+        assert_eq!(top_r_indices(&g, 2), vec![1, 3]);
+        assert_eq!(top_r_indices(&g, 5), vec![0, 1, 2, 3, 4]);
+        assert_eq!(top_r_indices(&g, 0), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn ties_resolved_deterministically() {
+        let g = vec![1.0f32; 10];
+        let a = top_r_indices(&g, 3);
+        let b = top_r_indices(&g, 3);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn delta_compressor_bound() {
+        // Remark 1: E||g - Topr(g)||^2 <= (1 - r/d)||g||^2
+        let mut rng = Rng::new(30);
+        for _ in 0..20 {
+            let g = gradient_like(&mut rng, 500);
+            let mut s = TopK::new(0.1);
+            let sp = s.sparsify(&g);
+            let dense = sp.to_dense();
+            let err: f64 = g
+                .iter()
+                .zip(dense.data())
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum();
+            let bound = (1.0 - 0.1) * crate::util::stats::l2_sq(&g);
+            assert!(err <= bound + 1e-6, "err {err} > bound {bound}");
+        }
+    }
+
+    #[test]
+    fn r_for_clamps() {
+        let t = TopK::new(0.01);
+        assert_eq!(t.r_for(10), 1); // rounds to 0 -> clamped to 1
+        assert_eq!(t.r_for(36864), 369);
+    }
+}

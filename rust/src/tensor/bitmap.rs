@@ -1,0 +1,223 @@
+//! Bit-string support representation: `B[i] = 1` iff gradient element `i`
+//! is nonzero (paper §3, Figure 1c). This is the second of DeepReduce's
+//! two equivalent index representations and the input format for RLE.
+
+/// Fixed-length bitmap over a gradient of dimensionality `d`.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bitmap {
+    words: Vec<u64>,
+    len: usize,
+}
+
+impl Bitmap {
+    pub fn zeros(len: usize) -> Self {
+        Self { words: vec![0u64; len.div_ceil(64)], len }
+    }
+
+    /// Build from a sorted (or unsorted) index list over domain `[0, len)`.
+    pub fn from_indices(len: usize, indices: &[u32]) -> Self {
+        let mut b = Self::zeros(len);
+        for &i in indices {
+            b.set(i as usize);
+        }
+        b
+    }
+
+    /// Build from the nonzero positions of a dense slice.
+    pub fn from_dense(data: &[f32]) -> Self {
+        let mut b = Self::zeros(data.len());
+        for (i, &x) in data.iter().enumerate() {
+            if x != 0.0 {
+                b.set(i);
+            }
+        }
+        b
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] |= 1u64 << (i % 64);
+    }
+
+    #[inline]
+    pub fn clear(&mut self, i: usize) {
+        debug_assert!(i < self.len);
+        self.words[i / 64] &= !(1u64 << (i % 64));
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.words[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// Number of set bits.
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+
+    /// Extract the sorted index list (inverse of `from_indices`).
+    pub fn to_indices(&self) -> Vec<u32> {
+        let mut out = Vec::with_capacity(self.count_ones());
+        for (wi, &w) in self.words.iter().enumerate() {
+            let mut bits = w;
+            while bits != 0 {
+                let b = bits.trailing_zeros();
+                out.push((wi * 64 + b as usize) as u32);
+                bits &= bits - 1;
+            }
+        }
+        out
+    }
+
+    /// Iterate runs of identical bits as `(bit, run_len)` — the RLE input.
+    pub fn runs(&self) -> RunIter<'_> {
+        RunIter { bm: self, pos: 0 }
+    }
+
+    /// Raw words (for serialization).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    /// Rebuild from raw words + length.
+    pub fn from_words(words: Vec<u64>, len: usize) -> Self {
+        assert_eq!(words.len(), len.div_ceil(64));
+        // mask tail garbage so equality and counts are well-defined
+        let mut b = Self { words, len };
+        if len % 64 != 0 {
+            if let Some(last) = b.words.last_mut() {
+                *last &= (1u64 << (len % 64)) - 1;
+            }
+        }
+        b
+    }
+}
+
+pub struct RunIter<'a> {
+    bm: &'a Bitmap,
+    pos: usize,
+}
+
+impl Iterator for RunIter<'_> {
+    /// (bit value, run length)
+    type Item = (bool, usize);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos >= self.bm.len {
+            return None;
+        }
+        let bit = self.bm.get(self.pos);
+        let start = self.pos;
+        // word-at-a-time scan for the next flip
+        let mut i = self.pos + 1;
+        while i < self.bm.len {
+            if i % 64 == 0 {
+                // whole-word skip when uniform
+                let w = self.bm.words[i / 64];
+                let uniform = if bit { u64::MAX } else { 0 };
+                if w == uniform && i + 64 <= self.bm.len {
+                    i += 64;
+                    continue;
+                }
+            }
+            if self.bm.get(i) != bit {
+                break;
+            }
+            i += 1;
+        }
+        self.pos = i;
+        Some((bit, i - start))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn set_get_count() {
+        let mut b = Bitmap::zeros(130);
+        assert_eq!(b.count_ones(), 0);
+        b.set(0);
+        b.set(64);
+        b.set(129);
+        assert!(b.get(0) && b.get(64) && b.get(129));
+        assert!(!b.get(1));
+        assert_eq!(b.count_ones(), 3);
+        b.clear(64);
+        assert_eq!(b.count_ones(), 2);
+    }
+
+    #[test]
+    fn indices_roundtrip() {
+        let idx = vec![0u32, 5, 63, 64, 65, 127, 128];
+        let b = Bitmap::from_indices(200, &idx);
+        assert_eq!(b.to_indices(), idx);
+    }
+
+    #[test]
+    fn from_dense_matches() {
+        let data = [0.0f32, 1.0, 0.0, -2.0, 0.0];
+        let b = Bitmap::from_dense(&data);
+        assert_eq!(b.to_indices(), vec![1, 3]);
+    }
+
+    #[test]
+    fn runs_cover_and_alternate() {
+        let mut rng = Rng::new(20);
+        for _ in 0..20 {
+            let n = 1 + rng.below(500) as usize;
+            let mut b = Bitmap::zeros(n);
+            for i in 0..n {
+                if rng.next_f64() < 0.3 {
+                    b.set(i);
+                }
+            }
+            let runs: Vec<(bool, usize)> = b.runs().collect();
+            let total: usize = runs.iter().map(|&(_, l)| l).sum();
+            assert_eq!(total, n);
+            for w in runs.windows(2) {
+                assert_ne!(w[0].0, w[1].0, "adjacent runs must alternate");
+            }
+            // reconstruct
+            let mut pos = 0;
+            let mut b2 = Bitmap::zeros(n);
+            for (bit, l) in runs {
+                if bit {
+                    for i in pos..pos + l {
+                        b2.set(i);
+                    }
+                }
+                pos += l;
+            }
+            assert_eq!(b, b2);
+        }
+    }
+
+    #[test]
+    fn long_uniform_runs_fast_path() {
+        let mut b = Bitmap::zeros(10_000);
+        for i in 3000..7000 {
+            b.set(i);
+        }
+        let runs: Vec<(bool, usize)> = b.runs().collect();
+        assert_eq!(runs, vec![(false, 3000), (true, 4000), (false, 3000)]);
+    }
+
+    #[test]
+    fn from_words_masks_tail() {
+        let b = Bitmap::from_words(vec![u64::MAX], 10);
+        assert_eq!(b.count_ones(), 10);
+    }
+}

@@ -1,0 +1,126 @@
+//! Dense f32 tensor: a shape plus a flat buffer.
+//!
+//! Gradients cross the compression framework *flattened* (the paper
+//! operates on rank-1 views of each layer's gradient); shape is carried
+//! for the runtime boundary where literals need their original form.
+
+use std::fmt;
+
+/// Dense row-major f32 tensor.
+#[derive(Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        let numel: usize = shape.iter().product();
+        assert_eq!(numel, data.len(), "shape {shape:?} != data len {}", data.len());
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let numel = shape.iter().product();
+        Self { shape, data: vec![0.0; numel] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> Self {
+        Self { shape: vec![data.len()], data }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Reinterpret with a new shape of equal element count.
+    pub fn reshaped(mut self, shape: Vec<usize>) -> Self {
+        let numel: usize = shape.iter().product();
+        assert_eq!(numel, self.data.len());
+        self.shape = shape;
+        self
+    }
+
+    /// Squared l2 norm in f64.
+    pub fn l2_sq(&self) -> f64 {
+        crate::util::stats::l2_sq(&self.data)
+    }
+
+    /// Count of exactly-zero elements (for inherent-sparsity stats).
+    pub fn zero_count(&self) -> usize {
+        self.data.iter().filter(|&&x| x == 0.0).count()
+    }
+
+    /// `self += other`
+    pub fn add_assign(&mut self, other: &Tensor) {
+        assert_eq!(self.shape, other.shape);
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// `self *= s`
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}[{} elems]", self.shape, self.data.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_accessors() {
+        let t = Tensor::new(vec![2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 0.0]);
+        assert_eq!(t.shape(), &[2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.zero_count(), 1);
+        assert!((t.l2_sq() - 55.0).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn arithmetic() {
+        let mut a = Tensor::from_vec(vec![1.0, 2.0]);
+        let b = Tensor::from_vec(vec![3.0, 4.0]);
+        a.add_assign(&b);
+        assert_eq!(a.data(), &[4.0, 6.0]);
+        a.scale(0.5);
+        assert_eq!(a.data(), &[2.0, 3.0]);
+    }
+
+    #[test]
+    fn reshape() {
+        let t = Tensor::from_vec(vec![0.0; 6]).reshaped(vec![3, 2]);
+        assert_eq!(t.shape(), &[3, 2]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Tensor representations: dense, sparse (decoupled keys/values — the
+//! core DeepReduce decomposition), and bitmap supports.
+
+mod bitmap;
+mod dense;
+mod sparse;
+
+pub use bitmap::Bitmap;
+pub use dense::Tensor;
+pub use sparse::SparseTensor;

@@ -1,0 +1,150 @@
+//! Sparse tensor in decoupled index/value form — the central DeepReduce
+//! data structure (paper §3): the support set `S` (sorted u32 indices)
+//! and the value array `V` with `V[i] = g[S[i]]`, plus the dense
+//! dimensionality `d` needed for reconstruction.
+
+use super::{Bitmap, Tensor};
+
+/// `r`-sparse view of a gradient of dimensionality `d`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SparseTensor {
+    /// dense dimensionality d
+    dense_len: usize,
+    /// sorted, unique indices (the support set S)
+    indices: Vec<u32>,
+    /// values aligned with `indices`
+    values: Vec<f32>,
+}
+
+impl SparseTensor {
+    /// Construct from parallel arrays. Indices must be sorted and unique.
+    pub fn new(dense_len: usize, indices: Vec<u32>, values: Vec<f32>) -> Self {
+        assert_eq!(indices.len(), values.len());
+        debug_assert!(indices.windows(2).all(|w| w[0] < w[1]), "indices must be sorted+unique");
+        debug_assert!(indices.last().is_none_or(|&i| (i as usize) < dense_len));
+        Self { dense_len, indices, values }
+    }
+
+    /// Extract all nonzero elements of a dense slice.
+    pub fn from_dense(data: &[f32]) -> Self {
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for (i, &x) in data.iter().enumerate() {
+            if x != 0.0 {
+                indices.push(i as u32);
+                values.push(x);
+            }
+        }
+        Self { dense_len: data.len(), indices, values }
+    }
+
+    /// Gather `g[S[i]]` for a given support over a dense gradient.
+    pub fn gather(data: &[f32], support: &[u32]) -> Self {
+        let values = support.iter().map(|&i| data[i as usize]).collect();
+        Self { dense_len: data.len(), indices: support.to_vec(), values }
+    }
+
+    pub fn dense_len(&self) -> usize {
+        self.dense_len
+    }
+
+    /// Number of stored (nonzero) elements, r.
+    pub fn nnz(&self) -> usize {
+        self.indices.len()
+    }
+
+    pub fn indices(&self) -> &[u32] {
+        &self.indices
+    }
+
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    pub fn values_mut(&mut self) -> &mut [f32] {
+        &mut self.values
+    }
+
+    pub fn into_parts(self) -> (usize, Vec<u32>, Vec<f32>) {
+        (self.dense_len, self.indices, self.values)
+    }
+
+    /// Scatter back to a dense vector (zeros elsewhere).
+    pub fn to_dense(&self) -> Tensor {
+        let mut data = vec![0.0f32; self.dense_len];
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            data[i as usize] = v;
+        }
+        Tensor::from_vec(data)
+    }
+
+    /// Scatter-add into an existing dense buffer (aggregation path).
+    pub fn add_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.dense_len);
+        for (&i, &v) in self.indices.iter().zip(&self.values) {
+            out[i as usize] += v;
+        }
+    }
+
+    /// The bitmap representation of the support set.
+    pub fn support_bitmap(&self) -> Bitmap {
+        Bitmap::from_indices(self.dense_len, &self.indices)
+    }
+
+    /// Wire size of the naive <key,value> representation in bytes
+    /// (32-bit keys + 32-bit values) — the paper's Figure 1b baseline.
+    pub fn kv_wire_bytes(&self) -> usize {
+        self.nnz() * 8
+    }
+
+    /// Squared l2 norm.
+    pub fn l2_sq(&self) -> f64 {
+        crate::util::stats::l2_sq(&self.values)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_roundtrip() {
+        let data = vec![0.0f32, 1.5, 0.0, 0.0, -2.0, 0.25];
+        let s = SparseTensor::from_dense(&data);
+        assert_eq!(s.nnz(), 3);
+        assert_eq!(s.indices(), &[1, 4, 5]);
+        assert_eq!(s.values(), &[1.5, -2.0, 0.25]);
+        assert_eq!(s.to_dense().data(), data.as_slice());
+    }
+
+    #[test]
+    fn gather_uses_support_order() {
+        let data = vec![10.0f32, 20.0, 30.0, 40.0];
+        let s = SparseTensor::gather(&data, &[1, 3]);
+        assert_eq!(s.values(), &[20.0, 40.0]);
+        assert_eq!(s.dense_len(), 4);
+    }
+
+    #[test]
+    fn add_into_accumulates() {
+        let s = SparseTensor::new(4, vec![0, 2], vec![1.0, 2.0]);
+        let mut acc = vec![1.0f32; 4];
+        s.add_into(&mut acc);
+        assert_eq!(acc, vec![2.0, 1.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn support_bitmap_matches() {
+        let s = SparseTensor::new(10, vec![0, 7, 9], vec![1.0, 2.0, 3.0]);
+        let b = s.support_bitmap();
+        assert_eq!(b.to_indices(), s.indices());
+    }
+
+    #[test]
+    fn figure1_example_sizes() {
+        // Paper Fig 1: d=8, r=4 -> dense 256 bits, kv 256 bits
+        let s = SparseTensor::new(8, vec![1, 3, 5, 6], vec![4.6, 5.8, 7.0, 7.6]);
+        assert_eq!(s.kv_wire_bytes() * 8, 256);
+        assert_eq!(s.dense_len() * 32, 256);
+    }
+}

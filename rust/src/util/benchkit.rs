@@ -1,0 +1,299 @@
+//! Mini benchmark harness (criterion is unavailable offline).
+//!
+//! Provides warmup + timed iterations with robust statistics
+//! (median / MAD), throughput reporting, and markdown table emission used
+//! by the paper-figure benches. Benches opt out of the libtest harness
+//! (`harness = false`) and drive this directly from `main`.
+
+use std::time::{Duration, Instant};
+
+use super::stats::{mad, median, percentile};
+
+/// One measured benchmark.
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    /// per-iteration wall time, seconds
+    pub samples: Vec<f64>,
+    /// optional bytes processed per iteration (for GB/s reporting)
+    pub bytes_per_iter: Option<u64>,
+    /// optional items processed per iteration (for Melem/s reporting)
+    pub items_per_iter: Option<u64>,
+}
+
+impl Measurement {
+    pub fn median_s(&self) -> f64 {
+        median(&self.samples)
+    }
+
+    pub fn mad_s(&self) -> f64 {
+        mad(&self.samples)
+    }
+
+    pub fn p95_s(&self) -> f64 {
+        percentile(&self.samples, 0.95)
+    }
+
+    pub fn throughput_gbps(&self) -> Option<f64> {
+        self.bytes_per_iter.map(|b| b as f64 / self.median_s() / 1e9)
+    }
+
+    pub fn throughput_melems(&self) -> Option<f64> {
+        self.items_per_iter.map(|n| n as f64 / self.median_s() / 1e6)
+    }
+
+    pub fn summary(&self) -> String {
+        let mut s = format!(
+            "{:<44} {:>12} ± {:>10}",
+            self.name,
+            fmt_duration(self.median_s()),
+            fmt_duration(self.mad_s())
+        );
+        if let Some(g) = self.throughput_gbps() {
+            s.push_str(&format!("  {g:>8.3} GB/s"));
+        }
+        if let Some(m) = self.throughput_melems() {
+            s.push_str(&format!("  {m:>9.2} Melem/s"));
+        }
+        s
+    }
+}
+
+pub fn fmt_duration(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{s:.3} s")
+    }
+}
+
+/// Benchmark runner configuration.
+#[derive(Clone, Debug)]
+pub struct Bench {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    results: Vec<Measurement>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(200),
+            measure: Duration::from_millis(800),
+            min_iters: 5,
+            max_iters: 10_000_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Quick profile for heavier macro benches (whole training runs).
+    pub fn macro_bench() -> Self {
+        Self {
+            warmup: Duration::ZERO,
+            measure: Duration::ZERO,
+            min_iters: 1,
+            max_iters: 1,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which performs ONE unit of work per call.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &Measurement {
+        self.run_with(name, None, None, &mut f)
+    }
+
+    /// Time with a bytes-per-iteration annotation (GB/s output).
+    pub fn run_bytes<F: FnMut()>(&mut self, name: &str, bytes: u64, mut f: F) -> &Measurement {
+        self.run_with(name, Some(bytes), None, &mut f)
+    }
+
+    /// Time with an items-per-iteration annotation (Melem/s output).
+    pub fn run_items<F: FnMut()>(&mut self, name: &str, items: u64, mut f: F) -> &Measurement {
+        self.run_with(name, None, Some(items), &mut f)
+    }
+
+    fn run_with(
+        &mut self,
+        name: &str,
+        bytes: Option<u64>,
+        items: Option<u64>,
+        f: &mut dyn FnMut(),
+    ) -> &Measurement {
+        // warmup
+        let t0 = Instant::now();
+        while t0.elapsed() < self.warmup {
+            f();
+        }
+        // choose batch size so each sample is ~1ms, bounding timer noise
+        let probe = Instant::now();
+        f();
+        let once = probe.elapsed().as_secs_f64().max(1e-9);
+        let batch = ((1e-3 / once).round() as usize).clamp(1, 1_000_000);
+
+        let mut samples = Vec::new();
+        let t1 = Instant::now();
+        let mut iters = 0usize;
+        while (t1.elapsed() < self.measure || samples.len() < self.min_iters)
+            && iters < self.max_iters
+        {
+            let s = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(s.elapsed().as_secs_f64() / batch as f64);
+            iters += batch;
+        }
+        let m = Measurement {
+            name: name.to_string(),
+            samples,
+            bytes_per_iter: bytes,
+            items_per_iter: items,
+        };
+        eprintln!("{}", m.summary());
+        self.results.push(m);
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally measured value (for macro experiments where the
+    /// "benchmark" is e.g. final accuracy or a modelled time).
+    pub fn record(&mut self, name: &str, seconds: f64) {
+        let m = Measurement {
+            name: name.to_string(),
+            samples: vec![seconds],
+            bytes_per_iter: None,
+            items_per_iter: None,
+        };
+        eprintln!("{}", m.summary());
+        self.results.push(m);
+    }
+
+    pub fn results(&self) -> &[Measurement] {
+        &self.results
+    }
+}
+
+/// Markdown table builder for the paper-figure benches: each bench prints
+/// the same rows/series the paper reports.
+pub struct Table {
+    title: String,
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rowf(&mut self, cells: &[&dyn std::fmt::Display]) {
+        self.row(&cells.iter().map(|c| c.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = format!("\n### {}\n\n", self.title);
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                line.push_str(&format!(" {:<w$} |", cells[i], w = widths[i]));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.header));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+        }
+        out
+    }
+
+    /// Print to stdout (captured by `cargo bench ... | tee`).
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(5),
+            measure: Duration::from_millis(20),
+            ..Bench::default()
+        };
+        let mut acc = 0u64;
+        let m = b.run("noop-ish", || {
+            acc = acc.wrapping_add(std::hint::black_box(1));
+        });
+        assert!(m.median_s() > 0.0);
+        assert!(m.median_s() < 0.1);
+        assert!(!m.samples.is_empty());
+    }
+
+    #[test]
+    fn throughput_annotations() {
+        let m = Measurement {
+            name: "x".into(),
+            samples: vec![0.001],
+            bytes_per_iter: Some(1_000_000),
+            items_per_iter: Some(1000),
+        };
+        assert!((m.throughput_gbps().unwrap() - 1.0).abs() < 1e-9);
+        assert!((m.throughput_melems().unwrap() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new("Fig X", &["method", "volume", "acc"]);
+        t.row(&["Top-r".into(), "0.01".into(), "90.1".into()]);
+        t.row(&["BF-P2".into(), "0.0066".into(), "90.4".into()]);
+        let r = t.render();
+        assert!(r.contains("Fig X"));
+        assert!(r.contains("| BF-P2"));
+        assert_eq!(r.matches('\n').count(), 7);
+    }
+
+    #[test]
+    fn fmt_durations() {
+        assert!(fmt_duration(5e-10).ends_with("ns"));
+        assert!(fmt_duration(5e-5).ends_with("µs"));
+        assert!(fmt_duration(5e-2).ends_with("ms"));
+        assert!(fmt_duration(5.0).ends_with(" s"));
+    }
+}

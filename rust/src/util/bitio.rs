@@ -1,0 +1,235 @@
+//! Bit-granular writer/reader over byte buffers.
+//!
+//! This is the shared substrate for RLE, Huffman, Elias and QSGD codecs:
+//! everything on the wire is bit-packed. Bits are written LSB-first within
+//! a little-endian 64-bit accumulator, which keeps the hot append path to
+//! a shift+or and an occasional 8-byte store.
+
+/// Append-only bit writer.
+#[derive(Default)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    acc: u64,
+    /// number of valid bits currently in `acc` (0..64)
+    nbits: u32,
+}
+
+impl BitWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(bytes: usize) -> Self {
+        Self { buf: Vec::with_capacity(bytes), acc: 0, nbits: 0 }
+    }
+
+    /// Write the low `n` bits of `v` (n <= 64).
+    #[inline]
+    pub fn write_bits(&mut self, v: u64, n: u32) {
+        debug_assert!(n <= 64);
+        debug_assert!(n == 64 || v < (1u64 << n), "value {v} does not fit in {n} bits");
+        if n == 0 {
+            return;
+        }
+        let free = 64 - self.nbits;
+        if n <= free {
+            self.acc |= v << self.nbits;
+            self.nbits += n;
+            if self.nbits == 64 {
+                self.flush_acc();
+            }
+        } else {
+            // split across the accumulator boundary
+            self.acc |= v << self.nbits;
+            let lo = free;
+            self.nbits = 64;
+            self.flush_acc();
+            self.acc = v >> lo;
+            self.nbits = n - lo;
+        }
+    }
+
+    #[inline]
+    pub fn write_bit(&mut self, b: bool) {
+        self.write_bits(b as u64, 1);
+    }
+
+    /// Write `n` consecutive identical bits (used by bit-level RLE).
+    pub fn write_run(&mut self, bit: bool, mut n: u64) {
+        let word = if bit { u64::MAX } else { 0 };
+        while n >= 64 {
+            self.write_bits(word, 64);
+            n -= 64;
+        }
+        if n > 0 {
+            self.write_bits(word & ((1u64 << n) - 1), n as u32);
+        }
+    }
+
+    #[inline]
+    fn flush_acc(&mut self) {
+        self.buf.extend_from_slice(&self.acc.to_le_bytes());
+        self.acc = 0;
+        self.nbits = 0;
+    }
+
+    /// Total bits written so far.
+    pub fn bit_len(&self) -> u64 {
+        (self.buf.len() as u64) * 8 + self.nbits as u64
+    }
+
+    /// Finish and return the byte buffer (final partial byte zero-padded).
+    pub fn finish(mut self) -> Vec<u8> {
+        let extra_bytes = self.nbits.div_ceil(8) as usize;
+        let bytes = self.acc.to_le_bytes();
+        self.buf.extend_from_slice(&bytes[..extra_bytes]);
+        self.buf
+    }
+}
+
+/// Sequential bit reader mirroring [`BitWriter`].
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    /// absolute bit cursor
+    pos: u64,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[error("bit stream exhausted: need {need} bits at position {pos}, have {have}")]
+pub struct BitUnderflow {
+    pub need: u32,
+    pub pos: u64,
+    pub have: u64,
+}
+
+impl<'a> BitReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn bits_remaining(&self) -> u64 {
+        (self.buf.len() as u64) * 8 - self.pos
+    }
+
+    pub fn bit_pos(&self) -> u64 {
+        self.pos
+    }
+
+    /// Read `n` bits (n <= 64) as the low bits of the result.
+    #[inline]
+    pub fn read_bits(&mut self, n: u32) -> Result<u64, BitUnderflow> {
+        debug_assert!(n <= 64);
+        if n == 0 {
+            return Ok(0);
+        }
+        if self.bits_remaining() < n as u64 {
+            return Err(BitUnderflow { need: n, pos: self.pos, have: self.bits_remaining() });
+        }
+        let mut out = 0u64;
+        let mut got = 0u32;
+        while got < n {
+            let byte_idx = (self.pos / 8) as usize;
+            let bit_off = (self.pos % 8) as u32;
+            let avail = 8 - bit_off;
+            let take = (n - got).min(avail);
+            let chunk = ((self.buf[byte_idx] as u64) >> bit_off) & ((1u64 << take) - 1);
+            out |= chunk << got;
+            got += take;
+            self.pos += take as u64;
+        }
+        Ok(out)
+    }
+
+    #[inline]
+    pub fn read_bit(&mut self) -> Result<bool, BitUnderflow> {
+        Ok(self.read_bits(1)? == 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip_simple() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b101, 3);
+        w.write_bits(0xFFFF, 16);
+        w.write_bit(false);
+        w.write_bits(42, 7);
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read_bits(3).unwrap(), 0b101);
+        assert_eq!(r.read_bits(16).unwrap(), 0xFFFF);
+        assert!(!r.read_bit().unwrap());
+        assert_eq!(r.read_bits(7).unwrap(), 42);
+    }
+
+    #[test]
+    fn roundtrip_randomized_widths() {
+        // property: any sequence of (value,width) writes reads back exactly
+        let mut rng = Rng::new(0xBEEF);
+        for case in 0..50 {
+            let mut w = BitWriter::new();
+            let mut expect = Vec::new();
+            for _ in 0..500 {
+                let n = 1 + (rng.below(64)) as u32;
+                let v = if n == 64 { rng.next_u64() } else { rng.next_u64() & ((1u64 << n) - 1) };
+                w.write_bits(v, n);
+                expect.push((v, n));
+            }
+            let total = w.bit_len();
+            let buf = w.finish();
+            assert!(buf.len() as u64 * 8 >= total);
+            let mut r = BitReader::new(&buf);
+            for &(v, n) in &expect {
+                assert_eq!(r.read_bits(n).unwrap(), v, "case {case}");
+            }
+        }
+    }
+
+    #[test]
+    fn write_run_roundtrip() {
+        let mut w = BitWriter::new();
+        w.write_run(true, 3);
+        w.write_run(false, 130);
+        w.write_run(true, 64);
+        w.write_run(false, 1);
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        for _ in 0..3 {
+            assert!(r.read_bit().unwrap());
+        }
+        for _ in 0..130 {
+            assert!(!r.read_bit().unwrap());
+        }
+        for _ in 0..64 {
+            assert!(r.read_bit().unwrap());
+        }
+        assert!(!r.read_bit().unwrap());
+    }
+
+    #[test]
+    fn underflow_reported() {
+        let mut w = BitWriter::new();
+        w.write_bits(0b11, 2);
+        let buf = w.finish(); // one byte, 8 bits available after padding
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.read_bits(8).unwrap(), 0b11);
+        assert!(r.read_bits(1).is_err());
+    }
+
+    #[test]
+    fn bit_len_accounting() {
+        let mut w = BitWriter::new();
+        assert_eq!(w.bit_len(), 0);
+        w.write_bits(1, 1);
+        assert_eq!(w.bit_len(), 1);
+        w.write_bits(0, 63);
+        assert_eq!(w.bit_len(), 64);
+        w.write_bits(7, 3);
+        assert_eq!(w.bit_len(), 67);
+        assert_eq!(w.finish().len(), 9);
+    }
+}

@@ -1,0 +1,153 @@
+//! Elias gamma / omega codes over [`BitWriter`]/[`BitReader`].
+//!
+//! QSGD (Alistarh et al., 2017) encodes quantized gradient integers with
+//! Elias codes; we provide gamma (simple, good for small ints) and the
+//! recursive omega code the paper references. Codes operate on v >= 1;
+//! callers map 0-based data with `v+1`.
+
+use super::bitio::{BitReader, BitUnderflow, BitWriter};
+
+/// Elias gamma: unary length prefix + binary remainder. v >= 1.
+pub fn gamma_encode(w: &mut BitWriter, v: u64) {
+    assert!(v >= 1, "gamma code domain is v >= 1");
+    let n = 63 - v.leading_zeros(); // floor(log2 v)
+    // n zeros, then the (n+1)-bit value MSB-first. We emit MSB-first so the
+    // decoder can scan the unary prefix naturally.
+    w.write_run(false, n as u64);
+    for i in (0..=n).rev() {
+        w.write_bit((v >> i) & 1 == 1);
+    }
+}
+
+pub fn gamma_decode(r: &mut BitReader) -> Result<u64, BitUnderflow> {
+    let mut n = 0u32;
+    while !r.read_bit()? {
+        n += 1;
+        if n > 63 {
+            return Err(BitUnderflow { need: 1, pos: r.bit_pos(), have: 0 });
+        }
+    }
+    let mut v = 1u64;
+    for _ in 0..n {
+        v = (v << 1) | r.read_bit()? as u64;
+    }
+    Ok(v)
+}
+
+/// Elias omega (recursive) code. v >= 1.
+pub fn omega_encode(w: &mut BitWriter, v: u64) {
+    assert!(v >= 1, "omega code domain is v >= 1");
+    // Build groups back-to-front.
+    let mut groups: Vec<(u64, u32)> = Vec::new();
+    let mut n = v;
+    while n > 1 {
+        let len = 64 - n.leading_zeros(); // bits in n
+        groups.push((n, len));
+        n = (len - 1) as u64;
+    }
+    for &(g, len) in groups.iter().rev() {
+        for i in (0..len).rev() {
+            w.write_bit((g >> i) & 1 == 1);
+        }
+    }
+    w.write_bit(false); // terminator
+}
+
+pub fn omega_decode(r: &mut BitReader) -> Result<u64, BitUnderflow> {
+    let mut n = 1u64;
+    loop {
+        if !r.read_bit()? {
+            return Ok(n);
+        }
+        // the bit we just read is the MSB (always 1) of an (n+1)-bit group
+        let mut g = 1u64;
+        for _ in 0..n {
+            g = (g << 1) | r.read_bit()? as u64;
+        }
+        n = g;
+    }
+}
+
+/// Bit length of the gamma code of v (for cost models).
+pub fn gamma_len(v: u64) -> u64 {
+    debug_assert!(v >= 1);
+    2 * (63 - v.leading_zeros()) as u64 + 1
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn gamma_known_codes() {
+        // 1 -> "1"; 2 -> "010"; 3 -> "011"; 4 -> "00100"
+        let mut w = BitWriter::new();
+        for v in 1..=4u64 {
+            gamma_encode(&mut w, v);
+        }
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        for v in 1..=4u64 {
+            assert_eq!(gamma_decode(&mut r).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn gamma_roundtrip_random() {
+        let mut rng = Rng::new(2);
+        let mut w = BitWriter::new();
+        let mut vals = Vec::new();
+        for _ in 0..5000 {
+            let v = 1 + (rng.next_u64() >> rng.below(63) as u32);
+            gamma_encode(&mut w, v);
+            vals.push(v);
+        }
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        for v in vals {
+            assert_eq!(gamma_decode(&mut r).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn omega_roundtrip_exhaustive_small() {
+        let mut w = BitWriter::new();
+        for v in 1..=1000u64 {
+            omega_encode(&mut w, v);
+        }
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        for v in 1..=1000u64 {
+            assert_eq!(omega_decode(&mut r).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn omega_roundtrip_random_large() {
+        let mut rng = Rng::new(3);
+        let mut w = BitWriter::new();
+        let mut vals = Vec::new();
+        for _ in 0..2000 {
+            let v = 1 + (rng.next_u64() >> rng.below(40) as u32);
+            omega_encode(&mut w, v);
+            vals.push(v);
+        }
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        for v in vals {
+            assert_eq!(omega_decode(&mut r).unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn gamma_len_matches() {
+        let mut rng = Rng::new(4);
+        for _ in 0..200 {
+            let v = 1 + rng.below(1 << 30);
+            let mut w = BitWriter::new();
+            gamma_encode(&mut w, v);
+            assert_eq!(w.bit_len(), gamma_len(v));
+        }
+    }
+}

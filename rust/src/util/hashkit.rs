@@ -1,0 +1,120 @@
+//! Hash-function kit for the Bloom-filter index codec.
+//!
+//! The paper uses k independent hash functions over the finite index
+//! domain `[d]`, realized on GPU as a precomputed lookup table ℍ[d,k].
+//! On this testbed we compute the hashes arithmetically: each hash is the
+//! SplitMix64 finalizer applied to `index ⊕ seed_i`, reduced to `[0, m)`
+//! by the multiply-shift (Lemire) map. This preserves the independence
+//! assumption of Lemma 2 and is branch-free on the hot path.
+
+use super::prng::{mix64, SplitMix64};
+
+/// A family of k hash functions mapping u64 -> [0, m).
+#[derive(Clone, Debug)]
+pub struct HashFamily {
+    seeds: Vec<u64>,
+    m: u64,
+}
+
+impl HashFamily {
+    /// `k` functions onto `[0, m)`, derived from `master_seed`.
+    pub fn new(k: usize, m: u64, master_seed: u64) -> Self {
+        assert!(m > 0, "hash range must be nonzero");
+        let mut sm = SplitMix64::new(master_seed);
+        let seeds = (0..k).map(|_| sm.next_u64()).collect();
+        Self { seeds, m }
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.seeds.len()
+    }
+
+    #[inline]
+    pub fn range(&self) -> u64 {
+        self.m
+    }
+
+    /// Hash `x` with function `i`.
+    #[inline(always)]
+    pub fn hash(&self, i: usize, x: u64) -> u64 {
+        let h = mix64(x ^ self.seeds[i]);
+        // multiply-shift reduction, avoids the modulo bias + div latency
+        (((h as u128) * (self.m as u128)) >> 64) as u64
+    }
+
+    /// All k hashes of `x` into a caller-provided buffer.
+    #[inline]
+    pub fn hash_all(&self, x: u64, out: &mut [u64]) {
+        debug_assert_eq!(out.len(), self.k());
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = self.hash(i, x);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let f1 = HashFamily::new(3, 1000, 42);
+        let f2 = HashFamily::new(3, 1000, 42);
+        for x in 0..100u64 {
+            for i in 0..3 {
+                assert_eq!(f1.hash(i, x), f2.hash(i, x));
+            }
+        }
+    }
+
+    #[test]
+    fn in_range_and_spread() {
+        let m = 977;
+        let f = HashFamily::new(4, m, 7);
+        let mut counts = vec![0usize; m as usize];
+        for x in 0..50_000u64 {
+            for i in 0..4 {
+                let h = f.hash(i, x);
+                assert!(h < m);
+                counts[h as usize] += 1;
+            }
+        }
+        // every bucket hit at least once, max not wildly off uniform
+        let expected = 200_000.0 / m as f64;
+        for (b, &c) in counts.iter().enumerate() {
+            assert!(c > 0, "bucket {b} never hit");
+            assert!((c as f64) < expected * 2.0, "bucket {b} count {c}");
+        }
+    }
+
+    #[test]
+    fn functions_are_distinct() {
+        let f = HashFamily::new(5, 1 << 30, 9);
+        // two distinct functions should disagree on most inputs
+        for i in 0..5 {
+            for j in (i + 1)..5 {
+                let agree = (0..1000u64).filter(|&x| f.hash(i, x) == f.hash(j, x)).count();
+                assert!(agree < 5, "h{i} vs h{j} agree {agree}/1000");
+            }
+        }
+    }
+
+    #[test]
+    fn pairwise_collision_rate_near_uniform() {
+        // For m buckets and n items, expected pairwise collisions under
+        // uniform hashing ~= C(n,2)/m. Check within 3x.
+        let m = 1u64 << 16;
+        let f = HashFamily::new(1, m, 11);
+        let n = 10_000u64;
+        let mut set = std::collections::HashSet::new();
+        let mut coll = 0usize;
+        for x in 0..n {
+            if !set.insert(f.hash(0, x)) {
+                coll += 1;
+            }
+        }
+        let expected = (n * (n - 1)) as f64 / 2.0 / m as f64;
+        assert!((coll as f64) < expected * 3.0 + 10.0, "collisions {coll}, expected ~{expected}");
+    }
+}

@@ -1,0 +1,357 @@
+//! Canonical Huffman coding over byte symbols.
+//!
+//! Used by the Huffman index codec (paper §2: encode the byte planes of
+//! gradient indices) and by SKCompress (Huffman over bucket ids and delta
+//! key prefixes). The codec serializes only the code lengths (canonical
+//! form), so the table costs ≤ 256 bytes on the wire; alternatively a
+//! codec built from a *shared* model (e.g. "all indices 0..d-1") can skip
+//! the table entirely, as the paper's implementation does.
+
+use super::bitio::{BitReader, BitWriter};
+
+const MAX_LEN: u32 = 32;
+
+/// A canonical Huffman code over symbols `0..=255`.
+#[derive(Clone, Debug)]
+pub struct Huffman {
+    /// code length per symbol (0 = unused)
+    lens: [u8; 256],
+    /// canonical code per symbol (MSB-first, `lens[s]` bits)
+    codes: [u32; 256],
+    /// decoding: sorted (len, symbol) plus per-length first-code tables
+    first_code: [u32; 33],
+    first_index: [u32; 33],
+    count: [u32; 33],
+    sorted_syms: Vec<u8>,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum HuffmanError {
+    #[error("cannot build a code over zero symbols")]
+    Empty,
+    #[error("invalid code length table")]
+    BadTable,
+    #[error("bit stream exhausted")]
+    Underflow,
+    #[error("invalid code in stream")]
+    BadCode,
+}
+
+impl Huffman {
+    /// Build from symbol frequencies (zeros allowed). Code lengths are
+    /// limited to `MAX_LEN` via frequency clamping (package-merge is
+    /// overkill at 256 symbols; clamping heavy tails suffices and keeps
+    /// optimality within a fraction of a percent).
+    pub fn from_freqs(freqs: &[u64; 256]) -> Result<Self, HuffmanError> {
+        let used = freqs.iter().filter(|&&f| f > 0).count();
+        if used == 0 {
+            return Err(HuffmanError::Empty);
+        }
+        let mut lens = [0u8; 256];
+        if used == 1 {
+            // single symbol: 1-bit code by convention
+            let s = freqs.iter().position(|&f| f > 0).unwrap();
+            lens[s] = 1;
+            return Self::from_lens(lens);
+        }
+
+        // Heap-free O(n log n) Huffman on sorted frequencies (n = 256).
+        #[derive(Clone, Copy)]
+        struct Node {
+            freq: u64,
+            // -1..=-256 leaf (symbol = -id-1); >=0 internal index
+            left: i32,
+            right: i32,
+        }
+        let mut nodes: Vec<Node> = Vec::with_capacity(512);
+        let mut leaves: Vec<(u64, usize)> =
+            freqs.iter().enumerate().filter(|(_, &f)| f > 0).map(|(s, &f)| (f, s)).collect();
+        leaves.sort_unstable();
+        // two queues: sorted leaves + FIFO of merged nodes (freqs ascending)
+        let mut li = 0usize;
+        let mut merged: std::collections::VecDeque<usize> = Default::default();
+        let take_min = |li: &mut usize,
+                        merged: &mut std::collections::VecDeque<usize>,
+                        nodes: &mut Vec<Node>,
+                        leaves: &[(u64, usize)]|
+         -> i32 {
+            let leaf_f = leaves.get(*li).map(|&(f, _)| f);
+            let node_f = merged.front().map(|&i| nodes[i].freq);
+            match (leaf_f, node_f) {
+                (Some(lf), Some(nf)) if lf <= nf => {
+                    let s = leaves[*li].1;
+                    *li += 1;
+                    -(s as i32) - 1
+                }
+                (Some(_), None) => {
+                    let s = leaves[*li].1;
+                    *li += 1;
+                    -(s as i32) - 1
+                }
+                (_, Some(_)) => merged.pop_front().unwrap() as i32,
+                (None, None) => unreachable!(),
+            }
+        };
+        let total_leaves = leaves.len();
+        for _ in 0..total_leaves - 1 {
+            let a = take_min(&mut li, &mut merged, &mut nodes, &leaves);
+            let b = take_min(&mut li, &mut merged, &mut nodes, &leaves);
+            let fa = if a < 0 { leaves_freq(&leaves, a) } else { nodes[a as usize].freq };
+            let fb = if b < 0 { leaves_freq(&leaves, b) } else { nodes[b as usize].freq };
+            nodes.push(Node { freq: fa + fb, left: a, right: b });
+            merged.push_back(nodes.len() - 1);
+        }
+        fn leaves_freq(leaves: &[(u64, usize)], id: i32) -> u64 {
+            let sym = (-id - 1) as usize;
+            leaves.iter().find(|&&(_, s)| s == sym).map(|&(f, _)| f).unwrap()
+        }
+        // depth-assign
+        let root = nodes.len() - 1;
+        let mut stack = vec![(root as i32, 0u32)];
+        while let Some((id, d)) = stack.pop() {
+            if id < 0 {
+                let sym = (-id - 1) as usize;
+                lens[sym] = d.clamp(1, MAX_LEN) as u8;
+            } else {
+                let n = nodes[id as usize];
+                stack.push((n.left, d + 1));
+                stack.push((n.right, d + 1));
+            }
+        }
+        // if clamping broke Kraft, rebuild with flattened freqs
+        if kraft(&lens) > 1.0 + 1e-12 {
+            let mut flat = *freqs;
+            for f in flat.iter_mut() {
+                if *f > 0 {
+                    *f = 1 + (*f >> 20);
+                }
+            }
+            return Self::from_freqs(&flat);
+        }
+        Self::from_lens(lens)
+    }
+
+    /// Build from an explicit code-length table (canonical reconstruction —
+    /// the deserialization path).
+    pub fn from_lens(lens: [u8; 256]) -> Result<Self, HuffmanError> {
+        let used = lens.iter().filter(|&&l| l > 0).count();
+        if used == 0 {
+            return Err(HuffmanError::Empty);
+        }
+        let k = kraft(&lens);
+        // allow the degenerate single-symbol code (kraft = 0.5)
+        if k > 1.0 + 1e-12 {
+            return Err(HuffmanError::BadTable);
+        }
+        // canonical assignment: sort by (len, symbol)
+        let mut sorted: Vec<u8> = (0..=255u8).filter(|&s| lens[s as usize] > 0).collect();
+        sorted.sort_by_key(|&s| (lens[s as usize], s));
+
+        let mut codes = [0u32; 256];
+        let mut first_code = [0u32; 33];
+        let mut first_index = [0u32; 33];
+        let mut count = [0u32; 33];
+        for &s in &sorted {
+            count[lens[s as usize] as usize] += 1;
+        }
+        let mut code = 0u32;
+        let mut idx = 0u32;
+        for len in 1..=MAX_LEN as usize {
+            first_code[len] = code;
+            first_index[len] = idx;
+            code = (code + count[len]) << 1;
+            idx += count[len];
+        }
+        {
+            let mut next = first_code;
+            for &s in &sorted {
+                let l = lens[s as usize] as usize;
+                codes[s as usize] = next[l];
+                next[l] += 1;
+            }
+        }
+        Ok(Self { lens, codes, first_code, first_index, count, sorted_syms: sorted })
+    }
+
+    /// Serialized table: 256 bytes of code lengths.
+    pub fn table_bytes(&self) -> [u8; 256] {
+        self.lens
+    }
+
+    #[inline]
+    pub fn encode_symbol(&self, w: &mut BitWriter, sym: u8) {
+        let l = self.lens[sym as usize] as u32;
+        debug_assert!(l > 0, "symbol {sym} not in code");
+        let c = self.codes[sym as usize];
+        // MSB-first emission
+        for i in (0..l).rev() {
+            w.write_bit((c >> i) & 1 == 1);
+        }
+    }
+
+    #[inline]
+    pub fn decode_symbol(&self, r: &mut BitReader) -> Result<u8, HuffmanError> {
+        let mut code = 0u32;
+        for len in 1..=MAX_LEN as usize {
+            code = (code << 1) | r.read_bit().map_err(|_| HuffmanError::Underflow)? as u32;
+            let cnt = self.count[len];
+            if cnt > 0 && code >= self.first_code[len] && code < self.first_code[len] + cnt {
+                let idx = self.first_index[len] + (code - self.first_code[len]);
+                return Ok(self.sorted_syms[idx as usize]);
+            }
+        }
+        Err(HuffmanError::BadCode)
+    }
+
+
+    /// Encode a byte slice; returns the bit stream.
+    pub fn encode(&self, data: &[u8]) -> Vec<u8> {
+        let mut w = BitWriter::with_capacity(data.len());
+        for &b in data {
+            self.encode_symbol(&mut w, b);
+        }
+        w.finish()
+    }
+
+    /// Decode exactly `n` symbols.
+    pub fn decode(&self, bits: &[u8], n: usize) -> Result<Vec<u8>, HuffmanError> {
+        let mut r = BitReader::new(bits);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.decode_symbol(&mut r)?);
+        }
+        Ok(out)
+    }
+
+    /// Expected bits/symbol under `freqs` (cost model for codec selection).
+    pub fn expected_bits(&self, freqs: &[u64; 256]) -> f64 {
+        let total: u64 = freqs.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let mut bits = 0.0;
+        for s in 0..256 {
+            if freqs[s] > 0 {
+                bits += freqs[s] as f64 * self.lens[s] as f64;
+            }
+        }
+        bits / total as f64
+    }
+}
+
+fn kraft(lens: &[u8; 256]) -> f64 {
+    lens.iter().filter(|&&l| l > 0).map(|&l| 0.5f64.powi(l as i32)).sum()
+}
+
+/// Count byte frequencies.
+pub fn byte_freqs(data: &[u8]) -> [u64; 256] {
+    let mut f = [0u64; 256];
+    for &b in data {
+        f[b as usize] += 1;
+    }
+    f
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    fn roundtrip(data: &[u8]) {
+        let freqs = byte_freqs(data);
+        let h = Huffman::from_freqs(&freqs).unwrap();
+        let enc = h.encode(data);
+        let dec = h.decode(&enc, data.len()).unwrap();
+        assert_eq!(dec, data);
+        // canonical reconstruction from lengths must decode identically
+        let h2 = Huffman::from_lens(h.table_bytes()).unwrap();
+        let dec2 = h2.decode(&enc, data.len()).unwrap();
+        assert_eq!(dec2, data);
+    }
+
+    #[test]
+    fn paper_example() {
+        // "aaaabaacaabaa" from §2 — 'a' must get a 1-bit code
+        let data = b"aaaabaacaabaa";
+        let freqs = byte_freqs(data);
+        let h = Huffman::from_freqs(&freqs).unwrap();
+        assert_eq!(h.lens[b'a' as usize], 1);
+        assert_eq!(h.lens[b'b' as usize], 2);
+        assert_eq!(h.lens[b'c' as usize], 2);
+        let enc = h.encode(data);
+        // paper: 16 bits total -> 2 bytes
+        assert_eq!(enc.len(), 2);
+        roundtrip(data);
+    }
+
+    #[test]
+    fn single_symbol() {
+        roundtrip(&[7u8; 100]);
+    }
+
+    #[test]
+    fn two_symbols() {
+        roundtrip(b"abababbbaaab");
+    }
+
+    #[test]
+    fn all_bytes_uniform() {
+        let data: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn skewed_random() {
+        let mut rng = Rng::new(10);
+        // zipf-ish skew, like index byte planes
+        let data: Vec<u8> =
+            (0..20_000).map(|_| ((rng.next_f64().powi(4) * 255.0) as u8)).collect();
+        let freqs = byte_freqs(&data);
+        let h = Huffman::from_freqs(&freqs).unwrap();
+        let enc = h.encode(&data);
+        assert!(enc.len() < data.len(), "skewed data must compress");
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn compression_close_to_entropy() {
+        let mut rng = Rng::new(12);
+        let data: Vec<u8> = (0..50_000)
+            .map(|_| {
+                let r = rng.next_f64();
+                if r < 0.7 {
+                    0
+                } else if r < 0.9 {
+                    1
+                } else {
+                    (rng.below(254) + 2) as u8
+                }
+            })
+            .collect();
+        let freqs = byte_freqs(&data);
+        let total: u64 = freqs.iter().sum();
+        let entropy: f64 = freqs
+            .iter()
+            .filter(|&&f| f > 0)
+            .map(|&f| {
+                let p = f as f64 / total as f64;
+                -p * p.log2()
+            })
+            .sum();
+        let h = Huffman::from_freqs(&freqs).unwrap();
+        let got = h.expected_bits(&freqs);
+        assert!(got >= entropy - 1e-9);
+        assert!(got <= entropy + 1.0, "huffman within 1 bit of entropy: {got} vs {entropy}");
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn bad_table_rejected() {
+        let mut lens = [0u8; 256];
+        lens[0] = 1;
+        lens[1] = 1;
+        lens[2] = 1; // kraft = 1.5
+        assert_eq!(Huffman::from_lens(lens).unwrap_err(), HuffmanError::BadTable);
+        assert_eq!(Huffman::from_freqs(&[0u64; 256]).unwrap_err(), HuffmanError::Empty);
+    }
+}

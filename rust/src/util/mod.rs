@@ -1,0 +1,137 @@
+//! Shared substrate: bit I/O, integer codes, PRNG/hashing, statistics,
+//! JSON/TOML-lite parsing, and the bench/property-test harnesses.
+
+pub mod benchkit;
+pub mod bitio;
+pub mod elias;
+pub mod hashkit;
+pub mod huffman;
+pub mod json;
+pub mod prng;
+pub mod stats;
+pub mod testkit;
+pub mod toml_lite;
+pub mod varint;
+
+/// f32 <-> IEEE-754 half (binary16) conversion, used by the fp16 value
+/// codec and the fp16 rows of Fig 11. Round-to-nearest-even.
+pub mod f16 {
+    /// Convert an f32 to its binary16 bit pattern.
+    pub fn f32_to_f16_bits(x: f32) -> u16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let man = bits & 0x7F_FFFF;
+
+        if exp == 0xFF {
+            // inf / nan
+            return sign | 0x7C00 | if man != 0 { 0x0200 } else { 0 };
+        }
+        // unbiased exponent
+        let e = exp - 127 + 15;
+        if e >= 0x1F {
+            return sign | 0x7C00; // overflow -> inf
+        }
+        if e <= 0 {
+            // subnormal or zero
+            if e < -10 {
+                return sign; // underflow to zero
+            }
+            // add implicit leading 1, shift into subnormal position
+            let man = man | 0x80_0000;
+            let shift = (14 - e) as u32;
+            let half_man = man >> shift;
+            // round to nearest even
+            let rem = man & ((1 << shift) - 1);
+            let halfway = 1u32 << (shift - 1);
+            let rounded = if rem > halfway || (rem == halfway && (half_man & 1) == 1) {
+                half_man + 1
+            } else {
+                half_man
+            };
+            return sign | rounded as u16;
+        }
+        // normal case: keep top 10 mantissa bits, round-nearest-even
+        let half_man = man >> 13;
+        let rem = man & 0x1FFF;
+        let mut out = sign | ((e as u16) << 10) | half_man as u16;
+        if rem > 0x1000 || (rem == 0x1000 && (half_man & 1) == 1) {
+            out = out.wrapping_add(1); // may carry into exponent: correct
+        }
+        out
+    }
+
+    /// Convert a binary16 bit pattern to f32.
+    pub fn f16_bits_to_f32(h: u16) -> f32 {
+        let sign = ((h & 0x8000) as u32) << 16;
+        let exp = ((h >> 10) & 0x1F) as u32;
+        let man = (h & 0x3FF) as u32;
+        let bits = if exp == 0 {
+            if man == 0 {
+                sign
+            } else {
+                // subnormal: normalize (value = man * 2^-24)
+                let mut e = 0i32;
+                let mut m = man;
+                while m & 0x400 == 0 {
+                    m <<= 1;
+                    e -= 1;
+                }
+                m &= 0x3FF;
+                sign | (((127 - 15 + e + 1) as u32) << 23) | (m << 13)
+            }
+        } else if exp == 0x1F {
+            sign | 0x7F80_0000 | (man << 13)
+        } else {
+            sign | ((exp + 127 - 15) << 23) | (man << 13)
+        };
+        f32::from_bits(bits)
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use crate::util::prng::Rng;
+
+        #[test]
+        fn exact_values() {
+            for &(f, h) in &[
+                (0.0f32, 0x0000u16),
+                (-0.0, 0x8000),
+                (1.0, 0x3C00),
+                (-2.0, 0xC000),
+                (0.5, 0x3800),
+                (65504.0, 0x7BFF), // f16 max
+                (f32::INFINITY, 0x7C00),
+            ] {
+                assert_eq!(f32_to_f16_bits(f), h, "f={f}");
+                if f.is_finite() {
+                    assert_eq!(f16_bits_to_f32(h), f);
+                }
+            }
+            assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+        }
+
+        #[test]
+        fn roundtrip_error_bounded() {
+            let mut rng = Rng::new(6);
+            for _ in 0..20_000 {
+                let x = (rng.next_f32() - 0.5) * 100.0;
+                let y = f16_bits_to_f32(f32_to_f16_bits(x));
+                // half precision: 11-bit significand -> rel err <= 2^-11
+                assert!((x - y).abs() <= x.abs() * 4.9e-4 + 6e-8, "x={x} y={y}");
+            }
+        }
+
+        #[test]
+        fn overflow_and_subnormals() {
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e9)), f32::INFINITY);
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-1e9)), f32::NEG_INFINITY);
+            let tiny = 2.0e-8f32; // below min subnormal/2 (~2.98e-8) -> 0
+            assert_eq!(f16_bits_to_f32(f32_to_f16_bits(tiny)), 0.0);
+            let sub = 5.0e-6f32; // representable as subnormal
+            let y = f16_bits_to_f32(f32_to_f16_bits(sub));
+            assert!((sub - y).abs() / sub < 0.05);
+        }
+    }
+}

@@ -1,0 +1,135 @@
+//! Property-testing harness (proptest is unavailable offline).
+//!
+//! `forall` drives a closure with `n` deterministic random cases from a
+//! seeded [`Rng`]; on failure it retries with progressively simpler
+//! regenerated inputs (size shrinking by halving the generator budget)
+//! and reports the failing seed so the case is reproducible.
+
+use super::prng::Rng;
+
+/// Generation budget passed to the case generator: `size` bounds the
+/// magnitude/length of generated structures.
+#[derive(Clone, Copy, Debug)]
+pub struct Gen {
+    pub seed: u64,
+    pub size: usize,
+}
+
+/// Run `cases` random property checks. `gen` builds an input from an Rng
+/// and a size budget; `prop` returns Err(description) on violation.
+///
+/// Panics with the seed and shrunk input description on failure.
+pub fn forall<T, G, P>(name: &str, cases: usize, max_size: usize, mut generate: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng, usize) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let master = 0xD5EE_D000 ^ fnv1a(name.as_bytes());
+    for case in 0..cases {
+        let seed = master.wrapping_add(case as u64);
+        // ramp size up over the run so early cases are small
+        let size = 1 + (max_size.saturating_sub(1)) * case / cases.max(1);
+        let mut rng = Rng::new(seed);
+        let input = generate(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            // shrink: regenerate at smaller sizes with the same seed and
+            // keep the smallest failing input
+            let mut best: (usize, T, String) = (size, input, msg);
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Rng::new(seed);
+                let candidate = generate(&mut rng, s);
+                if let Err(m) = prop(&candidate) {
+                    best = (s, candidate, m);
+                }
+                if s == 1 {
+                    break;
+                }
+                s /= 2;
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {seed:#x}, size {}):\n  {}\n  input: {:?}",
+                best.0, best.2, best.1
+            );
+        }
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+/// Convenience: generate a random f32 vector with heavy-tailed magnitudes
+/// (resembles gradient value distributions: many near-zero, few large).
+pub fn gradient_like(rng: &mut Rng, n: usize) -> Vec<f32> {
+    (0..n)
+        .map(|_| {
+            let g = rng.next_gaussian() as f32;
+            let scale = 10f32.powf((rng.next_f32() * 6.0) - 4.0); // 1e-4..1e2
+            g * scale
+        })
+        .collect()
+}
+
+/// Convenience: random strictly-increasing u32 indices in [0, d).
+pub fn sorted_support(rng: &mut Rng, d: usize, r: usize) -> Vec<u32> {
+    let mut idx = rng.sample_indices(d, r.min(d));
+    idx.sort_unstable();
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivial_property() {
+        forall(
+            "vec-len",
+            50,
+            100,
+            |rng, size| {
+                let n = rng.below(size as u64 + 1) as usize;
+                vec![0u8; n]
+            },
+            |v| {
+                if v.len() <= 100 {
+                    Ok(())
+                } else {
+                    Err("too long".into())
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must-fail' failed")]
+    fn forall_reports_failure() {
+        forall(
+            "must-fail",
+            20,
+            50,
+            |rng, size| rng.below(size as u64 + 10),
+            |&v| if v < 5 { Ok(()) } else { Err(format!("v={v} >= 5")) },
+        );
+    }
+
+    #[test]
+    fn generators_shapes() {
+        let mut rng = Rng::new(1);
+        let g = gradient_like(&mut rng, 1000);
+        assert_eq!(g.len(), 1000);
+        assert!(g.iter().any(|&x| x.abs() > 1.0));
+        assert!(g.iter().any(|&x| x.abs() < 1e-2));
+        let s = sorted_support(&mut rng, 100, 30);
+        assert_eq!(s.len(), 30);
+        assert!(s.windows(2).all(|w| w[0] < w[1]));
+        assert!(*s.last().unwrap() < 100);
+    }
+}

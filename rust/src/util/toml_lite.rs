@@ -1,0 +1,287 @@
+//! TOML-subset parser for experiment configuration files.
+//!
+//! Supports the subset the config system needs: `[section]` and
+//! `[section.sub]` headers, `key = value` with strings, integers, floats,
+//! booleans, and flat arrays; `#` comments. Dotted keys inside sections
+//! are flattened to `section.sub.key` paths.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn as_usize(&self) -> Option<usize> {
+        self.as_i64().and_then(|i| usize::try_from(i).ok())
+    }
+
+    /// Float accessor that also accepts integers (common in configs).
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[TomlValue]> {
+        match self {
+            TomlValue::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Flat `section.key -> value` map.
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    map: BTreeMap<String, TomlValue>,
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("toml parse error on line {line}: {msg}")]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self, TomlError> {
+        let mut map = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest.strip_suffix(']').ok_or_else(|| err("unterminated section"))?;
+                let name = name.trim();
+                if name.is_empty() {
+                    return Err(err("empty section name"));
+                }
+                section = name.to_string();
+            } else {
+                let eq = line.find('=').ok_or_else(|| err("expected key = value"))?;
+                let key = line[..eq].trim();
+                if key.is_empty() {
+                    return Err(err("empty key"));
+                }
+                let val = parse_value(line[eq + 1..].trim()).map_err(|m| err(&m))?;
+                let full = if section.is_empty() {
+                    key.to_string()
+                } else {
+                    format!("{section}.{key}")
+                };
+                map.insert(full, val);
+            }
+        }
+        Ok(Self { map })
+    }
+
+    pub fn get(&self, path: &str) -> Option<&TomlValue> {
+        self.map.get(path)
+    }
+
+    pub fn get_str(&self, path: &str) -> Option<&str> {
+        self.get(path).and_then(|v| v.as_str())
+    }
+
+    pub fn get_usize(&self, path: &str) -> Option<usize> {
+        self.get(path).and_then(|v| v.as_usize())
+    }
+
+    pub fn get_f64(&self, path: &str) -> Option<f64> {
+        self.get(path).and_then(|v| v.as_f64())
+    }
+
+    pub fn get_bool(&self, path: &str) -> Option<bool> {
+        self.get(path).and_then(|v| v.as_bool())
+    }
+
+    /// Keys under a `section.` prefix.
+    pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        let want = format!("{prefix}.");
+        self.map.keys().filter_map(move |k| k.strip_prefix(&want))
+    }
+
+    pub fn insert(&mut self, path: &str, v: TomlValue) {
+        self.map.insert(path.to_string(), v);
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string must not start a comment
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner.strip_suffix('"').ok_or("unterminated string")?;
+        // minimal escapes
+        let mut out = String::new();
+        let mut chars = inner.chars();
+        while let Some(c) = chars.next() {
+            if c == '\\' {
+                match chars.next() {
+                    Some('n') => out.push('\n'),
+                    Some('t') => out.push('\t'),
+                    Some('"') => out.push('"'),
+                    Some('\\') => out.push('\\'),
+                    _ => return Err("bad escape".into()),
+                }
+            } else {
+                out.push(c);
+            }
+        }
+        return Ok(TomlValue::Str(out));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut items = Vec::new();
+        let inner = inner.trim();
+        if !inner.is_empty() {
+            for part in split_top_level(inner) {
+                items.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Arr(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value: {s:?}"))
+}
+
+/// Split on commas not inside strings (arrays are flat; no nesting needed).
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut start = 0;
+    let mut in_str = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            ',' if !in_str => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_experiment_config() {
+        let text = r#"
+# experiment config
+name = "fig6"
+
+[train]
+model = "mlp_cifar"
+workers = 4
+epochs = 30
+lr = 0.1            # step size
+momentum = 0.9
+use_ef = true
+
+[compress]
+sparsifier = "topk"
+ratio = 0.01
+index = "bloom_p2"
+fprs = [0.0001, 0.001, 0.01, 0.1]
+"#;
+        let doc = TomlDoc::parse(text).unwrap();
+        assert_eq!(doc.get_str("name"), Some("fig6"));
+        assert_eq!(doc.get_usize("train.workers"), Some(4));
+        assert_eq!(doc.get_f64("train.lr"), Some(0.1));
+        assert_eq!(doc.get_bool("train.use_ef"), Some(true));
+        assert_eq!(doc.get_str("compress.index"), Some("bloom_p2"));
+        let fprs = doc.get("compress.fprs").unwrap().as_arr().unwrap();
+        assert_eq!(fprs.len(), 4);
+        assert_eq!(fprs[1].as_f64(), Some(0.001));
+    }
+
+    #[test]
+    fn strings_with_hash_and_escapes() {
+        let doc = TomlDoc::parse("k = \"a#b\\nc\"").unwrap();
+        assert_eq!(doc.get_str("k"), Some("a#b\nc"));
+    }
+
+    #[test]
+    fn int_vs_float() {
+        let doc = TomlDoc::parse("a = 3\nb = 3.0\nc = 1_000").unwrap();
+        assert_eq!(doc.get("a"), Some(&TomlValue::Int(3)));
+        assert_eq!(doc.get("b"), Some(&TomlValue::Float(3.0)));
+        assert_eq!(doc.get_usize("c"), Some(1000));
+        // int usable as float
+        assert_eq!(doc.get_f64("a"), Some(3.0));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = TomlDoc::parse("ok = 1\nbad line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        assert!(TomlDoc::parse("[oops\n").is_err());
+        assert!(TomlDoc::parse("x = [1, 2\n").is_err());
+    }
+
+    #[test]
+    fn keys_under_prefix() {
+        let doc = TomlDoc::parse("[a]\nx = 1\ny = 2\n[b]\nz = 3").unwrap();
+        let keys: Vec<&str> = doc.keys_under("a").collect();
+        assert_eq!(keys, vec!["x", "y"]);
+    }
+}

@@ -1,0 +1,126 @@
+//! LEB128 variable-length integers and zig-zag mapping.
+//!
+//! Used by the delta-varint index codec and the container format headers.
+
+/// Append `v` as LEB128 to `out`.
+#[inline]
+pub fn write_u64(out: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let byte = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            out.push(byte);
+            return;
+        }
+        out.push(byte | 0x80);
+    }
+}
+
+/// Decode one LEB128 integer starting at `buf[*pos]`, advancing `pos`.
+#[inline]
+pub fn read_u64(buf: &[u8], pos: &mut usize) -> Result<u64, VarintError> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *buf.get(*pos).ok_or(VarintError::Truncated)?;
+        *pos += 1;
+        if shift == 63 && b > 1 {
+            return Err(VarintError::Overflow);
+        }
+        v |= ((b & 0x7F) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift > 63 {
+            return Err(VarintError::Overflow);
+        }
+    }
+}
+
+#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+pub enum VarintError {
+    #[error("varint truncated")]
+    Truncated,
+    #[error("varint overflows u64")]
+    Overflow,
+}
+
+/// Zig-zag encode a signed value so small magnitudes get small codes.
+#[inline]
+pub fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+/// Inverse of [`zigzag`].
+#[inline]
+pub fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+/// Encoded length in bytes without materializing.
+#[inline]
+pub fn encoded_len(v: u64) -> usize {
+    if v == 0 {
+        1
+    } else {
+        (64 - v.leading_zeros()).div_ceil(7) as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn roundtrip_edges() {
+        for v in [0u64, 1, 127, 128, 16383, 16384, u32::MAX as u64, u64::MAX] {
+            let mut buf = Vec::new();
+            write_u64(&mut buf, v);
+            assert_eq!(buf.len(), encoded_len(v));
+            let mut pos = 0;
+            assert_eq!(read_u64(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        let mut rng = Rng::new(1);
+        let mut buf = Vec::new();
+        let mut vals = Vec::new();
+        for _ in 0..10_000 {
+            // mix of magnitudes
+            let shift = rng.below(64) as u32;
+            let v = rng.next_u64() >> shift;
+            write_u64(&mut buf, v);
+            vals.push(v);
+        }
+        let mut pos = 0;
+        for v in vals {
+            assert_eq!(read_u64(&buf, &mut pos).unwrap(), v);
+        }
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn truncated_and_overflow() {
+        let mut pos = 0;
+        assert_eq!(read_u64(&[0x80], &mut pos), Err(VarintError::Truncated));
+        // 11 continuation bytes overflow u64
+        let bad = [0xFFu8; 11];
+        let mut pos = 0;
+        assert_eq!(read_u64(&bad, &mut pos), Err(VarintError::Overflow));
+    }
+
+    #[test]
+    fn zigzag_roundtrip() {
+        for v in [0i64, 1, -1, 2, -2, i64::MAX, i64::MIN, 123456, -987654] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        assert_eq!(zigzag(0), 0);
+        assert_eq!(zigzag(-1), 1);
+        assert_eq!(zigzag(1), 2);
+    }
+}

@@ -1,0 +1,66 @@
+//! Experiment helpers shared by the paper-figure benches: canned
+//! training-run constructors and small formatting utilities. Keeps each
+//! `rust/benches/figN.rs` focused on its figure.
+
+use crate::coordinator::{CompressionSpec, ModelKind, TrainConfig, TrainReport, Trainer};
+
+/// Default scaled-down experiment sizes (documented in EXPERIMENTS.md):
+/// the paper trains 328 epochs on 8 V100 nodes; we run `steps` synchronous
+/// steps on in-process workers — enough for orderings/crossovers to show.
+pub const FIG_STEPS: usize = 50;
+pub const FIG_WORKERS: usize = 2;
+
+/// Run one training configuration and return its report.
+pub fn run(
+    model: ModelKind,
+    artifact: &str,
+    steps: usize,
+    workers: usize,
+    compression: Option<CompressionSpec>,
+) -> anyhow::Result<TrainReport> {
+    let mut cfg = TrainConfig::new(model, artifact);
+    cfg.steps = steps;
+    cfg.workers = workers;
+    cfg.compression = compression;
+    Trainer::new(cfg)?.run()
+}
+
+/// Run with a dense 3LC path (Fig 9 baseline).
+pub fn run_3lc(
+    model: ModelKind,
+    artifact: &str,
+    steps: usize,
+    workers: usize,
+    s: f32,
+) -> anyhow::Result<TrainReport> {
+    let mut cfg = TrainConfig::new(model, artifact);
+    cfg.steps = steps;
+    cfg.workers = workers;
+    cfg.dense_3lc = Some(s);
+    Trainer::new(cfg)?.run()
+}
+
+/// `DR_idx^∅` over Top-r — the Fig 6/7 arrangement.
+pub fn dr_index(ratio: f64, index: &str, fpr: f64) -> CompressionSpec {
+    CompressionSpec::topk(ratio, index, fpr, "raw", f64::NAN)
+}
+
+/// `DR_∅^val` over Top-r — the Fig 8 arrangement.
+pub fn dr_value(ratio: f64, value: &str, param: f64) -> CompressionSpec {
+    CompressionSpec::topk(ratio, "raw", f64::NAN, value, param)
+}
+
+/// Percent formatting for relative-volume columns.
+pub fn pct(x: f64) -> String {
+    format!("{:.2}%", x * 100.0)
+}
+
+/// Fail-soft artifact guard for benches.
+pub fn need(name: &str) -> bool {
+    if crate::runtime::artifact_available(name) {
+        true
+    } else {
+        eprintln!("SKIPPING: artifact '{name}' missing — run `make artifacts` first");
+        false
+    }
+}
