@@ -7,11 +7,18 @@
 //! counts bytes exactly; wall-clock *network* time on a given link speed
 //! is modelled by [`crate::simnet`] (the testbed substitution described
 //! in DESIGN.md §4).
+//!
+//! The [`sparse`] submodule adds topology-*aware* sparse allreduce
+//! schedules (recursive doubling, ring reduce-scatter with in-flight
+//! re-sparsification) behind the [`sparse::SparseAllreduce`] trait —
+//! see DESIGN.md §5.
 
 mod ops;
+pub mod sparse;
 mod transport;
 
-pub use ops::{all_gather, all_reduce_ring, ps_exchange};
+pub use ops::{all_gather, all_gather_peers, all_reduce_ring, ps_exchange};
+pub use sparse::{Schedule, SparseAllreduce, SparseConfig};
 pub use transport::{Endpoint, Network};
 
 #[cfg(test)]

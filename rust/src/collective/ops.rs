@@ -8,23 +8,40 @@ use super::Endpoint;
 /// by rank. This is the collective used for sparse tensors (Horovod
 /// Allgather, paper §6.4 "Total training runtime").
 pub fn all_gather(ep: &Endpoint, mine: Vec<u8>) -> Vec<Vec<u8>> {
+    // n−1 clones are irreducible here: every peer needs an owned buffer
+    // AND out[me] keeps the original. Callers that do not need their own
+    // blob back should use `all_gather_peers` directly, where the final
+    // send moves the buffer.
+    let me = ep.rank();
+    let mut out = all_gather_peers(ep, mine.clone());
+    out[me] = mine;
+    out
+}
+
+/// Allgather variant for callers that do not need their own blob back
+/// (the sparse schedules merge their local tensor directly): the final
+/// send *moves* `mine`, saving one full-blob copy per rank per step.
+/// `out[rank]` is left empty.
+pub fn all_gather_peers(ep: &Endpoint, mine: Vec<u8>) -> Vec<Vec<u8>> {
     let n = ep.world();
     let me = ep.rank();
     let mut out: Vec<Vec<u8>> = vec![Vec::new(); n];
-    // send to all peers first (channels are unbounded, so no deadlock),
-    // then collect
-    for peer in 0..n {
-        if peer != me {
+    if let Some((&last, rest)) = peers_of(ep).split_last() {
+        for &peer in rest {
             ep.send(peer, mine.clone());
         }
+        ep.send(last, mine);
     }
     for peer in 0..n {
         if peer != me {
             out[peer] = ep.recv(peer);
         }
     }
-    out[me] = mine;
     out
+}
+
+fn peers_of(ep: &Endpoint) -> Vec<usize> {
+    (0..ep.world()).filter(|&p| p != ep.rank()).collect()
 }
 
 /// Bandwidth-optimal ring allreduce (sum) over a dense f32 buffer:
@@ -99,8 +116,37 @@ where
 
 #[cfg(test)]
 mod tests {
-    use crate::collective::{all_reduce_ring, Network};
+    use crate::collective::{all_gather_peers, all_reduce_ring, Network};
     use std::thread;
+
+    #[test]
+    fn all_gather_peers_collects_all_but_self() {
+        let n = 4;
+        let net = Network::new(n);
+        let mut eps = net.endpoints();
+        let handles: Vec<_> = eps
+            .drain(..)
+            .map(|ep| {
+                thread::spawn(move || {
+                    let mine = vec![ep.rank() as u8; ep.rank() + 1];
+                    (ep.rank(), all_gather_peers(&ep, mine))
+                })
+            })
+            .collect();
+        for h in handles {
+            let (rank, all) = h.join().unwrap();
+            for (peer, blob) in all.iter().enumerate() {
+                if peer == rank {
+                    assert!(blob.is_empty(), "own slot must stay empty");
+                } else {
+                    assert_eq!(blob, &vec![peer as u8; peer + 1]);
+                }
+            }
+        }
+        // same wire traffic as the full allgather
+        let expect: u64 = (0..n).map(|r| ((r + 1) * (n - 1)) as u64).sum();
+        assert_eq!(net.total_bytes(), expect);
+    }
 
     #[test]
     fn ring_allreduce_matches_direct_sum_many_sizes() {

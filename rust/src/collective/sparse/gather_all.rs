@@ -1,0 +1,49 @@
+//! `GatherAll`: the topology-oblivious baseline the repo previously
+//! hard-wired — every rank ships its whole compressed tensor to every
+//! peer and sums locally. O(n·k) per worker; refactored behind the
+//! [`SparseAllreduce`] trait so the better schedules are drop-in.
+
+use super::{merge, SegmentCodec, SparseAllreduce, SparseConfig};
+use crate::collective::{all_gather_peers, Endpoint};
+use crate::tensor::SparseTensor;
+
+pub struct GatherAll {
+    codec: SegmentCodec,
+}
+
+impl GatherAll {
+    pub fn new(cfg: SparseConfig) -> Self {
+        Self { codec: SegmentCodec::raw(cfg.dense_switch) }
+    }
+
+    /// Compose with non-default segment codecs.
+    pub fn with_codec(codec: SegmentCodec) -> Self {
+        Self { codec }
+    }
+}
+
+impl SparseAllreduce for GatherAll {
+    fn name(&self) -> &'static str {
+        "gather_all"
+    }
+
+    fn allreduce(&self, ep: &Endpoint, input: SparseTensor) -> anyhow::Result<SparseTensor> {
+        let n = ep.world();
+        if n == 1 {
+            return Ok(input);
+        }
+        let d = input.dense_len();
+        let blob = self.codec.encode(&input, 0, d);
+        // own blob is not needed back: peers-only variant moves the final
+        // send instead of cloning it
+        let blobs = all_gather_peers(ep, blob);
+        let mut acc = input;
+        for (peer, bytes) in blobs.iter().enumerate() {
+            if peer == ep.rank() {
+                continue;
+            }
+            acc = merge::merge_sum(&acc, &self.codec.decode(d, bytes)?);
+        }
+        Ok(acc)
+    }
+}

@@ -1,0 +1,175 @@
+//! Sparse merge/sum kernels the schedules are built from: index-union
+//! coalescing, chunk-range split, density probe and magnitude-based
+//! re-sparsification. All operate on sorted-support [`SparseTensor`]s.
+
+use crate::tensor::SparseTensor;
+
+/// Index-union merge: the result's support is `S_a ∪ S_b` and values at
+/// shared indices are summed. O(nnz_a + nnz_b).
+pub fn merge_sum(a: &SparseTensor, b: &SparseTensor) -> SparseTensor {
+    assert_eq!(a.dense_len(), b.dense_len(), "merge over mismatched domains");
+    let (ai, av) = (a.indices(), a.values());
+    let (bi, bv) = (b.indices(), b.values());
+    let mut idx = Vec::with_capacity(ai.len() + bi.len());
+    let mut val = Vec::with_capacity(ai.len() + bi.len());
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < ai.len() && j < bi.len() {
+        use std::cmp::Ordering::*;
+        match ai[i].cmp(&bi[j]) {
+            Less => {
+                idx.push(ai[i]);
+                val.push(av[i]);
+                i += 1;
+            }
+            Greater => {
+                idx.push(bi[j]);
+                val.push(bv[j]);
+                j += 1;
+            }
+            Equal => {
+                idx.push(ai[i]);
+                val.push(av[i] + bv[j]);
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    idx.extend_from_slice(&ai[i..]);
+    val.extend_from_slice(&av[i..]);
+    idx.extend_from_slice(&bi[j..]);
+    val.extend_from_slice(&bv[j..]);
+    SparseTensor::new(a.dense_len(), idx, val)
+}
+
+/// Support density nnz/domain (0.0 for an empty domain) — THE probe
+/// that drives the dense-representation switch, shared by the segment
+/// encoder and the simnet byte models so the rule cannot drift.
+pub fn density(nnz: usize, domain: usize) -> f64 {
+    if domain == 0 {
+        0.0
+    } else {
+        nnz as f64 / domain as f64
+    }
+}
+
+/// The dense-ring chunk boundaries: chunk `c` covers
+/// `[bounds[c], bounds[c+1])`; same partition as `all_reduce_ring`.
+pub fn chunk_bounds(d: usize, n: usize) -> Vec<usize> {
+    (0..=n).map(|c| c * d / n).collect()
+}
+
+/// Entries of `t` with index in `[lo, hi)`. Indices stay absolute and the
+/// result keeps the full dense domain, so segments merge/concat cleanly.
+pub fn slice_range(t: &SparseTensor, lo: usize, hi: usize) -> SparseTensor {
+    let idx = t.indices();
+    let a = idx.partition_point(|&i| (i as usize) < lo);
+    let b = idx.partition_point(|&i| (i as usize) < hi);
+    SparseTensor::new(t.dense_len(), idx[a..b].to_vec(), t.values()[a..b].to_vec())
+}
+
+/// Split into one segment per chunk range (`bounds` as from
+/// [`chunk_bounds`]). Single pass over the support.
+pub fn split_ranges(t: &SparseTensor, bounds: &[usize]) -> Vec<SparseTensor> {
+    let n = bounds.len().saturating_sub(1);
+    let mut out = Vec::with_capacity(n);
+    for c in 0..n {
+        out.push(slice_range(t, bounds[c], bounds[c + 1]));
+    }
+    out
+}
+
+/// Keep the `r` largest-magnitude entries (ties broken by lower index),
+/// support returned sorted — the in-flight re-sparsification kernel.
+pub fn top_r_sparse(t: &SparseTensor, r: usize) -> SparseTensor {
+    if r >= t.nnz() {
+        return t.clone();
+    }
+    let key = |p: usize| {
+        let v = t.values()[p].abs();
+        if v.is_nan() {
+            f32::NEG_INFINITY
+        } else {
+            v
+        }
+    };
+    let mut order: Vec<usize> = (0..t.nnz()).collect();
+    order.sort_by(|&x, &y| key(y).partial_cmp(&key(x)).unwrap().then(x.cmp(&y)));
+    let mut keep = order[..r].to_vec();
+    keep.sort_unstable();
+    let idx: Vec<u32> = keep.iter().map(|&p| t.indices()[p]).collect();
+    let val: Vec<f32> = keep.iter().map(|&p| t.values()[p]).collect();
+    SparseTensor::new(t.dense_len(), idx, val)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn st(d: usize, iv: &[(u32, f32)]) -> SparseTensor {
+        SparseTensor::new(d, iv.iter().map(|&(i, _)| i).collect(), iv.iter().map(|&(_, v)| v).collect())
+    }
+
+    #[test]
+    fn merge_sums_shared_indices() {
+        let a = st(10, &[(1, 1.0), (4, 2.0), (9, 3.0)]);
+        let b = st(10, &[(0, 5.0), (4, -2.0), (9, 1.0)]);
+        let m = merge_sum(&a, &b);
+        assert_eq!(m.indices(), &[0, 1, 4, 9]);
+        assert_eq!(m.values(), &[5.0, 1.0, 0.0, 4.0]);
+        // commutative bit-for-bit (the recursive-doubling invariant)
+        assert_eq!(merge_sum(&b, &a), m);
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let a = st(10, &[(3, 1.5)]);
+        let e = st(10, &[]);
+        assert_eq!(merge_sum(&a, &e), a);
+        assert_eq!(merge_sum(&e, &a), a);
+        assert_eq!(merge_sum(&e, &e).nnz(), 0);
+    }
+
+    #[test]
+    fn density_probe() {
+        assert_eq!(density(2, 10), 0.2);
+        assert_eq!(density(0, 0), 0.0);
+        assert_eq!(density(4, 4), 1.0);
+        let t = st(10, &[(0, 1.0), (5, 1.0)]);
+        assert_eq!(density(t.nnz(), t.dense_len()), 0.2);
+    }
+
+    #[test]
+    fn chunk_split_covers_and_partitions() {
+        let t = st(10, &[(0, 1.0), (3, 2.0), (4, 3.0), (9, 4.0)]);
+        let bounds = chunk_bounds(10, 3); // [0, 3, 6, 10]
+        assert_eq!(bounds, vec![0, 3, 6, 10]);
+        let segs = split_ranges(&t, &bounds);
+        assert_eq!(segs.len(), 3);
+        assert_eq!(segs[0].indices(), &[0]);
+        assert_eq!(segs[1].indices(), &[3, 4]);
+        assert_eq!(segs[2].indices(), &[9]);
+        // concatenation reassembles the original
+        let total: usize = segs.iter().map(|s| s.nnz()).sum();
+        assert_eq!(total, t.nnz());
+    }
+
+    #[test]
+    fn chunk_bounds_degenerate() {
+        // d < n: trailing chunks are empty but well-formed
+        let b = chunk_bounds(2, 4);
+        assert_eq!(b, vec![0, 0, 1, 1, 2]);
+        let t = st(2, &[(0, 1.0), (1, 2.0)]);
+        let segs = split_ranges(&t, &b);
+        assert_eq!(segs.iter().map(|s| s.nnz()).collect::<Vec<_>>(), vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn top_r_keeps_largest_magnitudes_sorted() {
+        let t = st(10, &[(1, -5.0), (2, 0.5), (7, 3.0), (9, -1.0)]);
+        let kept = top_r_sparse(&t, 2);
+        assert_eq!(kept.indices(), &[1, 7]);
+        assert_eq!(kept.values(), &[-5.0, 3.0]);
+        assert_eq!(top_r_sparse(&t, 10), t);
+        assert_eq!(top_r_sparse(&t, 0).nnz(), 0);
+    }
+}

@@ -1,0 +1,155 @@
+//! Topology-aware sparse allreduce (DESIGN.md §5).
+//!
+//! DeepReduce itself is topology-oblivious (paper §3): the evaluation
+//! ships every rank's compressed blob to every peer (Horovod allgather),
+//! which is O(n·k) per worker. SparCML (Renggli et al.) and Ok-Topk
+//! (Li et al.) show that *schedule-aware* sparse collectives do much
+//! better. This subsystem provides a [`SparseAllreduce`] trait with three
+//! schedules:
+//!
+//! - [`GatherAll`] — the baseline behaviour, refactored in: allgather of
+//!   whole-tensor segments, local index-union sum.
+//! - [`RecursiveDouble`] — SparCML-style split allgather over ⌈log₂ n⌉
+//!   rounds, merging payloads by index union at each hop, with a switch
+//!   to dense representation once union density crosses a threshold.
+//! - [`RingRescatter`] — Ok-Topk-style sparse reduce-scatter over chunk
+//!   ranges, optional re-sparsification of the owned chunk back to
+//!   ~k/n entries, then a ring allgather of the reduced chunks.
+//!
+//! All schedules speak the same segment wire format ([`SegmentCodec`]),
+//! which composes with the existing DeepReduce index/value codecs, and
+//! run over the byte-counted in-process fabric ([`super::Network`]), so
+//! every claim about traffic is checked against exact wire bytes (see
+//! `crate::simnet` for the matching α–β cost models).
+
+mod gather_all;
+pub mod merge;
+mod recursive_double;
+mod ring_rescatter;
+mod wire;
+
+pub use gather_all::GatherAll;
+pub use recursive_double::RecursiveDouble;
+pub use ring_rescatter::RingRescatter;
+pub use wire::SegmentCodec;
+
+use super::Endpoint;
+use crate::tensor::SparseTensor;
+
+/// Largest power of two ≤ n (n ≥ 1). Shared by the recursive-doubling
+/// schedule and its simnet cost model so the two cannot drift.
+pub fn prev_power_of_two(n: usize) -> usize {
+    1 << (usize::BITS - 1 - n.leading_zeros())
+}
+
+/// Tuning shared by the schedules.
+#[derive(Clone, Copy, Debug)]
+pub struct SparseConfig {
+    /// Union density in [0, 1] at which a wire segment switches to dense
+    /// representation. With raw 8-byte sparse entries vs 4-byte dense
+    /// elements the break-even point is 0.5.
+    pub dense_switch: f64,
+    /// Re-sparsify owned chunks back to ⌈k/n⌉ entries before the
+    /// allgather phase (RingRescatter only; the Ok-Topk trade: bounded
+    /// traffic for a top-k style approximation of the sum).
+    pub resparsify: bool,
+}
+
+impl Default for SparseConfig {
+    fn default() -> Self {
+        Self { dense_switch: 0.5, resparsify: true }
+    }
+}
+
+/// A sparse allreduce schedule: every rank contributes one
+/// [`SparseTensor`] over the same dense domain and receives the global
+/// element-wise sum (exact, unless the schedule re-sparsifies).
+pub trait SparseAllreduce: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Whether the result is the exact sum (no re-sparsification loss).
+    fn exact(&self) -> bool {
+        true
+    }
+
+    fn allreduce(&self, ep: &Endpoint, input: SparseTensor) -> anyhow::Result<SparseTensor>;
+}
+
+/// Schedule selector — the config/CLI surface of the subsystem.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schedule {
+    GatherAll,
+    RecursiveDouble,
+    /// Ok-Topk style (re-sparsifies unless `SparseConfig.resparsify` is off).
+    RingRescatter,
+    /// RingRescatter with re-sparsification forced off (exact sum).
+    RingRescatterExact,
+}
+
+impl Schedule {
+    pub fn parse(name: &str) -> Option<Schedule> {
+        Some(match name {
+            "gather_all" | "gatherall" | "allgather" => Schedule::GatherAll,
+            "recursive_double" | "recursive_doubling" | "rd" => Schedule::RecursiveDouble,
+            "ring_rescatter" | "ring" | "ok_topk" => Schedule::RingRescatter,
+            "ring_rescatter_exact" | "ring_exact" => Schedule::RingRescatterExact,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Schedule::GatherAll => "gather_all",
+            Schedule::RecursiveDouble => "recursive_double",
+            Schedule::RingRescatter => "ring_rescatter",
+            Schedule::RingRescatterExact => "ring_rescatter_exact",
+        }
+    }
+
+    pub fn all() -> [Schedule; 4] {
+        [
+            Schedule::GatherAll,
+            Schedule::RecursiveDouble,
+            Schedule::RingRescatter,
+            Schedule::RingRescatterExact,
+        ]
+    }
+
+    pub fn build(&self, cfg: SparseConfig) -> Box<dyn SparseAllreduce> {
+        self.build_with(cfg, SegmentCodec::raw(cfg.dense_switch))
+    }
+
+    /// Build with a custom segment codec (compose DeepReduce index/value
+    /// codecs into the schedule's wire format).
+    pub fn build_with(&self, cfg: SparseConfig, codec: SegmentCodec) -> Box<dyn SparseAllreduce> {
+        match self {
+            Schedule::GatherAll => Box::new(GatherAll::with_codec(codec)),
+            Schedule::RecursiveDouble => Box::new(RecursiveDouble::with_codec(codec)),
+            Schedule::RingRescatter => Box::new(RingRescatter::with_codec(codec, cfg.resparsify)),
+            Schedule::RingRescatterExact => Box::new(RingRescatter::with_codec(codec, false)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_parse_roundtrips() {
+        for s in Schedule::all() {
+            assert_eq!(Schedule::parse(s.name()), Some(s));
+        }
+        assert_eq!(Schedule::parse("rd"), Some(Schedule::RecursiveDouble));
+        assert!(Schedule::parse("nope").is_none());
+    }
+
+    #[test]
+    fn build_reports_exactness() {
+        let cfg = SparseConfig::default();
+        assert!(Schedule::GatherAll.build(cfg).exact());
+        assert!(Schedule::RecursiveDouble.build(cfg).exact());
+        assert!(!Schedule::RingRescatter.build(cfg).exact());
+        assert!(Schedule::RingRescatterExact.build(cfg).exact());
+    }
+}

@@ -1,0 +1,89 @@
+//! `RecursiveDouble`: SparCML-style split allgather. Ranks pair up at
+//! strides 1, 2, 4, … exchanging their accumulated sparse sums and
+//! merging by index union — ⌈log₂ n⌉ rounds instead of n−1 transfers.
+//! Payloads grow with the union, so each hop re-probes density and the
+//! segment codec switches to dense representation past `dense_switch`
+//! (the SparCML "dense switchover").
+//!
+//! Non-power-of-two worlds fold the `n − p` extra ranks into the first
+//! `p = 2^⌊log₂ n⌋` before doubling and unfold the result after.
+
+use super::{merge, prev_power_of_two, SegmentCodec, SparseAllreduce, SparseConfig};
+use crate::collective::Endpoint;
+use crate::tensor::SparseTensor;
+
+pub struct RecursiveDouble {
+    codec: SegmentCodec,
+}
+
+impl RecursiveDouble {
+    pub fn new(cfg: SparseConfig) -> Self {
+        Self { codec: SegmentCodec::raw(cfg.dense_switch) }
+    }
+
+    pub fn with_codec(codec: SegmentCodec) -> Self {
+        Self { codec }
+    }
+}
+
+impl SparseAllreduce for RecursiveDouble {
+    fn name(&self) -> &'static str {
+        "recursive_double"
+    }
+
+    fn allreduce(&self, ep: &Endpoint, input: SparseTensor) -> anyhow::Result<SparseTensor> {
+        let n = ep.world();
+        let me = ep.rank();
+        if n == 1 {
+            return Ok(input);
+        }
+        let d = input.dense_len();
+        let p = prev_power_of_two(n);
+        let extras = n - p;
+        let mut acc = input;
+
+        if me >= p {
+            // fold out: contribute to the partner, then receive the result
+            let partner = me - p;
+            ep.send(partner, self.codec.encode(&acc, 0, d));
+            let bytes = ep.recv(partner);
+            return self.codec.decode(d, &bytes);
+        }
+        if me < extras {
+            let folded = self.codec.decode(d, &ep.recv(p + me))?;
+            acc = merge::merge_sum(&acc, &folded);
+        }
+
+        // doubling rounds among the p participating ranks; both partners
+        // send first (channels are unbounded), then merge — f32 addition
+        // is commutative, so all ranks converge on bit-identical sums
+        let mut stride = 1usize;
+        while stride < p {
+            let partner = me ^ stride;
+            ep.send(partner, self.codec.encode(&acc, 0, d));
+            let theirs = self.codec.decode(d, &ep.recv(partner))?;
+            acc = merge::merge_sum(&acc, &theirs);
+            stride <<= 1;
+        }
+
+        if me < extras {
+            ep.send(p + me, self.codec.encode(&acc, 0, d));
+        }
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prev_pow2() {
+        assert_eq!(prev_power_of_two(1), 1);
+        assert_eq!(prev_power_of_two(2), 2);
+        assert_eq!(prev_power_of_two(3), 2);
+        assert_eq!(prev_power_of_two(8), 8);
+        assert_eq!(prev_power_of_two(12), 8);
+        assert_eq!(prev_power_of_two(32), 32);
+    }
+}

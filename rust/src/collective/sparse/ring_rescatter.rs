@@ -1,0 +1,109 @@
+//! `RingRescatter`: Ok-Topk-style sparse ring allreduce. Phase 1 is a
+//! sparse reduce-scatter over the dense-ring chunk partition — at step s
+//! each rank forwards its accumulated copy of one chunk and merges the
+//! chunk arriving from the previous rank, so after n−1 steps rank
+//! `(c−1) mod n` owns the fully-reduced chunk c. The owner optionally
+//! re-sparsifies its chunk back to ⌈k/n⌉ entries (the Ok-Topk move that
+//! bounds the second phase at O(k) total). Phase 2 is the standard ring
+//! allgather of the owned chunks.
+//!
+//! Per-chunk contents are determined entirely by the owner, so every
+//! rank finishes with an identical result.
+//!
+//! Re-sparsification is a lossy approximation of the sum (Ok-Topk §4):
+//! the dropped mass is *not* fed back into any error-feedback memory —
+//! callers that need exact sums (or EF-accurate compensation) should use
+//! the `resparsify: false` variant (`Schedule::RingRescatterExact`).
+
+use super::{merge, SegmentCodec, SparseAllreduce, SparseConfig};
+use crate::collective::Endpoint;
+use crate::tensor::SparseTensor;
+use crate::util::varint;
+
+pub struct RingRescatter {
+    codec: SegmentCodec,
+    resparsify: bool,
+}
+
+impl RingRescatter {
+    pub fn new(cfg: SparseConfig) -> Self {
+        Self { codec: SegmentCodec::raw(cfg.dense_switch), resparsify: cfg.resparsify }
+    }
+
+    pub fn with_codec(codec: SegmentCodec, resparsify: bool) -> Self {
+        Self { codec, resparsify }
+    }
+}
+
+impl SparseAllreduce for RingRescatter {
+    fn name(&self) -> &'static str {
+        if self.resparsify {
+            "ring_rescatter"
+        } else {
+            "ring_rescatter_exact"
+        }
+    }
+
+    fn exact(&self) -> bool {
+        !self.resparsify
+    }
+
+    fn allreduce(&self, ep: &Endpoint, input: SparseTensor) -> anyhow::Result<SparseTensor> {
+        let n = ep.world();
+        let me = ep.rank();
+        if n == 1 {
+            return Ok(input);
+        }
+        let d = input.dense_len();
+        let k_in = input.nnz();
+        let bounds = merge::chunk_bounds(d, n);
+        let mut segs = merge::split_ranges(&input, &bounds);
+        let next = (me + 1) % n;
+        let prev = (me + n - 1) % n;
+
+        // reduce-scatter: step s sends chunk (me − s), merges chunk
+        // (me − s − 1). Each message is prefixed with the running max of
+        // the input nnz seen so far: it travels the whole ring, so after
+        // n−1 hops every rank holds the *global* max k — the budget the
+        // owner re-sparsifies against. Using the owner's local k instead
+        // would let a rank with an empty input zero its whole chunk.
+        let mut k_max = k_in as u64;
+        for s in 0..n - 1 {
+            let cs = (me + n - s) % n;
+            let mut msg = Vec::new();
+            varint::write_u64(&mut msg, k_max);
+            msg.extend_from_slice(&self.codec.encode(&segs[cs], bounds[cs], bounds[cs + 1]));
+            ep.send(next, msg);
+            let cr = (me + n - s - 1) % n;
+            let raw = ep.recv(prev);
+            let mut pos = 0usize;
+            k_max = k_max.max(varint::read_u64(&raw, &mut pos)?);
+            let incoming = self.codec.decode(d, &raw[pos..])?;
+            segs[cr] = merge::merge_sum(&segs[cr], &incoming);
+        }
+
+        // rank me now owns fully-reduced chunk (me + 1) % n
+        let own = (me + 1) % n;
+        if self.resparsify {
+            segs[own] = merge::top_r_sparse(&segs[own], (k_max as usize).div_ceil(n));
+        }
+
+        // allgather: circulate the owned chunks around the ring
+        for s in 0..n - 1 {
+            let cs = (me + 1 + n - s) % n;
+            ep.send(next, self.codec.encode(&segs[cs], bounds[cs], bounds[cs + 1]));
+            let cr = (me + n - s) % n;
+            segs[cr] = self.codec.decode(d, &ep.recv(prev))?;
+        }
+
+        // chunks are disjoint, ordered ranges: concatenate in chunk order
+        let mut idx = Vec::with_capacity(segs.iter().map(|s| s.nnz()).sum());
+        let mut val = Vec::with_capacity(idx.capacity());
+        for seg in segs {
+            let (_, i, v) = seg.into_parts();
+            idx.extend(i);
+            val.extend(v);
+        }
+        Ok(SparseTensor::new(d, idx, val))
+    }
+}

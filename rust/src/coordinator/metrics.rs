@@ -12,6 +12,9 @@ pub struct StepMetrics {
     pub aux: f32,
     /// compressed bytes one worker contributes this step (container sizes)
     pub bytes_per_worker: u64,
+    /// exact fabric traffic of the collective exchange this step, summed
+    /// over all workers (0 unless a topology-aware schedule ran)
+    pub fabric_bytes: u64,
     /// uncompressed dense gradient bytes (baseline volume)
     pub dense_bytes: u64,
     pub encode_s: f64,
@@ -47,6 +50,12 @@ impl TrainReport {
         self.steps.iter().map(|s| s.bytes_per_worker).sum()
     }
 
+    /// Total collective fabric traffic over the run (all workers; 0 when
+    /// no topology-aware schedule was configured).
+    pub fn total_fabric_bytes(&self) -> u64 {
+        self.steps.iter().map(|s| s.fabric_bytes).sum()
+    }
+
     /// Volume relative to the no-compression baseline (the y-axis of
     /// Fig 6/9/15 and Table 2).
     pub fn relative_volume(&self) -> f64 {
@@ -80,6 +89,7 @@ impl TrainReport {
                 m.insert("loss".into(), Json::Num(s.loss as f64));
                 m.insert("aux".into(), Json::Num(s.aux as f64));
                 m.insert("bytes".into(), Json::Num(s.bytes_per_worker as f64));
+                m.insert("fabric_bytes".into(), Json::Num(s.fabric_bytes as f64));
                 m.insert("dense_bytes".into(), Json::Num(s.dense_bytes as f64));
                 m.insert("encode_s".into(), Json::Num(s.encode_s));
                 m.insert("decode_s".into(), Json::Num(s.decode_s));
@@ -111,6 +121,7 @@ mod tests {
                     loss: 10.0 - i as f32,
                     aux: i as f32 / 10.0,
                     bytes_per_worker: 100,
+                    fabric_bytes: 0,
                     dense_bytes: 1000,
                     encode_s: 0.01,
                     decode_s: 0.02,

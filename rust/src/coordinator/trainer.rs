@@ -1,6 +1,8 @@
 //! The distributed trainer (leader + n simulated workers).
 
 use super::metrics::{StepMetrics, TrainReport};
+use crate::collective::sparse::SegmentCodec;
+use crate::collective::{Network, Schedule, SparseConfig};
 use crate::compress::{index_by_name, value_by_name, DeepReduce};
 use crate::runtime::{Artifact, BatchInput};
 use crate::sparsify::{self, ErrorFeedback, Sparsifier};
@@ -45,6 +47,14 @@ pub struct CompressionSpec {
     pub error_feedback: bool,
     /// tensors smaller than this bypass compression (biases etc.)
     pub min_compress: usize,
+    /// sparse allreduce schedule (see `collective::Schedule::parse`).
+    /// Every schedule — including the default `gather_all` — runs the
+    /// gradient sum over the in-process fabric, so `fabric_bytes` meters
+    /// all of them comparably. Note: error feedback compensates codec
+    /// loss only — `ring_rescatter` drops re-sparsified mass without
+    /// feeding it back (the Ok-Topk approximation); use
+    /// `ring_rescatter_exact` when exact sums matter
+    pub schedule: String,
     pub seed: u64,
 }
 
@@ -60,6 +70,7 @@ impl CompressionSpec {
             value_param,
             error_feedback: true,
             min_compress: 1024,
+            schedule: "gather_all".into(),
             seed: 0xDEE9,
         }
     }
@@ -160,6 +171,9 @@ pub struct Trainer {
     threelc: Option<crate::baselines::ThreeLC>,
     /// ef[worker][tensor]
     ef: Vec<Vec<ErrorFeedback>>,
+    /// Some(_) whenever compression is on: the sparse allreduce schedule
+    /// that runs the gradient exchange over the in-process fabric
+    collective_schedule: Option<Schedule>,
 }
 
 impl Trainer {
@@ -204,6 +218,12 @@ impl Trainer {
                 .map(|_| params.iter().map(|p| ErrorFeedback::new(p.numel())).collect::<Vec<_>>())
                 .collect::<Vec<_>>()
         };
+        let collective_schedule = match &cfg.compression {
+            Some(spec) => Some(Schedule::parse(&spec.schedule).ok_or_else(|| {
+                anyhow::anyhow!("unknown collective schedule {}", spec.schedule)
+            })?),
+            None => None,
+        };
         let (sparsifiers, codec, ef) = match &cfg.compression {
             None if threelc.is_some() => (Vec::new(), None, ef_all(&params)),
             None => (Vec::new(), None, Vec::new()),
@@ -220,7 +240,18 @@ impl Trainer {
                 (sp, Some(codec), ef)
             }
         };
-        Ok(Self { cfg, artifact, params, opt, shards, sparsifiers, codec, threelc, ef })
+        Ok(Self {
+            cfg,
+            artifact,
+            params,
+            opt,
+            shards,
+            sparsifiers,
+            codec,
+            threelc,
+            ef,
+            collective_schedule,
+        })
     }
 
     pub fn params(&self) -> &[Tensor] {
@@ -263,6 +294,10 @@ impl Trainer {
         let n = self.cfg.workers;
         let total_params = self.artifact.manifest.total_params();
         let mut agg: Vec<Vec<f32>> = self.params.iter().map(|p| vec![0.0; p.numel()]).collect();
+        // per-worker decoded gradients in tensor order (identical across
+        // workers), for the fabric gradient exchange
+        let mut pending: Vec<Vec<SparseTensor>> = (0..n).map(|_| Vec::new()).collect();
+        let mut pending_tis: Vec<usize> = Vec::new();
         let mut metrics = StepMetrics {
             step,
             dense_bytes: (total_params * 4) as u64, // one worker's dense payload
@@ -297,7 +332,6 @@ impl Trainer {
                         let t1 = Instant::now();
                         let container = codec.encode(&sp, Some(&corrected));
                         metrics.encode_s += t1.elapsed().as_secs_f64();
-                        metrics.bytes_per_worker += container.wire_bytes() as u64;
                         let t2 = Instant::now();
                         let decoded: SparseTensor = codec.decode(&container)?;
                         metrics.decode_s += t2.elapsed().as_secs_f64();
@@ -305,7 +339,19 @@ impl Trainer {
                             // residual vs what was actually reconstructed
                             self.ef[w][ti].update(&corrected, &decoded);
                         }
-                        decoded.add_into(&mut agg[ti]);
+                        // bytes_per_worker is always the container upload
+                        // volume (keeps relative_volume comparable across
+                        // schedules); collective traffic is metered
+                        // separately as fabric_bytes
+                        metrics.bytes_per_worker += container.wire_bytes() as u64;
+                        if self.collective_schedule.is_some() {
+                            if w == 0 {
+                                pending_tis.push(ti);
+                            }
+                            pending[w].push(decoded);
+                        } else {
+                            decoded.add_into(&mut agg[ti]);
+                        }
                     }
                 }
                 _ if self.threelc.is_some() => {
@@ -335,6 +381,68 @@ impl Trainer {
                         }
                     }
                 }
+            }
+        }
+        // gradient exchange: run the configured schedule over the
+        // byte-counted in-process fabric
+        if let Some(sched) = self.collective_schedule {
+            if !pending_tis.is_empty() {
+                let spec = self.cfg.compression.as_ref().expect("schedule implies compression");
+                // one fabric + one thread per worker for the whole step;
+                // each worker runs the per-tensor collectives in order, so
+                // messages stay matched on the pairwise FIFO channels
+                let net = Network::new(n);
+                let handles: Vec<_> = net
+                    .endpoints()
+                    .into_iter()
+                    .zip(pending.drain(..))
+                    .map(|(ep, tensors)| {
+                        // segments reuse the spec's codecs where they are
+                        // lossless; lossy stages fall back to raw
+                        let codec = SegmentCodec::lossless_or_raw(
+                            &spec.index,
+                            spec.index_param,
+                            &spec.value,
+                            spec.value_param,
+                            spec.seed,
+                            SparseConfig::default().dense_switch,
+                        );
+                        std::thread::spawn(move || -> Vec<SparseTensor> {
+                            let sr = sched.build_with(SparseConfig::default(), codec);
+                            // a failed rank panics; dropping its endpoint
+                            // unblocks every peer ("peer hung up"), so no
+                            // thread is leaked or deadlocked
+                            tensors
+                                .into_iter()
+                                .map(|t| {
+                                    sr.allreduce(&ep, t)
+                                        .expect("in-process sparse allreduce failed")
+                                })
+                                .collect()
+                        })
+                    })
+                    .collect();
+                // join every thread before reporting the first failure
+                let joined: Vec<_> = handles.into_iter().map(|h| h.join()).collect();
+                let mut rank0: Option<Vec<SparseTensor>> = None;
+                let mut panicked = false;
+                for (i, j) in joined.into_iter().enumerate() {
+                    match j {
+                        Ok(v) => {
+                            if i == 0 {
+                                rank0 = Some(v);
+                            }
+                        }
+                        Err(_) => panicked = true,
+                    }
+                }
+                anyhow::ensure!(!panicked, "collective worker thread panicked");
+                for (&ti, summed) in pending_tis.iter().zip(rank0.expect("world size >= 1")) {
+                    summed.add_into(&mut agg[ti]);
+                }
+                // exact fabric traffic of this step's gradient exchange,
+                // summed over all workers
+                metrics.fabric_bytes += net.total_bytes();
             }
         }
         // bytes_per_worker accumulated across workers -> average

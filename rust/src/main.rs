@@ -65,7 +65,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.log_every = args.get_usize("log-every", 10)?;
     let index = args.get_or("index", "");
     let value = args.get_or("value", "");
-    if !index.is_empty() || !value.is_empty() {
+    // --schedule alone activates the compression pipeline (raw/raw) so the
+    // flag is never silently ignored
+    if !index.is_empty() || !value.is_empty() || args.get("schedule").is_some() {
         let idx = if index.is_empty() { "raw".to_string() } else { index };
         let val = if value.is_empty() { "raw".to_string() } else { value };
         let mut spec = if args.get_or("sparsifier", "topk") == "identity" {
@@ -86,6 +88,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         };
         spec.sparsifier = args.get_or("sparsifier", &spec.sparsifier);
         spec.error_feedback = !args.flag("no-ef");
+        // sparse allreduce schedule: gather_all (default) | recursive_double
+        // | ring_rescatter | ring_rescatter_exact
+        spec.schedule = args.get_or("schedule", &spec.schedule);
         cfg.compression = Some(spec);
     }
     let mut trainer = Trainer::new(cfg)?;

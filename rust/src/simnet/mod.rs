@@ -58,6 +58,173 @@ pub fn ps_time(up_bytes: u64, down_bytes: u64, n: usize, link: Link) -> f64 {
             / link.bandwidth_bps
 }
 
+// ---------------------------------------------------------------------
+// Per-schedule cost models for the sparse allreduce subsystem
+// (collective::sparse). Each model mirrors its schedule's wire format
+// byte-for-byte under a uniform-load assumption and is cross-checked
+// against Network::total_bytes() in the tests below (DESIGN.md §5).
+// ---------------------------------------------------------------------
+
+/// Byte costs of the sparse segment wire format
+/// (`collective::sparse::SegmentCodec`).
+#[derive(Clone, Copy, Debug)]
+pub struct SegWire {
+    /// tag + range + section-length headers per message
+    pub header_bytes: u64,
+    /// bytes per sparse entry (index + value)
+    pub sparse_entry_bytes: u64,
+    /// bytes per element of a dense segment
+    pub dense_elem_bytes: u64,
+    /// density at which segments ship dense (must match the codec)
+    pub dense_switch: f64,
+}
+
+impl SegWire {
+    /// The default raw/raw segment codec: 4-byte index + 4-byte value per
+    /// sparse entry, 4-byte dense elements, ~12 bytes of varint headers.
+    pub fn raw(dense_switch: f64) -> Self {
+        Self { header_bytes: 12, sparse_entry_bytes: 8, dense_elem_bytes: 4, dense_switch }
+    }
+
+    /// Wire size of one segment carrying `entries` over a range of
+    /// `range_elems` elements, using the same density probe as the
+    /// segment encoder (`collective::sparse::merge::density`).
+    pub fn segment_bytes(&self, entries: u64, range_elems: u64) -> u64 {
+        let dense = range_elems > 0
+            && crate::collective::sparse::merge::density(entries as usize, range_elems as usize)
+                >= self.dense_switch;
+        if dense {
+            self.header_bytes + range_elems * self.dense_elem_bytes
+        } else {
+            self.header_bytes + entries * self.sparse_entry_bytes
+        }
+    }
+}
+
+fn floor_pow2(n: usize) -> u64 {
+    crate::collective::sparse::prev_power_of_two(n) as u64
+}
+
+/// Total fabric bytes of the GatherAll schedule: every rank ships its
+/// whole-tensor segment (`nnz` entries over domain `d`) to n−1 peers.
+pub fn gather_all_bytes(nnz: u64, d: u64, n: usize, w: SegWire) -> u64 {
+    if n <= 1 {
+        return 0;
+    }
+    n as u64 * (n as u64 - 1) * w.segment_bytes(nnz.min(d), d)
+}
+
+/// Per-worker α–β time of GatherAll: n−1 blob transfers on a ring.
+pub fn gather_all_time(nnz: u64, d: u64, n: usize, link: Link, w: SegWire) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let blob = w.segment_bytes(nnz.min(d), d) as f64;
+    (n - 1) as f64 * (link.latency_s + blob / link.bandwidth_bps)
+}
+
+/// Total fabric bytes of RecursiveDouble under the disjoint-support
+/// worst case (union sizes add exactly until the dense cap). Exact for
+/// power-of-two `n` with strided supports; an upper bound otherwise.
+pub fn recursive_double_bytes(nnz: u64, d: u64, n: usize, w: SegWire) -> u64 {
+    if n <= 1 {
+        return 0;
+    }
+    let p = floor_pow2(n);
+    let extras = n as u64 - p;
+    let union_all = (n as u64 * nnz).min(d);
+    // fold-in: extras ship their own tensor, later receive the result
+    let mut total = extras * (w.segment_bytes(nnz.min(d), d) + w.segment_bytes(union_all, d));
+    // doubling rounds: at stride 2^t every participant holds ~2^t loads
+    let load = n as u64 * nnz / p;
+    let mut stride = 1u64;
+    while stride < p {
+        total += p * w.segment_bytes((stride * load).min(d), d);
+        stride <<= 1;
+    }
+    total
+}
+
+/// Per-worker α–β time of RecursiveDouble: ⌈log₂ n⌉ exchange rounds
+/// (payload doubling each round, dense-capped), plus the fold for
+/// non-power-of-two worlds.
+pub fn recursive_double_time(nnz: u64, d: u64, n: usize, link: Link, w: SegWire) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let p = floor_pow2(n);
+    let extras = n as u64 - p;
+    let load = n as u64 * nnz / p;
+    let mut t = 0.0;
+    if extras > 0 {
+        let union_all = (n as u64 * nnz).min(d);
+        t += 2.0 * link.latency_s
+            + (w.segment_bytes(nnz.min(d), d) + w.segment_bytes(union_all, d)) as f64
+                / link.bandwidth_bps;
+    }
+    let mut stride = 1u64;
+    while stride < p {
+        t += link.latency_s
+            + w.segment_bytes((stride * load).min(d), d) as f64 / link.bandwidth_bps;
+        stride <<= 1;
+    }
+    t
+}
+
+/// Total fabric bytes of RingRescatter under uniform load: a sparse
+/// reduce-scatter whose forwarded chunk accumulates one rank's worth of
+/// entries per hop (dense-capped), then a ring allgather of the owned
+/// chunks (re-sparsified to ⌈nnz/n⌉ when `resparsify`).
+pub fn ring_rescatter_bytes(nnz: u64, d: u64, n: usize, w: SegWire, resparsify: bool) -> u64 {
+    if n <= 1 {
+        return 0;
+    }
+    let nn = n as u64;
+    let chunk = d / nn;
+    let per_chunk = nnz / nn;
+    let mut per_rank = 0u64;
+    for s in 1..nn {
+        per_rank += w.segment_bytes((s * per_chunk).min(chunk), chunk);
+    }
+    let owned = if resparsify {
+        nnz.div_ceil(nn).min(chunk)
+    } else {
+        (nn * per_chunk).min(chunk)
+    };
+    per_rank += (nn - 1) * w.segment_bytes(owned, chunk);
+    nn * per_rank
+}
+
+/// Per-worker α–β time of RingRescatter: 2(n−1) pipelined ring steps.
+pub fn ring_rescatter_time(
+    nnz: u64,
+    d: u64,
+    n: usize,
+    link: Link,
+    w: SegWire,
+    resparsify: bool,
+) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nn = n as u64;
+    let chunk = d / nn;
+    let per_chunk = nnz / nn;
+    let mut t = 0.0;
+    for s in 1..nn {
+        t += link.latency_s
+            + w.segment_bytes((s * per_chunk).min(chunk), chunk) as f64 / link.bandwidth_bps;
+    }
+    let owned = if resparsify {
+        nnz.div_ceil(nn).min(chunk)
+    } else {
+        (nn * per_chunk).min(chunk)
+    };
+    t += (nn - 1) as f64
+        * (link.latency_s + w.segment_bytes(owned, chunk) as f64 / link.bandwidth_bps);
+    t
+}
+
 /// One Fig-11 style iteration breakdown (seconds).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct IterBreakdown {
@@ -128,5 +295,100 @@ mod tests {
         assert_eq!(allreduce_time(1 << 20, 1, Link::gbps(1.0)), 0.0);
         assert_eq!(allgather_time(1 << 20, 1, Link::gbps(1.0)), 0.0);
         assert_eq!(ps_time(1, 1, 1, Link::gbps(1.0)), 0.0);
+        let w = SegWire::raw(0.5);
+        assert_eq!(gather_all_bytes(100, 1000, 1, w), 0);
+        assert_eq!(recursive_double_bytes(100, 1000, 1, w), 0);
+        assert_eq!(ring_rescatter_bytes(100, 1000, 1, w, true), 0);
+        assert_eq!(gather_all_time(100, 1000, 1, Link::gbps(1.0), w), 0.0);
+        assert_eq!(recursive_double_time(100, 1000, 1, Link::gbps(1.0), w), 0.0);
+        assert_eq!(ring_rescatter_time(100, 1000, 1, Link::gbps(1.0), w, true), 0.0);
+    }
+
+    /// Build n disjoint, evenly-strided supports of k entries over [0, d)
+    /// — the uniform-load worst case the byte models assume exactly.
+    fn strided_inputs(n: usize, d: usize, k: usize) -> Vec<crate::tensor::SparseTensor> {
+        let m = d / k; // stride between a rank's entries
+        assert!(m % n == 0 || m / n >= 1, "construction needs d >= k*n");
+        (0..n)
+            .map(|r| {
+                let off = r * m / n;
+                let idx: Vec<u32> = (0..k).map(|j| (j * m + off) as u32).collect();
+                let val: Vec<f32> =
+                    (0..k).map(|j| 0.5 + ((r * k + j) % 97) as f32 / 100.0).collect();
+                crate::tensor::SparseTensor::new(d, idx, val)
+            })
+            .collect()
+    }
+
+    /// Each analytic byte model must agree with the exact fabric byte
+    /// count of its schedule within 2% (mirrors the dense ring check in
+    /// collective::tests).
+    #[test]
+    fn schedule_byte_models_match_wire() {
+        use crate::collective::sparse::{Schedule, SparseConfig};
+        use crate::collective::Network;
+        use std::thread;
+
+        let d = 8192usize;
+        let k = 1024usize;
+        let w = SegWire::raw(0.5);
+        for n in [4usize, 8] {
+            let inputs = strided_inputs(n, d, k);
+            let cases = [
+                (Schedule::GatherAll, gather_all_bytes(k as u64, d as u64, n, w)),
+                (Schedule::RecursiveDouble, recursive_double_bytes(k as u64, d as u64, n, w)),
+                (
+                    Schedule::RingRescatter,
+                    ring_rescatter_bytes(k as u64, d as u64, n, w, true),
+                ),
+                (
+                    Schedule::RingRescatterExact,
+                    ring_rescatter_bytes(k as u64, d as u64, n, w, false),
+                ),
+            ];
+            for (sched, model) in cases {
+                let net = Network::new(n);
+                let handles: Vec<_> = net
+                    .endpoints()
+                    .into_iter()
+                    .zip(inputs.clone())
+                    .map(|(ep, t)| {
+                        thread::spawn(move || {
+                            sched.build(SparseConfig::default()).allreduce(&ep, t).unwrap()
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().unwrap();
+                }
+                let wire = net.total_bytes() as f64;
+                let predicted = model as f64;
+                assert!(
+                    (wire - predicted).abs() / predicted < 0.02,
+                    "{sched:?} n={n}: wire {wire} vs model {predicted}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn schedule_models_rank_as_expected() {
+        // at 10% density and n >= 8, re-sparsifying ring rescatter moves
+        // fewer bytes than GatherAll; recursive doubling at most matches
+        let w = SegWire::raw(0.5);
+        let d = 100_000u64;
+        let k = d / 10;
+        for n in [8usize, 16, 32] {
+            let ga = gather_all_bytes(k, d, n, w);
+            let rr = ring_rescatter_bytes(k, d, n, w, true);
+            let rd = recursive_double_bytes(k, d, n, w);
+            assert!(rr < ga, "n={n}: ring {rr} vs gather {ga}");
+            assert!(rd <= ga + ga / 10, "n={n}: rd {rd} vs gather {ga}");
+        }
+        // time model follows bytes at MB scales where latency is negligible
+        let link = Link::mbps(100.0);
+        let t_ga = gather_all_time(k, d, 8, link, w);
+        let t_rr = ring_rescatter_time(k, d, 8, link, w, true);
+        assert!(t_rr < t_ga);
     }
 }

@@ -94,13 +94,24 @@ pub struct BitReader<'a> {
     pos: u64,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
-#[error("bit stream exhausted: need {need} bits at position {pos}, have {have}")]
+#[derive(Debug, PartialEq, Eq)]
 pub struct BitUnderflow {
     pub need: u32,
     pub pos: u64,
     pub have: u64,
 }
+
+impl std::fmt::Display for BitUnderflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "bit stream exhausted: need {} bits at position {}, have {}",
+            self.need, self.pos, self.have
+        )
+    }
+}
+
+impl std::error::Error for BitUnderflow {}
 
 impl<'a> BitReader<'a> {
     pub fn new(buf: &'a [u8]) -> Self {

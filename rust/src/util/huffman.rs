@@ -25,17 +25,27 @@ pub struct Huffman {
     sorted_syms: Vec<u8>,
 }
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum HuffmanError {
-    #[error("cannot build a code over zero symbols")]
     Empty,
-    #[error("invalid code length table")]
     BadTable,
-    #[error("bit stream exhausted")]
     Underflow,
-    #[error("invalid code in stream")]
     BadCode,
 }
+
+impl std::fmt::Display for HuffmanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let msg = match self {
+            HuffmanError::Empty => "cannot build a code over zero symbols",
+            HuffmanError::BadTable => "invalid code length table",
+            HuffmanError::Underflow => "bit stream exhausted",
+            HuffmanError::BadCode => "invalid code in stream",
+        };
+        f.write_str(msg)
+    }
+}
+
+impl std::error::Error for HuffmanError {}
 
 impl Huffman {
     /// Build from symbol frequencies (zeros allowed). Code lengths are

@@ -38,13 +38,22 @@ pub fn read_u64(buf: &[u8], pos: &mut usize) -> Result<u64, VarintError> {
     }
 }
 
-#[derive(Debug, thiserror::Error, PartialEq, Eq)]
+#[derive(Debug, PartialEq, Eq)]
 pub enum VarintError {
-    #[error("varint truncated")]
     Truncated,
-    #[error("varint overflows u64")]
     Overflow,
 }
+
+impl std::fmt::Display for VarintError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            VarintError::Truncated => write!(f, "varint truncated"),
+            VarintError::Overflow => write!(f, "varint overflows u64"),
+        }
+    }
+}
+
+impl std::error::Error for VarintError {}
 
 /// Zig-zag encode a signed value so small magnitudes get small codes.
 #[inline]

@@ -1,0 +1,246 @@
+//! Property tests for the sparse allreduce schedules: every schedule
+//! must produce the dense ring allreduce sum — exactly for the exact
+//! schedules, and per the per-chunk top-⌈k/n⌉ contract when
+//! `ring_rescatter` re-sparsifies. Runs entirely on the in-process
+//! fabric; no artifacts required.
+
+use deepreduce::collective::sparse::merge;
+use deepreduce::collective::{all_reduce_ring, Network, Schedule, SparseConfig};
+use deepreduce::tensor::SparseTensor;
+use deepreduce::util::prng::Rng;
+use deepreduce::util::testkit::{forall, sorted_support};
+use std::thread;
+
+/// Run one schedule across `inputs.len()` worker threads; returns every
+/// rank's result in rank order.
+fn run_schedule(sched: Schedule, inputs: &[SparseTensor]) -> Vec<SparseTensor> {
+    let net = Network::new(inputs.len());
+    let handles: Vec<_> = net
+        .endpoints()
+        .into_iter()
+        .zip(inputs.to_vec())
+        .map(|(ep, t)| {
+            thread::spawn(move || sched.build(SparseConfig::default()).allreduce(&ep, t).unwrap())
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Reference: densify and run the existing dense ring allreduce.
+fn dense_reference(inputs: &[SparseTensor]) -> Vec<f32> {
+    let net = Network::new(inputs.len());
+    let handles: Vec<_> = net
+        .endpoints()
+        .into_iter()
+        .zip(inputs.to_vec())
+        .map(|(ep, t)| {
+            thread::spawn(move || {
+                let mut x = t.to_dense().into_vec();
+                all_reduce_ring(&ep, &mut x);
+                x
+            })
+        })
+        .collect();
+    let mut outs: Vec<Vec<f32>> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    outs.pop().unwrap()
+}
+
+fn random_inputs(rng: &mut Rng, n: usize, d: usize) -> Vec<SparseTensor> {
+    (0..n)
+        .map(|_| {
+            let k = rng.below(d as u64 + 1) as usize;
+            let support = sorted_support(rng, d, k);
+            let values: Vec<f32> = (0..k).map(|_| rng.next_gaussian() as f32).collect();
+            SparseTensor::new(d, support, values)
+        })
+        .collect()
+}
+
+#[test]
+fn exact_schedules_match_dense_ring_allreduce() {
+    forall(
+        "sparse-allreduce-dense-equiv",
+        30,
+        600,
+        |rng, size| {
+            let n = 1 + rng.below(8) as usize;
+            let d = 1 + rng.below(size as u64) as usize;
+            random_inputs(rng, n, d)
+        },
+        |inputs| {
+            let reference = dense_reference(inputs);
+            for sched in
+                [Schedule::GatherAll, Schedule::RecursiveDouble, Schedule::RingRescatterExact]
+            {
+                for (rank, out) in run_schedule(sched, inputs).iter().enumerate() {
+                    if out.dense_len() != inputs[0].dense_len() {
+                        return Err(format!("{sched:?}: wrong dense_len on rank {rank}"));
+                    }
+                    let dense = out.to_dense();
+                    for (i, (&a, &b)) in dense.data().iter().zip(&reference).enumerate() {
+                        if (a - b).abs() > 1e-3 * (1.0 + b.abs()) {
+                            return Err(format!(
+                                "{sched:?} rank {rank} index {i}: {a} vs dense {b}"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn recursive_double_bitwise_identical_across_ranks() {
+    // merge order is symmetric at every doubling round, so all ranks of a
+    // power-of-two world converge on bit-identical sums
+    let mut rng = Rng::new(0xD0B1);
+    for n in [2usize, 4, 8] {
+        let inputs = random_inputs(&mut rng, n, 500);
+        let outs = run_schedule(Schedule::RecursiveDouble, &inputs);
+        for o in &outs[1..] {
+            assert_eq!(o, &outs[0], "n={n}");
+        }
+    }
+}
+
+#[test]
+fn ring_rescatter_resparsify_keeps_per_chunk_topk() {
+    let mut rng = Rng::new(0xC44);
+    for &(n, d, k) in &[(4usize, 1000usize, 100usize), (8, 4096, 256), (3, 77, 20)] {
+        let inputs: Vec<SparseTensor> = (0..n)
+            .map(|_| {
+                let support = sorted_support(&mut rng, d, k);
+                let values: Vec<f32> = (0..k).map(|_| rng.next_gaussian() as f32).collect();
+                SparseTensor::new(d, support, values)
+            })
+            .collect();
+        let outs = run_schedule(Schedule::RingRescatter, &inputs);
+        // chunk contents are owner-determined: all ranks agree exactly
+        for o in &outs[1..] {
+            assert_eq!(o, &outs[0], "n={n} d={d}");
+        }
+        let out = &outs[0];
+        // direct (order-independent) sum for value checks
+        let mut direct = vec![0.0f32; d];
+        for t in &inputs {
+            t.add_into(&mut direct);
+        }
+        let bounds = merge::chunk_bounds(d, n);
+        let r = k.div_ceil(n);
+        for c in 0..n {
+            let (lo, hi) = (bounds[c], bounds[c + 1]);
+            let chunk = merge::slice_range(out, lo, hi);
+            // kept set is capped at ⌈k/n⌉ and maximal wrt the union support
+            let mut union: Vec<u32> = inputs
+                .iter()
+                .flat_map(|t| merge::slice_range(t, lo, hi).indices().to_vec())
+                .collect();
+            union.sort_unstable();
+            union.dedup();
+            assert_eq!(
+                chunk.nnz(),
+                r.min(union.len()),
+                "n={n} d={d} chunk {c}: kept {} of union {}",
+                chunk.nnz(),
+                union.len()
+            );
+            // every kept value is the true sum at its index
+            for (&i, &v) in chunk.indices().iter().zip(chunk.values()) {
+                let want = direct[i as usize];
+                assert!(
+                    (v - want).abs() <= 1e-3 * (1.0 + want.abs()),
+                    "n={n} chunk {c} index {i}: {v} vs {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn ring_rescatter_budget_survives_empty_rank_input() {
+    // rank 0 contributes nothing; the chunk it owns must still keep the
+    // other ranks' reduced gradients — the re-sparsification budget is
+    // the global max input nnz carried around the ring, not the owner's
+    // local (zero) nnz
+    let n = 4;
+    let d = 400;
+    let k = 40;
+    let mut rng = Rng::new(0xE77);
+    let mut inputs = vec![SparseTensor::new(d, Vec::new(), Vec::new())];
+    for _ in 1..n {
+        let support = sorted_support(&mut rng, d, k);
+        let values: Vec<f32> = (0..k).map(|_| rng.next_gaussian() as f32).collect();
+        inputs.push(SparseTensor::new(d, support, values));
+    }
+    let outs = run_schedule(Schedule::RingRescatter, &inputs);
+    for o in &outs[1..] {
+        assert_eq!(o, &outs[0]);
+    }
+    // rank 0 owns chunk 1 = [100, 200): with 120 random entries over
+    // d=400 the chunk is nonempty with overwhelming probability, and its
+    // kept entries must survive re-sparsification
+    let bounds = merge::chunk_bounds(d, n);
+    let own_chunk = merge::slice_range(&outs[0], bounds[1], bounds[2]);
+    assert!(own_chunk.nnz() > 0, "empty-input owner zeroed its chunk");
+    // budget is ceil(max_k/n) = 10 per chunk
+    assert!(own_chunk.nnz() <= k.div_ceil(n));
+}
+
+#[test]
+fn world_size_one_is_identity_for_every_schedule() {
+    for sched in Schedule::all() {
+        let t = SparseTensor::new(10, vec![2, 5], vec![1.0, -2.0]);
+        let outs = run_schedule(sched, &[t.clone()]);
+        assert_eq!(outs, vec![t], "{sched:?}");
+    }
+}
+
+#[test]
+fn all_empty_tensors_stay_empty() {
+    for sched in Schedule::all() {
+        let inputs: Vec<SparseTensor> =
+            (0..4).map(|_| SparseTensor::new(50, Vec::new(), Vec::new())).collect();
+        for out in run_schedule(sched, &inputs) {
+            assert_eq!(out.nnz(), 0, "{sched:?}");
+            assert_eq!(out.dense_len(), 50);
+        }
+    }
+}
+
+#[test]
+fn domain_smaller_than_world_size() {
+    // d < n: most ring chunks are empty, recursive doubling unions a
+    // handful of indices — sums must still be exact
+    let n = 6;
+    let d = 3;
+    let inputs: Vec<SparseTensor> =
+        (0..n).map(|r| SparseTensor::new(d, vec![(r % d) as u32], vec![1.0])).collect();
+    for sched in Schedule::all() {
+        for out in run_schedule(sched, &inputs) {
+            assert_eq!(out.to_dense().data(), &[2.0, 2.0, 2.0], "{sched:?}");
+        }
+    }
+}
+
+#[test]
+fn full_density_triggers_dense_switch_and_stays_exact() {
+    // density 1.0 on every rank: recursive doubling ships dense segments
+    // from round one; results must be exact (small integers in f32)
+    let n = 4;
+    let d = 64;
+    let inputs: Vec<SparseTensor> = (0..n)
+        .map(|r| {
+            let idx: Vec<u32> = (0..d as u32).collect();
+            let val: Vec<f32> = (0..d).map(|i| (i + r + 1) as f32).collect();
+            SparseTensor::new(d, idx, val)
+        })
+        .collect();
+    let expected: Vec<f32> = (0..d).map(|i| (4 * i + 1 + 2 + 3 + 4) as f32).collect();
+    for sched in Schedule::all() {
+        for out in run_schedule(sched, &inputs) {
+            assert_eq!(out.to_dense().data(), expected.as_slice(), "{sched:?}");
+        }
+    }
+}

@@ -1,0 +1,98 @@
+//! Minimal offline stand-in for the `anyhow` crate: a string-backed
+//! error type, the `Result` alias, and the `anyhow!` / `bail!` /
+//! `ensure!` macros. Matches the subset of the real API this workspace
+//! uses (see vendor/README.md).
+
+use std::fmt;
+
+/// A type-erased error carrying a human-readable message.
+///
+/// Deliberately does NOT implement `std::error::Error` (mirroring real
+/// anyhow), which is what makes the blanket `From<E: Error>` impl below
+/// coherent with `From<T> for T`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Construct from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(&e)
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with [`Error`] as the default error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(format!($($arg)+))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with a formatted [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: `{}`", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails(flag: bool) -> Result<u32> {
+        ensure!(!flag, "flag was {flag}");
+        Ok(7)
+    }
+
+    #[test]
+    fn macros_and_conversions() {
+        assert_eq!(fails(false).unwrap(), 7);
+        assert_eq!(fails(true).unwrap_err().to_string(), "flag was true");
+        let e = anyhow!("x = {}", 3);
+        assert_eq!(format!("{e}"), "x = 3");
+        assert_eq!(format!("{e:?}"), "x = 3");
+        // `?` conversion from std error types
+        let r: Result<i32> = (|| Ok("12".parse::<i32>()?))();
+        assert_eq!(r.unwrap(), 12);
+        let r: Result<i32> = (|| Ok("nope".parse::<i32>()?))();
+        assert!(r.is_err());
+    }
+}

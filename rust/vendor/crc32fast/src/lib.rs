@@ -1,0 +1,77 @@
+//! Minimal offline stand-in for `crc32fast`: standard CRC-32
+//! (IEEE 802.3, reflected, polynomial 0xEDB88320) with a const-built
+//! byte table. Produces the same digests as the real crate.
+
+const TABLE: [u32; 256] = {
+    let mut t = [0u32; 256];
+    let mut i = 0usize;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        t[i] = c;
+        i += 1;
+    }
+    t
+};
+
+/// Streaming CRC-32 hasher.
+#[derive(Clone, Debug)]
+pub struct Hasher {
+    state: u32,
+}
+
+impl Hasher {
+    pub fn new() -> Self {
+        Self { state: 0xFFFF_FFFF }
+    }
+
+    pub fn update(&mut self, data: &[u8]) {
+        let mut s = self.state;
+        for &b in data {
+            s = (s >> 8) ^ TABLE[((s ^ b as u32) & 0xFF) as usize];
+        }
+        self.state = s;
+    }
+
+    pub fn finalize(self) -> u32 {
+        self.state ^ 0xFFFF_FFFF
+    }
+}
+
+impl Default for Hasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn crc(data: &[u8]) -> u32 {
+        let mut h = Hasher::new();
+        h.update(data);
+        h.finalize()
+    }
+
+    #[test]
+    fn known_vectors() {
+        // canonical CRC-32 check value
+        assert_eq!(crc(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc(b""), 0);
+        assert_eq!(crc(b"a"), 0xE8B7_BE43);
+    }
+
+    #[test]
+    fn streaming_matches_oneshot() {
+        let data = b"hello crc32 world";
+        let mut h = Hasher::new();
+        h.update(&data[..5]);
+        h.update(&data[5..]);
+        assert_eq!(h.finalize(), crc(data));
+    }
+}

@@ -1,0 +1,265 @@
+//! Minimal offline stand-in for `flate2`: the `write::DeflateEncoder` /
+//! `read::DeflateDecoder` API over a simple LZSS codec (`lz` module).
+//! Lossless and genuinely compressing, but NOT RFC 1951 compatible —
+//! only this shim ever decodes the bytes (see vendor/README.md).
+
+use std::io;
+
+/// Compression level (accepted for API compatibility; the LZSS codec has
+/// a single operating point).
+#[derive(Clone, Copy, Debug)]
+pub struct Compression(u32);
+
+impl Compression {
+    pub fn new(level: u32) -> Self {
+        Self(level)
+    }
+
+    pub fn level(&self) -> u32 {
+        self.0
+    }
+}
+
+impl Default for Compression {
+    fn default() -> Self {
+        Self(6)
+    }
+}
+
+/// Greedy hash-match LZSS with varint-coded tokens.
+///
+/// Stream layout: `varint(original_len)` then tokens:
+/// - `0x00 varint(n) <n bytes>` — literal run
+/// - `0x01 varint(dist) varint(len)` — copy `len` bytes starting `dist`
+///   back in the output (dist may be < len: overlapped copy, i.e. RLE)
+pub mod lz {
+    use std::io;
+
+    const MIN_MATCH: usize = 4;
+    const WINDOW: usize = 1 << 16;
+    const HASH_BITS: u32 = 15;
+
+    fn write_varint(out: &mut Vec<u8>, mut v: u64) {
+        loop {
+            let byte = (v & 0x7F) as u8;
+            v >>= 7;
+            if v == 0 {
+                out.push(byte);
+                return;
+            }
+            out.push(byte | 0x80);
+        }
+    }
+
+    fn read_varint(buf: &[u8], pos: &mut usize) -> io::Result<u64> {
+        let mut v = 0u64;
+        let mut shift = 0u32;
+        loop {
+            let b = *buf
+                .get(*pos)
+                .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "varint truncated"))?;
+            *pos += 1;
+            v |= ((b & 0x7F) as u64) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+            if shift > 63 {
+                return Err(io::Error::new(io::ErrorKind::InvalidData, "varint overflow"));
+            }
+        }
+    }
+
+    fn emit_literals(out: &mut Vec<u8>, lits: &[u8]) {
+        if !lits.is_empty() {
+            out.push(0);
+            write_varint(out, lits.len() as u64);
+            out.extend_from_slice(lits);
+        }
+    }
+
+    pub fn compress(data: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(data.len() / 2 + 16);
+        write_varint(&mut out, data.len() as u64);
+        let mut head = vec![usize::MAX; 1 << HASH_BITS];
+        let hash = |w: u32| -> usize { (w.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize };
+        let mut i = 0usize;
+        let mut lit_start = 0usize;
+        while i + MIN_MATCH <= data.len() {
+            let w = u32::from_le_bytes([data[i], data[i + 1], data[i + 2], data[i + 3]]);
+            let h = hash(w);
+            let cand = head[h];
+            head[h] = i;
+            if cand != usize::MAX && i - cand <= WINDOW && data[cand..cand + MIN_MATCH] == data[i..i + MIN_MATCH]
+            {
+                let mut len = MIN_MATCH;
+                while i + len < data.len() && data[cand + len] == data[i + len] {
+                    len += 1;
+                }
+                emit_literals(&mut out, &data[lit_start..i]);
+                out.push(1);
+                write_varint(&mut out, (i - cand) as u64);
+                write_varint(&mut out, len as u64);
+                i += len;
+                lit_start = i;
+            } else {
+                i += 1;
+            }
+        }
+        emit_literals(&mut out, &data[lit_start..]);
+        out
+    }
+
+    pub fn decompress(data: &[u8]) -> io::Result<Vec<u8>> {
+        let bad = |m: &str| io::Error::new(io::ErrorKind::InvalidData, m.to_string());
+        let mut pos = 0usize;
+        let n = read_varint(data, &mut pos)? as usize;
+        let mut out = Vec::with_capacity(n);
+        while pos < data.len() {
+            let tag = data[pos];
+            pos += 1;
+            match tag {
+                0 => {
+                    let len = read_varint(data, &mut pos)? as usize;
+                    if pos + len > data.len() {
+                        return Err(bad("literal run truncated"));
+                    }
+                    out.extend_from_slice(&data[pos..pos + len]);
+                    pos += len;
+                }
+                1 => {
+                    let dist = read_varint(data, &mut pos)? as usize;
+                    let len = read_varint(data, &mut pos)? as usize;
+                    if dist == 0 || dist > out.len() {
+                        return Err(bad("match distance out of range"));
+                    }
+                    // byte-at-a-time: distances shorter than the length
+                    // are overlapped copies (runs)
+                    for _ in 0..len {
+                        let b = out[out.len() - dist];
+                        out.push(b);
+                    }
+                }
+                _ => return Err(bad("unknown token tag")),
+            }
+        }
+        if out.len() != n {
+            return Err(bad("decompressed length mismatch"));
+        }
+        Ok(out)
+    }
+}
+
+pub mod write {
+    use super::{lz, Compression};
+    use std::io::{self, Write};
+
+    /// Buffers all input and compresses on `finish()`.
+    pub struct DeflateEncoder<W: Write> {
+        inner: W,
+        buf: Vec<u8>,
+    }
+
+    impl<W: Write> DeflateEncoder<W> {
+        pub fn new(inner: W, _level: Compression) -> Self {
+            Self { inner, buf: Vec::new() }
+        }
+
+        pub fn finish(mut self) -> io::Result<W> {
+            let compressed = lz::compress(&self.buf);
+            self.inner.write_all(&compressed)?;
+            Ok(self.inner)
+        }
+    }
+
+    impl<W: Write> Write for DeflateEncoder<W> {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+}
+
+pub mod read {
+    use super::lz;
+    use std::io::{self, Read};
+
+    /// Reads all input on first use, decompresses, then serves bytes.
+    pub struct DeflateDecoder<R: Read> {
+        inner: Option<R>,
+        out: Vec<u8>,
+        pos: usize,
+    }
+
+    impl<R: Read> DeflateDecoder<R> {
+        pub fn new(inner: R) -> Self {
+            Self { inner: Some(inner), out: Vec::new(), pos: 0 }
+        }
+
+        fn fill(&mut self) -> io::Result<()> {
+            if let Some(mut r) = self.inner.take() {
+                let mut raw = Vec::new();
+                r.read_to_end(&mut raw)?;
+                self.out = lz::decompress(&raw)?;
+            }
+            Ok(())
+        }
+    }
+
+    impl<R: Read> Read for DeflateDecoder<R> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            self.fill()?;
+            let n = (self.out.len() - self.pos).min(buf.len());
+            buf[..n].copy_from_slice(&self.out[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    #[test]
+    fn lz_roundtrip_mixed() {
+        let mut data = Vec::new();
+        for i in 0..10_000u32 {
+            data.extend_from_slice(&(i % 97).to_le_bytes());
+        }
+        data.extend_from_slice(&[42u8; 5000]);
+        let c = lz::compress(&data);
+        assert!(c.len() < data.len());
+        assert_eq!(lz::decompress(&c).unwrap(), data);
+    }
+
+    #[test]
+    fn lz_roundtrip_incompressible_and_empty() {
+        let data: Vec<u8> = (0..4096u64).map(|i| (i.wrapping_mul(0x9E3779B97F4A7C15) >> 56) as u8).collect();
+        assert_eq!(lz::decompress(&lz::compress(&data)).unwrap(), data);
+        assert_eq!(lz::decompress(&lz::compress(&[])).unwrap(), Vec::<u8>::new());
+        assert_eq!(lz::decompress(&lz::compress(&[7])).unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn encoder_decoder_api() {
+        let data = vec![9u8; 40_000];
+        let mut enc = write::DeflateEncoder::new(Vec::new(), Compression::new(6));
+        enc.write_all(&data).unwrap();
+        let compressed = enc.finish().unwrap();
+        assert!(compressed.len() < 100, "run should collapse: {}", compressed.len());
+        let mut back = Vec::new();
+        read::DeflateDecoder::new(&compressed[..]).read_to_end(&mut back).unwrap();
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn decompress_rejects_garbage() {
+        assert!(lz::decompress(&[0x05, 0x99, 0x99]).is_err());
+    }
+}

@@ -1,0 +1,141 @@
+//! Offline stub of the xla-rs PJRT binding surface used by
+//! `deepreduce::runtime`. The real crate links the PJRT C API; this stub
+//! exists so the crate builds without the XLA toolchain. Construction
+//! fails at `PjRtClient::cpu()` with a clear message, and everything
+//! downstream is unreachable: all artifact-gated tests and benches check
+//! `runtime::artifact_available()` before touching the runtime.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn new(msg: &str) -> Self {
+        Self { msg: msg.to_string() }
+    }
+
+    fn unavailable() -> Self {
+        Self::new(
+            "XLA/PJRT runtime unavailable: this build uses the offline stub \
+             (vendor/xla). Install the real xla-rs bindings to execute artifacts.",
+        )
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types mirroring the PJRT enum (subset).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U8,
+    U32,
+    F16,
+    F32,
+    F64,
+}
+
+/// Marker for element types a [`Literal`] can be built from / read as.
+pub trait NativeType: Copy {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: NativeType>(_data: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable())
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Err(Error::unavailable())
+    }
+}
+
+/// Marker for argument types accepted by [`PjRtLoadedExecutable::execute`].
+pub trait BufferArgument {}
+impl BufferArgument for Literal {}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable())
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: BufferArgument>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable())
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_reports_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("offline stub"));
+        assert!(Literal::vec1(&[1.0f32]).reshape(&[1]).is_err());
+    }
+}

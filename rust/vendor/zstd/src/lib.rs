@@ -1,0 +1,36 @@
+//! Minimal offline stand-in for `zstd`: the `bulk` compress/decompress
+//! API over the shared LZSS codec from the `flate2` shim
+//! (see vendor/README.md). Not Zstandard-bitstream compatible.
+
+pub mod bulk {
+    use std::io;
+
+    pub fn compress(data: &[u8], _level: i32) -> io::Result<Vec<u8>> {
+        Ok(flate2::lz::compress(data))
+    }
+
+    /// `capacity` is the caller's upper bound on the decompressed size,
+    /// mirroring the real API's preallocation hint.
+    pub fn decompress(data: &[u8], capacity: usize) -> io::Result<Vec<u8>> {
+        let out = flate2::lz::decompress(data)?;
+        if out.len() > capacity {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("decompressed size {} exceeds capacity {capacity}", out.len()),
+            ));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn bulk_roundtrip() {
+        let data = vec![3u8; 10_000];
+        let c = super::bulk::compress(&data, 3).unwrap();
+        assert!(c.len() < 100);
+        assert_eq!(super::bulk::decompress(&c, data.len()).unwrap(), data);
+        assert!(super::bulk::decompress(&c, 10).is_err());
+    }
+}
