@@ -1,0 +1,199 @@
+//! Pipeline scaling sweep: buckets × density × link, comparing the
+//! bucketed, overlapped gradient pipeline against the unbucketed
+//! per-tensor path, plus the codec-autotuning density sweep.
+//!
+//! Encode/decode seconds are *measured* on this testbed; transfer time
+//! is *modelled* with the simnet α–β link model on the exact container
+//! bytes, and serial vs. double-buffered step time comes from
+//! `simnet::{serial_step_time, pipelined_step_time}` (DESIGN.md §6).
+//! Runs without artifacts.
+//!
+//! Acceptance (asserted):
+//!  - the overlapped bucketed path beats the unbucketed per-tensor path
+//!    in modelled step time for the multi-tensor workload;
+//!  - the autotuner picks at least two distinct codec pairs across a
+//!    density sweep.
+
+use deepreduce::pipeline::{CodecPolicy, GradientPipeline, StepTimeline};
+use deepreduce::simnet::Link;
+use deepreduce::sparsify::Sparsifier;
+use deepreduce::tensor::SparseTensor;
+use deepreduce::util::benchkit::Table;
+use deepreduce::util::prng::Rng;
+use deepreduce::util::testkit::gradient_like;
+
+/// A transformer-ish multi-tensor step: embeddings, attention blocks,
+/// MLP blocks, head — 12 tensors, ~0.3M parameters.
+const SIZES: [usize; 12] =
+    [50_304, 16_384, 4_096, 4_096, 65_536, 16_384, 4_096, 4_096, 65_536, 16_384, 2_048, 2_048];
+
+/// Run one worker's step through the pipeline; returns the timeline and
+/// total container bytes.
+fn run_step(
+    pipe: &mut GradientPipeline,
+    grads: &[Vec<f32>],
+    sparse: &[SparseTensor],
+) -> (StepTimeline, u64, Vec<String>) {
+    let buckets = pipe.plan().buckets.clone();
+    let mut timeline = StepTimeline::new();
+    let mut bytes = 0u64;
+    let mut labels: Vec<String> = Vec::new();
+    for bucket in &buckets {
+        let parts: Vec<&SparseTensor> = bucket.tensors.iter().map(|&ti| &sparse[ti]).collect();
+        let dense_parts: Vec<&[f32]> =
+            bucket.tensors.iter().map(|&ti| grads[ti].as_slice()).collect();
+        let enc = pipe.encode_bucket(bucket, &parts, &dense_parts).expect("encode bucket");
+        timeline.push(enc.encode_s, enc.comm_model_s);
+        bytes += enc.wire_bytes;
+        if !labels.contains(&enc.choice_label) {
+            labels.push(enc.choice_label);
+        }
+    }
+    (timeline, bytes, labels)
+}
+
+fn main() {
+    let workers = 4;
+    let mut rng = Rng::new(0x9195);
+    let grads: Vec<Vec<f32>> = SIZES.iter().map(|&s| gradient_like(&mut rng, s)).collect();
+    let members: Vec<(usize, usize)> = SIZES.iter().copied().enumerate().collect();
+
+    let mut table = Table::new(
+        "pipeline scaling — measured encode, α–β modelled transfer",
+        &[
+            "density", "link", "bucket cap", "buckets", "KB/worker", "serial ms",
+            "overlapped ms", "vs per-tensor serial",
+        ],
+    );
+    let mut wins = 0usize;
+    let mut cases = 0usize;
+    for &density in &[0.01f64, 0.05, 0.2] {
+        let sparse: Vec<SparseTensor> = grads
+            .iter()
+            .map(|g| {
+                let mut topk = deepreduce::sparsify::TopK::new(density);
+                topk.sparsify(g)
+            })
+            .collect();
+        let links = [
+            ("100Mbps", Link::mbps(100.0)),
+            ("1Gbps", Link::gbps(1.0)),
+            ("10Gbps", Link::gbps(10.0)),
+        ];
+        for (lname, link) in links {
+            let mut per_tensor_serial = f64::NAN;
+            for (cname, cap) in [("per-tensor", 0usize), ("256KiB", 256 << 10), ("1MiB", 1 << 20)] {
+                let mut pipe = GradientPipeline::new(
+                    &members, cap, false, true, "raw", f64::NAN, "raw", f64::NAN, 7, link, workers,
+                )
+                .expect("pipeline");
+                let nbuckets = pipe.plan().len();
+                let (timeline, bytes, _) = run_step(&mut pipe, &grads, &sparse);
+                let serial = timeline.serial_s();
+                let overlapped = timeline.pipelined_s();
+                if cap == 0 {
+                    per_tensor_serial = serial;
+                }
+                table.row(&[
+                    format!("{density:.2}"),
+                    lname.to_string(),
+                    cname.to_string(),
+                    nbuckets.to_string(),
+                    format!("{:.1}", bytes as f64 / 1e3),
+                    format!("{:.3}", serial * 1e3),
+                    format!("{:.3}", overlapped * 1e3),
+                    format!("{:.3}x", per_tensor_serial / overlapped),
+                ]);
+                // acceptance: fused buckets + overlap must beat the
+                // unbucketed, unoverlapped per-tensor path
+                if cap > 0 {
+                    cases += 1;
+                    if overlapped < per_tensor_serial {
+                        wins += 1;
+                    }
+                    assert!(
+                        overlapped < per_tensor_serial,
+                        "density {density} link {lname} cap {cname}: overlapped {overlapped}s \
+                         not below per-tensor serial {per_tensor_serial}s"
+                    );
+                }
+            }
+        }
+    }
+    table.print();
+    println!("overlapped bucketed path beat the per-tensor serial path in {wins}/{cases} configs");
+
+    // ---- codec autotuning across a density sweep ------------------
+    // byte-calibrated policy (deterministic choices; throughput terms
+    // zeroed) on a slow link where wire bytes dominate the cost
+    let policy = CodecPolicy::calibrate_bytes_only(
+        &["raw", "rle", "elias", "bitmap"],
+        &["raw", "deflate"],
+        7,
+        Link::mbps(10.0),
+        workers,
+    );
+    let d = 1 << 16;
+    let mut sweep = Table::new(
+        "autotuned codec choice vs density (argmin of encode + α–β transfer)",
+        &["density", "nnz", "index|value", "est KB"],
+    );
+    let mut picks: Vec<String> = Vec::new();
+    for &density in &[0.001f64, 0.01, 0.05, 0.2, 0.6, 1.0] {
+        let nnz = ((d as f64 * density) as usize).max(1);
+        let choice = policy.choose(d, nnz);
+        let label = choice.label();
+        let ip = policy
+            .index_profiles
+            .iter()
+            .find(|p| p.name == choice.index)
+            .expect("chosen index profile");
+        let vp = policy
+            .value_profiles
+            .iter()
+            .find(|p| p.name == choice.value)
+            .expect("chosen value profile");
+        let est = policy.estimate_bytes(ip, vp, d, nnz);
+        sweep.row(&[
+            format!("{density:.3}"),
+            nnz.to_string(),
+            label.clone(),
+            format!("{:.1}", est / 1e3),
+        ]);
+        if !picks.contains(&label) {
+            picks.push(label);
+        }
+    }
+    sweep.print();
+    println!("distinct codec pairs across the sweep: {picks:?}");
+    assert!(
+        picks.len() >= 2,
+        "autotuner picked only {picks:?} across the density sweep — expected >= 2 distinct pairs"
+    );
+
+    // and through the full pipeline (measured calibration): report the
+    // labels the integrated autotuner actually used on this workload
+    let mut tuned = GradientPipeline::new(
+        &members,
+        1 << 20,
+        true,
+        true,
+        "raw",
+        f64::NAN,
+        "raw",
+        f64::NAN,
+        7,
+        Link::mbps(10.0),
+        workers,
+    )
+    .expect("autotuned pipeline");
+    let sparse: Vec<SparseTensor> = grads
+        .iter()
+        .map(|g| {
+            let mut topk = deepreduce::sparsify::TopK::new(0.02);
+            topk.sparsify(g)
+        })
+        .collect();
+    let (_, _, labels) = run_step(&mut tuned, &grads, &sparse);
+    println!("integrated autotuner on the 2% workload picked: {labels:?}");
+}

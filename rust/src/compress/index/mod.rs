@@ -7,7 +7,7 @@ mod bloom;
 mod plain;
 
 pub use bloom::{BloomFilter, BloomIndex, BloomPolicy};
-pub use plain::{BitmapIndex, DeltaVarint, HuffmanIndex, RawIndex, RleIndex};
+pub use plain::{BitmapIndex, DeltaVarint, EliasIndex, HuffmanIndex, RawIndex, RleIndex};
 
 #[cfg(test)]
 mod tests {
@@ -23,6 +23,7 @@ mod tests {
             Box::new(RleIndex),
             Box::new(HuffmanIndex),
             Box::new(DeltaVarint),
+            Box::new(EliasIndex),
         ]
     }
 

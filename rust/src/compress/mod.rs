@@ -196,6 +196,7 @@ pub fn index_by_name(name: &str, param: f64, seed: u64) -> Option<Box<dyn IndexC
         "rle" => Some(Box::new(index::RleIndex)),
         "huffman" => Some(Box::new(index::HuffmanIndex)),
         "delta_varint" | "delta" => Some(Box::new(index::DeltaVarint)),
+        "elias" | "elias_gamma" => Some(Box::new(index::EliasIndex)),
         "bloom_naive" => Some(Box::new(index::BloomIndex::new(index::BloomPolicy::Naive, fpr, seed))),
         "bloom_p0" => Some(Box::new(index::BloomIndex::new(index::BloomPolicy::P0, fpr, seed))),
         "bloom_p1" => Some(Box::new(index::BloomIndex::new(index::BloomPolicy::P1, fpr, seed))),
@@ -246,7 +247,7 @@ mod tests {
     #[test]
     fn lossless_pipeline_roundtrips_exactly() {
         let mut rng = Rng::new(80);
-        for idx_name in ["raw", "bitmap", "rle", "huffman", "delta_varint"] {
+        for idx_name in ["raw", "bitmap", "rle", "huffman", "delta_varint", "elias"] {
             for _ in 0..5 {
                 let d = 200 + rng.below(2000) as usize;
                 let g = gradient_like(&mut rng, d);

@@ -21,6 +21,18 @@ pub struct StepMetrics {
     pub decode_s: f64,
     /// train-step (fwd+bwd) execution time summed over workers
     pub compute_s: f64,
+    /// gradient-pipeline buckets per worker this step (0 when the
+    /// compression pipeline did not run)
+    pub bucket_count: u64,
+    /// distinct `index|value` codec pairs the autotuner picked this
+    /// step, sorted (the static pair when autotuning is off)
+    pub autotune_choices: Vec<String>,
+    /// modelled per-worker step time without encode/transfer overlap
+    /// (mean over workers; measured encode + α–β transfer per bucket)
+    pub pipeline_serial_s: f64,
+    /// same with double-buffered overlap — the win is the gap to
+    /// `pipeline_serial_s`
+    pub pipeline_overlap_s: f64,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -78,6 +90,22 @@ impl TrainReport {
         self.steps.iter().map(|s| s.compute_s).sum()
     }
 
+    /// Every codec pair the autotuner picked over the run, sorted
+    /// distinct (one entry — the static pair — when autotuning is off).
+    pub fn distinct_autotune_choices(&self) -> Vec<String> {
+        let set: std::collections::BTreeSet<String> =
+            self.steps.iter().flat_map(|s| s.autotune_choices.iter().cloned()).collect();
+        set.into_iter().collect()
+    }
+
+    /// Modelled step-time totals over the run: (serial, overlapped).
+    pub fn pipeline_times_s(&self) -> (f64, f64) {
+        (
+            self.steps.iter().map(|s| s.pipeline_serial_s).sum(),
+            self.steps.iter().map(|s| s.pipeline_overlap_s).sum(),
+        )
+    }
+
     /// JSON dump for post-processing / plotting.
     pub fn to_json(&self) -> Json {
         let steps: Vec<Json> = self
@@ -94,6 +122,13 @@ impl TrainReport {
                 m.insert("encode_s".into(), Json::Num(s.encode_s));
                 m.insert("decode_s".into(), Json::Num(s.decode_s));
                 m.insert("compute_s".into(), Json::Num(s.compute_s));
+                m.insert("bucket_count".into(), Json::Num(s.bucket_count as f64));
+                m.insert(
+                    "autotune_choices".into(),
+                    Json::Arr(s.autotune_choices.iter().map(|c| Json::Str(c.clone())).collect()),
+                );
+                m.insert("pipeline_serial_s".into(), Json::Num(s.pipeline_serial_s));
+                m.insert("pipeline_overlap_s".into(), Json::Num(s.pipeline_overlap_s));
                 Json::Obj(m)
             })
             .collect();
@@ -126,6 +161,10 @@ mod tests {
                     encode_s: 0.01,
                     decode_s: 0.02,
                     compute_s: 0.1,
+                    bucket_count: 3,
+                    autotune_choices: vec![if i < 5 { "raw|raw" } else { "elias|raw" }.into()],
+                    pipeline_serial_s: 0.2,
+                    pipeline_overlap_s: 0.15,
                 })
                 .collect(),
         }
@@ -139,6 +178,9 @@ mod tests {
         assert_eq!(r.total_bytes_per_worker(), 1000);
         assert!((r.relative_volume() - 0.1).abs() < 1e-9);
         assert!((r.total_encode_s() - 0.1).abs() < 1e-9);
+        assert_eq!(r.distinct_autotune_choices(), vec!["elias|raw", "raw|raw"]);
+        let (serial, overlap) = r.pipeline_times_s();
+        assert!((serial - 2.0).abs() < 1e-9 && (overlap - 1.5).abs() < 1e-9);
     }
 
     #[test]

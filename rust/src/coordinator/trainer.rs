@@ -3,7 +3,7 @@
 use super::metrics::{StepMetrics, TrainReport};
 use crate::collective::sparse::SegmentCodec;
 use crate::collective::{Network, Schedule, SparseConfig};
-use crate::compress::{index_by_name, value_by_name, DeepReduce};
+use crate::pipeline::{unfuse, Bucket, GradientPipeline, StepTimeline};
 use crate::runtime::{Artifact, BatchInput};
 use crate::sparsify::{self, ErrorFeedback, Sparsifier};
 use crate::tensor::{SparseTensor, Tensor};
@@ -55,6 +55,19 @@ pub struct CompressionSpec {
     /// feeding it back (the Ok-Topk approximation); use
     /// `ring_rescatter_exact` when exact sums matter
     pub schedule: String,
+    /// gradient-pipeline bucket cap in bytes (fp32 elements × 4): the
+    /// per-step tensor list is fused greedily into buckets of at most
+    /// this size, each travelling as one sparse segment stream. 0 = one
+    /// bucket per tensor (the legacy per-tensor path)
+    pub bucket_bytes: usize,
+    /// per-bucket cost-model codec autotuning (DESIGN.md §6): pick the
+    /// index/value pair by measured density + calibrated throughput +
+    /// α–β link model; off = always the static `index`/`value` pair
+    pub autotune: bool,
+    /// modelled link bandwidth (Mbps) the pipeline's α–β terms use —
+    /// autotune comm costs and the `pipeline_{serial,overlap}_s`
+    /// step-time metrics (matches the paper's 100 Mbps default)
+    pub pipeline_link_mbps: f64,
     pub seed: u64,
 }
 
@@ -71,6 +84,9 @@ impl CompressionSpec {
             error_feedback: true,
             min_compress: 1024,
             schedule: "gather_all".into(),
+            bucket_bytes: 0,
+            autotune: false,
+            pipeline_link_mbps: 100.0,
             seed: 0xDEE9,
         }
     }
@@ -86,15 +102,6 @@ impl CompressionSpec {
     pub fn build_sparsifier(&self, worker_seed: u64) -> anyhow::Result<Box<dyn Sparsifier>> {
         sparsify::by_name(&self.sparsifier, self.ratio, self.seed ^ worker_seed)
             .ok_or_else(|| anyhow::anyhow!("unknown sparsifier {}", self.sparsifier))
-    }
-
-    pub fn build_codec(&self) -> anyhow::Result<DeepReduce> {
-        Ok(DeepReduce::new(
-            index_by_name(&self.index, self.index_param, self.seed)
-                .ok_or_else(|| anyhow::anyhow!("unknown index codec {}", self.index))?,
-            value_by_name(&self.value, self.value_param, self.seed)
-                .ok_or_else(|| anyhow::anyhow!("unknown value codec {}", self.value))?,
-        ))
     }
 
     pub fn label(&self) -> String {
@@ -167,7 +174,10 @@ pub struct Trainer {
     opt: Box<dyn crate::optim::Optimizer>,
     shards: Vec<Shard>,
     sparsifiers: Vec<Box<dyn Sparsifier>>,
-    codec: Option<DeepReduce>,
+    /// Some(_) whenever compression is on: the bucketed gradient
+    /// pipeline (fuse → per-bucket codec → encode/decode) the step
+    /// drives instead of a per-tensor codec loop
+    pipeline: Option<GradientPipeline>,
     threelc: Option<crate::baselines::ThreeLC>,
     /// ef[worker][tensor]
     ef: Vec<Vec<ErrorFeedback>>,
@@ -224,20 +234,40 @@ impl Trainer {
             })?),
             None => None,
         };
-        let (sparsifiers, codec, ef) = match &cfg.compression {
+        let (sparsifiers, pipeline, ef) = match &cfg.compression {
             None if threelc.is_some() => (Vec::new(), None, ef_all(&params)),
             None => (Vec::new(), None, Vec::new()),
             Some(spec) => {
                 let sp = (0..cfg.workers)
                     .map(|w| spec.build_sparsifier(w as u64))
                     .collect::<anyhow::Result<Vec<_>>>()?;
-                let codec = spec.build_codec()?;
+                // compressible tensors in exchange order; smaller ones
+                // bypass the pipeline (raw kv on the wire)
+                let members: Vec<(usize, usize)> = params
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, p)| p.numel() >= spec.min_compress)
+                    .map(|(ti, p)| (ti, p.numel()))
+                    .collect();
+                let pipeline = GradientPipeline::new(
+                    &members,
+                    spec.bucket_bytes,
+                    spec.autotune,
+                    spec.error_feedback,
+                    &spec.index,
+                    spec.index_param,
+                    &spec.value,
+                    spec.value_param,
+                    spec.seed,
+                    crate::simnet::Link::mbps(spec.pipeline_link_mbps),
+                    cfg.workers,
+                )?;
                 let ef = (0..cfg.workers)
                     .map(|_| {
                         params.iter().map(|p| ErrorFeedback::new(p.numel())).collect::<Vec<_>>()
                     })
                     .collect();
-                (sp, Some(codec), ef)
+                (sp, Some(pipeline), ef)
             }
         };
         Ok(Self {
@@ -247,7 +277,7 @@ impl Trainer {
             opt,
             shards,
             sparsifiers,
-            codec,
+            pipeline,
             threelc,
             ef,
             collective_schedule,
@@ -294,10 +324,16 @@ impl Trainer {
         let n = self.cfg.workers;
         let total_params = self.artifact.manifest.total_params();
         let mut agg: Vec<Vec<f32>> = self.params.iter().map(|p| vec![0.0; p.numel()]).collect();
-        // per-worker decoded gradients in tensor order (identical across
-        // workers), for the fabric gradient exchange
+        // per-worker decoded fused buckets in bucket order (identical
+        // across workers), for the fabric gradient exchange
         let mut pending: Vec<Vec<SparseTensor>> = (0..n).map(|_| Vec::new()).collect();
-        let mut pending_tis: Vec<usize> = Vec::new();
+        // the step-invariant bucket layout (cloned out so worker-local
+        // mutable borrows of the pipeline stay disjoint)
+        let buckets: Vec<Bucket> = self
+            .pipeline
+            .as_ref()
+            .map(|p| p.plan().buckets.clone())
+            .unwrap_or_default();
         let mut metrics = StepMetrics {
             step,
             dense_bytes: (total_params * 4) as u64, // one worker's dense payload
@@ -311,8 +347,12 @@ impl Trainer {
             metrics.loss += out.loss / n as f32;
             metrics.aux += out.aux / n as f32;
 
-            match (&self.codec, self.cfg.compression.as_ref()) {
-                (Some(codec), Some(spec)) => {
+            match (&mut self.pipeline, self.cfg.compression.as_ref()) {
+                (Some(pipe), Some(spec)) => {
+                    // stage 1: per-tensor error feedback + sparsify;
+                    // tensors below min_compress bypass the pipeline
+                    let mut prepared: Vec<Option<(Vec<f32>, SparseTensor)>> =
+                        (0..out.grads.len()).map(|_| None).collect();
                     for (ti, grad) in out.grads.iter().enumerate() {
                         let flat = grad.data();
                         if flat.len() < spec.min_compress {
@@ -329,29 +369,57 @@ impl Trainer {
                             flat.to_vec()
                         };
                         let sp = self.sparsifiers[w].sparsify(&corrected);
-                        let t1 = Instant::now();
-                        let container = codec.encode(&sp, Some(&corrected));
-                        metrics.encode_s += t1.elapsed().as_secs_f64();
-                        let t2 = Instant::now();
-                        let decoded: SparseTensor = codec.decode(&container)?;
-                        metrics.decode_s += t2.elapsed().as_secs_f64();
-                        if spec.error_feedback {
-                            // residual vs what was actually reconstructed
-                            self.ef[w][ti].update(&corrected, &decoded);
-                        }
+                        prepared[ti] = Some((corrected, sp));
+                    }
+                    // stage 2: fuse each bucket, pick its codec, encode
+                    // and locally decode; the decoded fused payload is
+                    // what the collective sums
+                    let mut timeline = StepTimeline::new();
+                    for bucket in &buckets {
+                        let parts: Vec<&SparseTensor> = bucket
+                            .tensors
+                            .iter()
+                            .map(|&ti| {
+                                let p = prepared[ti].as_ref().expect("bucketed tensor prepared");
+                                &p.1
+                            })
+                            .collect();
+                        let dense_parts: Vec<&[f32]> = bucket
+                            .tensors
+                            .iter()
+                            .map(|&ti| {
+                                let p = prepared[ti].as_ref().expect("bucketed tensor prepared");
+                                p.0.as_slice()
+                            })
+                            .collect();
+                        let enc = pipe.encode_bucket(bucket, &parts, &dense_parts)?;
+                        metrics.encode_s += enc.encode_s;
+                        metrics.decode_s += enc.decode_s;
                         // bytes_per_worker is always the container upload
                         // volume (keeps relative_volume comparable across
                         // schedules); collective traffic is metered
                         // separately as fabric_bytes
-                        metrics.bytes_per_worker += container.wire_bytes() as u64;
-                        if self.collective_schedule.is_some() {
-                            if w == 0 {
-                                pending_tis.push(ti);
-                            }
-                            pending[w].push(decoded);
-                        } else {
-                            decoded.add_into(&mut agg[ti]);
+                        metrics.bytes_per_worker += enc.wire_bytes;
+                        timeline.push(enc.encode_s, enc.comm_model_s);
+                        if !metrics.autotune_choices.contains(&enc.choice_label) {
+                            metrics.autotune_choices.push(enc.choice_label.clone());
                         }
+                        if spec.error_feedback {
+                            // residual vs what was actually reconstructed
+                            let dec_parts = unfuse(bucket, &enc.decoded);
+                            for (j, &ti) in bucket.tensors.iter().enumerate() {
+                                let corrected =
+                                    &prepared[ti].as_ref().expect("bucketed tensor prepared").0;
+                                self.ef[w][ti].update(corrected, &dec_parts[j]);
+                            }
+                        }
+                        pending[w].push(enc.decoded);
+                    }
+                    // modelled step-time accounting (mean over workers)
+                    metrics.pipeline_serial_s += timeline.serial_s() / n as f64;
+                    metrics.pipeline_overlap_s += timeline.pipelined_s() / n as f64;
+                    if w == 0 {
+                        metrics.bucket_count = buckets.len() as u64;
                     }
                 }
                 _ if self.threelc.is_some() => {
@@ -384,9 +452,10 @@ impl Trainer {
             }
         }
         // gradient exchange: run the configured schedule over the
-        // byte-counted in-process fabric
+        // byte-counted in-process fabric — one collective per fused
+        // bucket, each a single sparse segment stream
         if let Some(sched) = self.collective_schedule {
-            if !pending_tis.is_empty() {
+            if !buckets.is_empty() {
                 let spec = self.cfg.compression.as_ref().expect("schedule implies compression");
                 // one fabric + one thread per worker for the whole step;
                 // each worker runs the per-tensor collectives in order, so
@@ -437,8 +506,15 @@ impl Trainer {
                     }
                 }
                 anyhow::ensure!(!panicked, "collective worker thread panicked");
-                for (&ti, summed) in pending_tis.iter().zip(rank0.expect("world size >= 1")) {
-                    summed.add_into(&mut agg[ti]);
+                for (bucket, summed) in
+                    buckets.iter().zip(rank0.expect("world size >= 1"))
+                {
+                    // unfuse the summed bucket back onto its member
+                    // tensors' domains
+                    let parts = unfuse(bucket, &summed);
+                    for (part, &ti) in parts.iter().zip(&bucket.tensors) {
+                        part.add_into(&mut agg[ti]);
+                    }
                 }
                 // exact fabric traffic of this step's gradient exchange,
                 // summed over all workers
@@ -446,11 +522,13 @@ impl Trainer {
             }
         }
         // bytes_per_worker accumulated across workers -> average
-        if self.codec.is_some() || self.threelc.is_some() {
+        if self.pipeline.is_some() || self.threelc.is_some() {
             metrics.bytes_per_worker /= n as u64;
         } else {
             metrics.bytes_per_worker = (total_params * 4) as u64;
         }
+        // stable, deduped across workers already; sorted for reports
+        metrics.autotune_choices.sort();
         // average + apply
         let grads: Vec<Tensor> = agg
             .into_iter()

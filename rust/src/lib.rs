@@ -11,6 +11,7 @@ pub mod coordinator;
 pub mod data;
 pub mod linalg;
 pub mod optim;
+pub mod pipeline;
 pub mod runtime;
 pub mod simnet;
 pub mod sparsify;

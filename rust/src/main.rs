@@ -91,6 +91,19 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         // sparse allreduce schedule: gather_all (default) | recursive_double
         // | ring_rescatter | ring_rescatter_exact
         spec.schedule = args.get_or("schedule", &spec.schedule);
+        // gradient pipeline: --bucket-bytes caps fused buckets (0 = one
+        // bucket per tensor); --autotune [on|off] picks codecs per bucket
+        // by the calibrated cost model (DESIGN.md §6)
+        spec.bucket_bytes = args.get_usize("bucket-bytes", 0)?;
+        // modelled link for autotune comm costs + pipeline step-time
+        // metrics (Mbps; paper default 100)
+        spec.pipeline_link_mbps = args.get_f64("pipeline-link-mbps", spec.pipeline_link_mbps)?;
+        spec.autotune = match args.get("autotune") {
+            Some("on") | Some("true") | Some("1") => true,
+            Some("off") | Some("false") | Some("0") => false,
+            Some(other) => anyhow::bail!("--autotune expects on|off, got {other}"),
+            None => args.flag("autotune"),
+        };
         cfg.compression = Some(spec);
     }
     let mut trainer = Trainer::new(cfg)?;
@@ -102,6 +115,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         report.final_aux(10),
         report.relative_volume()
     );
+    if let Some(last) = report.steps.last() {
+        if last.bucket_count > 0 {
+            let (serial, overlap) = report.pipeline_times_s();
+            eprintln!(
+                "pipeline: {} buckets/worker  codecs [{}]  modelled step time {:.4}s serial -> {:.4}s overlapped",
+                last.bucket_count,
+                report.distinct_autotune_choices().join(", "),
+                serial,
+                overlap
+            );
+        }
+    }
     Ok(())
 }
 

@@ -1,0 +1,216 @@
+//! Bucketing: fuse the per-step tensor list into size-capped buckets.
+//!
+//! Production stacks (Horovod, DDP, SparCML's stream fusion) do not move
+//! gradients one tensor at a time: small tensors are fused into buckets
+//! so per-message latency (α) amortizes, and large messages pipeline.
+//! A [`Bucket`] is a *fused index domain*: member tensors are laid
+//! end-to-end, so the bucket's sparse payload is one [`SparseTensor`]
+//! over `[0, total_elems)` and travels through the collective schedules
+//! as a single segment stream.
+
+use crate::tensor::SparseTensor;
+
+/// One fused bucket: which tensors it carries and where each one starts
+/// in the fused domain.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Bucket {
+    /// caller-side tensor ids (indices into the trainer's tensor list)
+    pub tensors: Vec<usize>,
+    /// element offset of each member within the fused domain (aligned
+    /// with `tensors`)
+    pub offsets: Vec<usize>,
+    /// element count of each member (aligned with `tensors`)
+    pub sizes: Vec<usize>,
+    /// fused dense domain = Σ sizes
+    pub total_elems: usize,
+}
+
+impl Bucket {
+    /// Position of tensor id `ti` within this bucket, if present.
+    pub fn slot_of(&self, ti: usize) -> Option<usize> {
+        self.tensors.iter().position(|&t| t == ti)
+    }
+}
+
+/// The step-invariant bucket assignment: tensor shapes do not change
+/// across steps, so the plan is computed once at trainer construction.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct BucketPlan {
+    pub buckets: Vec<Bucket>,
+}
+
+impl BucketPlan {
+    /// Greedy size-capped fusion in tensor order. `members` is the list
+    /// of (tensor id, element count) to fuse; `bucket_bytes` caps each
+    /// bucket at `bucket_bytes / 4` elements (fp32). `bucket_bytes == 0`
+    /// means *no fusion*: one bucket per tensor (the legacy per-tensor
+    /// path). A tensor larger than the cap gets a bucket of its own —
+    /// tensors are never split.
+    pub fn plan(members: &[(usize, usize)], bucket_bytes: usize) -> Self {
+        let empty = || Bucket {
+            tensors: Vec::new(),
+            offsets: Vec::new(),
+            sizes: Vec::new(),
+            total_elems: 0,
+        };
+        let cap_elems = bucket_bytes / 4;
+        let mut buckets = Vec::new();
+        let mut cur = empty();
+        for &(ti, sz) in members {
+            let fits =
+                cap_elems > 0 && !cur.tensors.is_empty() && cur.total_elems + sz <= cap_elems;
+            if !cur.tensors.is_empty() && !fits {
+                buckets.push(std::mem::replace(&mut cur, empty()));
+            }
+            cur.tensors.push(ti);
+            cur.offsets.push(cur.total_elems);
+            cur.sizes.push(sz);
+            cur.total_elems += sz;
+        }
+        if !cur.tensors.is_empty() {
+            buckets.push(cur);
+        }
+        Self { buckets }
+    }
+
+    pub fn len(&self) -> usize {
+        self.buckets.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.is_empty()
+    }
+}
+
+/// Fuse per-tensor sparse payloads into one sparse tensor over the
+/// bucket's fused domain. `parts[j]` is the payload of `bucket.tensors[j]`
+/// over its own dense domain (`dense_len == bucket.sizes[j]`); indices
+/// are rebased by `bucket.offsets[j]` and concatenated — offsets are
+/// ascending, so the fused support stays sorted.
+pub fn fuse(bucket: &Bucket, parts: &[&SparseTensor]) -> SparseTensor {
+    assert_eq!(parts.len(), bucket.tensors.len(), "fuse arity mismatch");
+    let nnz: usize = parts.iter().map(|p| p.nnz()).sum();
+    let mut idx = Vec::with_capacity(nnz);
+    let mut val = Vec::with_capacity(nnz);
+    for (j, part) in parts.iter().enumerate() {
+        assert_eq!(
+            part.dense_len(),
+            bucket.sizes[j],
+            "fuse: tensor {} domain mismatch",
+            bucket.tensors[j]
+        );
+        let off = bucket.offsets[j] as u32;
+        idx.extend(part.indices().iter().map(|&i| i + off));
+        val.extend_from_slice(part.values());
+    }
+    SparseTensor::new(bucket.total_elems, idx, val)
+}
+
+/// Split a fused-domain sparse tensor back into one sparse tensor per
+/// member, indices rebased to each member's own domain. Inverse of
+/// [`fuse`] for payloads that respect the bucket layout.
+pub fn unfuse(bucket: &Bucket, fused: &SparseTensor) -> Vec<SparseTensor> {
+    assert_eq!(fused.dense_len(), bucket.total_elems, "unfuse domain mismatch");
+    let idx = fused.indices();
+    let mut out = Vec::with_capacity(bucket.tensors.len());
+    for j in 0..bucket.tensors.len() {
+        let (lo, hi) = (bucket.offsets[j], bucket.offsets[j] + bucket.sizes[j]);
+        let a = idx.partition_point(|&i| (i as usize) < lo);
+        let b = idx.partition_point(|&i| (i as usize) < hi);
+        let local: Vec<u32> = idx[a..b].iter().map(|&i| i - lo as u32).collect();
+        out.push(SparseTensor::new(bucket.sizes[j], local, fused.values()[a..b].to_vec()));
+    }
+    out
+}
+
+/// Concatenate per-member dense slices into the fused dense domain
+/// (the reference gradient Bloom policies read at FP positions).
+pub fn fuse_dense(bucket: &Bucket, parts: &[&[f32]]) -> Vec<f32> {
+    assert_eq!(parts.len(), bucket.tensors.len(), "fuse_dense arity mismatch");
+    let mut out = Vec::with_capacity(bucket.total_elems);
+    for (j, part) in parts.iter().enumerate() {
+        assert_eq!(part.len(), bucket.sizes[j], "fuse_dense: slice {j} size mismatch");
+        out.extend_from_slice(part);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn st(d: usize, iv: &[(u32, f32)]) -> SparseTensor {
+        SparseTensor::new(d, iv.iter().map(|&(i, _)| i).collect(), iv.iter().map(|&(_, v)| v).collect())
+    }
+
+    #[test]
+    fn zero_cap_means_one_bucket_per_tensor() {
+        let plan = BucketPlan::plan(&[(0, 100), (2, 50), (5, 9000)], 0);
+        assert_eq!(plan.len(), 3);
+        let want = [(0usize, 100usize), (2, 50), (5, 9000)];
+        for (b, &(ti, sz)) in plan.buckets.iter().zip(&want) {
+            assert_eq!(b.tensors, vec![ti]);
+            assert_eq!(b.offsets, vec![0]);
+            assert_eq!(b.total_elems, sz);
+        }
+    }
+
+    #[test]
+    fn greedy_fusion_respects_cap() {
+        // cap = 256 bytes = 64 elems
+        let plan = BucketPlan::plan(&[(0, 30), (1, 30), (2, 30), (3, 200), (4, 10)], 256);
+        assert_eq!(plan.len(), 4);
+        assert_eq!(plan.buckets[0].tensors, vec![0, 1]);
+        assert_eq!(plan.buckets[0].offsets, vec![0, 30]);
+        assert_eq!(plan.buckets[0].total_elems, 60);
+        assert_eq!(plan.buckets[1].tensors, vec![2]); // 60+30 > 64 would overflow with 3rd
+        // oversized tensor gets its own bucket, never split
+        assert_eq!(plan.buckets[2].tensors, vec![3]);
+        assert_eq!(plan.buckets[2].total_elems, 200);
+        assert_eq!(plan.buckets[3].tensors, vec![4]);
+    }
+
+    #[test]
+    fn fuse_unfuse_roundtrip() {
+        let plan = BucketPlan::plan(&[(7, 10), (9, 6)], 1 << 20);
+        assert_eq!(plan.len(), 1);
+        let b = &plan.buckets[0];
+        let t0 = st(10, &[(1, 1.0), (9, -2.0)]);
+        let t1 = st(6, &[(0, 3.0), (5, 4.0)]);
+        let fused = fuse(b, &[&t0, &t1]);
+        assert_eq!(fused.dense_len(), 16);
+        assert_eq!(fused.indices(), &[1, 9, 10, 15]);
+        assert_eq!(fused.values(), &[1.0, -2.0, 3.0, 4.0]);
+        let parts = unfuse(b, &fused);
+        assert_eq!(parts, vec![t0, t1]);
+    }
+
+    #[test]
+    fn unfuse_handles_empty_members() {
+        let plan = BucketPlan::plan(&[(0, 4), (1, 4), (2, 4)], 1 << 20);
+        let b = &plan.buckets[0];
+        let t0 = st(4, &[]);
+        let t1 = st(4, &[(2, 5.0)]);
+        let t2 = st(4, &[]);
+        let fused = fuse(b, &[&t0, &t1, &t2]);
+        assert_eq!(fused.indices(), &[6]);
+        let parts = unfuse(b, &fused);
+        assert_eq!(parts[0].nnz(), 0);
+        assert_eq!(parts[1], t1);
+        assert_eq!(parts[2].nnz(), 0);
+    }
+
+    #[test]
+    fn fuse_dense_concatenates() {
+        let plan = BucketPlan::plan(&[(0, 2), (1, 3)], 1 << 20);
+        let b = &plan.buckets[0];
+        let out = fuse_dense(b, &[&[1.0, 2.0], &[3.0, 4.0, 5.0]]);
+        assert_eq!(out, vec![1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn empty_plan() {
+        let plan = BucketPlan::plan(&[], 1024);
+        assert!(plan.is_empty());
+    }
+}

@@ -1,0 +1,256 @@
+//! Bucketed, overlapped gradient pipeline with cost-model codec
+//! autotuning (DESIGN.md §6).
+//!
+//! Production stacks do not ship one tensor at a time with one static
+//! codec: gradients are fused into size-capped buckets (SparCML's
+//! stream fusion, Horovod/DDP bucketing), the codec is chosen per
+//! payload, and encode overlaps with transfer. This subsystem brings
+//! all three to the trainer:
+//!
+//! - [`bucket`] — the step-invariant [`BucketPlan`] plus fuse/unfuse
+//!   kernels mapping per-tensor sparse payloads onto fused domains.
+//! - [`autotune`] — [`CodecPolicy`]: startup-calibrated per-codec byte
+//!   and throughput profiles combined with the simnet α–β link model
+//!   into a per-bucket argmin codec choice.
+//! - [`overlap`] — the double-buffered executor and the
+//!   [`StepTimeline`] that folds measured encode seconds with modelled
+//!   transfer seconds into serial vs. pipelined step time.
+//!
+//! [`GradientPipeline`] ties them together behind the API the trainer
+//! drives: plan once, then per worker per bucket fuse → choose codec →
+//! encode → decode, with the decoded fused tensor handed to the sparse
+//! collective schedules (`collective::sparse`) as a single segment
+//! stream.
+
+pub mod autotune;
+pub mod bucket;
+pub mod overlap;
+
+pub use autotune::{default_candidates, CodecChoice, CodecPolicy};
+pub use bucket::{fuse, fuse_dense, unfuse, Bucket, BucketPlan};
+pub use overlap::{double_buffered, StepTimeline};
+
+use crate::compress::{index_by_name, value_by_name, Container, DeepReduce};
+use crate::simnet::Link;
+use crate::tensor::SparseTensor;
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+/// One encoded bucket, ready for metering and the collective exchange.
+pub struct EncodedBucket {
+    /// what travels as the worker's upload (metered as
+    /// `bytes_per_worker`)
+    pub wire_bytes: u64,
+    /// locally decoded payload over the fused domain — the collective's
+    /// input (codec loss already applied, so error feedback sees it)
+    pub decoded: SparseTensor,
+    /// `index|value` label of the codec pair that ran
+    pub choice_label: String,
+    pub encode_s: f64,
+    pub decode_s: f64,
+    /// α–β modelled transfer time of `wire_bytes` on the pipeline link
+    pub comm_model_s: f64,
+}
+
+/// The trainer-facing pipeline: a bucket plan plus the codec machinery
+/// (static pair or autotuning policy with a cache of built pairs).
+pub struct GradientPipeline {
+    plan: BucketPlan,
+    static_codec: DeepReduce,
+    static_label: String,
+    policy: Option<CodecPolicy>,
+    tuned: BTreeMap<String, DeepReduce>,
+    index_param: f64,
+    value_param: f64,
+    seed: u64,
+    link: Link,
+    workers: usize,
+}
+
+impl GradientPipeline {
+    /// Build the pipeline. `members` lists the compressible tensors as
+    /// `(tensor id, element count)` in exchange order; `bucket_bytes`
+    /// caps fused buckets (0 = one bucket per tensor, the legacy
+    /// per-tensor path); `autotune` turns the per-bucket codec policy
+    /// on (off = always the static `index`/`value` pair).
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        members: &[(usize, usize)],
+        bucket_bytes: usize,
+        autotune: bool,
+        error_feedback: bool,
+        index: &str,
+        index_param: f64,
+        value: &str,
+        value_param: f64,
+        seed: u64,
+        link: Link,
+        workers: usize,
+    ) -> anyhow::Result<Self> {
+        let plan = BucketPlan::plan(members, bucket_bytes);
+        let static_codec = DeepReduce::new(
+            index_by_name(index, index_param, seed)
+                .ok_or_else(|| anyhow::anyhow!("unknown index codec {index}"))?,
+            value_by_name(value, value_param, seed)
+                .ok_or_else(|| anyhow::anyhow!("unknown value codec {value}"))?,
+        );
+        let policy = if autotune {
+            let (idx, val) = default_candidates(error_feedback);
+            Some(CodecPolicy::calibrate(&idx, &val, seed, link, workers))
+        } else {
+            None
+        };
+        Ok(Self {
+            plan,
+            static_codec,
+            static_label: format!("{index}|{value}"),
+            policy,
+            tuned: BTreeMap::new(),
+            index_param,
+            value_param,
+            seed,
+            link,
+            workers,
+        })
+    }
+
+    pub fn plan(&self) -> &BucketPlan {
+        &self.plan
+    }
+
+    pub fn autotuning(&self) -> bool {
+        self.policy.is_some()
+    }
+
+    /// The codec pair for a bucket of domain `d` with `nnz` entries.
+    fn codec_for(&mut self, d: usize, nnz: usize) -> (String, &DeepReduce) {
+        let choice = match &self.policy {
+            None => return (self.static_label.clone(), &self.static_codec),
+            Some(policy) => policy.choose(d, nnz),
+        };
+        let label = choice.label();
+        if label == self.static_label {
+            return (label, &self.static_codec);
+        }
+        let (ipar, vpar, seed) = (self.index_param, self.value_param, self.seed);
+        let codec = self.tuned.entry(label.clone()).or_insert_with(|| {
+            DeepReduce::new(
+                index_by_name(&choice.index, ipar, seed).expect("candidate index codec"),
+                value_by_name(&choice.value, vpar, seed).expect("candidate value codec"),
+            )
+        });
+        (label, &*codec)
+    }
+
+    /// Fuse, pick a codec, encode, and locally decode one bucket.
+    /// `parts[j]` is the sparse payload of `bucket.tensors[j]` over its
+    /// own domain; `dense_parts[j]` is the member's dense reference
+    /// gradient. The fused dense copy is built only when the chosen
+    /// index codec is lossy (Bloom reads original values at
+    /// false-positive positions) — lossless codecs take the zero-copy
+    /// path.
+    pub fn encode_bucket(
+        &mut self,
+        bucket: &Bucket,
+        parts: &[&SparseTensor],
+        dense_parts: &[&[f32]],
+    ) -> anyhow::Result<EncodedBucket> {
+        let fused = fuse(bucket, parts);
+        let (choice_label, codec) = self.codec_for(fused.dense_len(), fused.nnz());
+        let fused_dense: Option<Vec<f32>> = if codec.index.lossless() {
+            None
+        } else {
+            Some(fuse_dense(bucket, dense_parts))
+        };
+        let t0 = Instant::now();
+        let container: Container = codec.encode(&fused, fused_dense.as_deref());
+        let encode_s = t0.elapsed().as_secs_f64();
+        let wire_bytes = container.wire_bytes() as u64;
+        let t1 = Instant::now();
+        let decoded = codec.decode(&container)?;
+        let decode_s = t1.elapsed().as_secs_f64();
+        let comm_model_s =
+            crate::simnet::allgather_time(wire_bytes, self.workers, self.link);
+        Ok(EncodedBucket { wire_bytes, decoded, choice_label, encode_s, decode_s, comm_model_s })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsify::Sparsifier;
+    use crate::util::prng::Rng;
+    use crate::util::testkit::gradient_like;
+
+    fn parts_for(g: &[f32], ratio: f64) -> SparseTensor {
+        let mut topk = crate::sparsify::TopK::new(ratio);
+        topk.sparsify(g)
+    }
+
+    #[test]
+    fn static_pipeline_roundtrips_fused_buckets() {
+        let mut rng = Rng::new(0xF0F0);
+        let sizes = [(0usize, 3000usize), (1, 1200), (2, 2500)];
+        let mut pipe = GradientPipeline::new(
+            &sizes,
+            1 << 20, // everything fuses into one bucket
+            false,
+            true,
+            "raw",
+            f64::NAN,
+            "raw",
+            f64::NAN,
+            1,
+            Link::mbps(100.0),
+            4,
+        )
+        .unwrap();
+        assert_eq!(pipe.plan().len(), 1);
+        assert!(!pipe.autotuning());
+        let grads: Vec<Vec<f32>> = sizes.iter().map(|&(_, s)| gradient_like(&mut rng, s)).collect();
+        let sparse: Vec<SparseTensor> = grads.iter().map(|g| parts_for(g, 0.05)).collect();
+        let bucket = pipe.plan().buckets[0].clone();
+        let parts: Vec<&SparseTensor> = sparse.iter().collect();
+        let dense_parts: Vec<&[f32]> = grads.iter().map(|g| g.as_slice()).collect();
+        let enc = pipe.encode_bucket(&bucket, &parts, &dense_parts).unwrap();
+        assert_eq!(enc.choice_label, "raw|raw");
+        assert!(enc.wire_bytes > 0);
+        assert!(enc.comm_model_s > 0.0);
+        // raw|raw is lossless: the decoded fused payload must unfuse
+        // back to the exact inputs
+        let back = unfuse(&bucket, &enc.decoded);
+        assert_eq!(back, sparse);
+    }
+
+    #[test]
+    fn autotuned_pipeline_caches_and_labels() {
+        let sizes = [(0usize, 4000usize)];
+        let mut pipe = GradientPipeline::new(
+            &sizes,
+            0,
+            true,
+            false, // no EF -> lossless candidates only
+            "raw",
+            f64::NAN,
+            "raw",
+            f64::NAN,
+            1,
+            Link::mbps(100.0),
+            4,
+        )
+        .unwrap();
+        assert!(pipe.autotuning());
+        let mut rng = Rng::new(3);
+        let g = gradient_like(&mut rng, 4000);
+        let sp = parts_for(&g, 0.02);
+        let bucket = pipe.plan().buckets[0].clone();
+        let enc = pipe.encode_bucket(&bucket, &[&sp], &[g.as_slice()]).unwrap();
+        assert!(enc.choice_label.contains('|'), "{}", enc.choice_label);
+        // lossless candidates: decode must equal input exactly
+        assert_eq!(unfuse(&bucket, &enc.decoded), vec![sp.clone()]);
+        // second call with the same shape reuses the cached codec
+        let enc2 = pipe.encode_bucket(&bucket, &[&sp], &[g.as_slice()]).unwrap();
+        assert_eq!(enc2.choice_label, enc.choice_label);
+        assert!(pipe.tuned.len() <= 1);
+    }
+}

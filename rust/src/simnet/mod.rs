@@ -225,6 +225,37 @@ pub fn ring_rescatter_time(
     t
 }
 
+// ---------------------------------------------------------------------
+// Step-time accounting for the bucketed gradient pipeline
+// (`crate::pipeline`, DESIGN.md §6). A step is a sequence of buckets,
+// each contributing an encode stage (measured) and a communication
+// stage (α–β modelled from the bucket's wire bytes).
+// ---------------------------------------------------------------------
+
+/// Unoverlapped step time: every bucket encodes, then ships, strictly in
+/// sequence — the per-tensor baseline the paper's evaluation implies.
+pub fn serial_step_time(stages: &[(f64, f64)]) -> f64 {
+    stages.iter().map(|&(e, c)| e + c).sum()
+}
+
+/// Overlapped step time: bucket *i+1* encodes while bucket *i* is in
+/// flight on the fabric. Encoding is serial on the worker core; bucket
+/// i's transfer starts once both its encode and transfer i−1 finish.
+/// Always ≤ [`serial_step_time`]; the gap is the overlap win. This is
+/// the standard pipeline lower bound (encoder may run arbitrarily far
+/// ahead); a bounded hand-off executor like
+/// `pipeline::double_buffered` can lag it slightly on strongly
+/// encode-skewed bucket mixes.
+pub fn pipelined_step_time(stages: &[(f64, f64)]) -> f64 {
+    let mut enc_done = 0.0f64;
+    let mut comm_done = 0.0f64;
+    for &(e, c) in stages {
+        enc_done += e;
+        comm_done = enc_done.max(comm_done) + c;
+    }
+    comm_done
+}
+
 /// One Fig-11 style iteration breakdown (seconds).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct IterBreakdown {
@@ -369,6 +400,38 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn pipelined_time_never_exceeds_serial() {
+        use crate::util::prng::Rng;
+        let mut rng = Rng::new(0x91BE);
+        for _ in 0..200 {
+            let n = 1 + rng.below(12) as usize;
+            let stages: Vec<(f64, f64)> =
+                (0..n).map(|_| (rng.next_f64() * 0.01, rng.next_f64() * 0.01)).collect();
+            let s = serial_step_time(&stages);
+            let p = pipelined_step_time(&stages);
+            assert!(p <= s + 1e-12, "pipelined {p} > serial {s}");
+            // lower bound: total comm plus the first encode
+            let comm: f64 = stages.iter().map(|&(_, c)| c).sum();
+            assert!(p + 1e-12 >= comm + stages[0].0, "pipelined {p} below lower bound");
+        }
+        assert_eq!(serial_step_time(&[]), 0.0);
+        assert_eq!(pipelined_step_time(&[]), 0.0);
+    }
+
+    #[test]
+    fn pipelined_time_hides_encode_under_comm() {
+        // comm-bound: every encode after the first hides completely
+        let stages = [(1.0, 10.0), (1.0, 10.0), (1.0, 10.0)];
+        assert_eq!(serial_step_time(&stages), 33.0);
+        assert_eq!(pipelined_step_time(&stages), 31.0);
+        // encode-bound: comm hides instead, total = encodes + last comm
+        let stages = [(10.0, 1.0), (10.0, 1.0), (10.0, 1.0)];
+        assert_eq!(pipelined_step_time(&stages), 31.0);
+        // single bucket: nothing to overlap
+        assert_eq!(pipelined_step_time(&[(2.0, 3.0)]), 5.0);
     }
 
     #[test]

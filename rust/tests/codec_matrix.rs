@@ -1,0 +1,241 @@
+//! Property-based roundtrip tests over the full index × value codec
+//! matrix (seeded via `util::prng` + `util::testkit`): random densities
+//! and shapes, including empty and fully-dense tensors. Locks the
+//! growing codec surface down:
+//!
+//! - lossless × lossless pairs must roundtrip bit-exactly through the
+//!   full container wire format;
+//! - lossy value codecs must hold their structural contracts (length,
+//!   boundedness, finiteness);
+//! - Bloom index policies must hold their support contracts (P ⊇ S for
+//!   P0, |S̃| ≤ r for P1/P2, true values at reconstructed positions).
+//!
+//! Runs without artifacts.
+
+use deepreduce::compress::{index_by_name, value_by_name, Container, DeepReduce};
+use deepreduce::tensor::SparseTensor;
+use deepreduce::util::stats::rel_l2_err;
+use deepreduce::util::testkit::{forall, gradient_like, sorted_support};
+
+const LOSSLESS_INDEX: [&str; 6] = ["raw", "bitmap", "rle", "huffman", "delta_varint", "elias"];
+const LOSSLESS_VALUE: [&str; 3] = ["raw", "deflate", "zstd"];
+const LOSSY_VALUE: [&str; 4] = ["fp16", "qsgd", "fitpoly", "fitdexp"];
+const BLOOM_INDEX: [&str; 4] = ["bloom_naive", "bloom_p0", "bloom_p1", "bloom_p2"];
+
+fn build(index: &str, value: &str, seed: u64) -> DeepReduce {
+    DeepReduce::new(
+        index_by_name(index, 0.01, seed).unwrap_or_else(|| panic!("index {index}")),
+        value_by_name(value, f64::NAN, seed).unwrap_or_else(|| panic!("value {value}")),
+    )
+}
+
+/// Encode → serialize → parse → decode, through the real wire container.
+fn wire_roundtrip(dr: &DeepReduce, sp: &SparseTensor, g: &[f32]) -> anyhow::Result<SparseTensor> {
+    let container = dr.encode(sp, Some(g));
+    let bytes = container.to_bytes();
+    let parsed = Container::from_bytes(&bytes)?;
+    dr.decode(&parsed)
+}
+
+/// A random (dense gradient, sparse view) pair. Density spans the whole
+/// range: roughly 1/6 of cases are empty and 1/6 fully dense.
+fn gen_case(rng: &mut deepreduce::util::prng::Rng, size: usize) -> (Vec<f32>, SparseTensor) {
+    let d = 1 + rng.below(size as u64) as usize;
+    let r = match rng.below(6) {
+        0 => 0,
+        1 => d,
+        _ => rng.below(d as u64 + 1) as usize,
+    };
+    let g = gradient_like(rng, d);
+    let support = sorted_support(rng, d, r);
+    (g.clone(), SparseTensor::gather(&g, &support))
+}
+
+#[test]
+fn lossless_matrix_roundtrips_bit_exactly() {
+    forall(
+        "codec-matrix-lossless",
+        15,
+        1200,
+        gen_case,
+        |(g, sp)| {
+            for idx in LOSSLESS_INDEX {
+                for val in LOSSLESS_VALUE {
+                    let dr = build(idx, val, 1);
+                    let back = wire_roundtrip(&dr, sp, g)
+                        .map_err(|e| format!("{idx}|{val}: {e}"))?;
+                    if &back != sp {
+                        return Err(format!(
+                            "{idx}|{val}: decode mismatch (nnz {} vs {}, d {})",
+                            back.nnz(),
+                            sp.nnz(),
+                            sp.dense_len()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn lossy_value_codecs_hold_structural_contracts() {
+    forall(
+        "codec-matrix-lossy-values",
+        12,
+        1000,
+        gen_case,
+        |(g, sp)| {
+            let max_abs = sp.values().iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            for val in LOSSY_VALUE {
+                let dr = build("raw", val, 1);
+                let back =
+                    wire_roundtrip(&dr, sp, g).map_err(|e| format!("raw|{val}: {e}"))?;
+                if back.dense_len() != sp.dense_len() || back.nnz() != sp.nnz() {
+                    return Err(format!(
+                        "raw|{val}: shape drift ({}/{} vs {}/{})",
+                        back.dense_len(),
+                        back.nnz(),
+                        sp.dense_len(),
+                        sp.nnz()
+                    ));
+                }
+                if back.indices() != sp.indices() {
+                    return Err(format!("raw|{val}: support drift"));
+                }
+                for (&i, &v) in back.indices().iter().zip(back.values()) {
+                    if !v.is_finite() {
+                        return Err(format!("raw|{val}: non-finite value at {i}"));
+                    }
+                }
+                match val {
+                    "fp16" => {
+                        if sp.nnz() > 0 && rel_l2_err(sp.values(), back.values()) > 0.05 {
+                            return Err(format!(
+                                "fp16 rel err {} too large",
+                                rel_l2_err(sp.values(), back.values())
+                            ));
+                        }
+                    }
+                    "qsgd" => {
+                        // quantized magnitudes never exceed the bucket max
+                        for &v in back.values() {
+                            if v.abs() > max_abs * (1.0 + 1e-5) {
+                                return Err(format!("qsgd magnitude {v} > max {max_abs}"));
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Merge-join subset check on sorted index slices.
+fn is_subset(sub: &[u32], sup: &[u32]) -> bool {
+    let mut j = 0usize;
+    for &s in sub {
+        while j < sup.len() && sup[j] < s {
+            j += 1;
+        }
+        if j >= sup.len() || sup[j] != s {
+            return false;
+        }
+    }
+    true
+}
+
+#[test]
+fn bloom_policies_hold_support_contracts() {
+    forall(
+        "codec-matrix-bloom",
+        12,
+        900,
+        gen_case,
+        |(g, sp)| {
+            for idx in BLOOM_INDEX {
+                let dr = build(idx, "raw", 3);
+                let back = wire_roundtrip(&dr, sp, g).map_err(|e| format!("{idx}: {e}"))?;
+                if back.dense_len() != sp.dense_len() {
+                    return Err(format!("{idx}: dense_len drift"));
+                }
+                match idx {
+                    // P0 reconstructs all positives: a superset of S,
+                    // with the true gradient value at every position
+                    "bloom_p0" => {
+                        if !is_subset(sp.indices(), back.indices()) {
+                            return Err("bloom_p0: S not a subset of P".into());
+                        }
+                        for (&i, &v) in back.indices().iter().zip(back.values()) {
+                            if v != g[i as usize] {
+                                return Err(format!("bloom_p0: value at {i} is {v}"));
+                            }
+                        }
+                    }
+                    // P1/P2 pick at most r positions from P, each
+                    // carrying its true gradient value
+                    "bloom_p1" | "bloom_p2" => {
+                        if back.nnz() > sp.nnz().max(1) {
+                            return Err(format!(
+                                "{idx}: |S̃| = {} exceeds r = {}",
+                                back.nnz(),
+                                sp.nnz()
+                            ));
+                        }
+                        for (&i, &v) in back.indices().iter().zip(back.values()) {
+                            if v != g[i as usize] {
+                                return Err(format!("{idx}: value at {i} is {v}"));
+                            }
+                        }
+                    }
+                    // Naive reconstructs exactly r positions (the first
+                    // r positives) — the mis-assignment is by design
+                    "bloom_naive" => {
+                        if back.nnz() != sp.nnz() {
+                            return Err(format!(
+                                "bloom_naive: nnz {} != r {}",
+                                back.nnz(),
+                                sp.nnz()
+                            ));
+                        }
+                    }
+                    _ => unreachable!(),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn full_matrix_empty_and_fully_dense_edges() {
+    let mut rng = deepreduce::util::prng::Rng::new(0xEDCE);
+    for d in [1usize, 63, 300] {
+        let g = gradient_like(&mut rng, d);
+        let empty = SparseTensor::new(d, Vec::new(), Vec::new());
+        let full_support: Vec<u32> = (0..d as u32).collect();
+        let full = SparseTensor::gather(&g, &full_support);
+        let all_index = LOSSLESS_INDEX.iter().chain(BLOOM_INDEX.iter());
+        for &idx in all_index {
+            for &val in LOSSLESS_VALUE.iter().chain(LOSSY_VALUE.iter()) {
+                let dr = build(idx, val, 5);
+                // empty: every pair must produce a decodable container
+                // with zero entries
+                let back = wire_roundtrip(&dr, &empty, &g)
+                    .unwrap_or_else(|e| panic!("{idx}|{val} empty d={d}: {e}"));
+                assert_eq!(back.nnz(), 0, "{idx}|{val} empty d={d}");
+                assert_eq!(back.dense_len(), d, "{idx}|{val} empty d={d}");
+                // fully dense: must decode; lossless pairs bit-exactly
+                let back = wire_roundtrip(&dr, &full, &g)
+                    .unwrap_or_else(|e| panic!("{idx}|{val} full d={d}: {e}"));
+                assert_eq!(back.dense_len(), d, "{idx}|{val} full d={d}");
+                if LOSSLESS_INDEX.contains(&idx) && LOSSLESS_VALUE.contains(&val) {
+                    assert_eq!(back, full, "{idx}|{val} full d={d}");
+                }
+            }
+        }
+    }
+}

@@ -188,6 +188,66 @@ fn ring_rescatter_budget_survives_empty_rank_input() {
     assert!(own_chunk.nnz() <= k.div_ceil(n));
 }
 
+/// Randomized differential test: the topology-aware schedules must be
+/// dense-equivalent to the GatherAll baseline (the paper's exchange)
+/// across seeds, rank counts 2–8 including non-powers-of-two, and
+/// densities from empty to fully dense.
+#[test]
+fn randomized_differential_vs_gather_all() {
+    for seed in [0xD1FF_0001u64, 0xD1FF_0002, 0xD1FF_0003] {
+        let mut rng = Rng::new(seed);
+        for n in 2usize..=8 {
+            for &density in &[0.0f64, 0.02, 0.1, 0.5, 1.0] {
+                let d = 64 + rng.below(1000) as usize;
+                let k = ((d as f64 * density) as usize).min(d);
+                let inputs: Vec<SparseTensor> = (0..n)
+                    .map(|_| {
+                        let support = sorted_support(&mut rng, d, k);
+                        let values: Vec<f32> =
+                            (0..support.len()).map(|_| rng.next_gaussian() as f32).collect();
+                        SparseTensor::new(d, support, values)
+                    })
+                    .collect();
+                // reference: the GatherAll schedule itself (not the dense
+                // ring) — this pins RecursiveDouble / RingRescatter to
+                // the baseline they claim to replace
+                let reference = run_schedule(Schedule::GatherAll, &inputs)
+                    .pop()
+                    .unwrap()
+                    .to_dense();
+                for sched in [Schedule::RecursiveDouble, Schedule::RingRescatterExact] {
+                    for (rank, out) in run_schedule(sched, &inputs).iter().enumerate() {
+                        assert_eq!(out.dense_len(), d, "{sched:?} rank {rank}");
+                        let dense = out.to_dense();
+                        for (i, (&a, &b)) in
+                            dense.data().iter().zip(reference.data()).enumerate()
+                        {
+                            assert!(
+                                (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+                                "seed {seed:#x} n={n} density={density} {sched:?} \
+                                 rank {rank} index {i}: {a} vs gather_all {b}"
+                            );
+                        }
+                    }
+                }
+                // the re-sparsifying schedule keeps a subset, but every
+                // kept value must be the GatherAll sum at that index
+                for (rank, out) in run_schedule(Schedule::RingRescatter, &inputs).iter().enumerate()
+                {
+                    for (&i, &v) in out.indices().iter().zip(out.values()) {
+                        let want = reference.data()[i as usize];
+                        assert!(
+                            (v - want).abs() <= 1e-3 * (1.0 + want.abs()),
+                            "seed {seed:#x} n={n} density={density} ring_rescatter \
+                             rank {rank} index {i}: {v} vs gather_all {want}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
 #[test]
 fn world_size_one_is_identity_for_every_schedule() {
     for sched in Schedule::all() {
