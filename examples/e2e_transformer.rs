@@ -5,10 +5,11 @@
 //! simulated workers — on a synthetic Markov corpus, logging the loss
 //! curve (recorded in EXPERIMENTS.md).
 //!
+//! Run (from `rust/`; needs `make artifacts` once):
 //! ```bash
-//! make artifacts
-//! cargo run --release --example e2e_transformer              # 27M params, 300 steps
+//! cargo run --release --example e2e_transformer              # ~5M params, 150 steps
 //! cargo run --release --example e2e_transformer -- --small   # 135k params, quick
+//! cargo run --release --example e2e_transformer -- --full    # 27M params, 300 steps
 //! cargo run --release --example e2e_transformer -- --steps 50
 //! ```
 
@@ -80,12 +81,17 @@ fn main() -> anyhow::Result<()> {
     summary.row(&["final loss".into(), format!("{:.4}", report.final_loss())]);
     summary.row(&["relative data volume".into(), format!("{:.4}", report.relative_volume())]);
     summary.row(&["wall time (s)".into(), format!("{wall:.1}")]);
-    summary.row(&["compute s/step".into(), format!("{:.3}", report.total_compute_s() / steps as f64)]);
+    summary.row(&[
+        "compute s/step".into(),
+        format!("{:.3}", report.total_compute_s() / steps as f64),
+    ]);
     summary.row(&[
         "codec s/step".into(),
         format!("{:.3}", (report.total_encode_s() + report.total_decode_s()) / steps as f64),
     ]);
-    for (name, link) in [("100Mbps", Link::mbps(100.0)), ("1Gbps", Link::gbps(1.0)), ("10Gbps", Link::gbps(10.0))] {
+    let links =
+        [("100Mbps", Link::mbps(100.0)), ("1Gbps", Link::gbps(1.0)), ("10Gbps", Link::gbps(10.0))];
+    for (name, link) in links {
         let t_dense = allreduce_time(dense, 4, link);
         let t_dr = allgather_time(sparse_blob, 4, link);
         summary.row(&[

@@ -2,6 +2,7 @@
 //! (the paper's illustration of why curve fitting compresses sorted
 //! gradients so well). Prints an ASCII rendering plus fit statistics.
 //!
+//! Run (from `rust/`; no artifacts needed):
 //! ```bash
 //! cargo run --release --example fig5_curvefit_demo
 //! ```
@@ -52,7 +53,8 @@ fn main() -> anyhow::Result<()> {
 
     let err = rel_l2_err(&sorted, &wire);
     let fit_bytes = enc.bytes.len();
-    let map_bits = (d as f64).log2().ceil() as usize; // paper §5.1 (we use ⌈log2 r⌉ = same here since r=d)
+    // paper §5.1 (we use ⌈log2 r⌉ = same here since r=d)
+    let map_bits = (d as f64).log2().ceil() as usize;
     println!("\nfit payload: {fit_bytes} B for {d} values ({} B raw)", d * 4);
     println!("mapping: {} bits/value when combined with an index codec", map_bits);
     println!("relative L2 error of the fitted curve: {err:.4}");

@@ -1,6 +1,9 @@
 //! Quickstart: compress one sparse gradient with several DeepReduce
-//! instantiations and inspect volume + reconstruction error.
+//! instantiations and inspect volume + reconstruction error — the
+//! paper's §3 framework walk-through (Fig 10a volume split) in one
+//! program.
 //!
+//! Run (from `rust/`):
 //! ```bash
 //! cargo run --release --example quickstart
 //! ```

@@ -3,14 +3,19 @@
 //! and Top-1% + BF-P2 — and compare convergence and data volume,
 //! mirroring Fig 7 at small scale.
 //!
+//! Run (from `rust/`; needs `make artifacts` once):
 //! ```bash
-//! make artifacts && cargo run --release --example train_cifar_sim [steps]
+//! cargo run --release --example train_cifar_sim [steps]
 //! ```
 
-use deepreduce::coordinator::{CompressionSpec, ModelKind, TrainConfig, Trainer};
+use deepreduce::coordinator::{CompressionSpec, ModelKind, TrainConfig, TrainReport, Trainer};
 use deepreduce::util::benchkit::Table;
 
-fn run(label: &str, steps: usize, compression: Option<CompressionSpec>) -> anyhow::Result<(String, deepreduce::coordinator::TrainReport)> {
+fn run(
+    label: &str,
+    steps: usize,
+    compression: Option<CompressionSpec>,
+) -> anyhow::Result<(String, TrainReport)> {
     let mut cfg = TrainConfig::new(ModelKind::Mlp, "mlp");
     cfg.workers = 4;
     cfg.steps = steps;
@@ -22,8 +27,7 @@ fn run(label: &str, steps: usize, compression: Option<CompressionSpec>) -> anyho
 }
 
 fn main() -> anyhow::Result<()> {
-    let steps: usize =
-        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(150);
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(150);
 
     let mut runs = Vec::new();
     runs.push(run("baseline (dense fp32)", steps, None)?);

@@ -3,8 +3,9 @@
 //! runs with the identity sparsifier. Compares DR[BF-P2|Fit-Poly],
 //! DR[BF-P0|QSGD] and SKCompress-style DR[delta|sketch], plus baseline.
 //!
+//! Run (from `rust/`; needs `make artifacts` once):
 //! ```bash
-//! make artifacts && cargo run --release --example train_ncf_sim [steps]
+//! cargo run --release --example train_ncf_sim [steps]
 //! ```
 
 use deepreduce::coordinator::{CompressionSpec, ModelKind, TrainConfig, Trainer};
@@ -26,8 +27,7 @@ fn run(
 }
 
 fn main() -> anyhow::Result<()> {
-    let steps: usize =
-        std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(80);
+    let steps: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(80);
 
     let mut runs = Vec::new();
     runs.push(run("baseline (dense fp32)", steps, None)?);

@@ -1,8 +1,84 @@
 //! Hand-rolled CLI argument parsing (clap is unavailable offline).
 //!
 //! Grammar: `deepreduce <subcommand> [--key value]... [--flag]...`
+//!
+//! [`usage`] renders the full help text; a unit test pins every flag
+//! the binary parses to a line in it, so help cannot silently rot.
 
 use std::collections::BTreeMap;
+
+/// Every `--flag` the `deepreduce` binary parses, one per subcommand
+/// group. The guard is two-directional: the help test pins each entry
+/// to a line of [`usage`], and the binary rejects any flag *not* in
+/// this table ([`Args::check_known`]) — so a flag added to `main.rs`
+/// without extending the table errors the first time it is passed,
+/// and extending the table without documenting it fails the test.
+pub const KNOWN_FLAGS: &[&str] = &[
+    // train: run setup
+    "model", "artifact", "workers", "steps", "lr", "optimizer", "seed", "log-every",
+    // train: DeepReduce instantiation
+    "index", "value", "sparsifier", "ratio", "fpr", "value-param", "no-ef",
+    // train: collective schedule + topology
+    "schedule", "topology", "inner-schedule", "intra-mbps", "inter-mbps",
+    // train: gradient pipeline
+    "bucket-bytes", "autotune", "pipeline-link-mbps",
+    // codecs
+    "dim",
+];
+
+/// The full help text (also printed by `deepreduce` with no arguments
+/// and by the `help` subcommand).
+pub fn usage() -> String {
+    "\
+usage: deepreduce <train|smoke|codecs|info|help> [--opts]
+
+train — run distributed training with a DeepReduce instantiation
+  --model <mlp|ncf|transformer>   benchmark family (default mlp)
+  --artifact <name>               artifact under artifacts/ (default per model)
+  --workers <n>                   data-parallel workers (default 4)
+  --steps <n>                     training steps (default 100)
+  --lr <f>                        learning rate (default per model)
+  --optimizer <name>              momentum|adam|... (default per model)
+  --seed <n>                      run seed (default 42)
+  --log-every <k>                 progress line every k steps (0 = silent)
+
+  compression (any of these activates the DeepReduce pipeline):
+  --index <codec>                 index codec: raw|bitmap|rle|huffman|
+                                  delta_varint|elias|bloom_p0|bloom_p1|bloom_p2
+  --value <codec>                 value codec: raw|fp16|deflate|zstd|qsgd|
+                                  fitpoly|fitdexp
+  --sparsifier <name>             topk|randomk|threshold|identity (default topk)
+  --ratio <f>                     sparsifier keep ratio r/d (default 0.01)
+  --fpr <f>                       bloom false-positive rate (default 0.001)
+  --value-param <f>               qsgd bits / fitpoly degree
+  --no-ef                         disable error-feedback memory
+
+  collective schedule + topology:
+  --schedule <name>               gather_all|recursive_double|ring_rescatter|
+                                  ring_rescatter_exact|hierarchical
+  --topology <NxR>                node grid, e.g. 2x4 (N nodes × R ranks;
+                                  implies --schedule hierarchical if unset)
+  --inner-schedule <name>         flat schedule the node leaders run
+                                  (default gather_all)
+  --intra-mbps <f>                modelled intra-node link, Mbps (default 10000)
+  --inter-mbps <f>                modelled inter-node link, Mbps (default 100)
+
+  gradient pipeline:
+  --bucket-bytes <n>              fused bucket cap in bytes (0 = per-tensor)
+  --autotune [on|off]             per-bucket cost-model codec choice
+  --pipeline-link-mbps <f>        modelled link for pipeline step-time metrics
+                                  (default 100)
+
+smoke — load the pallas smoke artifact through PJRT and execute it
+
+codecs — codec volume table on a synthetic sparse gradient
+  --dim <n>                       gradient dimensionality (default 36864)
+  --ratio <f>                     top-r keep ratio (default 0.01)
+
+info — list artifacts and their manifests
+"
+    .to_string()
+}
 
 #[derive(Debug, Default)]
 pub struct Args {
@@ -65,6 +141,19 @@ impl Args {
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    /// Error on any `--key`/`--flag` outside `known` — catches typos
+    /// (`--toplogy` would otherwise be silently ignored) and keeps
+    /// [`KNOWN_FLAGS`]/[`usage`] in sync with what `main.rs` parses.
+    pub fn check_known(&self, known: &[&str]) -> anyhow::Result<()> {
+        for key in self.opts.keys().chain(self.flags.iter()) {
+            anyhow::ensure!(
+                known.contains(&key.as_str()),
+                "unknown flag --{key} (see `deepreduce help`)"
+            );
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -99,5 +188,32 @@ mod tests {
     fn trailing_flag() {
         let a = parse("train --ef");
         assert!(a.flag("ef"));
+    }
+
+    #[test]
+    fn check_known_rejects_typos() {
+        let a = parse("train --workers 4 --toplogy 2x4");
+        assert!(a.check_known(&["workers", "topology"]).is_err());
+        assert!(a.check_known(&["workers", "toplogy"]).is_ok());
+        assert!(parse("train --verbose").check_known(&["workers"]).is_err());
+        assert!(parse("train").check_known(&[]).is_ok());
+    }
+
+    /// Every flag the binary parses must be documented in the help
+    /// text (the regression this guards: adding a CLI knob in main.rs
+    /// and forgetting the usage string).
+    #[test]
+    fn usage_documents_every_parsed_flag() {
+        let text = usage();
+        for flag in KNOWN_FLAGS {
+            assert!(
+                text.contains(&format!("--{flag}")),
+                "help text is missing --{flag}"
+            );
+        }
+        // and every subcommand
+        for sub in ["train", "smoke", "codecs", "info"] {
+            assert!(text.contains(sub), "help text is missing {sub}");
+        }
     }
 }

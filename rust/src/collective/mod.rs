@@ -10,16 +10,25 @@
 //!
 //! The [`sparse`] submodule adds topology-*aware* sparse allreduce
 //! schedules (recursive doubling, ring reduce-scatter with in-flight
-//! re-sparsification) behind the [`sparse::SparseAllreduce`] trait —
-//! see DESIGN.md §5.
+//! re-sparsification, leader-based hierarchical) behind the
+//! [`sparse::SparseAllreduce`] trait — see DESIGN.md §5 and §8.
+//!
+//! The fabric understands a two-level node × rank [`Topology`]: every
+//! send is metered as intra-node or inter-node, so schedules are
+//! compared on the link class that dominates real clusters (the slow
+//! inter-node network). [`Comm`] abstracts the rank-level surface and
+//! [`SubEndpoint`] restricts it to a rank subset, which is how the
+//! hierarchical schedule reuses the flat schedules among node leaders.
 
 mod ops;
 pub mod sparse;
+mod topology;
 mod transport;
 
 pub use ops::{all_gather, all_gather_peers, all_reduce_ring, ps_exchange};
 pub use sparse::{Schedule, SparseAllreduce, SparseConfig};
-pub use transport::{Endpoint, Network};
+pub use topology::Topology;
+pub use transport::{Comm, Endpoint, Network, SubEndpoint};
 
 #[cfg(test)]
 mod tests {

@@ -1,13 +1,17 @@
-//! Collective algorithms over [`Endpoint`]: allgather (variable-size
+//! Collective algorithms over the fabric: allgather (variable-size
 //! payloads), bandwidth-optimal ring allreduce for dense f32 tensors, and
 //! a parameter-server exchange.
+//!
+//! The allgather family is generic over [`Comm`], so it runs equally on
+//! a whole-world [`Endpoint`] or inside a sub-communicator (e.g. the
+//! node-leader group of the hierarchical schedule).
 
-use super::Endpoint;
+use super::{Comm, Endpoint};
 
 /// Allgather: every rank contributes one blob; returns all blobs indexed
 /// by rank. This is the collective used for sparse tensors (Horovod
 /// Allgather, paper §6.4 "Total training runtime").
-pub fn all_gather(ep: &Endpoint, mine: Vec<u8>) -> Vec<Vec<u8>> {
+pub fn all_gather<C: Comm + ?Sized>(ep: &C, mine: Vec<u8>) -> Vec<Vec<u8>> {
     // n−1 clones are irreducible here: every peer needs an owned buffer
     // AND out[me] keeps the original. Callers that do not need their own
     // blob back should use `all_gather_peers` directly, where the final
@@ -22,7 +26,7 @@ pub fn all_gather(ep: &Endpoint, mine: Vec<u8>) -> Vec<Vec<u8>> {
 /// (the sparse schedules merge their local tensor directly): the final
 /// send *moves* `mine`, saving one full-blob copy per rank per step.
 /// `out[rank]` is left empty.
-pub fn all_gather_peers(ep: &Endpoint, mine: Vec<u8>) -> Vec<Vec<u8>> {
+pub fn all_gather_peers<C: Comm + ?Sized>(ep: &C, mine: Vec<u8>) -> Vec<Vec<u8>> {
     let n = ep.world();
     let me = ep.rank();
     let mut out: Vec<Vec<u8>> = vec![Vec::new(); n];
@@ -40,7 +44,7 @@ pub fn all_gather_peers(ep: &Endpoint, mine: Vec<u8>) -> Vec<Vec<u8>> {
     out
 }
 
-fn peers_of(ep: &Endpoint) -> Vec<usize> {
+fn peers_of<C: Comm + ?Sized>(ep: &C) -> Vec<usize> {
     (0..ep.world()).filter(|&p| p != ep.rank()).collect()
 }
 

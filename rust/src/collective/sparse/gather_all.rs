@@ -4,7 +4,7 @@
 //! [`SparseAllreduce`] trait so the better schedules are drop-in.
 
 use super::{merge, SegmentCodec, SparseAllreduce, SparseConfig};
-use crate::collective::{all_gather_peers, Endpoint};
+use crate::collective::{all_gather_peers, Comm};
 use crate::tensor::SparseTensor;
 
 pub struct GatherAll {
@@ -27,7 +27,7 @@ impl SparseAllreduce for GatherAll {
         "gather_all"
     }
 
-    fn allreduce(&self, ep: &Endpoint, input: SparseTensor) -> anyhow::Result<SparseTensor> {
+    fn allreduce(&self, ep: &dyn Comm, input: SparseTensor) -> anyhow::Result<SparseTensor> {
         let n = ep.world();
         if n == 1 {
             return Ok(input);

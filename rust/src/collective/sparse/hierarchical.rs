@@ -1,0 +1,214 @@
+//! `Hierarchical`: leader-based two-level sparse allreduce over a
+//! node × rank [`Topology`] (DESIGN.md §8).
+//!
+//! Real clusters are two-level — fast intra-node links, slow inter-node
+//! links — and SparCML (Renggli et al.) and Ok-Topk (Li et al.) both
+//! place the biggest communication wins there: only one rank per node
+//! should ever talk across the slow boundary, and it should ship the
+//! *node-reduced* gradient once instead of every member's copy. The
+//! schedule runs three phases:
+//!
+//! 1. **intra reduce** — every non-leader sends its whole-tensor
+//!    segment to its node leader, which index-union merges the node's
+//!    contributions (the `merge::merge_sum` kernel).
+//! 2. **inter exchange** — the leaders run a configurable *inner*
+//!    schedule ([`GatherAll`] / [`RecursiveDouble`] / [`RingRescatter`])
+//!    among themselves through a [`SubEndpoint`], exchanging node sums
+//!    over the slow links only.
+//! 3. **intra broadcast** — each leader ships the global sum back to
+//!    its members.
+//!
+//! Every hop speaks the shared segment wire format, so the fabric's
+//! intra/inter byte meters capture exactly what each link class moved;
+//! `crate::simnet::hierarchical_bytes` mirrors the accounting
+//! analytically and is cross-checked against the wire in tests.
+//!
+//! The result is the exact global sum whenever the inner schedule is
+//! exact (any merge order yields the same support, and f32 summation
+//! differences are the usual association noise — the differential tests
+//! in `tests/sparse_allreduce.rs` pin byte-identical results on
+//! integer-valued gradients).
+//!
+//! [`GatherAll`]: super::GatherAll
+//! [`RecursiveDouble`]: super::RecursiveDouble
+//! [`RingRescatter`]: super::RingRescatter
+
+use super::{merge, SegmentCodec, SparseAllreduce};
+use crate::collective::{Comm, SubEndpoint, Topology};
+use crate::tensor::SparseTensor;
+
+pub struct Hierarchical {
+    codec: SegmentCodec,
+    /// `None` = treat the whole world as one node (pure leader
+    /// reduce + broadcast, no inter hop)
+    topo: Option<Topology>,
+    /// schedule run among the node leaders (phase 2)
+    inner: Box<dyn SparseAllreduce>,
+}
+
+impl Hierarchical {
+    /// Compose with a custom segment codec for the intra-node hops.
+    /// `inner` must not itself be hierarchical (the leader group is
+    /// flat by construction).
+    pub fn with_codec(
+        codec: SegmentCodec,
+        topo: Option<Topology>,
+        inner: Box<dyn SparseAllreduce>,
+    ) -> Self {
+        assert_ne!(inner.name(), "hierarchical", "inner schedule must be flat");
+        Self { codec, topo, inner }
+    }
+}
+
+impl SparseAllreduce for Hierarchical {
+    fn name(&self) -> &'static str {
+        "hierarchical"
+    }
+
+    fn exact(&self) -> bool {
+        self.inner.exact()
+    }
+
+    fn allreduce(&self, ep: &dyn Comm, input: SparseTensor) -> anyhow::Result<SparseTensor> {
+        let n = ep.world();
+        if n == 1 {
+            return Ok(input);
+        }
+        let topo = self.topo.unwrap_or_else(|| Topology::flat(n));
+        anyhow::ensure!(
+            topo.world() == n,
+            "topology {} expects {} ranks, world is {n}",
+            topo.label(),
+            topo.world()
+        );
+        let d = input.dense_len();
+        let me = ep.rank();
+        let node = topo.node_of(me);
+        let leader = topo.leader_of(node);
+        let mut acc = input;
+
+        if me != leader {
+            // phase 1 (member side): contribute to the node leader …
+            ep.send(leader, self.codec.encode(&acc, 0, d));
+            // … phase 3 (member side): receive the global sum back
+            return self.codec.decode(d, &ep.recv(leader));
+        }
+
+        // phase 1 (leader side): merge the node's contributions in rank
+        // order — deterministic, so reruns are reproducible
+        for m in topo.members(node) {
+            if m != me {
+                acc = merge::merge_sum(&acc, &self.codec.decode(d, &ep.recv(m))?);
+            }
+        }
+
+        // phase 2: node sums travel the slow links once, via the inner
+        // schedule re-ranked onto the leader group
+        if topo.nodes > 1 {
+            let sub = SubEndpoint::new(ep, topo.leaders());
+            acc = self.inner.allreduce(&sub, acc)?;
+        }
+
+        // phase 3 (leader side): broadcast the result to the node —
+        // encoded once (the payload is identical for every member)
+        if topo.ranks_per_node > 1 {
+            let blob = self.codec.encode(&acc, 0, d);
+            for m in topo.members(node) {
+                if m != me {
+                    ep.send(m, blob.clone());
+                }
+            }
+        }
+        Ok(acc)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::sparse::{Schedule, SparseConfig};
+    use crate::collective::Network;
+    use std::thread;
+
+    fn cfg(topo: Option<Topology>, inner: Schedule) -> SparseConfig {
+        SparseConfig { topology: topo, inner, ..SparseConfig::default() }
+    }
+
+    fn run(cfg: SparseConfig, inputs: Vec<SparseTensor>, topo: Topology) -> Vec<SparseTensor> {
+        let net = Network::with_topology(topo);
+        let handles: Vec<_> = net
+            .endpoints()
+            .into_iter()
+            .zip(inputs)
+            .map(|(ep, t)| {
+                thread::spawn(move || {
+                    Schedule::Hierarchical.build(cfg).allreduce(&ep, t).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    #[test]
+    fn two_by_two_sums_exactly() {
+        let topo = Topology::new(2, 2);
+        let d = 16;
+        let inputs: Vec<SparseTensor> = (0..4)
+            .map(|r| SparseTensor::new(d, vec![r as u32, (r + 4) as u32], vec![1.0, 2.0]))
+            .collect();
+        let outs = run(cfg(Some(topo), Schedule::GatherAll), inputs.clone(), topo);
+        let mut want = vec![0.0f32; d];
+        for t in &inputs {
+            t.add_into(&mut want);
+        }
+        for out in outs {
+            assert_eq!(out.to_dense().data(), want.as_slice());
+        }
+    }
+
+    #[test]
+    fn world_mismatch_is_an_error() {
+        // topology says 2×4 = 8 ranks, fabric has 4: every rank errors
+        // out before touching the network
+        let net = Network::new(4);
+        let ep = net.endpoints().remove(0);
+        let sched = Schedule::Hierarchical
+            .build(cfg(Some(Topology::new(2, 4)), Schedule::GatherAll));
+        let t = SparseTensor::new(8, vec![1], vec![1.0]);
+        assert!(sched.allreduce(&ep, t).is_err());
+    }
+
+    #[test]
+    fn leader_only_traffic_crosses_nodes() {
+        let topo = Topology::new(2, 4);
+        let d = 64;
+        let inputs: Vec<SparseTensor> = (0..8)
+            .map(|r| SparseTensor::new(d, vec![r as u32 * 8], vec![1.0]))
+            .collect();
+        let net = Network::with_topology(topo);
+        let handles: Vec<_> = net
+            .endpoints()
+            .into_iter()
+            .zip(inputs)
+            .map(|(ep, t)| {
+                thread::spawn(move || {
+                    Schedule::Hierarchical
+                        .build(cfg(Some(topo), Schedule::GatherAll))
+                        .allreduce(&ep, t)
+                        .unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        // inter traffic = the two leaders exchanging node sums once:
+        // 2 messages of a 4-entry sparse segment; everything else intra
+        assert!(net.inter_bytes() > 0);
+        assert!(net.intra_bytes() > net.inter_bytes());
+        // exactly 2 inter messages, each one encoded 4-entry node sum
+        let node0 = SparseTensor::new(d, vec![0, 8, 16, 24], vec![1.0; 4]);
+        let one = SegmentCodec::raw(0.5).encode(&node0, 0, d).len() as u64;
+        assert_eq!(net.inter_bytes(), 2 * one);
+    }
+}

@@ -1,10 +1,10 @@
-//! Topology-aware sparse allreduce (DESIGN.md §5).
+//! Topology-aware sparse allreduce (DESIGN.md §5 and §8).
 //!
 //! DeepReduce itself is topology-oblivious (paper §3): the evaluation
 //! ships every rank's compressed blob to every peer (Horovod allgather),
 //! which is O(n·k) per worker. SparCML (Renggli et al.) and Ok-Topk
 //! (Li et al.) show that *schedule-aware* sparse collectives do much
-//! better. This subsystem provides a [`SparseAllreduce`] trait with three
+//! better. This subsystem provides a [`SparseAllreduce`] trait with four
 //! schedules:
 //!
 //! - [`GatherAll`] — the baseline behaviour, refactored in: allgather of
@@ -15,25 +15,63 @@
 //! - [`RingRescatter`] — Ok-Topk-style sparse reduce-scatter over chunk
 //!   ranges, optional re-sparsification of the owned chunk back to
 //!   ~k/n entries, then a ring allgather of the reduced chunks.
+//! - [`Hierarchical`] — leader-based two-level schedule over a
+//!   node × rank [`Topology`]: intra-node reduce to a per-node leader,
+//!   any of the flat schedules among the leaders across the slow
+//!   inter-node links, then intra-node broadcast (DESIGN.md §8).
 //!
 //! All schedules speak the same segment wire format ([`SegmentCodec`]),
 //! which composes with the existing DeepReduce index/value codecs, and
 //! run over the byte-counted in-process fabric ([`super::Network`]), so
 //! every claim about traffic is checked against exact wire bytes (see
 //! `crate::simnet` for the matching α–β cost models).
+//!
+//! # Example
+//!
+//! Summing two ranks' sparse gradients over the in-process fabric:
+//!
+//! ```
+//! use deepreduce::collective::{Network, Schedule, SparseConfig};
+//! use deepreduce::tensor::SparseTensor;
+//!
+//! let net = Network::new(2);
+//! let handles: Vec<_> = net
+//!     .endpoints()
+//!     .into_iter()
+//!     .enumerate()
+//!     .map(|(rank, ep)| {
+//!         std::thread::spawn(move || {
+//!             // rank 0 holds {0: 1.0, 2: 1.0}, rank 1 holds {2: 1.0, 4: 1.0}
+//!             let support = if rank == 0 { vec![0u32, 2] } else { vec![2, 4] };
+//!             let mine = SparseTensor::new(6, support, vec![1.0; 2]);
+//!             let sched = Schedule::GatherAll.build(SparseConfig::default());
+//!             sched.allreduce(&ep, mine).unwrap()
+//!         })
+//!     })
+//!     .collect();
+//! for h in handles {
+//!     let sum = h.join().unwrap();
+//!     assert_eq!(sum.indices(), &[0, 2, 4]);
+//!     assert_eq!(sum.values(), &[1.0, 2.0, 1.0]);
+//! }
+//! // every byte that crossed the fabric was metered
+//! assert!(net.total_bytes() > 0);
+//! ```
 
 mod gather_all;
+mod hierarchical;
 pub mod merge;
 mod recursive_double;
 mod ring_rescatter;
 mod wire;
 
 pub use gather_all::GatherAll;
+pub use hierarchical::Hierarchical;
 pub use recursive_double::RecursiveDouble;
 pub use ring_rescatter::RingRescatter;
 pub use wire::SegmentCodec;
 
-use super::Endpoint;
+use super::{Comm, Topology};
 use crate::tensor::SparseTensor;
 
 /// Largest power of two ≤ n (n ≥ 1). Shared by the recursive-doubling
@@ -53,17 +91,35 @@ pub struct SparseConfig {
     /// allgather phase (RingRescatter only; the Ok-Topk trade: bounded
     /// traffic for a top-k style approximation of the sum).
     pub resparsify: bool,
+    /// Node × rank grid the [`Hierarchical`] schedule reduces over.
+    /// `None` = single node (pure leader reduce + broadcast). Flat
+    /// schedules ignore it — but the fabric still meters intra/inter
+    /// bytes against it when built via `Network::with_topology`.
+    pub topology: Option<Topology>,
+    /// Inter-node schedule the leaders run inside [`Hierarchical`]
+    /// (must be flat; a hierarchical inner falls back to GatherAll).
+    pub inner: Schedule,
 }
 
 impl Default for SparseConfig {
     fn default() -> Self {
-        Self { dense_switch: 0.5, resparsify: true }
+        Self {
+            dense_switch: 0.5,
+            resparsify: true,
+            topology: None,
+            inner: Schedule::GatherAll,
+        }
     }
 }
 
 /// A sparse allreduce schedule: every rank contributes one
 /// [`SparseTensor`] over the same dense domain and receives the global
 /// element-wise sum (exact, unless the schedule re-sparsifies).
+///
+/// Schedules are written against [`Comm`] rather than a concrete
+/// endpoint, so the same implementations run on the whole world or
+/// re-ranked inside a sub-communicator (`super::SubEndpoint`) — which
+/// is exactly how [`Hierarchical`] reuses them for its inter-node hop.
 pub trait SparseAllreduce: Send + Sync {
     fn name(&self) -> &'static str;
 
@@ -72,7 +128,7 @@ pub trait SparseAllreduce: Send + Sync {
         true
     }
 
-    fn allreduce(&self, ep: &Endpoint, input: SparseTensor) -> anyhow::Result<SparseTensor>;
+    fn allreduce(&self, ep: &dyn Comm, input: SparseTensor) -> anyhow::Result<SparseTensor>;
 }
 
 /// Schedule selector — the config/CLI surface of the subsystem.
@@ -84,6 +140,9 @@ pub enum Schedule {
     RingRescatter,
     /// RingRescatter with re-sparsification forced off (exact sum).
     RingRescatterExact,
+    /// Two-level leader schedule over `SparseConfig.topology`, running
+    /// `SparseConfig.inner` among the node leaders.
+    Hierarchical,
 }
 
 impl Schedule {
@@ -93,6 +152,7 @@ impl Schedule {
             "recursive_double" | "recursive_doubling" | "rd" => Schedule::RecursiveDouble,
             "ring_rescatter" | "ring" | "ok_topk" => Schedule::RingRescatter,
             "ring_rescatter_exact" | "ring_exact" => Schedule::RingRescatterExact,
+            "hierarchical" | "hier" | "two_level" => Schedule::Hierarchical,
             _ => return None,
         })
     }
@@ -103,10 +163,24 @@ impl Schedule {
             Schedule::RecursiveDouble => "recursive_double",
             Schedule::RingRescatter => "ring_rescatter",
             Schedule::RingRescatterExact => "ring_rescatter_exact",
+            Schedule::Hierarchical => "hierarchical",
         }
     }
 
-    pub fn all() -> [Schedule; 4] {
+    pub fn all() -> [Schedule; 5] {
+        [
+            Schedule::GatherAll,
+            Schedule::RecursiveDouble,
+            Schedule::RingRescatter,
+            Schedule::RingRescatterExact,
+            Schedule::Hierarchical,
+        ]
+    }
+
+    /// The flat schedules (everything but [`Schedule::Hierarchical`]) —
+    /// the valid inner schedules of the hierarchical one, and the
+    /// baselines its benches compare against.
+    pub fn flat() -> [Schedule; 4] {
         [
             Schedule::GatherAll,
             Schedule::RecursiveDouble,
@@ -127,6 +201,17 @@ impl Schedule {
             Schedule::RecursiveDouble => Box::new(RecursiveDouble::with_codec(codec)),
             Schedule::RingRescatter => Box::new(RingRescatter::with_codec(codec, cfg.resparsify)),
             Schedule::RingRescatterExact => Box::new(RingRescatter::with_codec(codec, false)),
+            Schedule::Hierarchical => {
+                // the leader group is flat by construction; guard against
+                // a recursive inner pick
+                let inner_sched = if cfg.inner == Schedule::Hierarchical {
+                    Schedule::GatherAll
+                } else {
+                    cfg.inner
+                };
+                let inner = inner_sched.build_with(cfg, codec.duplicate());
+                Box::new(Hierarchical::with_codec(codec, cfg.topology, inner))
+            }
         }
     }
 }
@@ -141,6 +226,7 @@ mod tests {
             assert_eq!(Schedule::parse(s.name()), Some(s));
         }
         assert_eq!(Schedule::parse("rd"), Some(Schedule::RecursiveDouble));
+        assert_eq!(Schedule::parse("hier"), Some(Schedule::Hierarchical));
         assert!(Schedule::parse("nope").is_none());
     }
 
@@ -151,5 +237,22 @@ mod tests {
         assert!(Schedule::RecursiveDouble.build(cfg).exact());
         assert!(!Schedule::RingRescatter.build(cfg).exact());
         assert!(Schedule::RingRescatterExact.build(cfg).exact());
+        // hierarchical exactness follows the inner schedule
+        assert!(Schedule::Hierarchical.build(cfg).exact());
+        let lossy = SparseConfig { inner: Schedule::RingRescatter, ..cfg };
+        assert!(!Schedule::Hierarchical.build(lossy).exact());
+    }
+
+    #[test]
+    fn hierarchical_inner_recursion_falls_back_flat() {
+        let cfg = SparseConfig { inner: Schedule::Hierarchical, ..SparseConfig::default() };
+        // must not recurse; the fallback inner (GatherAll) is exact
+        assert!(Schedule::Hierarchical.build(cfg).exact());
+    }
+
+    #[test]
+    fn flat_excludes_hierarchical() {
+        assert!(!Schedule::flat().contains(&Schedule::Hierarchical));
+        assert_eq!(Schedule::flat().len() + 1, Schedule::all().len());
     }
 }

@@ -9,7 +9,7 @@
 //! `p = 2^⌊log₂ n⌋` before doubling and unfold the result after.
 
 use super::{merge, prev_power_of_two, SegmentCodec, SparseAllreduce, SparseConfig};
-use crate::collective::Endpoint;
+use crate::collective::Comm;
 use crate::tensor::SparseTensor;
 
 pub struct RecursiveDouble {
@@ -31,7 +31,7 @@ impl SparseAllreduce for RecursiveDouble {
         "recursive_double"
     }
 
-    fn allreduce(&self, ep: &Endpoint, input: SparseTensor) -> anyhow::Result<SparseTensor> {
+    fn allreduce(&self, ep: &dyn Comm, input: SparseTensor) -> anyhow::Result<SparseTensor> {
         let n = ep.world();
         let me = ep.rank();
         if n == 1 {

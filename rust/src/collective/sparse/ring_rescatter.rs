@@ -16,7 +16,7 @@
 //! the `resparsify: false` variant (`Schedule::RingRescatterExact`).
 
 use super::{merge, SegmentCodec, SparseAllreduce, SparseConfig};
-use crate::collective::Endpoint;
+use crate::collective::Comm;
 use crate::tensor::SparseTensor;
 use crate::util::varint;
 
@@ -48,7 +48,7 @@ impl SparseAllreduce for RingRescatter {
         !self.resparsify
     }
 
-    fn allreduce(&self, ep: &Endpoint, input: SparseTensor) -> anyhow::Result<SparseTensor> {
+    fn allreduce(&self, ep: &dyn Comm, input: SparseTensor) -> anyhow::Result<SparseTensor> {
         let n = ep.world();
         let me = ep.rank();
         if n == 1 {

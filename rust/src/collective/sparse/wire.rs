@@ -80,6 +80,21 @@ impl SegmentCodec {
         Self::new(idx, val, dense_switch)
     }
 
+    /// A fresh codec with the same index/value stages and dense switch.
+    /// Sound because segment codecs only ever carry lossless stages
+    /// (see [`SegmentCodec::lossless_or_raw`]), whose constructors are
+    /// parameter-free — the stateful parameters (Bloom FPR, QSGD bits)
+    /// belong to the lossy codecs that are filtered out. Used by the
+    /// hierarchical schedule to hand its inner schedule an identical
+    /// codec for the inter-node hop.
+    pub fn duplicate(&self) -> Self {
+        Self::new(
+            index_by_name(self.index.name(), f64::NAN, 0).expect("codec name roundtrips"),
+            value_by_name(self.value.name(), f64::NAN, 0).expect("codec name roundtrips"),
+            self.dense_switch,
+        )
+    }
+
     /// Encode the segment `[lo, hi)` of `t`. `t` must already be
     /// restricted to the range (see `merge::slice_range`).
     pub fn encode(&self, t: &SparseTensor, lo: usize, hi: usize) -> Vec<u8> {

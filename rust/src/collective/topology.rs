@@ -1,0 +1,133 @@
+//! Cluster topology: a two-level node × rank grid.
+//!
+//! Real clusters are not flat — ranks on the same node talk over
+//! NVLink/shared memory while ranks on different nodes cross a much
+//! slower network. [`Topology`] describes the grid the fabric and the
+//! hierarchical schedule agree on: `nodes` machines with
+//! `ranks_per_node` workers each, ranks assigned to nodes in contiguous
+//! blocks (rank `r` lives on node `r / ranks_per_node`, the Horovod /
+//! MPI default placement). The first rank of each block is the node's
+//! *leader* in the two-level schedule (`collective::sparse::Hierarchical`).
+//!
+//! Link *speeds* are deliberately not part of this type: the fabric
+//! counts bytes per link class and `crate::simnet` applies separate
+//! intra/inter α–β parameters to them (see `simnet::hierarchical_time`).
+
+/// A two-level node × rank grid. World size is `nodes * ranks_per_node`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Topology {
+    /// number of machines
+    pub nodes: usize,
+    /// workers per machine (uniform)
+    pub ranks_per_node: usize,
+}
+
+impl Topology {
+    pub fn new(nodes: usize, ranks_per_node: usize) -> Self {
+        assert!(nodes >= 1 && ranks_per_node >= 1, "degenerate topology");
+        Self { nodes, ranks_per_node }
+    }
+
+    /// The flat (single-node) topology every rank-only setup implies:
+    /// all traffic is intra-node.
+    pub fn flat(world: usize) -> Self {
+        Self::new(1, world.max(1))
+    }
+
+    /// Parse the CLI `NxR` form (e.g. `2x4` = 2 nodes × 4 ranks each).
+    pub fn parse(s: &str) -> Option<Self> {
+        let (n, r) = s.split_once(['x', 'X'])?;
+        let nodes: usize = n.trim().parse().ok()?;
+        let ranks: usize = r.trim().parse().ok()?;
+        if nodes == 0 || ranks == 0 {
+            return None;
+        }
+        Some(Self::new(nodes, ranks))
+    }
+
+    /// Total rank count.
+    pub fn world(&self) -> usize {
+        self.nodes * self.ranks_per_node
+    }
+
+    /// Node hosting `rank` (contiguous block placement).
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.ranks_per_node
+    }
+
+    /// The leader rank of `node`: the first rank in its block.
+    pub fn leader_of(&self, node: usize) -> usize {
+        node * self.ranks_per_node
+    }
+
+    pub fn is_leader(&self, rank: usize) -> bool {
+        rank % self.ranks_per_node == 0
+    }
+
+    /// All ranks of `node` in ascending order (leader first).
+    pub fn members(&self, node: usize) -> std::ops::Range<usize> {
+        let lo = node * self.ranks_per_node;
+        lo..lo + self.ranks_per_node
+    }
+
+    /// All leader ranks in node order — the inter-node sub-communicator.
+    pub fn leaders(&self) -> Vec<usize> {
+        (0..self.nodes).map(|m| self.leader_of(m)).collect()
+    }
+
+    /// Whether a `src → dst` transfer stays inside one node.
+    pub fn is_intra(&self, src: usize, dst: usize) -> bool {
+        self.node_of(src) == self.node_of(dst)
+    }
+
+    /// The canonical CLI spelling (`NxR`).
+    pub fn label(&self) -> String {
+        format!("{}x{}", self.nodes, self.ranks_per_node)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_and_rejects() {
+        let t = Topology::parse("2x4").unwrap();
+        assert_eq!(t, Topology::new(2, 4));
+        assert_eq!(t.label(), "2x4");
+        assert_eq!(Topology::parse(&t.label()), Some(t));
+        assert_eq!(Topology::parse("3X3"), Some(Topology::new(3, 3)));
+        for bad in ["", "8", "0x4", "2x0", "2x", "x4", "axb", "2x4x2"] {
+            assert!(Topology::parse(bad).is_none(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn block_placement() {
+        let t = Topology::new(3, 4);
+        assert_eq!(t.world(), 12);
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(3), 0);
+        assert_eq!(t.node_of(4), 1);
+        assert_eq!(t.node_of(11), 2);
+        assert_eq!(t.leader_of(2), 8);
+        assert!(t.is_leader(0) && t.is_leader(4) && t.is_leader(8));
+        assert!(!t.is_leader(1) && !t.is_leader(7));
+        assert_eq!(t.members(1).collect::<Vec<_>>(), vec![4, 5, 6, 7]);
+        assert_eq!(t.leaders(), vec![0, 4, 8]);
+        assert!(t.is_intra(4, 7));
+        assert!(!t.is_intra(3, 4));
+    }
+
+    #[test]
+    fn flat_is_all_intra() {
+        let t = Topology::flat(6);
+        assert_eq!(t.world(), 6);
+        assert_eq!(t.leaders(), vec![0]);
+        for a in 0..6 {
+            for b in 0..6 {
+                assert!(t.is_intra(a, b));
+            }
+        }
+    }
+}

@@ -1,23 +1,70 @@
 //! In-process transport: N ranks, a blocking channel per ordered pair,
 //! and exact byte accounting. Stands in for NCCL/Gloo point-to-point
 //! (DESIGN.md §4 substitution table).
+//!
+//! The fabric knows the cluster [`Topology`]: every send is classified
+//! as intra-node or inter-node and metered on a separate counter, so
+//! schedules can be compared on the traffic class that actually hurts
+//! (the slow inter-node links — DESIGN.md §8). `Network::new` is the
+//! flat single-node special case where everything is intra.
+//!
+//! [`Comm`] is the rank-level communication surface the collective
+//! algorithms are written against; [`SubEndpoint`] restricts it to a
+//! subset of ranks (e.g. the node leaders) so any schedule can run
+//! unchanged inside a sub-communicator.
 
+use super::Topology;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
 
+/// Point-to-point communication surface of one rank. Implemented by
+/// [`Endpoint`] (the fabric handle) and [`SubEndpoint`] (a re-ranked
+/// view onto a subset of the world, used for the inter-node leader
+/// group of the hierarchical schedule).
+///
+/// Deliberately not `Send`/`Sync`: an endpoint belongs to exactly one
+/// worker thread (the fabric's receivers are single-consumer), and the
+/// collectives only ever use it from that thread.
+pub trait Comm {
+    /// This rank's id in `[0, world)`.
+    fn rank(&self) -> usize;
+
+    /// Number of ranks in this communicator.
+    fn world(&self) -> usize;
+
+    /// Blocking point-to-point send (never blocks on the in-process
+    /// fabric: channels are unbounded).
+    fn send(&self, dst: usize, payload: Vec<u8>);
+
+    /// Blocking receive from a specific source rank.
+    fn recv(&self, src: usize) -> Vec<u8>;
+}
+
 /// The fabric: construct once, hand one [`Endpoint`] to each worker
 /// thread.
 pub struct Network {
-    n: usize,
+    topo: Topology,
     endpoints: std::sync::Mutex<Vec<Endpoint>>,
     bytes: Arc<AtomicU64>,
+    intra: Arc<AtomicU64>,
+    inter: Arc<AtomicU64>,
 }
 
 impl Network {
+    /// Flat fabric: one node, `n` ranks — all traffic is intra-node.
     pub fn new(n: usize) -> Self {
+        Self::with_topology(Topology::flat(n))
+    }
+
+    /// Fabric over a two-level node × rank grid: sends crossing a node
+    /// boundary are metered on the inter-node counter.
+    pub fn with_topology(topo: Topology) -> Self {
+        let n = topo.world();
         assert!(n >= 1);
         let bytes = Arc::new(AtomicU64::new(0));
+        let intra = Arc::new(AtomicU64::new(0));
+        let inter = Arc::new(AtomicU64::new(0));
         // txs[dst][src], rxs[dst][src]
         let mut txs: Vec<Vec<Option<Sender<Vec<u8>>>>> = (0..n)
             .map(|_| (0..n).map(|_| None).collect())
@@ -40,13 +87,27 @@ impl Network {
                 (0..n).map(|dst| txs[dst][rank].clone().unwrap()).collect();
             let from: Vec<Receiver<Vec<u8>>> =
                 (0..n).map(|src| rxs_iter[rank][src].take().unwrap()).collect();
-            endpoints.push(Endpoint { rank, n, to, from, bytes: Arc::clone(&bytes) });
+            endpoints.push(Endpoint {
+                rank,
+                n,
+                topo,
+                to,
+                from,
+                bytes: Arc::clone(&bytes),
+                intra: Arc::clone(&intra),
+                inter: Arc::clone(&inter),
+            });
         }
-        Self { n, endpoints: std::sync::Mutex::new(endpoints), bytes }
+        Self { topo, endpoints: std::sync::Mutex::new(endpoints), bytes, intra, inter }
     }
 
     pub fn n(&self) -> usize {
-        self.n
+        self.topo.world()
+    }
+
+    /// The grid this fabric classifies links against.
+    pub fn topology(&self) -> Topology {
+        self.topo
     }
 
     /// Take all endpoints (once). Ordered by rank.
@@ -59,8 +120,22 @@ impl Network {
         self.bytes.load(Ordering::Relaxed)
     }
 
+    /// Bytes that stayed inside a node (always `total_bytes` on a flat
+    /// fabric).
+    pub fn intra_bytes(&self) -> u64 {
+        self.intra.load(Ordering::Relaxed)
+    }
+
+    /// Bytes that crossed a node boundary — the slow-link traffic the
+    /// hierarchical schedule minimizes.
+    pub fn inter_bytes(&self) -> u64 {
+        self.inter.load(Ordering::Relaxed)
+    }
+
     pub fn reset_bytes(&self) {
         self.bytes.store(0, Ordering::Relaxed);
+        self.intra.store(0, Ordering::Relaxed);
+        self.inter.store(0, Ordering::Relaxed);
     }
 }
 
@@ -68,9 +143,12 @@ impl Network {
 pub struct Endpoint {
     rank: usize,
     n: usize,
+    topo: Topology,
     to: Vec<Sender<Vec<u8>>>,
     from: Vec<Receiver<Vec<u8>>>,
     bytes: Arc<AtomicU64>,
+    intra: Arc<AtomicU64>,
+    inter: Arc<AtomicU64>,
 }
 
 impl Endpoint {
@@ -82,10 +160,20 @@ impl Endpoint {
         self.n
     }
 
+    /// The grid this endpoint's fabric was built with.
+    pub fn topology(&self) -> Topology {
+        self.topo
+    }
+
     /// Blocking point-to-point send.
     pub fn send(&self, dst: usize, payload: Vec<u8>) {
         assert_ne!(dst, self.rank, "self-send not allowed");
         self.bytes.fetch_add(payload.len() as u64, Ordering::Relaxed);
+        if self.topo.is_intra(self.rank, dst) {
+            self.intra.fetch_add(payload.len() as u64, Ordering::Relaxed);
+        } else {
+            self.inter.fetch_add(payload.len() as u64, Ordering::Relaxed);
+        }
         self.to[dst].send(payload).expect("peer hung up");
     }
 
@@ -98,6 +186,68 @@ impl Endpoint {
     /// Bytes sent across the whole fabric (shared counter).
     pub fn fabric_bytes(&self) -> u64 {
         self.bytes.load(Ordering::Relaxed)
+    }
+}
+
+impl Comm for Endpoint {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.n
+    }
+
+    fn send(&self, dst: usize, payload: Vec<u8>) {
+        Endpoint::send(self, dst, payload)
+    }
+
+    fn recv(&self, src: usize) -> Vec<u8> {
+        Endpoint::recv(self, src)
+    }
+}
+
+/// A communicator over a subset of another communicator's ranks: member
+/// `j` of `members` becomes sub-rank `j`. Sends/receives are forwarded
+/// to the parent after translating ranks, so any collective algorithm
+/// written against [`Comm`] runs unchanged inside the group (the
+/// hierarchical schedule runs its inner schedule among node leaders
+/// this way).
+pub struct SubEndpoint<'a> {
+    parent: &'a dyn Comm,
+    /// global ranks of the group, in sub-rank order
+    members: Vec<usize>,
+    /// this rank's position in `members`
+    me: usize,
+}
+
+impl<'a> SubEndpoint<'a> {
+    /// `members` lists the global ranks of the group (must contain the
+    /// parent's own rank exactly once).
+    pub fn new(parent: &'a dyn Comm, members: Vec<usize>) -> Self {
+        let me = members
+            .iter()
+            .position(|&g| g == parent.rank())
+            .expect("own rank not in sub-communicator");
+        Self { parent, members, me }
+    }
+}
+
+impl Comm for SubEndpoint<'_> {
+    fn rank(&self) -> usize {
+        self.me
+    }
+
+    fn world(&self) -> usize {
+        self.members.len()
+    }
+
+    fn send(&self, dst: usize, payload: Vec<u8>) {
+        self.parent.send(self.members[dst], payload)
+    }
+
+    fn recv(&self, src: usize) -> Vec<u8> {
+        self.parent.recv(self.members[src])
     }
 }
 
@@ -142,5 +292,74 @@ mod tests {
         });
         assert_eq!(t1.join().unwrap().len(), 1 << 16);
         assert_eq!(t2.join().unwrap().len(), 1 << 16);
+    }
+
+    #[test]
+    fn link_classes_metered_separately() {
+        // 2 nodes × 2 ranks: 0,1 on node 0; 2,3 on node 1
+        let net = Network::with_topology(Topology::new(2, 2));
+        let mut eps = net.endpoints();
+        let d = eps.pop().unwrap(); // rank 3
+        let c = eps.pop().unwrap(); // rank 2
+        let b = eps.pop().unwrap(); // rank 1
+        let a = eps.pop().unwrap(); // rank 0
+        let t = thread::spawn(move || {
+            a.send(1, vec![0; 10]); // intra (node 0)
+            a.send(2, vec![0; 100]); // inter
+            a.send(3, vec![0; 1000]); // inter
+        });
+        let t2 = thread::spawn(move || {
+            d.send(2, vec![0; 7]); // intra (node 1)
+            d.recv(0)
+        });
+        assert_eq!(b.recv(0).len(), 10);
+        assert_eq!(c.recv(0).len(), 100);
+        assert_eq!(c.recv(3).len(), 7);
+        t.join().unwrap();
+        t2.join().unwrap();
+        assert_eq!(net.intra_bytes(), 17);
+        assert_eq!(net.inter_bytes(), 1100);
+        assert_eq!(net.total_bytes(), 1117);
+        net.reset_bytes();
+        assert_eq!(net.intra_bytes() + net.inter_bytes() + net.total_bytes(), 0);
+    }
+
+    #[test]
+    fn flat_fabric_is_all_intra() {
+        let net = Network::new(2);
+        let mut eps = net.endpoints();
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        let t = thread::spawn(move || a.send(1, vec![0; 42]));
+        assert_eq!(b.recv(0).len(), 42);
+        t.join().unwrap();
+        assert_eq!(net.intra_bytes(), 42);
+        assert_eq!(net.inter_bytes(), 0);
+    }
+
+    #[test]
+    fn sub_endpoint_translates_ranks() {
+        // leaders {0, 2} of a 2×2 grid talk through a sub-communicator
+        let net = Network::with_topology(Topology::new(2, 2));
+        let mut eps = net.endpoints();
+        eps.pop(); // rank 3 unused
+        let c = eps.pop().unwrap(); // rank 2
+        eps.pop(); // rank 1 unused
+        let a = eps.pop().unwrap(); // rank 0
+        let t = thread::spawn(move || {
+            let sub = SubEndpoint::new(&a, vec![0, 2]);
+            assert_eq!(sub.rank(), 0);
+            assert_eq!(sub.world(), 2);
+            sub.send(1, vec![9; 5]); // sub-rank 1 = global rank 2
+            sub.recv(1)
+        });
+        let sub = SubEndpoint::new(&c, vec![0, 2]);
+        assert_eq!(sub.rank(), 1);
+        assert_eq!(sub.recv(0), vec![9; 5]);
+        sub.send(0, vec![7; 3]);
+        assert_eq!(t.join().unwrap(), vec![7; 3]);
+        // leader traffic crosses nodes: all inter
+        assert_eq!(net.inter_bytes(), 8);
+        assert_eq!(net.intra_bytes(), 0);
     }
 }

@@ -2,6 +2,28 @@
 //! support-set representations (integer array / bitmap) and the codecs
 //! over them — raw keys, bitmap, bit-level RLE, Huffman over index byte
 //! planes, delta+varint, and the Bloom-filter family (§4).
+//!
+//! Codecs are built by name through
+//! [`index_by_name`](crate::compress::index_by_name) and implement
+//! [`IndexCodec`](crate::compress::IndexCodec); lossless ones
+//! roundtrip the support exactly:
+//!
+//! ```
+//! use deepreduce::compress::index_by_name;
+//!
+//! let codec = index_by_name("delta_varint", f64::NAN, 0).unwrap();
+//! let support = vec![3u32, 17, 18, 900];
+//! let enc = codec.encode(1000, &support);
+//! assert_eq!(enc.effective, support); // lossless: S̃ = S
+//! assert_eq!(codec.decode(1000, &enc.bytes).unwrap(), support);
+//! // clustered supports beat the 4 B/entry raw encoding
+//! assert!(enc.bytes.len() < support.len() * 4);
+//! ```
+//!
+//! The Bloom family is deliberately lossy in the support
+//! (`lossless() == false`): decoding reconstructs a superset/subset S̃
+//! chosen by the policy (P0/P1/P2), which is why the collective
+//! segment codec refuses them (`collective::sparse::SegmentCodec`).
 
 mod bloom;
 mod plain;

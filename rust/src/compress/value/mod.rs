@@ -1,6 +1,23 @@
 //! Value-compression module (paper §3/§5): raw/fp16 casts, general
 //! entropy coders (Deflate, Zstd), QSGD quantization, and the novel
 //! curve-fitting compressors (Fit-Poly, Fit-DExp).
+//!
+//! Codecs are built by name through
+//! [`value_by_name`](crate::compress::value_by_name) and implement
+//! [`ValueCodec`](crate::compress::ValueCodec). Lossless codecs
+//! roundtrip bit-exactly; sorting codecs (the curve fits) additionally
+//! return the reorder permutation the container transmits (paper §5.1):
+//!
+//! ```
+//! use deepreduce::compress::value_by_name;
+//!
+//! let raw = value_by_name("raw", f64::NAN, 0).unwrap();
+//! let values = vec![0.5f32, -2.0, 0.25];
+//! let enc = raw.encode(&values);
+//! assert!(enc.perm.is_none()); // raw keeps wire order
+//! assert_eq!(raw.decode(&enc.bytes, values.len()).unwrap(), values);
+//! assert_eq!(enc.bytes.len(), values.len() * 4);
+//! ```
 
 mod fit;
 mod general;

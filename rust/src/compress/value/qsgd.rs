@@ -7,7 +7,7 @@
 //!   `level = floor(|v|/max * s + u)`, u ~ U[0,1)
 //! The wire carries the bucket max (f32), then per value a sign bit and
 //! the level in Elias-gamma (level+1, since gamma needs v ≥ 1).
-//! Unbiased: E[decode] = value.
+//! Unbiased: `E[decode] = value`.
 
 use crate::compress::{ValueCodec, ValueEncoding};
 use crate::util::bitio::{BitReader, BitWriter};

@@ -15,6 +15,12 @@ pub struct StepMetrics {
     /// exact fabric traffic of the collective exchange this step, summed
     /// over all workers (0 unless a topology-aware schedule ran)
     pub fabric_bytes: u64,
+    /// portion of `fabric_bytes` that stayed inside a node (equals
+    /// `fabric_bytes` on a flat fabric; split per the `--topology` grid)
+    pub intra_bytes: u64,
+    /// portion of `fabric_bytes` that crossed a node boundary — the
+    /// slow-link traffic the hierarchical schedule minimizes
+    pub inter_bytes: u64,
     /// uncompressed dense gradient bytes (baseline volume)
     pub dense_bytes: u64,
     pub encode_s: f64,
@@ -68,6 +74,15 @@ impl TrainReport {
         self.steps.iter().map(|s| s.fabric_bytes).sum()
     }
 
+    /// Fabric traffic split by link class over the run:
+    /// `(intra_node, inter_node)` bytes.
+    pub fn total_link_bytes(&self) -> (u64, u64) {
+        (
+            self.steps.iter().map(|s| s.intra_bytes).sum(),
+            self.steps.iter().map(|s| s.inter_bytes).sum(),
+        )
+    }
+
     /// Volume relative to the no-compression baseline (the y-axis of
     /// Fig 6/9/15 and Table 2).
     pub fn relative_volume(&self) -> f64 {
@@ -118,6 +133,8 @@ impl TrainReport {
                 m.insert("aux".into(), Json::Num(s.aux as f64));
                 m.insert("bytes".into(), Json::Num(s.bytes_per_worker as f64));
                 m.insert("fabric_bytes".into(), Json::Num(s.fabric_bytes as f64));
+                m.insert("intra_bytes".into(), Json::Num(s.intra_bytes as f64));
+                m.insert("inter_bytes".into(), Json::Num(s.inter_bytes as f64));
                 m.insert("dense_bytes".into(), Json::Num(s.dense_bytes as f64));
                 m.insert("encode_s".into(), Json::Num(s.encode_s));
                 m.insert("decode_s".into(), Json::Num(s.decode_s));
@@ -156,7 +173,9 @@ mod tests {
                     loss: 10.0 - i as f32,
                     aux: i as f32 / 10.0,
                     bytes_per_worker: 100,
-                    fabric_bytes: 0,
+                    fabric_bytes: 30,
+                    intra_bytes: 20,
+                    inter_bytes: 10,
                     dense_bytes: 1000,
                     encode_s: 0.01,
                     decode_s: 0.02,
@@ -176,6 +195,8 @@ mod tests {
         assert_eq!(r.final_loss(), 1.0);
         assert!((r.final_aux(3) - 0.8).abs() < 1e-6);
         assert_eq!(r.total_bytes_per_worker(), 1000);
+        assert_eq!(r.total_fabric_bytes(), 300);
+        assert_eq!(r.total_link_bytes(), (200, 100));
         assert!((r.relative_volume() - 0.1).abs() < 1e-9);
         assert!((r.total_encode_s() - 0.1).abs() < 1e-9);
         assert_eq!(r.distinct_autotune_choices(), vec!["elias|raw", "raw|raw"]);

@@ -2,7 +2,7 @@
 
 use super::metrics::{StepMetrics, TrainReport};
 use crate::collective::sparse::SegmentCodec;
-use crate::collective::{Network, Schedule, SparseConfig};
+use crate::collective::{Network, Schedule, SparseConfig, Topology};
 use crate::pipeline::{unfuse, Bucket, GradientPipeline, StepTimeline};
 use crate::runtime::{Artifact, BatchInput};
 use crate::sparsify::{self, ErrorFeedback, Sparsifier};
@@ -55,6 +55,20 @@ pub struct CompressionSpec {
     /// feeding it back (the Ok-Topk approximation); use
     /// `ring_rescatter_exact` when exact sums matter
     pub schedule: String,
+    /// node × rank grid in `NxR` form (CLI `--topology`, e.g. `2x4`);
+    /// empty = flat. When set, the fabric meters intra vs inter bytes
+    /// for *every* schedule, and `hierarchical` reduces over the grid.
+    /// `nodes * ranks_per_node` must equal `workers`
+    pub topology: String,
+    /// inter-node schedule the hierarchical leaders run (CLI
+    /// `--inner-schedule`; any flat schedule name, default `gather_all`)
+    pub inner_schedule: String,
+    /// modelled intra-node link bandwidth, Mbps (CLI `--intra-mbps`;
+    /// fast by default — node-local interconnects)
+    pub intra_mbps: f64,
+    /// modelled inter-node link bandwidth, Mbps (CLI `--inter-mbps`;
+    /// the paper's 100 Mbps default — the slow boundary)
+    pub inter_mbps: f64,
     /// gradient-pipeline bucket cap in bytes (fp32 elements × 4): the
     /// per-step tensor list is fused greedily into buckets of at most
     /// this size, each travelling as one sparse segment stream. 0 = one
@@ -84,6 +98,10 @@ impl CompressionSpec {
             error_feedback: true,
             min_compress: 1024,
             schedule: "gather_all".into(),
+            topology: String::new(),
+            inner_schedule: "gather_all".into(),
+            intra_mbps: 10_000.0,
+            inter_mbps: 100.0,
             bucket_bytes: 0,
             autotune: false,
             pipeline_link_mbps: 100.0,
@@ -179,11 +197,16 @@ pub struct Trainer {
     /// drives instead of a per-tensor codec loop
     pipeline: Option<GradientPipeline>,
     threelc: Option<crate::baselines::ThreeLC>,
-    /// ef[worker][tensor]
+    /// `ef[worker][tensor]`
     ef: Vec<Vec<ErrorFeedback>>,
     /// Some(_) whenever compression is on: the sparse allreduce schedule
     /// that runs the gradient exchange over the in-process fabric
     collective_schedule: Option<Schedule>,
+    /// parsed `CompressionSpec.topology` (None = flat fabric)
+    topology: Option<Topology>,
+    /// schedule tuning handed to every collective build (carries the
+    /// grid and the hierarchical inner schedule)
+    sparse_cfg: SparseConfig,
 }
 
 impl Trainer {
@@ -234,7 +257,37 @@ impl Trainer {
             })?),
             None => None,
         };
-        let (sparsifiers, pipeline, ef) = match &cfg.compression {
+        // the two-level grid: validated against the worker count, fed to
+        // the fabric (per-class byte meters) and to every schedule build
+        let (topology, sparse_cfg) = match &cfg.compression {
+            Some(spec) => {
+                let topo = if spec.topology.is_empty() {
+                    None
+                } else {
+                    let t = Topology::parse(&spec.topology).ok_or_else(|| {
+                        anyhow::anyhow!("bad topology {:?}, expected NxR (e.g. 2x4)", spec.topology)
+                    })?;
+                    anyhow::ensure!(
+                        t.world() == cfg.workers,
+                        "topology {} describes {} ranks but --workers is {}",
+                        t.label(),
+                        t.world(),
+                        cfg.workers
+                    );
+                    Some(t)
+                };
+                let inner = Schedule::parse(&spec.inner_schedule).ok_or_else(|| {
+                    anyhow::anyhow!("unknown inner schedule {}", spec.inner_schedule)
+                })?;
+                anyhow::ensure!(
+                    inner != Schedule::Hierarchical,
+                    "--inner-schedule must be a flat schedule"
+                );
+                (topo, SparseConfig { topology: topo, inner, ..SparseConfig::default() })
+            }
+            None => (None, SparseConfig::default()),
+        };
+        let (sparsifiers, mut pipeline, ef) = match &cfg.compression {
             None if threelc.is_some() => (Vec::new(), None, ef_all(&params)),
             None => (Vec::new(), None, Vec::new()),
             Some(spec) => {
@@ -270,6 +323,17 @@ impl Trainer {
                 (sp, Some(pipeline), ef)
             }
         };
+        if let (Some(pipe), Some(topo), Some(spec)) =
+            (pipeline.as_mut(), topology, cfg.compression.as_ref())
+        {
+            // per-hop codec advice for the two-level exchange (only
+            // surfaces when autotuning is on)
+            pipe.set_hierarchy(
+                topo,
+                crate::simnet::Link::mbps(spec.intra_mbps),
+                crate::simnet::Link::mbps(spec.inter_mbps),
+            );
+        }
         Ok(Self {
             cfg,
             artifact,
@@ -281,6 +345,8 @@ impl Trainer {
             threelc,
             ef,
             collective_schedule,
+            topology,
+            sparse_cfg,
         })
     }
 
@@ -404,6 +470,20 @@ impl Trainer {
                         if !metrics.autotune_choices.contains(&enc.choice_label) {
                             metrics.autotune_choices.push(enc.choice_label.clone());
                         }
+                        // per-hop advice on a two-level grid, reported
+                        // alongside the container pick (inter only when
+                        // the grid actually has inter-node links)
+                        if let Some((leader, inter)) = &enc.hier_choices {
+                            let mut labels = vec![format!("intra:{leader}")];
+                            if let Some(inter) = inter {
+                                labels.push(format!("inter:{inter}"));
+                            }
+                            for lbl in labels {
+                                if !metrics.autotune_choices.contains(&lbl) {
+                                    metrics.autotune_choices.push(lbl);
+                                }
+                            }
+                        }
                         if spec.error_feedback {
                             // residual vs what was actually reconstructed
                             let dec_parts = unfuse(bucket, &enc.decoded);
@@ -459,8 +539,14 @@ impl Trainer {
                 let spec = self.cfg.compression.as_ref().expect("schedule implies compression");
                 // one fabric + one thread per worker for the whole step;
                 // each worker runs the per-tensor collectives in order, so
-                // messages stay matched on the pairwise FIFO channels
-                let net = Network::new(n);
+                // messages stay matched on the pairwise FIFO channels.
+                // The fabric carries the node × rank grid so every byte
+                // is metered per link class (intra vs inter)
+                let net = match self.topology {
+                    Some(topo) => Network::with_topology(topo),
+                    None => Network::new(n),
+                };
+                let sparse_cfg = self.sparse_cfg;
                 let handles: Vec<_> = net
                     .endpoints()
                     .into_iter()
@@ -474,10 +560,10 @@ impl Trainer {
                             &spec.value,
                             spec.value_param,
                             spec.seed,
-                            SparseConfig::default().dense_switch,
+                            sparse_cfg.dense_switch,
                         );
                         std::thread::spawn(move || -> Vec<SparseTensor> {
-                            let sr = sched.build_with(SparseConfig::default(), codec);
+                            let sr = sched.build_with(sparse_cfg, codec);
                             // a failed rank panics; dropping its endpoint
                             // unblocks every peer ("peer hung up"), so no
                             // thread is leaked or deadlocked
@@ -517,8 +603,10 @@ impl Trainer {
                     }
                 }
                 // exact fabric traffic of this step's gradient exchange,
-                // summed over all workers
+                // summed over all workers and split by link class
                 metrics.fabric_bytes += net.total_bytes();
+                metrics.intra_bytes += net.intra_bytes();
+                metrics.inter_bytes += net.inter_bytes();
             }
         }
         // bytes_per_worker accumulated across workers -> average

@@ -1,11 +1,46 @@
 //! DeepReduce: a sparse-tensor communication framework for distributed
 //! deep learning — Rust + JAX + Pallas reproduction.
 //!
-//! See DESIGN.md for the architecture and the per-experiment index.
+//! The paper decomposes a sparse gradient into an index set and a value
+//! array, compresses each with pluggable codecs, and ships the result
+//! through the collective exchange of a data-parallel trainer. This
+//! crate reproduces that framework end to end on a single-machine
+//! testbed with exact wire-byte accounting (see `DESIGN.md` for the
+//! architecture and the per-experiment index; the top-level `README.md`
+//! has the quickstart).
+//!
+//! # Module map
+//!
+//! Gradient path, in data-flow order:
+//!
+//! - [`sparsify`] — Top-r / Random-r / threshold sparsifiers plus the
+//!   error-feedback memory.
+//! - [`compress`] — the DeepReduce codec framework: [`compress::index`]
+//!   codecs × [`compress::value`] codecs packed into self-describing
+//!   containers.
+//! - [`pipeline`] — bucket fusion, per-bucket codec autotuning, and
+//!   encode/transfer overlap accounting.
+//! - [`collective`] — the byte-counted in-process fabric, the sparse
+//!   allreduce schedules ([`collective::sparse`]), and the two-level
+//!   node × rank [`collective::Topology`].
+//! - [`coordinator`] — the data-parallel trainer and its metrics.
+//!
+//! Supporting layers:
+//!
+//! - [`runtime`] — loads AOT-compiled JAX/Pallas artifacts through the
+//!   PJRT CPU client (the only model interface at train time).
+//! - [`simnet`] — α–β network-time models applied to exact wire bytes,
+//!   including the two-link-class hierarchical models.
+//! - [`data`] — deterministic synthetic shards (CIFAR / NCF / corpus
+//!   stand-ins).
+//! - [`tensor`], [`linalg`], [`optim`], [`util`] — dense/sparse tensors,
+//!   fitting kernels, optimizers, and offline-friendly utilities.
+//! - [`baselines`] — 3LC / SketchML / SKCompress comparison codecs.
+//! - [`cli`], [`xp`] — argument parsing + experiment harness glue.
 
 pub mod baselines;
-pub mod collective;
 pub mod cli;
+pub mod collective;
 pub mod compress;
 pub mod coordinator;
 pub mod data;

@@ -5,6 +5,7 @@
 //!   smoke   — load the pallas smoke artifact through PJRT and execute it
 //!   codecs  — quick codec volume table on a synthetic sparse gradient
 //!   info    — list artifacts and their manifests
+//!   help    — print the full flag reference (`cli::usage`)
 
 use deepreduce::cli::Args;
 use deepreduce::compress::{index_by_name, value_by_name, DeepReduce};
@@ -18,7 +19,7 @@ use deepreduce::util::testkit::gradient_like;
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     if argv.is_empty() {
-        eprintln!("usage: deepreduce <train|smoke|codecs|info> [--opts]");
+        eprint!("{}", deepreduce::cli::usage());
         std::process::exit(2);
     }
     let args = match Args::parse(argv) {
@@ -28,13 +29,24 @@ fn main() {
             std::process::exit(2);
         }
     };
+    // reject unrecognized flags up front: a typo like --toplogy must not
+    // silently fall back to defaults
+    if let Err(e) = args.check_known(deepreduce::cli::KNOWN_FLAGS) {
+        eprintln!("argument error: {e}");
+        std::process::exit(2);
+    }
     let result = match args.subcommand.as_str() {
         "train" => cmd_train(&args),
         "smoke" => cmd_smoke(),
         "codecs" => cmd_codecs(&args),
         "info" => cmd_info(),
+        "help" => {
+            print!("{}", deepreduce::cli::usage());
+            Ok(())
+        }
         other => {
             eprintln!("unknown subcommand {other}");
+            eprint!("{}", deepreduce::cli::usage());
             std::process::exit(2);
         }
     };
@@ -65,9 +77,13 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.log_every = args.get_usize("log-every", 10)?;
     let index = args.get_or("index", "");
     let value = args.get_or("value", "");
-    // --schedule alone activates the compression pipeline (raw/raw) so the
-    // flag is never silently ignored
-    if !index.is_empty() || !value.is_empty() || args.get("schedule").is_some() {
+    // --schedule or --topology alone activates the compression pipeline
+    // (raw/raw) so neither flag is ever silently ignored
+    if !index.is_empty()
+        || !value.is_empty()
+        || args.get("schedule").is_some()
+        || args.get("topology").is_some()
+    {
         let idx = if index.is_empty() { "raw".to_string() } else { index };
         let val = if value.is_empty() { "raw".to_string() } else { value };
         let mut spec = if args.get_or("sparsifier", "topk") == "identity" {
@@ -89,8 +105,18 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         spec.sparsifier = args.get_or("sparsifier", &spec.sparsifier);
         spec.error_feedback = !args.flag("no-ef");
         // sparse allreduce schedule: gather_all (default) | recursive_double
-        // | ring_rescatter | ring_rescatter_exact
+        // | ring_rescatter | ring_rescatter_exact | hierarchical
         spec.schedule = args.get_or("schedule", &spec.schedule);
+        // two-level node × rank grid: --topology NxR meters intra vs
+        // inter bytes for any schedule, and (when --schedule is not
+        // given) switches to the hierarchical schedule that exploits it
+        spec.topology = args.get_or("topology", &spec.topology);
+        if !spec.topology.is_empty() && args.get("schedule").is_none() {
+            spec.schedule = "hierarchical".into();
+        }
+        spec.inner_schedule = args.get_or("inner-schedule", &spec.inner_schedule);
+        spec.intra_mbps = args.get_f64("intra-mbps", spec.intra_mbps)?;
+        spec.inter_mbps = args.get_f64("inter-mbps", spec.inter_mbps)?;
         // gradient pipeline: --bucket-bytes caps fused buckets (0 = one
         // bucket per tensor); --autotune [on|off] picks codecs per bucket
         // by the calibrated cost model (DESIGN.md §6)
@@ -115,6 +141,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         report.final_aux(10),
         report.relative_volume()
     );
+    let (intra, inter) = report.total_link_bytes();
+    if inter > 0 {
+        eprintln!("fabric link classes: intra-node {intra} B  inter-node {inter} B");
+    }
     if let Some(last) = report.steps.last() {
         if last.bucket_count > 0 {
             let (serial, overlap) = report.pipeline_times_s();

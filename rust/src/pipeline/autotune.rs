@@ -45,6 +45,17 @@ impl CodecChoice {
     }
 }
 
+/// The per-hop picks of a hierarchical exchange
+/// ([`CodecPolicy::choose_hierarchical`]).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HierChoices {
+    /// member → node-leader hop (fast intra link, member density)
+    pub leader: CodecChoice,
+    /// leader → leader hop (slow inter link, node-sum density);
+    /// `None` on single-node grids, where that hop never runs
+    pub inter: Option<CodecChoice>,
+}
+
 /// Calibrated behaviour of one index codec: wire bytes and encode
 /// seconds per *domain element* at each rung of [`CAL_DENSITIES`].
 /// Per-domain (not per-entry) rates make entry-proportional codecs
@@ -236,17 +247,53 @@ impl CodecPolicy {
     /// measured density `nnz / d`. Deterministic tie-break: candidate
     /// order.
     pub fn choose(&self, d: usize, nnz: usize) -> CodecChoice {
+        self.choose_for(d, nnz, self.workers, self.link)
+    }
+
+    /// [`CodecPolicy::choose`] generalized to an explicit hop
+    /// environment: `workers` ranks exchanging over `link`. This is how
+    /// one calibration serves every hop of a hierarchical exchange —
+    /// the hop's world size and link class change the comm term while
+    /// the byte/throughput profiles are shared.
+    pub fn choose_for(&self, d: usize, nnz: usize, workers: usize, link: Link) -> CodecChoice {
         let mut best: Option<(f64, CodecChoice)> = None;
         for ip in &self.index_profiles {
             for vp in &self.value_profiles {
                 let bytes = self.estimate_bytes(ip, vp, d, nnz);
-                let cost = self.estimate_encode_s(ip, vp, d, nnz) + self.comm_s(bytes);
+                let cost = self.estimate_encode_s(ip, vp, d, nnz)
+                    + allgather_time(bytes.max(0.0) as u64, workers, link);
                 if best.as_ref().is_none_or(|(b, _)| cost < *b) {
                     best = Some((cost, CodecChoice { index: ip.name.clone(), value: vp.name.clone() }));
                 }
             }
         }
         best.expect("CodecPolicy has no candidates").1
+    }
+
+    /// Per-hop codec choices for a two-level exchange over `topo`: the
+    /// *leader hop* ships each rank's payload (density `nnz/d`) to the
+    /// node leader over the fast intra link, while the *inter hop*
+    /// ships node sums — up to `ranks_per_node` times denser — across
+    /// the slow boundary. The two hops often want different codecs:
+    /// entry-proportional ones (raw, elias) at member density,
+    /// domain-proportional ones (bitmap, rle) once the node sum
+    /// approaches dense.
+    pub fn choose_hierarchical(
+        &self,
+        d: usize,
+        nnz: usize,
+        topo: crate::collective::Topology,
+        intra: Link,
+        inter: Link,
+    ) -> HierChoices {
+        let node_nnz = (nnz * topo.ranks_per_node).min(d);
+        HierChoices {
+            leader: self.choose_for(d, nnz, topo.ranks_per_node.max(2), intra),
+            // a 1×R grid has no inter-node links: advising a codec for a
+            // hop that never runs would mislead the metrics
+            inter: (topo.nodes > 1)
+                .then(|| self.choose_for(d, node_nnz, topo.nodes, inter)),
+        }
     }
 
     /// Convenience: density of a sparse payload.
@@ -321,6 +368,31 @@ mod tests {
         }
         let c = p.choose(10_000, 100);
         assert!(!c.index.is_empty() && !c.value.is_empty());
+    }
+
+    #[test]
+    fn hierarchical_hops_pick_distinct_codecs() {
+        // the leader hop sees member density (very sparse), the inter
+        // hop sees the node sum (~R× denser): with R·p ≈ 0.9 the node
+        // sum is near-dense, so a domain-proportional index codec
+        // (bitmap/rle) must win that hop while the member hop keeps an
+        // entry-proportional one — same crossover the flat policy test
+        // (`density_drives_distinct_choices`) pins
+        let p = bytes_only_policy();
+        let d = 1 << 16;
+        let topo = crate::collective::Topology::new(2, 900);
+        let hc = p.choose_hierarchical(d, d / 1000, topo, Link::gbps(10.0), Link::mbps(100.0));
+        let inter = hc.inter.as_ref().expect("two nodes cross the boundary");
+        assert_ne!(hc.leader.index, inter.index, "{hc:?}");
+        assert!(
+            inter.index == "bitmap" || inter.index == "rle",
+            "node-sum hop should pick a domain-proportional index codec: {hc:?}"
+        );
+        // single-node grids: leader advice only — there is no inter hop
+        let flat = crate::collective::Topology::flat(8);
+        let hf = p.choose_hierarchical(d, d / 1000, flat, Link::gbps(10.0), Link::mbps(100.0));
+        assert_eq!(hf.leader, p.choose_for(d, d / 1000, 8, Link::gbps(10.0)));
+        assert!(hf.inter.is_none(), "1×n grid must not advise an inter codec");
     }
 
     #[test]

@@ -26,7 +26,7 @@ pub mod autotune;
 pub mod bucket;
 pub mod overlap;
 
-pub use autotune::{default_candidates, CodecChoice, CodecPolicy};
+pub use autotune::{default_candidates, CodecChoice, CodecPolicy, HierChoices};
 pub use bucket::{fuse, fuse_dense, unfuse, Bucket, BucketPlan};
 pub use overlap::{double_buffered, StepTimeline};
 
@@ -46,6 +46,13 @@ pub struct EncodedBucket {
     pub decoded: SparseTensor,
     /// `index|value` label of the codec pair that ran
     pub choice_label: String,
+    /// per-hop labels `(leader_hop, inter_hop)` the policy would pick
+    /// on a two-level topology (`None` unless autotuning with a
+    /// hierarchy configured; the inter label is `None` on single-node
+    /// grids) — the leader hop ships member-density payloads on the
+    /// fast link, the inter hop ships ~R× denser node sums on the slow
+    /// one, so the picks often differ
+    pub hier_choices: Option<(String, Option<String>)>,
     pub encode_s: f64,
     pub decode_s: f64,
     /// α–β modelled transfer time of `wire_bytes` on the pipeline link
@@ -65,6 +72,8 @@ pub struct GradientPipeline {
     seed: u64,
     link: Link,
     workers: usize,
+    /// two-level grid + per-class links for per-hop codec advice
+    hier: Option<(crate::collective::Topology, Link, Link)>,
 }
 
 impl GradientPipeline {
@@ -111,7 +120,21 @@ impl GradientPipeline {
             seed,
             link,
             workers,
+            hier: None,
         })
+    }
+
+    /// Teach the autotuner the two-level grid: per bucket it will also
+    /// report the codec pair each hop of a hierarchical exchange wants
+    /// ([`EncodedBucket::hier_choices`]); the leader hop is costed on
+    /// `intra`, the inter hop on `inter`. No-op unless autotuning.
+    pub fn set_hierarchy(
+        &mut self,
+        topo: crate::collective::Topology,
+        intra: Link,
+        inter: Link,
+    ) {
+        self.hier = Some((topo, intra, inter));
     }
 
     pub fn plan(&self) -> &BucketPlan {
@@ -156,6 +179,14 @@ impl GradientPipeline {
         dense_parts: &[&[f32]],
     ) -> anyhow::Result<EncodedBucket> {
         let fused = fuse(bucket, parts);
+        let hier_choices = match (&self.policy, &self.hier) {
+            (Some(policy), Some(&(topo, intra, inter))) => {
+                let hc =
+                    policy.choose_hierarchical(fused.dense_len(), fused.nnz(), topo, intra, inter);
+                Some((hc.leader.label(), hc.inter.map(|c| c.label())))
+            }
+            _ => None,
+        };
         let (choice_label, codec) = self.codec_for(fused.dense_len(), fused.nnz());
         let fused_dense: Option<Vec<f32>> = if codec.index.lossless() {
             None
@@ -171,7 +202,15 @@ impl GradientPipeline {
         let decode_s = t1.elapsed().as_secs_f64();
         let comm_model_s =
             crate::simnet::allgather_time(wire_bytes, self.workers, self.link);
-        Ok(EncodedBucket { wire_bytes, decoded, choice_label, encode_s, decode_s, comm_model_s })
+        Ok(EncodedBucket {
+            wire_bytes,
+            decoded,
+            choice_label,
+            hier_choices,
+            encode_s,
+            decode_s,
+            comm_model_s,
+        })
     }
 }
 
@@ -252,5 +291,39 @@ mod tests {
         let enc2 = pipe.encode_bucket(&bucket, &[&sp], &[g.as_slice()]).unwrap();
         assert_eq!(enc2.choice_label, enc.choice_label);
         assert!(pipe.tuned.len() <= 1);
+        // no hierarchy configured: no per-hop advice
+        assert!(enc.hier_choices.is_none());
+    }
+
+    #[test]
+    fn hierarchy_yields_per_hop_advice() {
+        let sizes = [(0usize, 4000usize)];
+        let mut pipe = GradientPipeline::new(
+            &sizes,
+            0,
+            true,
+            false,
+            "raw",
+            f64::NAN,
+            "raw",
+            f64::NAN,
+            1,
+            Link::mbps(100.0),
+            4,
+        )
+        .unwrap();
+        pipe.set_hierarchy(
+            crate::collective::Topology::new(2, 2),
+            Link::gbps(10.0),
+            Link::mbps(100.0),
+        );
+        let mut rng = Rng::new(3);
+        let g = gradient_like(&mut rng, 4000);
+        let sp = parts_for(&g, 0.02);
+        let bucket = pipe.plan().buckets[0].clone();
+        let enc = pipe.encode_bucket(&bucket, &[&sp], &[g.as_slice()]).unwrap();
+        let (leader, inter) = enc.hier_choices.expect("hierarchy configured");
+        let inter = inter.expect("2-node grid has an inter hop");
+        assert!(leader.contains('|') && inter.contains('|'), "{leader} / {inter}");
     }
 }

@@ -226,6 +226,140 @@ pub fn ring_rescatter_time(
 }
 
 // ---------------------------------------------------------------------
+// Two-level (node × rank) models for the hierarchical schedule
+// (collective::sparse::Hierarchical, DESIGN.md §8). Real clusters have
+// two link classes; the fabric meters them separately
+// (Network::{intra,inter}_bytes) and these models mirror that split.
+// ---------------------------------------------------------------------
+
+use crate::collective::{Schedule, Topology};
+
+/// Total fabric bytes of one *flat* schedule under the uniform
+/// disjoint-support load (the dispatch table the hierarchical model
+/// reuses for its inter-node hop). A hierarchical `inner` falls back to
+/// GatherAll, mirroring `Schedule::build_with`.
+pub fn flat_schedule_bytes(
+    sched: Schedule,
+    nnz: u64,
+    d: u64,
+    n: usize,
+    w: SegWire,
+    resparsify: bool,
+) -> u64 {
+    match sched {
+        Schedule::GatherAll | Schedule::Hierarchical => gather_all_bytes(nnz, d, n, w),
+        Schedule::RecursiveDouble => recursive_double_bytes(nnz, d, n, w),
+        Schedule::RingRescatter => ring_rescatter_bytes(nnz, d, n, w, resparsify),
+        Schedule::RingRescatterExact => ring_rescatter_bytes(nnz, d, n, w, false),
+    }
+}
+
+/// Per-worker α–β time of one flat schedule (same dispatch as
+/// [`flat_schedule_bytes`]).
+pub fn flat_schedule_time(
+    sched: Schedule,
+    nnz: u64,
+    d: u64,
+    n: usize,
+    link: Link,
+    w: SegWire,
+    resparsify: bool,
+) -> f64 {
+    match sched {
+        Schedule::GatherAll | Schedule::Hierarchical => gather_all_time(nnz, d, n, link, w),
+        Schedule::RecursiveDouble => recursive_double_time(nnz, d, n, link, w),
+        Schedule::RingRescatter => ring_rescatter_time(nnz, d, n, link, w, resparsify),
+        Schedule::RingRescatterExact => ring_rescatter_time(nnz, d, n, link, w, false),
+    }
+}
+
+/// Entry count of the global result the hierarchical schedule
+/// broadcasts in phase 3, under the disjoint-support worst case: the
+/// full union for exact inner schedules, the re-sparsified chunk budget
+/// for the lossy ring.
+fn hierarchical_final_nnz(
+    nnz: u64,
+    d: u64,
+    topo: Topology,
+    inner: Schedule,
+    resparsify: bool,
+) -> u64 {
+    let nodes = topo.nodes as u64;
+    let node_nnz = (topo.ranks_per_node as u64 * nnz).min(d);
+    if inner == Schedule::RingRescatter && resparsify && topo.nodes > 1 {
+        let chunk = d / nodes;
+        (nodes * node_nnz.div_ceil(nodes).min(chunk)).min(d)
+    } else {
+        (nodes * node_nnz).min(d)
+    }
+}
+
+/// Byte totals of the hierarchical schedule as `(intra, inter)`, under
+/// uniform disjoint supports of `nnz` entries per rank over domain `d`:
+///
+/// - intra: every non-leader ships its segment to the node leader
+///   (phase 1), then receives the global result back (phase 3);
+/// - inter: the node leaders run `inner` on node sums of
+///   `min(R·nnz, d)` entries (phase 2).
+///
+/// Cross-checked against the fabric's per-class meters within 2% in
+/// `tests::hierarchical_byte_model_matches_wire`.
+pub fn hierarchical_bytes(
+    nnz: u64,
+    d: u64,
+    topo: Topology,
+    w: SegWire,
+    inner: Schedule,
+    resparsify: bool,
+) -> (u64, u64) {
+    if topo.world() <= 1 {
+        return (0, 0);
+    }
+    let members = topo.ranks_per_node as u64 - 1; // non-leaders per node
+    let node_nnz = (topo.ranks_per_node as u64 * nnz).min(d);
+    let fin = hierarchical_final_nnz(nnz, d, topo, inner, resparsify);
+    let intra = topo.nodes as u64
+        * members
+        * (w.segment_bytes(nnz.min(d), d) + w.segment_bytes(fin, d));
+    let inter = if topo.nodes > 1 {
+        flat_schedule_bytes(inner, node_nnz, d, topo.nodes, w, resparsify)
+    } else {
+        0
+    };
+    (intra, inter)
+}
+
+/// Per-worker α–β time of the hierarchical schedule with separate link
+/// parameters per class: the leader ingests its `R−1` members serially
+/// on the intra link, runs the inner schedule across the inter link,
+/// then broadcasts the result back over the intra link.
+#[allow(clippy::too_many_arguments)]
+pub fn hierarchical_time(
+    nnz: u64,
+    d: u64,
+    topo: Topology,
+    intra: Link,
+    inter: Link,
+    w: SegWire,
+    inner: Schedule,
+    resparsify: bool,
+) -> f64 {
+    if topo.world() <= 1 {
+        return 0.0;
+    }
+    let members = (topo.ranks_per_node - 1) as f64;
+    let node_nnz = (topo.ranks_per_node as u64 * nnz).min(d);
+    let fin = hierarchical_final_nnz(nnz, d, topo, inner, resparsify);
+    let mut t = members
+        * (intra.latency_s + w.segment_bytes(nnz.min(d), d) as f64 / intra.bandwidth_bps);
+    if topo.nodes > 1 {
+        t += flat_schedule_time(inner, node_nnz, d, topo.nodes, inter, w, resparsify);
+    }
+    t += members * (intra.latency_s + w.segment_bytes(fin, d) as f64 / intra.bandwidth_bps);
+    t
+}
+
+// ---------------------------------------------------------------------
 // Step-time accounting for the bucketed gradient pipeline
 // (`crate::pipeline`, DESIGN.md §6). A step is a sequence of buckets,
 // each contributing an encode stage (measured) and a communication
@@ -333,6 +467,21 @@ mod tests {
         assert_eq!(gather_all_time(100, 1000, 1, Link::gbps(1.0), w), 0.0);
         assert_eq!(recursive_double_time(100, 1000, 1, Link::gbps(1.0), w), 0.0);
         assert_eq!(ring_rescatter_time(100, 1000, 1, Link::gbps(1.0), w, true), 0.0);
+        let solo = Topology::flat(1);
+        assert_eq!(hierarchical_bytes(100, 1000, solo, w, Schedule::GatherAll, true), (0, 0));
+        assert_eq!(
+            hierarchical_time(
+                100,
+                1000,
+                solo,
+                Link::gbps(1.0),
+                Link::mbps(100.0),
+                w,
+                Schedule::GatherAll,
+                true
+            ),
+            0.0
+        );
     }
 
     /// Build n disjoint, evenly-strided supports of k entries over [0, d)
@@ -400,6 +549,81 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The hierarchical model's per-class byte split must agree with
+    /// the fabric's intra/inter meters within 2%, across node shapes
+    /// and inner schedules (same strided worst-case construction as
+    /// `schedule_byte_models_match_wire`).
+    #[test]
+    fn hierarchical_byte_model_matches_wire() {
+        use crate::collective::sparse::SparseConfig;
+        use crate::collective::Network;
+        use std::thread;
+
+        let d = 8192usize;
+        let k = 512usize;
+        let w = SegWire::raw(0.5);
+        for (nodes, rpn) in [(2usize, 4usize), (4, 2), (2, 2)] {
+            let topo = Topology::new(nodes, rpn);
+            let inputs = strided_inputs(topo.world(), d, k);
+            for inner in [
+                Schedule::GatherAll,
+                Schedule::RecursiveDouble,
+                Schedule::RingRescatter,
+                Schedule::RingRescatterExact,
+            ] {
+                let cfg = SparseConfig { topology: Some(topo), inner, ..SparseConfig::default() };
+                let net = Network::with_topology(topo);
+                let handles: Vec<_> = net
+                    .endpoints()
+                    .into_iter()
+                    .zip(inputs.clone())
+                    .map(|(ep, t)| {
+                        thread::spawn(move || {
+                            Schedule::Hierarchical.build(cfg).allreduce(&ep, t).unwrap()
+                        })
+                    })
+                    .collect();
+                for h in handles {
+                    h.join().unwrap();
+                }
+                let (mi, mx) = hierarchical_bytes(k as u64, d as u64, topo, w, inner, true);
+                for (wire, model, class) in [
+                    (net.intra_bytes() as f64, mi as f64, "intra"),
+                    (net.inter_bytes() as f64, mx as f64, "inter"),
+                ] {
+                    assert!(
+                        (wire - model).abs() / model < 0.02,
+                        "{}x{} inner {inner:?} {class}: wire {wire} vs model {model}",
+                        topo.nodes,
+                        topo.ranks_per_node,
+                    );
+                }
+            }
+        }
+    }
+
+    /// The two-class time model orders as expected: slower inter links
+    /// hurt, and for a fixed world the hierarchical schedule's modelled
+    /// inter traffic shrinks as ranks concentrate onto fewer nodes.
+    #[test]
+    fn hierarchical_models_rank_as_expected() {
+        let w = SegWire::raw(0.5);
+        let d = 100_000u64;
+        let k = d / 100;
+        let fast = Link::gbps(10.0);
+        let slow = Link::mbps(100.0);
+        let topo = Topology::new(2, 8);
+        let t_fast = hierarchical_time(k, d, topo, fast, fast, w, Schedule::GatherAll, true);
+        let t_slow = hierarchical_time(k, d, topo, fast, slow, w, Schedule::GatherAll, true);
+        assert!(t_slow > t_fast, "slow inter link must dominate: {t_slow} vs {t_fast}");
+        // 2×8 crosses the slow boundary with 2 node sums; flat GatherAll
+        // on the same 16 ranks would cross with up to 16·15 blobs — the
+        // hierarchical inter bytes must be far below the flat total
+        let (_, inter) = hierarchical_bytes(k, d, topo, w, Schedule::GatherAll, true);
+        let flat_total = gather_all_bytes(k, d, 16, w);
+        assert!(inter * 4 < flat_total, "inter {inter} vs flat {flat_total}");
     }
 
     #[test]

@@ -1,5 +1,5 @@
 //! Hard-threshold sparsifier (Strom 2015; Dryden et al. 2016 use an
-//! adaptive variant): keep elements with |g[i]| >= τ. Output sparsity is
+//! adaptive variant): keep elements with `|g[i]| >= τ`. Output sparsity is
 //! data-dependent, which exercises the variable-r paths of the codecs.
 
 use super::Sparsifier;

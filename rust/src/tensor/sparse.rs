@@ -91,7 +91,7 @@ impl SparseTensor {
         Bitmap::from_indices(self.dense_len, &self.indices)
     }
 
-    /// Wire size of the naive <key,value> representation in bytes
+    /// Wire size of the naive `<key,value>` representation in bytes
     /// (32-bit keys + 32-bit values) — the paper's Figure 1b baseline.
     pub fn kv_wire_bytes(&self) -> usize {
         self.nnz() * 8

@@ -1,11 +1,13 @@
 //! Property tests for the sparse allreduce schedules: every schedule
 //! must produce the dense ring allreduce sum — exactly for the exact
 //! schedules, and per the per-chunk top-⌈k/n⌉ contract when
-//! `ring_rescatter` re-sparsifies. Runs entirely on the in-process
-//! fabric; no artifacts required.
+//! `ring_rescatter` re-sparsifies. The hierarchical schedule is pinned
+//! *byte-identical* to GatherAll on integer-valued gradients across
+//! node shapes (where f32 addition is exact in any association order).
+//! Runs entirely on the in-process fabric; no artifacts required.
 
 use deepreduce::collective::sparse::merge;
-use deepreduce::collective::{all_reduce_ring, Network, Schedule, SparseConfig};
+use deepreduce::collective::{all_reduce_ring, Network, Schedule, SparseConfig, Topology};
 use deepreduce::tensor::SparseTensor;
 use deepreduce::util::prng::Rng;
 use deepreduce::util::testkit::{forall, sorted_support};
@@ -14,14 +16,21 @@ use std::thread;
 /// Run one schedule across `inputs.len()` worker threads; returns every
 /// rank's result in rank order.
 fn run_schedule(sched: Schedule, inputs: &[SparseTensor]) -> Vec<SparseTensor> {
-    let net = Network::new(inputs.len());
+    run_with(sched, SparseConfig::default(), inputs)
+}
+
+/// Like [`run_schedule`] with explicit tuning (topology, inner
+/// schedule); the fabric carries the config's grid when one is set.
+fn run_with(sched: Schedule, cfg: SparseConfig, inputs: &[SparseTensor]) -> Vec<SparseTensor> {
+    let net = match cfg.topology {
+        Some(topo) => Network::with_topology(topo),
+        None => Network::new(inputs.len()),
+    };
     let handles: Vec<_> = net
         .endpoints()
         .into_iter()
         .zip(inputs.to_vec())
-        .map(|(ep, t)| {
-            thread::spawn(move || sched.build(SparseConfig::default()).allreduce(&ep, t).unwrap())
-        })
+        .map(|(ep, t)| thread::spawn(move || sched.build(cfg).allreduce(&ep, t).unwrap()))
         .collect();
     handles.into_iter().map(|h| h.join().unwrap()).collect()
 }
@@ -246,6 +255,142 @@ fn randomized_differential_vs_gather_all() {
             }
         }
     }
+}
+
+/// Random support with positive small-integer values: f32 addition over
+/// such values is exact in ANY association order, so schedules that
+/// claim the same sum must agree bit-for-bit, not just within an
+/// epsilon.
+fn integer_inputs(rng: &mut Rng, n: usize, d: usize) -> Vec<SparseTensor> {
+    (0..n)
+        .map(|_| {
+            let k = rng.below(d as u64 + 1) as usize;
+            let support = sorted_support(rng, d, k);
+            let values: Vec<f32> = (0..k).map(|_| (1 + rng.below(15)) as f32).collect();
+            SparseTensor::new(d, support, values)
+        })
+        .collect()
+}
+
+/// The acceptance pin of the hierarchical schedule: across node shapes
+/// — 1×n (one node), n×1 (every rank a leader), square and non-square
+/// grids including non-powers-of-two — and every exact inner schedule,
+/// the result must be *byte-identical* to the GatherAll baseline on
+/// every rank.
+#[test]
+fn hierarchical_byte_identical_to_gather_all_across_node_shapes() {
+    let mut rng = Rng::new(0x21E7);
+    for (nodes, rpn) in [(1usize, 5usize), (5, 1), (2, 4), (3, 3), (2, 2), (2, 3), (4, 2)] {
+        let topo = Topology::new(nodes, rpn);
+        let n = topo.world();
+        for _ in 0..3 {
+            let d = 30 + rng.below(400) as usize;
+            let inputs = integer_inputs(&mut rng, n, d);
+            let reference = run_schedule(Schedule::GatherAll, &inputs);
+            for inner in
+                [Schedule::GatherAll, Schedule::RecursiveDouble, Schedule::RingRescatterExact]
+            {
+                let cfg = SparseConfig {
+                    topology: Some(topo),
+                    inner,
+                    ..SparseConfig::default()
+                };
+                let outs = run_with(Schedule::Hierarchical, cfg, &inputs);
+                for (rank, (out, want)) in outs.iter().zip(&reference).enumerate() {
+                    assert_eq!(
+                        out, want,
+                        "{nodes}x{rpn} inner {inner:?} rank {rank} diverged from gather_all"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Gaussian-valued differential test (tolerance-based, where f32
+/// association noise is expected): hierarchical must match the dense
+/// ring allreduce on every rank, for every node shape and inner.
+#[test]
+fn hierarchical_matches_dense_reference_gaussian() {
+    let mut rng = Rng::new(0x21E8);
+    for (nodes, rpn) in [(2usize, 4usize), (3, 3), (2, 3), (4, 2)] {
+        let topo = Topology::new(nodes, rpn);
+        let n = topo.world();
+        let d = 64 + rng.below(500) as usize;
+        let inputs = random_inputs(&mut rng, n, d);
+        let reference = dense_reference(&inputs);
+        for inner in
+            [Schedule::GatherAll, Schedule::RecursiveDouble, Schedule::RingRescatterExact]
+        {
+            let cfg = SparseConfig { topology: Some(topo), inner, ..SparseConfig::default() };
+            for (rank, out) in run_with(Schedule::Hierarchical, cfg, &inputs).iter().enumerate() {
+                let dense = out.to_dense();
+                for (i, (&a, &b)) in dense.data().iter().zip(&reference).enumerate() {
+                    assert!(
+                        (a - b).abs() <= 1e-3 * (1.0 + b.abs()),
+                        "{nodes}x{rpn} inner {inner:?} rank {rank} index {i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// With the lossy ring as the inner schedule the result keeps a subset
+/// of the union, but every kept value must still be the exact node-sum
+/// aggregate (same contract as the flat lossy ring), and all ranks must
+/// agree bit-for-bit.
+#[test]
+fn hierarchical_lossy_inner_keeps_true_sums() {
+    let mut rng = Rng::new(0x21E9);
+    for (nodes, rpn) in [(2usize, 4usize), (4, 2), (3, 3)] {
+        let topo = Topology::new(nodes, rpn);
+        let n = topo.world();
+        let d = 400;
+        let inputs = integer_inputs(&mut rng, n, d);
+        let reference = run_schedule(Schedule::GatherAll, &inputs).pop().unwrap().to_dense();
+        let cfg = SparseConfig {
+            topology: Some(topo),
+            inner: Schedule::RingRescatter,
+            ..SparseConfig::default()
+        };
+        let outs = run_with(Schedule::Hierarchical, cfg, &inputs);
+        for o in &outs[1..] {
+            assert_eq!(o, &outs[0], "{nodes}x{rpn}: ranks disagree");
+        }
+        for (&i, &v) in outs[0].indices().iter().zip(outs[0].values()) {
+            let want = reference.data()[i as usize];
+            assert_eq!(v, want, "{nodes}x{rpn} index {i}: kept {v} vs sum {want}");
+        }
+    }
+}
+
+/// The fabric's per-class meters: on a grid, the hierarchical schedule
+/// crosses nodes only with leader traffic, and a 1×n grid crosses
+/// never.
+#[test]
+fn hierarchical_link_class_accounting() {
+    let mut rng = Rng::new(0x21EA);
+    let d = 500;
+    let inputs = integer_inputs(&mut rng, 8, d);
+    // 1×8: no inter-node traffic at all
+    let topo = Topology::new(1, 8);
+    let net = Network::with_topology(topo);
+    let cfg = SparseConfig { topology: Some(topo), ..SparseConfig::default() };
+    let handles: Vec<_> = net
+        .endpoints()
+        .into_iter()
+        .zip(inputs.to_vec())
+        .map(|(ep, t)| {
+            thread::spawn(move || Schedule::Hierarchical.build(cfg).allreduce(&ep, t).unwrap())
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(net.total_bytes() > 0);
+    assert_eq!(net.inter_bytes(), 0, "single-node grid must never cross nodes");
+    assert_eq!(net.intra_bytes(), net.total_bytes());
 }
 
 #[test]
