@@ -16,7 +16,8 @@ use deepreduce::simnet::{
     flat_schedule_time, hierarchical_bytes, hierarchical_time, Link, SegWire,
 };
 use deepreduce::tensor::SparseTensor;
-use deepreduce::util::benchkit::Table;
+use deepreduce::util::benchkit::{BenchSummary, Table};
+use deepreduce::util::json::Json;
 use deepreduce::util::prng::Rng;
 use deepreduce::util::testkit::sorted_support;
 use std::thread;
@@ -42,6 +43,7 @@ fn measured_bytes(
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let d = 1usize << 15;
     let w = SegWire::raw(0.5);
     let intra_link = Link::gbps(10.0);
@@ -60,9 +62,15 @@ fn main() {
             "t@inter=1Gbps",
         ],
     );
+    let mut summary = BenchSummary::new("hierarchical_scaling");
     let mut wins = 0usize;
     let mut cases = 0usize;
-    for (nodes, rpn) in [(2usize, 4usize), (2, 8), (4, 4), (3, 3), (4, 2), (8, 2)] {
+    let grids: &[(usize, usize)] = if smoke {
+        &[(2, 4), (2, 8), (4, 4)]
+    } else {
+        &[(2, 4), (2, 8), (4, 4), (3, 3), (4, 2), (8, 2)]
+    };
+    for &(nodes, rpn) in grids {
         let topo = Topology::new(nodes, rpn);
         let n = topo.world();
         for density in [0.01f64, 0.05] {
@@ -94,6 +102,17 @@ fn main() {
                     format!("{:.5}s", flat_schedule_time(sched, ku, du, n, slow, w, true)),
                     format!("{:.5}s", flat_schedule_time(sched, ku, du, n, fast, w, true)),
                 ]);
+                summary.row(&[
+                    ("grid", Json::Str(topo.label())),
+                    ("density", Json::Num(density)),
+                    ("schedule", Json::Str(sched.name().to_string())),
+                    ("intra_bytes", Json::Num(intra as f64)),
+                    ("inter_bytes", Json::Num(inter as f64)),
+                    (
+                        "t_inter_100mbps_s",
+                        Json::Num(flat_schedule_time(sched, ku, du, n, slow, w, true)),
+                    ),
+                ]);
             }
             let cfg = SparseConfig {
                 topology: Some(topo),
@@ -114,6 +133,26 @@ fn main() {
                 format!(
                     "{:.5}s",
                     hierarchical_time(ku, du, topo, intra_link, fast, w, Schedule::GatherAll, true)
+                ),
+            ]);
+            summary.row(&[
+                ("grid", Json::Str(topo.label())),
+                ("density", Json::Num(density)),
+                ("schedule", Json::Str("hierarchical".to_string())),
+                ("intra_bytes", Json::Num(h_intra as f64)),
+                ("inter_bytes", Json::Num(h_inter as f64)),
+                (
+                    "t_inter_100mbps_s",
+                    Json::Num(hierarchical_time(
+                        ku,
+                        du,
+                        topo,
+                        intra_link,
+                        slow,
+                        w,
+                        Schedule::GatherAll,
+                        true,
+                    )),
                 ),
             ]);
             // model sanity at bench scale: the byte model assumes
@@ -140,6 +179,13 @@ fn main() {
         }
     }
     table.print();
+    summary.set("wins", Json::Num(wins as f64));
+    summary.set("cases", Json::Num(cases as f64));
+    summary.set("smoke", Json::Bool(smoke));
+    match summary.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench summary: {e}"),
+    }
     // acceptance: the two-level schedule must beat EVERY flat schedule
     // on inter-node bytes for at least two grid configurations
     assert!(

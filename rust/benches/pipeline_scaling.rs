@@ -18,7 +18,8 @@ use deepreduce::pipeline::{CodecPolicy, GradientPipeline, StepTimeline};
 use deepreduce::simnet::Link;
 use deepreduce::sparsify::Sparsifier;
 use deepreduce::tensor::SparseTensor;
-use deepreduce::util::benchkit::Table;
+use deepreduce::util::benchkit::{BenchSummary, Table};
+use deepreduce::util::json::Json;
 use deepreduce::util::prng::Rng;
 use deepreduce::util::testkit::gradient_like;
 
@@ -53,6 +54,7 @@ fn run_step(
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let workers = 4;
     let mut rng = Rng::new(0x9195);
     let grads: Vec<Vec<f32>> = SIZES.iter().map(|&s| gradient_like(&mut rng, s)).collect();
@@ -65,9 +67,11 @@ fn main() {
             "overlapped ms", "vs per-tensor serial",
         ],
     );
+    let mut summary = BenchSummary::new("pipeline_scaling");
     let mut wins = 0usize;
     let mut cases = 0usize;
-    for &density in &[0.01f64, 0.05, 0.2] {
+    let densities: &[f64] = if smoke { &[0.01] } else { &[0.01, 0.05, 0.2] };
+    for &density in densities {
         let sparse: Vec<SparseTensor> = grads
             .iter()
             .map(|g| {
@@ -104,6 +108,15 @@ fn main() {
                     format!("{:.3}", overlapped * 1e3),
                     format!("{:.3}x", per_tensor_serial / overlapped),
                 ]);
+                summary.row(&[
+                    ("density", Json::Num(density)),
+                    ("link", Json::Str(lname.to_string())),
+                    ("bucket_cap", Json::Str(cname.to_string())),
+                    ("buckets", Json::Num(nbuckets as f64)),
+                    ("bytes_per_worker", Json::Num(bytes as f64)),
+                    ("serial_s", Json::Num(serial)),
+                    ("overlapped_s", Json::Num(overlapped)),
+                ]);
                 // acceptance: fused buckets + overlap must beat the
                 // unbucketed, unoverlapped per-tensor path
                 if cap > 0 {
@@ -121,6 +134,13 @@ fn main() {
         }
     }
     table.print();
+    summary.set("wins", Json::Num(wins as f64));
+    summary.set("cases", Json::Num(cases as f64));
+    summary.set("smoke", Json::Bool(smoke));
+    match summary.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench summary: {e}"),
+    }
     println!("overlapped bucketed path beat the per-tensor serial path in {wins}/{cases} configs");
 
     // ---- codec autotuning across a density sweep ------------------

@@ -11,7 +11,8 @@ use deepreduce::simnet::{
     allreduce_time, gather_all_time, recursive_double_time, ring_rescatter_time, Link, SegWire,
 };
 use deepreduce::tensor::SparseTensor;
-use deepreduce::util::benchkit::Table;
+use deepreduce::util::benchkit::{BenchSummary, Table};
+use deepreduce::util::json::Json;
 use deepreduce::util::prng::Rng;
 use deepreduce::util::testkit::sorted_support;
 use std::thread;
@@ -34,6 +35,7 @@ fn measured_bytes(sched: Schedule, inputs: &[SparseTensor]) -> u64 {
 }
 
 fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
     let d = 1usize << 15;
     let w = SegWire::raw(0.5);
     let slow = Link::mbps(100.0);
@@ -43,9 +45,11 @@ fn main() {
         "sparse allreduce scaling — measured fabric bytes, modelled α–β time",
         &["n", "density", "schedule", "fabric KB", "vs gather_all", "t@100Mbps", "t@10Gbps"],
     );
+    let mut summary = BenchSummary::new("sparse_allreduce_scaling");
     let mut wins = 0usize;
     let mut cases = 0usize;
-    for n in [2usize, 4, 8, 16, 32] {
+    let ns: &[usize] = if smoke { &[2, 4, 8] } else { &[2, 4, 8, 16, 32] };
+    for &n in ns {
         for density in [0.01f64, 0.1] {
             let k = ((d as f64 * density) as usize).max(1);
             let inputs: Vec<SparseTensor> = (0..n)
@@ -69,6 +73,15 @@ fn main() {
                     format!("{:.3}", bytes as f64 / ga_bytes as f64),
                     format!("{:.5}s", t_slow),
                     format!("{:.6}s", t_fast),
+                ]);
+                summary.row(&[
+                    ("n", Json::Num(n as f64)),
+                    ("density", Json::Num(density)),
+                    ("schedule", Json::Str(name.to_string())),
+                    ("fabric_bytes", Json::Num(bytes as f64)),
+                    ("vs_gather_all", Json::Num(bytes as f64 / ga_bytes as f64)),
+                    ("t_100mbps_s", Json::Num(t_slow)),
+                    ("t_10gbps_s", Json::Num(t_fast)),
                 ]);
             };
             row(
@@ -119,6 +132,13 @@ fn main() {
         }
     }
     table.print();
+    summary.set("wins", Json::Num(wins as f64));
+    summary.set("cases", Json::Num(cases as f64));
+    summary.set("smoke", Json::Bool(smoke));
+    match summary.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench summary: {e}"),
+    }
     println!(
         "topology-aware schedule beat gather_all in {wins}/{cases} at-scale configs \
          (n >= 8, density <= 10%)"

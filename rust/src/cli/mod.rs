@@ -20,8 +20,10 @@ pub const KNOWN_FLAGS: &[&str] = &[
     "index", "value", "sparsifier", "ratio", "fpr", "value-param", "no-ef",
     // train: collective schedule + topology
     "schedule", "topology", "inner-schedule", "intra-mbps", "inter-mbps",
+    // train: virtual-time fabric + scenarios
+    "fabric", "straggler", "compute-jitter", "link-jitter", "node-mbps",
     // train: gradient pipeline
-    "bucket-bytes", "autotune", "pipeline-link-mbps",
+    "bucket-bytes", "autotune", "pipeline-link-mbps", "autotune-cost",
     // codecs
     "dim",
 ];
@@ -63,11 +65,24 @@ train — run distributed training with a DeepReduce instantiation
   --intra-mbps <f>                modelled intra-node link, Mbps (default 10000)
   --inter-mbps <f>                modelled inter-node link, Mbps (default 100)
 
+  virtual-time fabric (scenario knobs imply --fabric virtual):
+  --fabric <instant|virtual>      instant = zero-time delivery (default);
+                                  virtual = event-driven virtual clocks, adds
+                                  measured_step_s / rank_idle_s to the report
+  --straggler <R:F[,R:F...]>      rank R computes Fx slower, links at beta/F
+  --compute-jitter <f>            per-step compute jitter amplitude (e.g. 0.3)
+  --link-jitter <f>               per-transfer time jitter amplitude
+  --node-mbps <N:MBPS[,...]>      per-node inter-link bandwidth overrides
+                                  (heterogeneous clusters)
+
   gradient pipeline:
   --bucket-bytes <n>              fused bucket cap in bytes (0 = per-tensor)
   --autotune [on|off]             per-bucket cost-model codec choice
   --pipeline-link-mbps <f>        modelled link for pipeline step-time metrics
                                   (default 100)
+  --autotune-cost <src>           comm term of the autotuner cost:
+                                  formula (alpha-beta model, default) |
+                                  measured (virtual-fabric feedback)
 
 smoke — load the pallas smoke artifact through PJRT and execute it
 

@@ -26,26 +26,33 @@ pub fn all_gather<C: Comm + ?Sized>(ep: &C, mine: Vec<u8>) -> Vec<Vec<u8>> {
 /// (the sparse schedules merge their local tensor directly): the final
 /// send *moves* `mine`, saving one full-blob copy per rank per step.
 /// `out[rank]` is left empty.
+///
+/// Sends go out in ring order (`me+1, me+2, …`) and receives drain in
+/// reverse ring order (`me−1, me−2, …`) — on the instant fabric this is
+/// indistinguishable from any other order (per-pair FIFO channels, one
+/// message per pair), but on the virtual-time fabric it is the
+/// staggered schedule a real allgather runs: every rank's k-th send
+/// targets a *different* peer, so no receiver becomes an ingress
+/// hotspot and the measured critical path matches the
+/// `simnet::gather_all_time` closed form.
 pub fn all_gather_peers<C: Comm + ?Sized>(ep: &C, mine: Vec<u8>) -> Vec<Vec<u8>> {
     let n = ep.world();
     let me = ep.rank();
     let mut out: Vec<Vec<u8>> = vec![Vec::new(); n];
-    if let Some((&last, rest)) = peers_of(ep).split_last() {
-        for &peer in rest {
-            ep.send(peer, mine.clone());
+    for j in 1..n {
+        let peer = (me + j) % n;
+        if j + 1 == n {
+            // final send moves the buffer
+            ep.send(peer, mine);
+            break;
         }
-        ep.send(last, mine);
+        ep.send(peer, mine.clone());
     }
-    for peer in 0..n {
-        if peer != me {
-            out[peer] = ep.recv(peer);
-        }
+    for j in 1..n {
+        let peer = (me + n - j) % n;
+        out[peer] = ep.recv(peer);
     }
     out
-}
-
-fn peers_of<C: Comm + ?Sized>(ep: &C) -> Vec<usize> {
-    (0..ep.world()).filter(|&p| p != ep.rank()).collect()
 }
 
 /// Bandwidth-optimal ring allreduce (sum) over a dense f32 buffer:

@@ -45,7 +45,7 @@ pub trait Comm {
 /// thread.
 pub struct Network {
     topo: Topology,
-    endpoints: std::sync::Mutex<Vec<Endpoint>>,
+    endpoints: std::sync::Mutex<Option<Vec<Endpoint>>>,
     bytes: Arc<AtomicU64>,
     intra: Arc<AtomicU64>,
     inter: Arc<AtomicU64>,
@@ -98,7 +98,7 @@ impl Network {
                 inter: Arc::clone(&inter),
             });
         }
-        Self { topo, endpoints: std::sync::Mutex::new(endpoints), bytes, intra, inter }
+        Self { topo, endpoints: std::sync::Mutex::new(Some(endpoints)), bytes, intra, inter }
     }
 
     pub fn n(&self) -> usize {
@@ -110,9 +110,34 @@ impl Network {
         self.topo
     }
 
-    /// Take all endpoints (once). Ordered by rank.
+    /// Take all endpoints, erroring on a double-take. The fabric is
+    /// single-use: handing out a second (empty) set used to make
+    /// callers fail later in confusing ways (`pop().unwrap()` panics,
+    /// zips silently doing nothing).
+    pub fn try_endpoints(&self) -> anyhow::Result<Vec<Endpoint>> {
+        self.endpoints.lock().unwrap().take().ok_or_else(|| {
+            anyhow::anyhow!("fabric endpoints already handed out (Network is single-use)")
+        })
+    }
+
+    /// Take all endpoints, also checking the caller's expected world
+    /// size — a mismatched fabric (wrong-count misuse) is reported as a
+    /// structured error instead of a downstream panic or deadlock.
+    pub fn try_endpoints_for(&self, world: usize) -> anyhow::Result<Vec<Endpoint>> {
+        let eps = self.try_endpoints()?;
+        anyhow::ensure!(
+            eps.len() == world,
+            "fabric has {} ranks but the caller expected {world}",
+            eps.len()
+        );
+        Ok(eps)
+    }
+
+    /// Take all endpoints (once), ordered by rank. Convenience form for
+    /// tests and benches; panics on double-take — production callers
+    /// use [`Network::try_endpoints`] / [`Network::try_endpoints_for`].
     pub fn endpoints(&self) -> Vec<Endpoint> {
-        std::mem::take(&mut *self.endpoints.lock().unwrap())
+        self.try_endpoints().expect("fabric endpoints")
     }
 
     /// Total bytes that crossed the fabric so far.
@@ -335,6 +360,21 @@ mod tests {
         t.join().unwrap();
         assert_eq!(net.intra_bytes(), 42);
         assert_eq!(net.inter_bytes(), 0);
+    }
+
+    #[test]
+    fn endpoint_handout_misuse_is_a_structured_error() {
+        let net = Network::new(2);
+        // wrong expected world: structured error (not a panic)
+        let err = net.try_endpoints_for(3).unwrap_err();
+        assert!(err.to_string().contains("expected 3"), "{err}");
+        // the failed take still consumed the fabric: also a clean error
+        let err = net.try_endpoints().unwrap_err();
+        assert!(err.to_string().contains("already handed out"), "{err}");
+        // correct usage on a fresh fabric
+        let net = Network::new(2);
+        assert_eq!(net.try_endpoints_for(2).unwrap().len(), 2);
+        assert!(net.try_endpoints().is_err(), "double-take must error");
     }
 
     #[test]

@@ -39,6 +39,17 @@ pub struct StepMetrics {
     /// same with double-buffered overlap — the win is the gap to
     /// `pipeline_serial_s`
     pub pipeline_overlap_s: f64,
+    /// **measured** step time on the virtual-time fabric: the
+    /// critical-path virtual seconds from the step barrier to the last
+    /// rank finishing its collective (0 on the instant fabric). When
+    /// present this is the primary time number — it emerges from the
+    /// actual schedule execution, unlike the modelled
+    /// `pipeline_*`/α–β figures
+    pub measured_step_s: f64,
+    /// mean virtual seconds a rank spent idle this step (recv waits
+    /// plus the end-of-step barrier; 0 on the instant fabric) — the
+    /// load-imbalance signal stragglers produce
+    pub rank_idle_s: f64,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -121,6 +132,18 @@ impl TrainReport {
         )
     }
 
+    /// Total **measured** virtual step time over the run (0 unless the
+    /// run used the virtual-time fabric).
+    pub fn total_measured_s(&self) -> f64 {
+        self.steps.iter().map(|s| s.measured_step_s).sum()
+    }
+
+    /// Total mean-per-rank idle time over the run (0 unless the run
+    /// used the virtual-time fabric).
+    pub fn total_rank_idle_s(&self) -> f64 {
+        self.steps.iter().map(|s| s.rank_idle_s).sum()
+    }
+
     /// JSON dump for post-processing / plotting.
     pub fn to_json(&self) -> Json {
         let steps: Vec<Json> = self
@@ -146,6 +169,8 @@ impl TrainReport {
                 );
                 m.insert("pipeline_serial_s".into(), Json::Num(s.pipeline_serial_s));
                 m.insert("pipeline_overlap_s".into(), Json::Num(s.pipeline_overlap_s));
+                m.insert("measured_step_s".into(), Json::Num(s.measured_step_s));
+                m.insert("rank_idle_s".into(), Json::Num(s.rank_idle_s));
                 Json::Obj(m)
             })
             .collect();
@@ -153,6 +178,8 @@ impl TrainReport {
         top.insert("name".into(), Json::Str(self.name.clone()));
         top.insert("workers".into(), Json::Num(self.workers as f64));
         top.insert("relative_volume".into(), Json::Num(self.relative_volume()));
+        top.insert("measured_total_s".into(), Json::Num(self.total_measured_s()));
+        top.insert("rank_idle_total_s".into(), Json::Num(self.total_rank_idle_s()));
         top.insert("final_loss".into(), Json::Num(self.final_loss() as f64));
         top.insert("steps".into(), Json::Arr(steps));
         Json::Obj(top)
@@ -184,6 +211,8 @@ mod tests {
                     autotune_choices: vec![if i < 5 { "raw|raw" } else { "elias|raw" }.into()],
                     pipeline_serial_s: 0.2,
                     pipeline_overlap_s: 0.15,
+                    measured_step_s: 0.3,
+                    rank_idle_s: 0.05,
                 })
                 .collect(),
         }
@@ -202,6 +231,8 @@ mod tests {
         assert_eq!(r.distinct_autotune_choices(), vec!["elias|raw", "raw|raw"]);
         let (serial, overlap) = r.pipeline_times_s();
         assert!((serial - 2.0).abs() < 1e-9 && (overlap - 1.5).abs() < 1e-9);
+        assert!((r.total_measured_s() - 3.0).abs() < 1e-9);
+        assert!((r.total_rank_idle_s() - 0.5).abs() < 1e-9);
     }
 
     #[test]

@@ -1,12 +1,14 @@
 //! The distributed trainer (leader + n simulated workers).
 
 use super::metrics::{StepMetrics, TrainReport};
-use crate::collective::sparse::SegmentCodec;
-use crate::collective::{Network, Schedule, SparseConfig, Topology};
-use crate::pipeline::{unfuse, Bucket, GradientPipeline, StepTimeline};
+use crate::collective::sparse::{SegmentCodec, SparseAllreduce};
+use crate::collective::{Comm, Endpoint, Network, Schedule, SparseConfig, Topology};
+use crate::pipeline::{unfuse, Bucket, CostSource, GradientPipeline, StepTimeline};
 use crate::runtime::{Artifact, BatchInput};
 use crate::sparsify::{self, ErrorFeedback, Sparsifier};
 use crate::tensor::{SparseTensor, Tensor};
+use crate::vfabric::{Scenario, VirtualEndpoint, VirtualNetwork};
+use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::Instant;
 
 /// Which benchmark family an artifact belongs to (drives the dataset).
@@ -82,6 +84,29 @@ pub struct CompressionSpec {
     /// autotune comm costs and the `pipeline_{serial,overlap}_s`
     /// step-time metrics (matches the paper's 100 Mbps default)
     pub pipeline_link_mbps: f64,
+    /// which fabric the gradient exchange runs on: `instant` (default;
+    /// zero-time delivery, formula-only timing) or `virtual` — the
+    /// event-driven virtual-time fabric (`crate::vfabric`) that
+    /// *measures* `measured_step_s`/`rank_idle_s` and enables the
+    /// scenario knobs below
+    pub fabric: String,
+    /// straggler list `R:F[,R:F…]` (CLI `--straggler`): rank R computes
+    /// F× slower and its links run at β/F. Virtual fabric only;
+    /// empty = none
+    pub straggler: String,
+    /// multiplicative compute-jitter amplitude σ (CLI
+    /// `--compute-jitter`; virtual fabric only)
+    pub compute_jitter: f64,
+    /// multiplicative per-transfer jitter amplitude σ (CLI
+    /// `--link-jitter`; virtual fabric only)
+    pub link_jitter: f64,
+    /// per-node inter-link bandwidth overrides `N:MBPS[,…]` (CLI
+    /// `--node-mbps`; heterogeneous clusters, virtual fabric only)
+    pub node_mbps: String,
+    /// autotuner comm-cost source (CLI `--autotune-cost`): `formula`
+    /// (α–β closed form) or `measured` (virtual-fabric feedback — see
+    /// [`CostSource`])
+    pub autotune_cost: String,
     pub seed: u64,
 }
 
@@ -105,6 +130,12 @@ impl CompressionSpec {
             bucket_bytes: 0,
             autotune: false,
             pipeline_link_mbps: 100.0,
+            fabric: "instant".into(),
+            straggler: String::new(),
+            compute_jitter: 0.0,
+            link_jitter: 0.0,
+            node_mbps: String::new(),
+            autotune_cost: "formula".into(),
             seed: 0xDEE9,
         }
     }
@@ -185,6 +216,251 @@ impl Shard {
     }
 }
 
+/// One step's work for a rank's persistent collective worker.
+struct StepJob {
+    /// decoded fused buckets to allreduce, in bucket order
+    tensors: Vec<SparseTensor>,
+    /// local busy time (compute + codec, scenario-scaled) to book on
+    /// the virtual clock before entering the exchange (0 on the
+    /// instant fabric)
+    advance_s: f64,
+    /// step barrier: the virtual time the previous step ended at
+    sync_to: f64,
+}
+
+/// One rank's step result. Only rank 0 ships the summed tensors back
+/// (all ranks hold identical sums; n copies would be pure overhead).
+struct StepOut {
+    tensors: Option<Vec<SparseTensor>>,
+    /// virtual clock when the rank entered the exchange
+    start_s: f64,
+    /// virtual clock when the rank finished the exchange
+    end_s: f64,
+    /// recv-wait idle accumulated during this step
+    idle_s: f64,
+}
+
+/// The fabric a collective pool runs on. Both variants expose the same
+/// per-link-class byte meters.
+enum FabricHandle {
+    Instant(Network),
+    Virtual(VirtualNetwork),
+}
+
+impl FabricHandle {
+    fn total_bytes(&self) -> u64 {
+        match self {
+            FabricHandle::Instant(n) => n.total_bytes(),
+            FabricHandle::Virtual(n) => n.total_bytes(),
+        }
+    }
+
+    fn intra_bytes(&self) -> u64 {
+        match self {
+            FabricHandle::Instant(n) => n.intra_bytes(),
+            FabricHandle::Virtual(n) => n.intra_bytes(),
+        }
+    }
+
+    fn inter_bytes(&self) -> u64 {
+        match self {
+            FabricHandle::Instant(n) => n.inter_bytes(),
+            FabricHandle::Virtual(n) => n.inter_bytes(),
+        }
+    }
+
+    fn reset_bytes(&self) {
+        match self {
+            FabricHandle::Instant(n) => n.reset_bytes(),
+            FabricHandle::Virtual(n) => n.reset_bytes(),
+        }
+    }
+}
+
+/// A rank's endpoint on either fabric, so the pool workers run the
+/// schedules unchanged on instant or virtual time.
+enum AnyEndpoint {
+    Instant(Endpoint),
+    Virtual(VirtualEndpoint),
+}
+
+impl Comm for AnyEndpoint {
+    fn rank(&self) -> usize {
+        match self {
+            AnyEndpoint::Instant(e) => e.rank(),
+            AnyEndpoint::Virtual(e) => e.rank(),
+        }
+    }
+
+    fn world(&self) -> usize {
+        match self {
+            AnyEndpoint::Instant(e) => e.world(),
+            AnyEndpoint::Virtual(e) => e.world(),
+        }
+    }
+
+    fn send(&self, dst: usize, payload: Vec<u8>) {
+        match self {
+            AnyEndpoint::Instant(e) => e.send(dst, payload),
+            AnyEndpoint::Virtual(e) => e.send(dst, payload),
+        }
+    }
+
+    fn recv(&self, src: usize) -> Vec<u8> {
+        match self {
+            AnyEndpoint::Instant(e) => e.recv(src),
+            AnyEndpoint::Virtual(e) => e.recv(src),
+        }
+    }
+}
+
+impl AnyEndpoint {
+    /// Virtual-time hooks; no-ops on the instant fabric.
+    fn sync_to(&self, t: f64) {
+        if let AnyEndpoint::Virtual(e) = self {
+            e.sync_to(t);
+        }
+    }
+
+    fn elapse(&self, dt: f64) {
+        if let AnyEndpoint::Virtual(e) = self {
+            e.elapse(dt);
+        }
+    }
+
+    fn now(&self) -> f64 {
+        match self {
+            AnyEndpoint::Instant(_) => 0.0,
+            AnyEndpoint::Virtual(e) => e.now(),
+        }
+    }
+
+    fn idle_s(&self) -> f64 {
+        match self {
+            AnyEndpoint::Instant(_) => 0.0,
+            AnyEndpoint::Virtual(e) => e.idle_s(),
+        }
+    }
+}
+
+/// The persistent collective machinery: one fabric plus one long-lived
+/// worker thread per rank, each owning its endpoint, schedule, and
+/// segment codec. Built once in [`Trainer::new`] and reused by every
+/// step (the old per-step fabric/thread churn was pure overhead — and
+/// would have reset the virtual clocks).
+struct CollectivePool {
+    fabric: FabricHandle,
+    jobs: Vec<Sender<StepJob>>,
+    results: Vec<Receiver<anyhow::Result<StepOut>>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    /// the virtual time the last completed step ended at (the next
+    /// step's barrier)
+    virtual_now: f64,
+}
+
+impl CollectivePool {
+    fn new(
+        fabric: FabricHandle,
+        sched: Schedule,
+        cfg: SparseConfig,
+        spec: &CompressionSpec,
+        workers: usize,
+    ) -> anyhow::Result<Self> {
+        let endpoints: Vec<AnyEndpoint> = match &fabric {
+            FabricHandle::Instant(net) => {
+                net.try_endpoints_for(workers)?.into_iter().map(AnyEndpoint::Instant).collect()
+            }
+            FabricHandle::Virtual(net) => {
+                let eps = net.try_endpoints()?;
+                anyhow::ensure!(
+                    eps.len() == workers,
+                    "virtual fabric has {} ranks but the trainer expected {workers}",
+                    eps.len()
+                );
+                eps.into_iter().map(AnyEndpoint::Virtual).collect()
+            }
+        };
+        let mut jobs = Vec::with_capacity(workers);
+        let mut results = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for ep in endpoints {
+            // segments reuse the spec's codecs where they are lossless;
+            // lossy stages fall back to raw
+            let codec = SegmentCodec::lossless_or_raw(
+                &spec.index,
+                spec.index_param,
+                &spec.value,
+                spec.value_param,
+                spec.seed,
+                cfg.dense_switch,
+            );
+            let sr = sched.build_with(cfg, codec);
+            let (jtx, jrx) = channel::<StepJob>();
+            let (rtx, rrx) = channel::<anyhow::Result<StepOut>>();
+            handles.push(std::thread::spawn(move || worker_loop(ep, sr, jrx, rtx)));
+            jobs.push(jtx);
+            results.push(rrx);
+        }
+        Ok(Self { fabric, jobs, results, handles, virtual_now: 0.0 })
+    }
+}
+
+impl Drop for CollectivePool {
+    fn drop(&mut self) {
+        // closing the job channels ends every worker's loop; a worker
+        // stuck mid-collective is unblocked by its failing peer's
+        // endpoint drop ("peer hung up"), so these joins cannot hang
+        self.jobs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Body of one persistent collective worker thread.
+fn worker_loop(
+    ep: AnyEndpoint,
+    sr: Box<dyn SparseAllreduce>,
+    jobs: Receiver<StepJob>,
+    results: Sender<anyhow::Result<StepOut>>,
+) {
+    let rank = ep.rank();
+    while let Ok(job) = jobs.recv() {
+        ep.sync_to(job.sync_to);
+        ep.elapse(job.advance_s);
+        let start_s = ep.now();
+        let idle0 = ep.idle_s();
+        let mut summed = Vec::with_capacity(job.tensors.len());
+        let mut failure: Option<anyhow::Error> = None;
+        // per-tensor collectives run in order, so messages stay matched
+        // on the pairwise FIFO channels
+        for t in job.tensors {
+            match sr.allreduce(&ep, t) {
+                Ok(r) => summed.push(r),
+                Err(e) => {
+                    failure = Some(e);
+                    break;
+                }
+            }
+        }
+        let out = match failure {
+            Some(e) => Err(anyhow::anyhow!("rank {rank} sparse allreduce failed: {e}")),
+            None => Ok(StepOut {
+                tensors: (rank == 0).then_some(summed),
+                start_s,
+                end_s: ep.now(),
+                idle_s: ep.idle_s() - idle0,
+            }),
+        };
+        let failed = out.is_err();
+        if results.send(out).is_err() || failed {
+            // trainer gone, or this rank failed: drop the endpoint so
+            // peers unblock ("peer hung up") instead of deadlocking
+            break;
+        }
+    }
+}
+
 pub struct Trainer {
     cfg: TrainConfig,
     artifact: Artifact,
@@ -199,14 +475,13 @@ pub struct Trainer {
     threelc: Option<crate::baselines::ThreeLC>,
     /// `ef[worker][tensor]`
     ef: Vec<Vec<ErrorFeedback>>,
-    /// Some(_) whenever compression is on: the sparse allreduce schedule
-    /// that runs the gradient exchange over the in-process fabric
-    collective_schedule: Option<Schedule>,
-    /// parsed `CompressionSpec.topology` (None = flat fabric)
-    topology: Option<Topology>,
-    /// schedule tuning handed to every collective build (carries the
-    /// grid and the hierarchical inner schedule)
-    sparse_cfg: SparseConfig,
+    /// Some(_) whenever compression is on: the persistent fabric +
+    /// worker threads that run the gradient exchange every step
+    pool: Option<CollectivePool>,
+    /// parsed scenario knobs (trivial unless the virtual fabric is on)
+    scenario: Scenario,
+    /// whether the exchange runs on the virtual-time fabric
+    fabric_virtual: bool,
 }
 
 impl Trainer {
@@ -334,6 +609,79 @@ impl Trainer {
                 crate::simnet::Link::mbps(spec.inter_mbps),
             );
         }
+        if let (Some(pipe), Some(spec)) = (pipeline.as_mut(), cfg.compression.as_ref()) {
+            let source = CostSource::parse(&spec.autotune_cost).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "unknown autotune cost source {} (expected formula|measured)",
+                    spec.autotune_cost
+                )
+            })?;
+            pipe.set_cost_source(source);
+        }
+        // the persistent collective machinery: fabric + one worker
+        // thread per rank, built once here and reused by every step
+        let (pool, scenario, fabric_virtual) =
+            match (cfg.compression.as_ref(), collective_schedule) {
+                (Some(spec), Some(sched)) => {
+                    let fabric_virtual = match spec.fabric.as_str() {
+                        "" | "instant" => false,
+                        "virtual" | "vfabric" | "event" => true,
+                        other => {
+                            anyhow::bail!("unknown fabric {other} (expected instant|virtual)")
+                        }
+                    };
+                    let scenario = Scenario {
+                        stragglers: Scenario::parse_stragglers(&spec.straggler)?,
+                        compute_jitter: spec.compute_jitter,
+                        link_jitter: spec.link_jitter,
+                        node_mbps: Scenario::parse_node_mbps(&spec.node_mbps)?,
+                        seed: spec.seed,
+                    };
+                    let grid = topology.unwrap_or_else(|| Topology::flat(cfg.workers));
+                    for &(r, _) in &scenario.stragglers {
+                        anyhow::ensure!(
+                            r < cfg.workers,
+                            "straggler rank {r} out of range (workers = {})",
+                            cfg.workers
+                        );
+                    }
+                    for &(m, _) in &scenario.node_mbps {
+                        anyhow::ensure!(
+                            m < grid.nodes,
+                            "node-mbps node {m} out of range (nodes = {})",
+                            grid.nodes
+                        );
+                    }
+                    anyhow::ensure!(
+                        fabric_virtual || !scenario.is_active(),
+                        "--straggler / --compute-jitter / --link-jitter / --node-mbps \
+                         require --fabric virtual"
+                    );
+                    anyhow::ensure!(
+                        fabric_virtual
+                            || CostSource::parse(&spec.autotune_cost)
+                                != Some(CostSource::Measured),
+                        "--autotune-cost measured requires --fabric virtual \
+                         (the feedback is measured on the virtual clock)"
+                    );
+                    let fabric = if fabric_virtual {
+                        FabricHandle::Virtual(VirtualNetwork::new(
+                            grid,
+                            crate::simnet::Link::mbps(spec.intra_mbps),
+                            crate::simnet::Link::mbps(spec.inter_mbps),
+                            scenario.clone(),
+                        ))
+                    } else {
+                        FabricHandle::Instant(match topology {
+                            Some(t) => Network::with_topology(t),
+                            None => Network::new(cfg.workers),
+                        })
+                    };
+                    let pool = CollectivePool::new(fabric, sched, sparse_cfg, spec, cfg.workers)?;
+                    (Some(pool), scenario, fabric_virtual)
+                }
+                _ => (None, Scenario::none(cfg.seed), false),
+            };
         Ok(Self {
             cfg,
             artifact,
@@ -344,9 +692,9 @@ impl Trainer {
             pipeline,
             threelc,
             ef,
-            collective_schedule,
-            topology,
-            sparse_cfg,
+            pool,
+            scenario,
+            fabric_virtual,
         })
     }
 
@@ -405,11 +753,21 @@ impl Trainer {
             dense_bytes: (total_params * 4) as u64, // one worker's dense payload
             ..Default::default()
         };
+        // per-worker measured local busy time (compute + codec) — the
+        // base the virtual fabric replays, scenario-scaled, before the
+        // exchange
+        let mut busy_s = vec![0.0f64; n];
+        // bucketed container bytes only (excludes the below-min_compress
+        // bypass, which never crosses the collective) — the denominator
+        // of the measured-cost feedback
+        let mut bucketed_bytes = 0u64;
         for w in 0..n {
             let batch = self.shards[w].next_batch();
             let t0 = Instant::now();
             let out = self.artifact.train_step(&self.params, &batch)?;
-            metrics.compute_s += t0.elapsed().as_secs_f64();
+            let compute = t0.elapsed().as_secs_f64();
+            metrics.compute_s += compute;
+            busy_s[w] += compute;
             metrics.loss += out.loss / n as f32;
             metrics.aux += out.aux / n as f32;
 
@@ -461,11 +819,13 @@ impl Trainer {
                         let enc = pipe.encode_bucket(bucket, &parts, &dense_parts)?;
                         metrics.encode_s += enc.encode_s;
                         metrics.decode_s += enc.decode_s;
+                        busy_s[w] += enc.encode_s + enc.decode_s;
                         // bytes_per_worker is always the container upload
                         // volume (keeps relative_volume comparable across
                         // schedules); collective traffic is metered
                         // separately as fabric_bytes
                         metrics.bytes_per_worker += enc.wire_bytes;
+                        bucketed_bytes += enc.wire_bytes;
                         timeline.push(enc.encode_s, enc.comm_model_s);
                         if !metrics.autotune_choices.contains(&enc.choice_label) {
                             metrics.autotune_choices.push(enc.choice_label.clone());
@@ -531,70 +891,50 @@ impl Trainer {
                 }
             }
         }
-        // gradient exchange: run the configured schedule over the
-        // byte-counted in-process fabric — one collective per fused
-        // bucket, each a single sparse segment stream
-        if let Some(sched) = self.collective_schedule {
+        // gradient exchange: hand each rank's fused buckets to its
+        // persistent collective worker — one collective per bucket,
+        // each a single sparse segment stream. Fabric, threads, codecs
+        // and schedules were all built once in `Trainer::new`
+        if let Some(pool) = self.pool.as_mut() {
             if !buckets.is_empty() {
-                let spec = self.cfg.compression.as_ref().expect("schedule implies compression");
-                // one fabric + one thread per worker for the whole step;
-                // each worker runs the per-tensor collectives in order, so
-                // messages stay matched on the pairwise FIFO channels.
-                // The fabric carries the node × rank grid so every byte
-                // is metered per link class (intra vs inter)
-                let net = match self.topology {
-                    Some(topo) => Network::with_topology(topo),
-                    None => Network::new(n),
-                };
-                let sparse_cfg = self.sparse_cfg;
-                let handles: Vec<_> = net
-                    .endpoints()
-                    .into_iter()
-                    .zip(pending.drain(..))
-                    .map(|(ep, tensors)| {
-                        // segments reuse the spec's codecs where they are
-                        // lossless; lossy stages fall back to raw
-                        let codec = SegmentCodec::lossless_or_raw(
-                            &spec.index,
-                            spec.index_param,
-                            &spec.value,
-                            spec.value_param,
-                            spec.seed,
-                            sparse_cfg.dense_switch,
-                        );
-                        std::thread::spawn(move || -> Vec<SparseTensor> {
-                            let sr = sched.build_with(sparse_cfg, codec);
-                            // a failed rank panics; dropping its endpoint
-                            // unblocks every peer ("peer hung up"), so no
-                            // thread is leaked or deadlocked
-                            tensors
-                                .into_iter()
-                                .map(|t| {
-                                    sr.allreduce(&ep, t)
-                                        .expect("in-process sparse allreduce failed")
-                                })
-                                .collect()
-                        })
-                    })
-                    .collect();
-                // join every thread before reporting the first failure
-                let joined: Vec<_> = handles.into_iter().map(|h| h.join()).collect();
-                let mut rank0: Option<Vec<SparseTensor>> = None;
-                let mut panicked = false;
-                for (i, j) in joined.into_iter().enumerate() {
-                    match j {
-                        Ok(v) => {
-                            if i == 0 {
-                                rank0 = Some(v);
-                            }
-                        }
-                        Err(_) => panicked = true,
-                    }
+                let step_start = pool.virtual_now;
+                for (w, tensors) in pending.drain(..).enumerate() {
+                    // on the virtual fabric the rank first replays its
+                    // measured local busy time, scaled by the scenario's
+                    // straggler/jitter factors
+                    let advance_s = if self.fabric_virtual {
+                        busy_s[w] * self.scenario.compute_factor(w, step)
+                    } else {
+                        0.0
+                    };
+                    pool.jobs[w]
+                        .send(StepJob { tensors, advance_s, sync_to: step_start })
+                        .map_err(|_| anyhow::anyhow!("collective worker {w} is gone"))?;
                 }
-                anyhow::ensure!(!panicked, "collective worker thread panicked");
-                for (bucket, summed) in
-                    buckets.iter().zip(rank0.expect("world size >= 1"))
-                {
+                let mut rank0: Option<Vec<SparseTensor>> = None;
+                let mut ends = vec![0.0f64; n];
+                let mut max_start = step_start;
+                let mut idle_sum = 0.0f64;
+                for (w, result) in pool.results.iter().enumerate() {
+                    let out = result
+                        .recv()
+                        .map_err(|_| anyhow::anyhow!("collective worker {w} died"))??;
+                    if out.tensors.is_some() {
+                        rank0 = out.tensors;
+                    }
+                    ends[w] = out.end_s;
+                    max_start = max_start.max(out.start_s);
+                    idle_sum += out.idle_s;
+                }
+                let step_end = ends.iter().copied().fold(step_start, f64::max);
+                // end-of-step barrier: ranks that finish early wait for
+                // the critical path (synchronous SGD)
+                for &e in &ends {
+                    idle_sum += step_end - e;
+                }
+                let summed_buckets =
+                    rank0.ok_or_else(|| anyhow::anyhow!("rank 0 collective result missing"))?;
+                for (bucket, summed) in buckets.iter().zip(summed_buckets) {
                     // unfuse the summed bucket back onto its member
                     // tensors' domains
                     let parts = unfuse(bucket, &summed);
@@ -603,10 +943,28 @@ impl Trainer {
                     }
                 }
                 // exact fabric traffic of this step's gradient exchange,
-                // summed over all workers and split by link class
-                metrics.fabric_bytes += net.total_bytes();
-                metrics.intra_bytes += net.intra_bytes();
-                metrics.inter_bytes += net.inter_bytes();
+                // summed over all workers and split by link class (the
+                // persistent fabric's meters are drained per step)
+                metrics.fabric_bytes += pool.fabric.total_bytes();
+                metrics.intra_bytes += pool.fabric.intra_bytes();
+                metrics.inter_bytes += pool.fabric.inter_bytes();
+                pool.fabric.reset_bytes();
+                if self.fabric_virtual {
+                    // the primary time numbers: measured on the virtual
+                    // fabric, emerging from the schedule execution
+                    metrics.measured_step_s = step_end - step_start;
+                    metrics.rank_idle_s = idle_sum / n as f64;
+                    pool.virtual_now = step_end;
+                    // feed the measured exchange back to the autotuner
+                    // (per-worker *bucketed* container bytes ↦ virtual
+                    // seconds — bypass tensors never hit the fabric);
+                    // only consulted under --autotune-cost measured
+                    let per_worker_bytes = bucketed_bytes as f64 / n as f64;
+                    let comm_s = (step_end - max_start).max(0.0);
+                    if let Some(pipe) = self.pipeline.as_mut() {
+                        pipe.observe_comm(per_worker_bytes, comm_s);
+                    }
+                }
             }
         }
         // bytes_per_worker accumulated across workers -> average

@@ -31,6 +31,10 @@
 //!   PJRT CPU client (the only model interface at train time).
 //! - [`simnet`] — α–β network-time models applied to exact wire bytes,
 //!   including the two-link-class hierarchical models.
+//! - [`vfabric`] — the discrete-event virtual-time fabric: per-rank
+//!   virtual clocks, port serialization, and scenario knobs
+//!   (stragglers, jitter, heterogeneous links); measured step times
+//!   cross-validated against the [`simnet`] closed forms.
 //! - [`data`] — deterministic synthetic shards (CIFAR / NCF / corpus
 //!   stand-ins).
 //! - [`tensor`], [`linalg`], [`optim`], [`util`] — dense/sparse tensors,
@@ -52,4 +56,5 @@ pub mod simnet;
 pub mod sparsify;
 pub mod tensor;
 pub mod util;
+pub mod vfabric;
 pub mod xp;

@@ -77,12 +77,19 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     cfg.log_every = args.get_usize("log-every", 10)?;
     let index = args.get_or("index", "");
     let value = args.get_or("value", "");
-    // --schedule or --topology alone activates the compression pipeline
-    // (raw/raw) so neither flag is ever silently ignored
+    // any scenario knob runs on the virtual-time fabric
+    let scenario_flags = ["straggler", "compute-jitter", "link-jitter", "node-mbps"]
+        .iter()
+        .any(|&f| args.get(f).is_some());
+    // --schedule / --topology / --fabric / a scenario knob alone
+    // activates the compression pipeline (raw/raw) so none of these
+    // flags is ever silently ignored
     if !index.is_empty()
         || !value.is_empty()
         || args.get("schedule").is_some()
         || args.get("topology").is_some()
+        || args.get("fabric").is_some()
+        || scenario_flags
     {
         let idx = if index.is_empty() { "raw".to_string() } else { index };
         let val = if value.is_empty() { "raw".to_string() } else { value };
@@ -117,6 +124,17 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         spec.inner_schedule = args.get_or("inner-schedule", &spec.inner_schedule);
         spec.intra_mbps = args.get_f64("intra-mbps", spec.intra_mbps)?;
         spec.inter_mbps = args.get_f64("inter-mbps", spec.inter_mbps)?;
+        // virtual-time fabric + scenario knobs: any scenario flag
+        // implies --fabric virtual when --fabric is not given
+        spec.fabric = args.get_or("fabric", &spec.fabric);
+        if scenario_flags && args.get("fabric").is_none() {
+            spec.fabric = "virtual".into();
+        }
+        spec.straggler = args.get_or("straggler", &spec.straggler);
+        spec.compute_jitter = args.get_f64("compute-jitter", spec.compute_jitter)?;
+        spec.link_jitter = args.get_f64("link-jitter", spec.link_jitter)?;
+        spec.node_mbps = args.get_or("node-mbps", &spec.node_mbps);
+        spec.autotune_cost = args.get_or("autotune-cost", &spec.autotune_cost);
         // gradient pipeline: --bucket-bytes caps fused buckets (0 = one
         // bucket per tensor); --autotune [on|off] picks codecs per bucket
         // by the calibrated cost model (DESIGN.md §6)
@@ -144,6 +162,15 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let (intra, inter) = report.total_link_bytes();
     if inter > 0 {
         eprintln!("fabric link classes: intra-node {intra} B  inter-node {inter} B");
+    }
+    // measured virtual-time numbers are the primary timing output when
+    // the run used the event fabric (`--fabric virtual`)
+    if report.total_measured_s() > 0.0 {
+        eprintln!(
+            "virtual fabric: measured step time {:.4}s total  mean rank idle {:.4}s total",
+            report.total_measured_s(),
+            report.total_rank_idle_s()
+        );
     }
     if let Some(last) = report.steps.last() {
         if last.bucket_count > 0 {

@@ -104,6 +104,31 @@ fn ceil_log2(n: usize) -> u32 {
     }
 }
 
+/// Where the comm term of the per-bucket cost comes from
+/// (CLI `--autotune-cost`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CostSource {
+    /// the α–β closed form (`simnet::allgather_time`) — available from
+    /// step 0, blind to contention and stragglers
+    #[default]
+    Formula,
+    /// measured virtual exchange time fed back by the trainer
+    /// ([`CodecPolicy::observe_comm`]): an EMA of seconds per
+    /// per-worker container byte on the virtual-time fabric. Falls
+    /// back to the formula until the first observation arrives.
+    Measured,
+}
+
+impl CostSource {
+    pub fn parse(name: &str) -> Option<Self> {
+        Some(match name {
+            "formula" | "model" | "alpha_beta" => CostSource::Formula,
+            "measured" | "vfabric" => CostSource::Measured,
+            _ => return None,
+        })
+    }
+}
+
 /// The per-bucket codec selector.
 pub struct CodecPolicy {
     pub index_profiles: Vec<IndexProfile>,
@@ -112,6 +137,11 @@ pub struct CodecPolicy {
     pub link: Link,
     /// world size the α–β comm cost uses
     pub workers: usize,
+    /// where the comm term comes from (formula vs measured feedback)
+    pub cost_source: CostSource,
+    /// EMA of measured exchange seconds per per-worker container byte
+    /// (None until the first [`CodecPolicy::observe_comm`])
+    measured_secs_per_byte: Option<f64>,
 }
 
 /// The candidate codec names the trainer autotunes over. Lossy stages
@@ -202,7 +232,36 @@ impl CodecPolicy {
                 has_perm: enc.perm.is_some(),
             });
         }
-        Self { index_profiles, value_profiles, link, workers }
+        Self {
+            index_profiles,
+            value_profiles,
+            link,
+            workers,
+            cost_source: CostSource::Formula,
+            measured_secs_per_byte: None,
+        }
+    }
+
+    /// Switch the comm term between the α–β formula and measured
+    /// virtual-time feedback.
+    pub fn set_cost_source(&mut self, source: CostSource) {
+        self.cost_source = source;
+    }
+
+    /// Feed back one measured exchange: `bytes` is the per-worker
+    /// container volume of a step and `secs` the measured virtual time
+    /// its collective took. Maintains an EMA (weight 0.3 on the new
+    /// sample) of seconds per byte; only consulted when the cost source
+    /// is [`CostSource::Measured`].
+    pub fn observe_comm(&mut self, bytes: f64, secs: f64) {
+        if !bytes.is_finite() || bytes <= 0.0 || !secs.is_finite() || secs < 0.0 {
+            return;
+        }
+        let rate = secs / bytes;
+        self.measured_secs_per_byte = Some(match self.measured_secs_per_byte {
+            None => rate,
+            Some(old) => 0.7 * old + 0.3 * rate,
+        });
     }
 
     /// Estimated container wire bytes for one (index, value) pair on a
@@ -237,10 +296,19 @@ impl CodecPolicy {
         interp(&ip.secs_per_elem, p) * d as f64 + vp.secs_per_value * nnz as f64
     }
 
-    /// Modelled cost of shipping `bytes` through the topology-oblivious
-    /// exchange on the configured link/world.
+    /// Cost of shipping `bytes` through the exchange on the configured
+    /// link/world: the α–β closed form, or — under
+    /// [`CostSource::Measured`] with at least one observation — the
+    /// measured rate times the bytes.
     pub fn comm_s(&self, bytes: f64) -> f64 {
-        allgather_time(bytes.max(0.0) as u64, self.workers, self.link)
+        self.comm_s_for(bytes, self.workers, self.link)
+    }
+
+    fn comm_s_for(&self, bytes: f64, workers: usize, link: Link) -> f64 {
+        match (self.cost_source, self.measured_secs_per_byte) {
+            (CostSource::Measured, Some(rate)) => rate * bytes.max(0.0),
+            _ => allgather_time(bytes.max(0.0) as u64, workers, link),
+        }
     }
 
     /// Pick the pair minimizing `encode_s + comm_s` for a bucket with
@@ -254,14 +322,16 @@ impl CodecPolicy {
     /// environment: `workers` ranks exchanging over `link`. This is how
     /// one calibration serves every hop of a hierarchical exchange —
     /// the hop's world size and link class change the comm term while
-    /// the byte/throughput profiles are shared.
+    /// the byte/throughput profiles are shared. (Under a measured cost
+    /// source the rate already folds in the observed hop mix, so only
+    /// the byte estimates differentiate candidates.)
     pub fn choose_for(&self, d: usize, nnz: usize, workers: usize, link: Link) -> CodecChoice {
         let mut best: Option<(f64, CodecChoice)> = None;
         for ip in &self.index_profiles {
             for vp in &self.value_profiles {
                 let bytes = self.estimate_bytes(ip, vp, d, nnz);
                 let cost = self.estimate_encode_s(ip, vp, d, nnz)
-                    + allgather_time(bytes.max(0.0) as u64, workers, link);
+                    + self.comm_s_for(bytes, workers, link);
                 if best.as_ref().is_none_or(|(b, _)| cost < *b) {
                     best = Some((cost, CodecChoice { index: ip.name.clone(), value: vp.name.clone() }));
                 }
@@ -393,6 +463,46 @@ mod tests {
         let hf = p.choose_hierarchical(d, d / 1000, flat, Link::gbps(10.0), Link::mbps(100.0));
         assert_eq!(hf.leader, p.choose_for(d, d / 1000, 8, Link::gbps(10.0)));
         assert!(hf.inter.is_none(), "1×n grid must not advise an inter codec");
+    }
+
+    #[test]
+    fn measured_cost_source_feeds_back() {
+        let mut p = bytes_only_policy();
+        p.set_cost_source(CostSource::Measured);
+        let d = 1 << 16;
+        let nnz = d / 1000;
+        // no observation yet: falls back to the formula — same pick as
+        // an untouched formula policy
+        assert_eq!(p.choose(d, nnz), bytes_only_policy().choose(d, nnz));
+        // parse both spellings
+        assert_eq!(CostSource::parse("measured"), Some(CostSource::Measured));
+        assert_eq!(CostSource::parse("formula"), Some(CostSource::Formula));
+        assert_eq!(CostSource::parse("nope"), None);
+        // an expensive measured link: comm dominates, so the pick must
+        // minimize estimated bytes among the candidates
+        p.observe_comm(1000.0, 10.0); // 10 ms per byte
+        let pick = p.choose(d, nnz);
+        let (ip, vp) = (
+            p.index_profiles.iter().find(|ip| ip.name == pick.index).unwrap(),
+            p.value_profiles.iter().find(|vp| vp.name == pick.value).unwrap(),
+        );
+        let picked_bytes = p.estimate_bytes(ip, vp, d, nnz);
+        for ip in &p.index_profiles {
+            for vp in &p.value_profiles {
+                assert!(
+                    picked_bytes <= p.estimate_bytes(ip, vp, d, nnz) + 1e-9,
+                    "measured-comm pick must be byte-minimal"
+                );
+            }
+        }
+        // the EMA moves with new observations, and garbage is ignored
+        let before = p.comm_s(1.0);
+        p.observe_comm(1000.0, 0.0);
+        assert!(p.comm_s(1.0) < before);
+        p.observe_comm(0.0, 5.0);
+        p.observe_comm(f64::NAN, 5.0);
+        p.observe_comm(1000.0, f64::NAN);
+        assert!(p.comm_s(1.0) < before, "garbage observations must be ignored");
     }
 
     #[test]

@@ -26,7 +26,7 @@ pub mod autotune;
 pub mod bucket;
 pub mod overlap;
 
-pub use autotune::{default_candidates, CodecChoice, CodecPolicy, HierChoices};
+pub use autotune::{default_candidates, CodecChoice, CodecPolicy, CostSource, HierChoices};
 pub use bucket::{fuse, fuse_dense, unfuse, Bucket, BucketPlan};
 pub use overlap::{double_buffered, StepTimeline};
 
@@ -143,6 +143,25 @@ impl GradientPipeline {
 
     pub fn autotuning(&self) -> bool {
         self.policy.is_some()
+    }
+
+    /// Switch the autotuner's comm term between the α–β formula and
+    /// measured virtual-time feedback (CLI `--autotune-cost`). No-op
+    /// unless autotuning.
+    pub fn set_cost_source(&mut self, source: CostSource) {
+        if let Some(policy) = self.policy.as_mut() {
+            policy.set_cost_source(source);
+        }
+    }
+
+    /// Feed one measured exchange back into the autotuner: the trainer
+    /// calls this after each virtual-fabric step with the per-worker
+    /// container bytes and the measured virtual collective seconds
+    /// (see [`CodecPolicy::observe_comm`]). No-op unless autotuning.
+    pub fn observe_comm(&mut self, bytes: f64, secs: f64) {
+        if let Some(policy) = self.policy.as_mut() {
+            policy.observe_comm(bytes, secs);
+        }
     }
 
     /// The codec pair for a bucket of domain `d` with `nnz` entries.

@@ -24,6 +24,14 @@ impl Link {
     pub fn gbps(gb: f64) -> Self {
         Self { bandwidth_bps: gb * 1e9 / 8.0, latency_s: 25e-6 }
     }
+
+    /// The ideal link: zero latency, infinite bandwidth. Every transfer
+    /// takes zero virtual time — on the virtual-time fabric
+    /// (`crate::vfabric`) this reduces it to the instant fabric, which
+    /// the differential tests in `tests/vfabric.rs` exploit.
+    pub fn ideal() -> Self {
+        Self { bandwidth_bps: f64::INFINITY, latency_s: 0.0 }
+    }
 }
 
 /// Time for a ring allreduce of a dense payload of `bytes` across `n`

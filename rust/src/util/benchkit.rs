@@ -7,7 +7,10 @@
 
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::{mad, median, percentile};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
 
 /// One measured benchmark.
 #[derive(Clone, Debug)]
@@ -246,6 +249,64 @@ impl Table {
     }
 }
 
+/// Machine-readable bench summary: metadata plus rows of JSON objects,
+/// written to `BENCH_<name>.json` at the repo root. The markdown
+/// [`Table`]s are for humans; these files are the persisted perf
+/// trajectory — CI uploads them as artifacts so bench results survive
+/// the run instead of scrolling away in a log.
+pub struct BenchSummary {
+    name: String,
+    meta: BTreeMap<String, Json>,
+    rows: Vec<Json>,
+}
+
+impl BenchSummary {
+    /// `name` must match the bench target (`BENCH_<name>.json`).
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), meta: BTreeMap::new(), rows: Vec::new() }
+    }
+
+    /// Attach a top-level metadata field (sweep parameters, pass/fail
+    /// counters, anything a trajectory plot wants without row parsing).
+    pub fn set(&mut self, key: &str, value: Json) {
+        self.meta.insert(key.to_string(), value);
+    }
+
+    /// Append one result row.
+    pub fn row(&mut self, fields: &[(&str, Json)]) {
+        let obj: BTreeMap<String, Json> =
+            fields.iter().map(|(k, v)| (k.to_string(), v.clone())).collect();
+        self.rows.push(Json::Obj(obj));
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut top = self.meta.clone();
+        top.insert("bench".into(), Json::Str(self.name.clone()));
+        top.insert("rows".into(), Json::Arr(self.rows.clone()));
+        Json::Obj(top)
+    }
+
+    /// Write `BENCH_<name>.json` at the repo root (the parent of the
+    /// cargo manifest directory) and return the path.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("."));
+        let path = root.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_string())?;
+        Ok(path)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -287,6 +348,22 @@ mod tests {
         assert!(r.contains("Fig X"));
         assert!(r.contains("| BF-P2"));
         assert_eq!(r.matches('\n').count(), 7);
+    }
+
+    #[test]
+    fn bench_summary_roundtrips() {
+        let mut s = BenchSummary::new("unit_test");
+        assert!(s.is_empty());
+        s.set("sweep", Json::Str("n x density".into()));
+        s.row(&[("n", Json::Num(4.0)), ("schedule", Json::Str("gather_all".into()))]);
+        s.row(&[("n", Json::Num(8.0)), ("schedule", Json::Str("ring".into()))]);
+        assert_eq!(s.len(), 2);
+        let parsed = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("bench").unwrap().as_str(), Some("unit_test"));
+        assert_eq!(parsed.get("sweep").unwrap().as_str(), Some("n x density"));
+        let rows = parsed.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].get("n").unwrap().as_usize(), Some(8));
     }
 
     #[test]

@@ -1,0 +1,600 @@
+//! Virtual-time fabric: a discrete-event, virtual-clock transport
+//! (DESIGN.md §9).
+//!
+//! The instant fabric ([`crate::collective::Network`]) delivers every
+//! message immediately, so all wall-time claims in the repo used to come
+//! from the closed-form α–β formulas in [`crate::simnet`] — hand-derived
+//! per schedule, blind to link contention, critical paths, and slow
+//! ranks. This fabric makes time *emerge from the schedule execution*
+//! instead: each rank carries a virtual clock, each port serializes
+//! transfers, and `recv` advances the receiver to the message's delivery
+//! time. Per-step critical-path time and per-rank idle time then fall
+//! out of running the existing collectives **unchanged** (they are
+//! written against [`Comm`]).
+//!
+//! # Event model
+//!
+//! Every rank owns a clock plus one egress and one ingress port per
+//! link class (intra-node / inter-node). A transfer of `b` bytes on a
+//! link with latency `α` and bandwidth `β` occupies a port for
+//! `busy = α + b/β` (store-and-forward with per-message setup cost, the
+//! same accounting the simnet closed forms use):
+//!
+//! - `send`: `depart = max(clock, egress_free)`; the egress port is
+//!   busy until `depart + busy`; the message ships with its
+//!   `(depart, busy)` stamps. Sends never block (channels are
+//!   unbounded), mirroring an async NIC.
+//! - `recv`: `delivery = max(ingress_free, depart) + busy`; the ingress
+//!   port is busy until `delivery`, and the receiver's clock advances to
+//!   `max(clock, delivery)` — time spent waiting is accounted as idle.
+//!
+//! Because virtual time flows *only* through message stamps and
+//! rank-local state (never through shared mutable time), measured times
+//! are deterministic: they depend on the schedule's message pattern,
+//! not on OS thread interleaving. On homogeneous links with no jitter
+//! the measured critical paths agree with the simnet closed forms to
+//! within a fraction of a percent (pinned at ±10% in
+//! `tests/vfabric.rs`); with a [`Scenario`] active they diverge in
+//! exactly the ways the formulas cannot see — which is the point.
+//!
+//! # Example
+//!
+//! ```
+//! use deepreduce::collective::{Schedule, SparseConfig, Topology};
+//! use deepreduce::simnet::Link;
+//! use deepreduce::tensor::SparseTensor;
+//! use deepreduce::vfabric::{Scenario, VirtualNetwork};
+//!
+//! let net = VirtualNetwork::new(
+//!     Topology::flat(2),
+//!     Link::mbps(100.0),
+//!     Link::mbps(100.0),
+//!     Scenario::none(0),
+//! );
+//! let handles: Vec<_> = net
+//!     .endpoints()
+//!     .into_iter()
+//!     .enumerate()
+//!     .map(|(rank, ep)| {
+//!         std::thread::spawn(move || {
+//!             let support = if rank == 0 { vec![0u32, 2] } else { vec![2, 4] };
+//!             let mine = SparseTensor::new(6, support, vec![1.0; 2]);
+//!             let sched = Schedule::GatherAll.build(SparseConfig::default());
+//!             sched.allreduce(&ep, mine).unwrap()
+//!         })
+//!     })
+//!     .collect();
+//! for h in handles {
+//!     assert_eq!(h.join().unwrap().indices(), &[0, 2, 4]);
+//! }
+//! // the exchange took measurable virtual time
+//! assert!(net.max_clock_s() > 0.0);
+//! ```
+
+mod scenario;
+
+pub use scenario::Scenario;
+
+use crate::collective::{Comm, Topology};
+use crate::simnet::Link;
+use crate::util::prng::{mix64, Rng};
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+
+/// Link-class index: intra-node.
+const INTRA: usize = 0;
+/// Link-class index: inter-node.
+const INTER: usize = 1;
+
+/// One in-flight transfer with its virtual-time stamps.
+struct Msg {
+    /// when the sender's egress port released the last byte
+    depart: f64,
+    /// port occupancy of this transfer (`α + bytes/β`, jitter applied)
+    busy: f64,
+    payload: Vec<u8>,
+}
+
+/// Shared byte meters (same accounting as the instant fabric).
+struct Meters {
+    bytes: AtomicU64,
+    intra: AtomicU64,
+    inter: AtomicU64,
+}
+
+/// Per-rank published virtual-time state. Endpoints store `f64` bits on
+/// every clock change so the owning thread of the network can read
+/// final clocks after joining the workers.
+struct RankClock {
+    clock: AtomicU64,
+    idle: AtomicU64,
+}
+
+impl RankClock {
+    fn zero() -> Self {
+        Self { clock: AtomicU64::new(0), idle: AtomicU64::new(0) }
+    }
+}
+
+/// The virtual-time fabric: construct once, hand one
+/// [`VirtualEndpoint`] to each worker thread. Byte meters match
+/// [`crate::collective::Network`]; on top of them the fabric reports
+/// the measured virtual clocks ([`VirtualNetwork::max_clock_s`]) and
+/// accumulated per-rank idle time.
+pub struct VirtualNetwork {
+    topo: Topology,
+    endpoints: Mutex<Option<Vec<VirtualEndpoint>>>,
+    meters: Arc<Meters>,
+    clocks: Arc<Vec<RankClock>>,
+}
+
+impl VirtualNetwork {
+    /// Build the fabric over `topo` with per-class link parameters and
+    /// a [`Scenario`] (stragglers / jitter / per-node overrides).
+    pub fn new(topo: Topology, intra: Link, inter: Link, scenario: Scenario) -> Self {
+        let n = topo.world();
+        assert!(n >= 1);
+        let meters = Arc::new(Meters {
+            bytes: AtomicU64::new(0),
+            intra: AtomicU64::new(0),
+            inter: AtomicU64::new(0),
+        });
+        let clocks: Arc<Vec<RankClock>> = Arc::new((0..n).map(|_| RankClock::zero()).collect());
+        // txs[dst][src], rxs[dst][src] — same mesh as the instant fabric
+        let mut txs: Vec<Vec<Option<Sender<Msg>>>> =
+            (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+        let mut rxs: Vec<Vec<Option<Receiver<Msg>>>> =
+            (0..n).map(|_| (0..n).map(|_| None).collect()).collect();
+        for dst in 0..n {
+            for src in 0..n {
+                let (tx, rx) = channel();
+                txs[dst][src] = Some(tx);
+                rxs[dst][src] = Some(rx);
+            }
+        }
+        let mut endpoints = Vec::with_capacity(n);
+        for rank in 0..n {
+            let to: Vec<Sender<Msg>> = (0..n).map(|dst| txs[dst][rank].clone().unwrap()).collect();
+            let from: Vec<Receiver<Msg>> =
+                (0..n).map(|src| rxs[rank][src].take().unwrap()).collect();
+            // per-peer effective link parameters, resolved up front so
+            // the hot path is a table lookup
+            let mut alpha = Vec::with_capacity(n);
+            let mut beta = Vec::with_capacity(n);
+            let mut class = Vec::with_capacity(n);
+            for dst in 0..n {
+                let (a, b, c) = resolve_link(topo, rank, dst, intra, inter, &scenario);
+                alpha.push(a);
+                beta.push(b);
+                class.push(c);
+            }
+            endpoints.push(VirtualEndpoint {
+                rank,
+                n,
+                topo,
+                to,
+                from,
+                alpha,
+                beta,
+                class,
+                clock: Cell::new(0.0),
+                idle: Cell::new(0.0),
+                egress_free: [Cell::new(0.0), Cell::new(0.0)],
+                ingress_free: [Cell::new(0.0), Cell::new(0.0)],
+                link_jitter: scenario.link_jitter,
+                rng: RefCell::new(Rng::new(scenario.seed ^ mix64(rank as u64))),
+                meters: Arc::clone(&meters),
+                clocks: Arc::clone(&clocks),
+            });
+        }
+        Self { topo, endpoints: Mutex::new(Some(endpoints)), meters, clocks }
+    }
+
+    /// Flat single-node fabric with one link everywhere and no scenario.
+    pub fn flat(n: usize, link: Link) -> Self {
+        Self::new(Topology::flat(n), link, link, Scenario::none(0))
+    }
+
+    pub fn n(&self) -> usize {
+        self.topo.world()
+    }
+
+    /// The grid this fabric classifies links against.
+    pub fn topology(&self) -> Topology {
+        self.topo
+    }
+
+    /// Take all endpoints, erroring (instead of silently handing out an
+    /// empty vector) when they were already taken — the fabric is
+    /// single-use.
+    pub fn try_endpoints(&self) -> anyhow::Result<Vec<VirtualEndpoint>> {
+        self.endpoints.lock().unwrap().take().ok_or_else(|| {
+            anyhow::anyhow!("virtual fabric endpoints already handed out (single-use)")
+        })
+    }
+
+    /// Take all endpoints (once), panicking on double-take — the
+    /// convenience form for tests and benches; production callers use
+    /// [`VirtualNetwork::try_endpoints`].
+    pub fn endpoints(&self) -> Vec<VirtualEndpoint> {
+        self.try_endpoints().expect("virtual fabric endpoints")
+    }
+
+    /// Total bytes that crossed the fabric so far.
+    pub fn total_bytes(&self) -> u64 {
+        self.meters.bytes.load(Ordering::Relaxed)
+    }
+
+    /// Bytes that stayed inside a node.
+    pub fn intra_bytes(&self) -> u64 {
+        self.meters.intra.load(Ordering::Relaxed)
+    }
+
+    /// Bytes that crossed a node boundary.
+    pub fn inter_bytes(&self) -> u64 {
+        self.meters.inter.load(Ordering::Relaxed)
+    }
+
+    pub fn reset_bytes(&self) {
+        self.meters.bytes.store(0, Ordering::Relaxed);
+        self.meters.intra.store(0, Ordering::Relaxed);
+        self.meters.inter.store(0, Ordering::Relaxed);
+    }
+
+    /// Latest published virtual clock of `rank`, seconds. Reliable once
+    /// the rank's worker thread has been joined.
+    pub fn clock_s(&self, rank: usize) -> f64 {
+        f64::from_bits(self.clocks[rank].clock.load(Ordering::Relaxed))
+    }
+
+    /// The fabric-wide virtual time: the maximum rank clock — the
+    /// critical-path completion time of everything run so far.
+    pub fn max_clock_s(&self) -> f64 {
+        (0..self.n()).map(|r| self.clock_s(r)).fold(0.0, f64::max)
+    }
+
+    /// Accumulated recv-wait idle time of `rank`, seconds.
+    pub fn idle_s(&self, rank: usize) -> f64 {
+        f64::from_bits(self.clocks[rank].idle.load(Ordering::Relaxed))
+    }
+
+    /// Total recv-wait idle time across all ranks, seconds.
+    pub fn total_idle_s(&self) -> f64 {
+        (0..self.n()).map(|r| self.idle_s(r)).sum()
+    }
+}
+
+/// Effective `(α, β, class)` of the `rank → dst` link under a scenario:
+/// per-node inter bandwidth overrides take the min over both endpoints,
+/// and a straggler divides β on every link touching it.
+fn resolve_link(
+    topo: Topology,
+    rank: usize,
+    dst: usize,
+    intra: Link,
+    inter: Link,
+    scenario: &Scenario,
+) -> (f64, f64, usize) {
+    let straggle = scenario.straggler_factor(rank).max(scenario.straggler_factor(dst));
+    if rank == dst || topo.is_intra(rank, dst) {
+        (intra.latency_s, intra.bandwidth_bps / straggle, INTRA)
+    } else {
+        let b = scenario
+            .node_beta(topo.node_of(rank), inter.bandwidth_bps)
+            .min(scenario.node_beta(topo.node_of(dst), inter.bandwidth_bps));
+        (inter.latency_s, b / straggle, INTER)
+    }
+}
+
+/// A rank's handle onto the virtual-time fabric. Owned by exactly one
+/// worker thread (like [`crate::collective::Endpoint`]); all virtual
+/// time state is rank-local, so it uses plain `Cell`s.
+pub struct VirtualEndpoint {
+    rank: usize,
+    n: usize,
+    topo: Topology,
+    to: Vec<Sender<Msg>>,
+    from: Vec<Receiver<Msg>>,
+    /// per-peer effective latency, seconds
+    alpha: Vec<f64>,
+    /// per-peer effective bandwidth, bytes/second
+    beta: Vec<f64>,
+    /// per-peer link class (`INTRA` / `INTER`)
+    class: Vec<usize>,
+    clock: Cell<f64>,
+    idle: Cell<f64>,
+    egress_free: [Cell<f64>; 2],
+    ingress_free: [Cell<f64>; 2],
+    link_jitter: f64,
+    rng: RefCell<Rng>,
+    meters: Arc<Meters>,
+    clocks: Arc<Vec<RankClock>>,
+}
+
+impl VirtualEndpoint {
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn world(&self) -> usize {
+        self.n
+    }
+
+    /// The grid this endpoint's fabric was built with.
+    pub fn topology(&self) -> Topology {
+        self.topo
+    }
+
+    /// This rank's virtual clock, seconds.
+    pub fn now(&self) -> f64 {
+        self.clock.get()
+    }
+
+    /// Accumulated time this rank spent waiting in `recv`, seconds.
+    pub fn idle_s(&self) -> f64 {
+        self.idle.get()
+    }
+
+    /// Local work: advance this rank's clock by `dt` seconds (compute,
+    /// encode — anything that keeps the rank busy off the network).
+    pub fn elapse(&self, dt: f64) {
+        if dt > 0.0 {
+            self.clock.set(self.clock.get() + dt);
+            self.publish();
+        }
+    }
+
+    /// Barrier alignment: advance the clock to at least `t` *without*
+    /// counting the gap as idle (callers that account barrier idle
+    /// themselves — e.g. the trainer's step barrier — use this).
+    pub fn sync_to(&self, t: f64) {
+        if t > self.clock.get() {
+            self.clock.set(t);
+            self.publish();
+        }
+    }
+
+    fn publish(&self) {
+        let slot = &self.clocks[self.rank];
+        slot.clock.store(self.clock.get().to_bits(), Ordering::Relaxed);
+        slot.idle.store(self.idle.get().to_bits(), Ordering::Relaxed);
+    }
+
+    /// Port occupancy of a transfer to `dst` (jitter applied — drawn
+    /// from this rank's own deterministic stream).
+    fn occupancy(&self, dst: usize, bytes: usize) -> f64 {
+        let mut busy = self.alpha[dst] + bytes as f64 / self.beta[dst];
+        if self.link_jitter > 0.0 {
+            busy *= 1.0 + self.link_jitter * self.rng.borrow_mut().next_f64();
+        }
+        busy
+    }
+
+    /// Non-blocking virtual send: books the egress port, stamps the
+    /// delivery window, meters the bytes.
+    pub fn send(&self, dst: usize, payload: Vec<u8>) {
+        assert_ne!(dst, self.rank, "self-send not allowed");
+        let len = payload.len() as u64;
+        self.meters.bytes.fetch_add(len, Ordering::Relaxed);
+        let c = self.class[dst];
+        if c == INTRA {
+            self.meters.intra.fetch_add(len, Ordering::Relaxed);
+        } else {
+            self.meters.inter.fetch_add(len, Ordering::Relaxed);
+        }
+        let busy = self.occupancy(dst, payload.len());
+        let depart = self.clock.get().max(self.egress_free[c].get());
+        self.egress_free[c].set(depart + busy);
+        self.to[dst].send(Msg { depart, busy, payload }).expect("peer hung up");
+    }
+
+    /// Blocking receive from `src`: books the ingress port and advances
+    /// this rank's clock to the delivery time (waiting counts as idle).
+    pub fn recv(&self, src: usize) -> Vec<u8> {
+        assert_ne!(src, self.rank);
+        let msg = self.from[src].recv().expect("peer hung up");
+        let c = self.class[src];
+        let delivery = self.ingress_free[c].get().max(msg.depart) + msg.busy;
+        self.ingress_free[c].set(delivery);
+        let now = self.clock.get();
+        if delivery > now {
+            self.idle.set(self.idle.get() + (delivery - now));
+            self.clock.set(delivery);
+        }
+        self.publish();
+        msg.payload
+    }
+}
+
+impl Comm for VirtualEndpoint {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.n
+    }
+
+    fn send(&self, dst: usize, payload: Vec<u8>) {
+        VirtualEndpoint::send(self, dst, payload)
+    }
+
+    fn recv(&self, src: usize) -> Vec<u8> {
+        VirtualEndpoint::recv(self, src)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    fn link(alpha: f64, bps: f64) -> Link {
+        Link { bandwidth_bps: bps, latency_s: alpha }
+    }
+
+    #[test]
+    fn ideal_link_keeps_clocks_at_zero() {
+        let net = VirtualNetwork::flat(2, Link::ideal());
+        let mut eps = net.endpoints();
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        let t = thread::spawn(move || {
+            for i in 0..10u8 {
+                a.send(1, vec![i; 100]);
+            }
+            a.now()
+        });
+        for i in 0..10u8 {
+            assert_eq!(b.recv(0), vec![i; 100]);
+        }
+        assert_eq!(t.join().unwrap(), 0.0);
+        assert_eq!(b.now(), 0.0);
+        assert_eq!(b.idle_s(), 0.0);
+        assert_eq!(net.total_bytes(), 1000);
+        assert_eq!(net.max_clock_s(), 0.0);
+    }
+
+    #[test]
+    fn ports_serialize_and_clock_advances() {
+        // α = 1s, β = 100 B/s: a 100-byte transfer occupies 2s
+        let net = VirtualNetwork::flat(3, link(1.0, 100.0));
+        let mut eps = net.endpoints();
+        let c = eps.pop().unwrap();
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        let t = thread::spawn(move || {
+            // both sends leave rank 0's intra egress port back to back:
+            // departs at 0 and 2
+            a.send(1, vec![0; 100]);
+            a.send(2, vec![0; 100]);
+        });
+        let tb = thread::spawn(move || {
+            b.recv(0);
+            (b.now(), b.idle_s())
+        });
+        let (nb, ib) = tb.join().unwrap();
+        assert!((nb - 2.0).abs() < 1e-12, "first delivery at 2s, got {nb}");
+        assert!((ib - 2.0).abs() < 1e-12);
+        c.recv(0);
+        assert!((c.now() - 4.0).abs() < 1e-12, "second departs at 2, lands at 4: {}", c.now());
+        t.join().unwrap();
+        assert!((net.max_clock_s() - 4.0).abs() < 1e-12);
+        assert!((net.total_idle_s() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ingress_serializes_concurrent_senders() {
+        // two senders ship to rank 2 at virtual time 0; the receiver's
+        // single ingress port takes them one after the other
+        let net = VirtualNetwork::flat(3, link(0.0, 100.0));
+        let mut eps = net.endpoints();
+        let c = eps.pop().unwrap();
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        let t1 = thread::spawn(move || a.send(2, vec![0; 100]));
+        let t2 = thread::spawn(move || b.send(2, vec![0; 100]));
+        t1.join().unwrap();
+        t2.join().unwrap();
+        c.recv(0);
+        c.recv(1);
+        assert!((c.now() - 2.0).abs() < 1e-12, "ingress must serialize: {}", c.now());
+    }
+
+    #[test]
+    fn elapse_defers_departure() {
+        let net = VirtualNetwork::flat(2, link(0.0, 100.0));
+        let mut eps = net.endpoints();
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        let t = thread::spawn(move || {
+            a.elapse(5.0);
+            a.send(1, vec![0; 100]);
+            a.now()
+        });
+        assert_eq!(b.recv(0).len(), 100);
+        assert_eq!(t.join().unwrap(), 5.0);
+        assert!((b.now() - 6.0).abs() < 1e-12, "departs at 5, lands at 6: {}", b.now());
+        // sync_to does not count as idle
+        b.sync_to(10.0);
+        assert_eq!(b.now(), 10.0);
+        assert!((b.idle_s() - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn straggler_slows_its_links_both_ways() {
+        let scen = |stragglers| Scenario { stragglers, seed: 1, ..Scenario::default() };
+        let topo = Topology::flat(2);
+        let l = link(0.0, 100.0);
+        for (stragglers, want) in [
+            (vec![], 1.0),
+            (vec![(0usize, 4.0)], 4.0),
+            (vec![(1usize, 8.0)], 8.0),
+        ] {
+            let net = VirtualNetwork::new(topo, l, l, scen(stragglers));
+            let mut eps = net.endpoints();
+            let b = eps.pop().unwrap();
+            let a = eps.pop().unwrap();
+            let t = thread::spawn(move || a.send(1, vec![0; 100]));
+            b.recv(0);
+            t.join().unwrap();
+            assert!((b.now() - want).abs() < 1e-12, "want {want}, got {}", b.now());
+        }
+    }
+
+    #[test]
+    fn hetero_node_override_caps_inter_bandwidth() {
+        // 2×1 grid: the only link is inter; node 1 capped at 8 Mbps
+        // (= 1e6 B/s), so 1e6 bytes take 1 virtual second
+        let topo = Topology::new(2, 1);
+        let fast = link(0.0, 1e9);
+        let scen = Scenario { node_mbps: vec![(1, 8.0)], seed: 1, ..Scenario::default() };
+        let net = VirtualNetwork::new(topo, fast, fast, scen);
+        let mut eps = net.endpoints();
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        let t = thread::spawn(move || a.send(1, vec![0; 1_000_000]));
+        b.recv(0);
+        t.join().unwrap();
+        assert!((b.now() - 1.0).abs() < 1e-9, "got {}", b.now());
+        assert_eq!(net.inter_bytes(), 1_000_000);
+        assert_eq!(net.intra_bytes(), 0);
+    }
+
+    #[test]
+    fn link_jitter_is_deterministic_across_runs() {
+        let run = || {
+            let scen = Scenario { link_jitter: 0.5, seed: 99, ..Scenario::default() };
+            let net =
+                VirtualNetwork::new(Topology::flat(2), link(0.0, 100.0), link(0.0, 100.0), scen);
+            let mut eps = net.endpoints();
+            let b = eps.pop().unwrap();
+            let a = eps.pop().unwrap();
+            let t = thread::spawn(move || {
+                for _ in 0..16 {
+                    a.send(1, vec![0; 100]);
+                }
+            });
+            for _ in 0..16 {
+                b.recv(0);
+            }
+            t.join().unwrap();
+            b.now()
+        };
+        let (x, y) = (run(), run());
+        assert_eq!(x, y, "jitter must be reproducible");
+        // 16 transfers of 1s base, jitter in [1, 1.5): total in [16, 24)
+        assert!((16.0..24.0).contains(&x), "got {x}");
+        assert!(x > 16.0, "jitter must actually perturb the transfers");
+    }
+
+    #[test]
+    fn double_take_is_a_structured_error() {
+        let net = VirtualNetwork::flat(2, Link::ideal());
+        let _eps = net.try_endpoints().unwrap();
+        let err = net.try_endpoints().unwrap_err();
+        assert!(err.to_string().contains("already handed out"), "{err}");
+    }
+}

@@ -1,0 +1,180 @@
+//! Scenario model for the virtual-time fabric: stragglers, jitter, and
+//! heterogeneous per-node links.
+//!
+//! A [`Scenario`] is pure data plus deterministic sampling — every
+//! random draw is a hash of `(seed, rank, step)` or comes from a
+//! per-rank [`crate::util::prng::Rng`] stream owned by that rank's
+//! endpoint, so measured virtual times are reproducible regardless of
+//! OS thread interleaving.
+
+use crate::util::prng::mix64;
+
+/// The conditions a virtual-time run simulates (CLI `--straggler`,
+/// `--compute-jitter`, `--link-jitter`, `--node-mbps`).
+#[derive(Clone, Debug, Default)]
+pub struct Scenario {
+    /// `(rank, factor)` pairs: rank's compute is `factor`× slower and
+    /// every transfer touching the rank runs at `β / factor` (an
+    /// overloaded host is slow on both its cores and its NIC).
+    pub stragglers: Vec<(usize, f64)>,
+    /// multiplicative compute jitter amplitude σ: per `(rank, step)`
+    /// the compute time is scaled by `1 + σ·u`, `u ~ U[0, 1)`
+    pub compute_jitter: f64,
+    /// multiplicative transfer jitter amplitude σ: each transfer's
+    /// port occupancy is scaled by `1 + σ·u`, `u ~ U[0, 1)`
+    pub link_jitter: f64,
+    /// per-node inter-link bandwidth overrides `(node, Mbps)`: an
+    /// inter-node transfer runs at the slower of its two endpoints'
+    /// node bandwidths (heterogeneous clusters)
+    pub node_mbps: Vec<(usize, f64)>,
+    /// seed of every deterministic draw
+    pub seed: u64,
+}
+
+impl Scenario {
+    /// The trivial scenario: no stragglers, no jitter, no overrides.
+    pub fn none(seed: u64) -> Self {
+        Self { seed, ..Self::default() }
+    }
+
+    /// Whether any knob is set (`false` = homogeneous, deterministic
+    /// links — the configuration the simnet closed forms describe).
+    pub fn is_active(&self) -> bool {
+        !self.stragglers.is_empty()
+            || self.compute_jitter > 0.0
+            || self.link_jitter > 0.0
+            || !self.node_mbps.is_empty()
+    }
+
+    /// Straggler slowdown of `rank` (1.0 when not a straggler).
+    pub fn straggler_factor(&self, rank: usize) -> f64 {
+        self.stragglers
+            .iter()
+            .filter(|&&(r, _)| r == rank)
+            .map(|&(_, f)| f)
+            .fold(1.0f64, f64::max)
+    }
+
+    /// Deterministic compute-time multiplier for one `(rank, step)`:
+    /// the straggler factor times the sampled jitter.
+    pub fn compute_factor(&self, rank: usize, step: usize) -> f64 {
+        let mut f = self.straggler_factor(rank);
+        if self.compute_jitter > 0.0 {
+            f *= 1.0 + self.compute_jitter * unit(self.seed, rank as u64, step as u64);
+        }
+        f
+    }
+
+    /// Inter-link bandwidth (bytes/s) of `node`, after overrides.
+    pub fn node_beta(&self, node: usize, default_bps: f64) -> f64 {
+        self.node_mbps
+            .iter()
+            .filter(|&&(m, _)| m == node)
+            .map(|&(_, mbps)| mbps * 1e6 / 8.0)
+            .fold(default_bps, f64::min)
+    }
+
+    /// Parse the CLI straggler list `R:F[,R:F…]` (e.g. `0:8` = rank 0
+    /// is 8× slow). Empty input parses to no stragglers.
+    pub fn parse_stragglers(s: &str) -> anyhow::Result<Vec<(usize, f64)>> {
+        parse_pairs(s, "straggler", |f| f >= 1.0, "factor must be >= 1")
+    }
+
+    /// Parse the CLI per-node override list `N:MBPS[,N:MBPS…]`
+    /// (e.g. `1:10` = node 1's inter links run at 10 Mbps).
+    pub fn parse_node_mbps(s: &str) -> anyhow::Result<Vec<(usize, f64)>> {
+        parse_pairs(s, "node-mbps", |f| f > 0.0, "Mbps must be > 0")
+    }
+}
+
+fn parse_pairs(
+    s: &str,
+    what: &str,
+    ok: fn(f64) -> bool,
+    why: &str,
+) -> anyhow::Result<Vec<(usize, f64)>> {
+    let mut out = Vec::new();
+    for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+        let (idx, val) = part
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("bad {what} entry {part:?}, expected INDEX:VALUE"))?;
+        let idx: usize = idx
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad {what} index in {part:?}"))?;
+        let val: f64 = val
+            .trim()
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad {what} value in {part:?}"))?;
+        anyhow::ensure!(val.is_finite() && ok(val), "bad {what} entry {part:?}: {why}");
+        out.push((idx, val));
+    }
+    Ok(out)
+}
+
+/// Deterministic `U[0, 1)` draw from a `(seed, a, b)` triple.
+fn unit(seed: u64, a: u64, b: u64) -> f64 {
+    let h = mix64(
+        seed ^ a.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ b.wrapping_mul(0xC2B2_AE3D_27D4_EB4F),
+    );
+    (h >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_and_rejects() {
+        assert_eq!(Scenario::parse_stragglers("").unwrap(), vec![]);
+        assert_eq!(Scenario::parse_stragglers("0:8").unwrap(), vec![(0, 8.0)]);
+        assert_eq!(Scenario::parse_stragglers("1:2, 3:1.5").unwrap(), vec![(1, 2.0), (3, 1.5)]);
+        assert!(Scenario::parse_stragglers("1").is_err());
+        assert!(Scenario::parse_stragglers("a:2").is_err());
+        assert!(Scenario::parse_stragglers("1:0.5").is_err(), "factor < 1 rejected");
+        assert_eq!(Scenario::parse_node_mbps("0:100,1:10").unwrap(), vec![(0, 100.0), (1, 10.0)]);
+        assert!(Scenario::parse_node_mbps("0:0").is_err());
+    }
+
+    #[test]
+    fn factors_default_to_one() {
+        let s = Scenario::none(7);
+        assert!(!s.is_active());
+        assert_eq!(s.straggler_factor(0), 1.0);
+        assert_eq!(s.compute_factor(3, 10), 1.0);
+        assert_eq!(s.node_beta(2, 1e6), 1e6);
+    }
+
+    #[test]
+    fn straggler_and_override_apply() {
+        let s = Scenario {
+            stragglers: vec![(1, 4.0)],
+            node_mbps: vec![(0, 8.0)],
+            seed: 1,
+            ..Scenario::default()
+        };
+        assert!(s.is_active());
+        assert_eq!(s.straggler_factor(1), 4.0);
+        assert_eq!(s.straggler_factor(0), 1.0);
+        // 8 Mbps = 1e6 bytes/s, below the 1e9 default
+        assert_eq!(s.node_beta(0, 1e9), 1e6);
+        assert_eq!(s.node_beta(1, 1e9), 1e9);
+    }
+
+    #[test]
+    fn compute_jitter_is_deterministic_and_bounded() {
+        let s = Scenario { compute_jitter: 0.5, seed: 42, ..Scenario::default() };
+        for rank in 0..4 {
+            for step in 0..16 {
+                let f = s.compute_factor(rank, step);
+                assert!((1.0..1.5).contains(&f), "factor {f}");
+                assert_eq!(f, s.compute_factor(rank, step), "same draw must repeat");
+            }
+        }
+        // draws vary across (rank, step)
+        let a = s.compute_factor(0, 0);
+        let b = s.compute_factor(1, 0);
+        let c = s.compute_factor(0, 1);
+        assert!(a != b || a != c);
+    }
+}

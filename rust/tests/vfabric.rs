@@ -1,0 +1,303 @@
+//! Virtual-time fabric validation (DESIGN.md §9):
+//!
+//! 1. **Differential equivalence** — with zero latency and infinite
+//!    bandwidth the event fabric must produce *byte-identical*
+//!    allreduce results to the instant fabric for every schedule: the
+//!    virtual clocks are pure bookkeeping and may never perturb the
+//!    data path.
+//! 2. **Cross-validation against the closed forms** — on homogeneous,
+//!    no-jitter links with the uniform strided load the α–β models
+//!    assume, the *measured* virtual critical path must agree with the
+//!    `simnet` per-schedule formulas within ±10% (it lands well under
+//!    1% — the slack covers wire-header vs model-header differences).
+//! 3. **Trainer integration** (artifact-gated) — `--fabric virtual`
+//!    must leave training results identical to the instant fabric
+//!    while reporting non-zero `measured_step_s` / `rank_idle_s`.
+
+use deepreduce::collective::{Network, Schedule, SparseConfig, Topology};
+use deepreduce::simnet::{flat_schedule_time, hierarchical_time, Link, SegWire};
+use deepreduce::tensor::SparseTensor;
+use deepreduce::util::prng::Rng;
+use deepreduce::util::testkit::sorted_support;
+use deepreduce::vfabric::{Scenario, VirtualNetwork};
+use std::thread;
+
+/// Random sparse inputs (distinct support + Gaussian values per rank).
+fn random_inputs(n: usize, d: usize, k: usize, seed: u64) -> Vec<SparseTensor> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let support = sorted_support(&mut rng, d, k);
+            let values: Vec<f32> = (0..k).map(|_| rng.next_gaussian() as f32).collect();
+            SparseTensor::new(d, support, values)
+        })
+        .collect()
+}
+
+/// n disjoint, evenly-strided supports of k entries over [0, d) — the
+/// uniform-load worst case the closed-form byte models assume exactly
+/// (mirrors `simnet::tests::strided_inputs`).
+fn strided_inputs(n: usize, d: usize, k: usize) -> Vec<SparseTensor> {
+    let m = d / k;
+    (0..n)
+        .map(|r| {
+            let off = r * m / n;
+            let idx: Vec<u32> = (0..k).map(|j| (j * m + off) as u32).collect();
+            let val: Vec<f32> = (0..k).map(|j| 0.5 + ((r * k + j) % 97) as f32 / 100.0).collect();
+            SparseTensor::new(d, idx, val)
+        })
+        .collect()
+}
+
+fn run_instant(
+    sched: Schedule,
+    cfg: SparseConfig,
+    topo: Topology,
+    inputs: &[SparseTensor],
+) -> Vec<SparseTensor> {
+    let net = Network::with_topology(topo);
+    let handles: Vec<_> = net
+        .endpoints()
+        .into_iter()
+        .zip(inputs.to_vec())
+        .map(|(ep, t)| thread::spawn(move || sched.build(cfg).allreduce(&ep, t).unwrap()))
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// Returns per-rank results plus the measured virtual critical path.
+fn run_virtual(
+    sched: Schedule,
+    cfg: SparseConfig,
+    topo: Topology,
+    intra: Link,
+    inter: Link,
+    inputs: &[SparseTensor],
+) -> (Vec<SparseTensor>, f64) {
+    let net = VirtualNetwork::new(topo, intra, inter, Scenario::none(0));
+    let handles: Vec<_> = net
+        .endpoints()
+        .into_iter()
+        .zip(inputs.to_vec())
+        .map(|(ep, t)| thread::spawn(move || sched.build(cfg).allreduce(&ep, t).unwrap()))
+        .collect();
+    let outs = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    (outs, net.max_clock_s())
+}
+
+/// (1) zero-latency / infinite-bandwidth event fabric ≡ instant fabric,
+/// byte-identical per rank, for every schedule × world × seed.
+#[test]
+fn ideal_virtual_fabric_matches_instant_fabric_exactly() {
+    let d = 4096usize;
+    for &n in &[2usize, 3, 4, 8] {
+        let topo = Topology::flat(n);
+        for &seed in &[1u64, 2] {
+            let inputs = random_inputs(n, d, d / 50, seed);
+            for sched in Schedule::flat() {
+                let cfg = SparseConfig { topology: Some(topo), ..SparseConfig::default() };
+                let instant = run_instant(sched, cfg, topo, &inputs);
+                let (virt, t) =
+                    run_virtual(sched, cfg, topo, Link::ideal(), Link::ideal(), &inputs);
+                assert_eq!(t, 0.0, "{sched:?} n={n}: ideal links must take zero virtual time");
+                for (rank, (a, b)) in instant.iter().zip(&virt).enumerate() {
+                    assert_eq!(
+                        a.indices(),
+                        b.indices(),
+                        "{sched:?} n={n} seed={seed} rank={rank}: support differs"
+                    );
+                    // bit-exact: same merge order on both fabrics
+                    let av: Vec<u32> = a.values().iter().map(|v| v.to_bits()).collect();
+                    let bv: Vec<u32> = b.values().iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(av, bv, "{sched:?} n={n} seed={seed} rank={rank}: values differ");
+                }
+            }
+        }
+    }
+}
+
+/// (1b) same equivalence for the hierarchical schedule over real grids.
+#[test]
+fn ideal_virtual_fabric_matches_instant_hierarchical() {
+    let d = 4096usize;
+    for &(nodes, rpn) in &[(2usize, 2usize), (2, 4), (4, 2), (3, 3)] {
+        let topo = Topology::new(nodes, rpn);
+        let inputs = random_inputs(topo.world(), d, d / 50, 9);
+        for inner in [Schedule::GatherAll, Schedule::RingRescatterExact] {
+            let cfg = SparseConfig { topology: Some(topo), inner, ..SparseConfig::default() };
+            let instant = run_instant(Schedule::Hierarchical, cfg, topo, &inputs);
+            let (virt, _) = run_virtual(
+                Schedule::Hierarchical,
+                cfg,
+                topo,
+                Link::ideal(),
+                Link::ideal(),
+                &inputs,
+            );
+            for (rank, (a, b)) in instant.iter().zip(&virt).enumerate() {
+                assert_eq!(a, b, "{}x{rpn} inner {inner:?} rank {rank}", topo.nodes);
+            }
+        }
+    }
+}
+
+/// (2) homogeneous no-jitter links: measured virtual step time agrees
+/// with the per-schedule closed forms within ±10% for every flat
+/// schedule.
+#[test]
+fn measured_times_match_closed_forms_for_flat_schedules() {
+    let d = 8192usize;
+    let k = 1024usize;
+    let w = SegWire::raw(0.5);
+    let link = Link::mbps(100.0);
+    for &n in &[4usize, 8] {
+        let topo = Topology::flat(n);
+        let inputs = strided_inputs(n, d, k);
+        for sched in Schedule::flat() {
+            let cfg = SparseConfig { topology: Some(topo), ..SparseConfig::default() };
+            let (_, measured) = run_virtual(sched, cfg, topo, link, link, &inputs);
+            let model = flat_schedule_time(sched, k as u64, d as u64, n, link, w, true);
+            let err = (measured - model).abs() / model;
+            assert!(
+                err < 0.10,
+                "{sched:?} n={n}: measured {measured:.6}s vs model {model:.6}s (err {err:.3})"
+            );
+        }
+    }
+}
+
+/// (2b) same cross-validation for the hierarchical schedule with two
+/// link classes (fast intra, slow inter).
+#[test]
+fn measured_time_matches_closed_form_for_hierarchical() {
+    let d = 8192usize;
+    let k = 512usize;
+    let w = SegWire::raw(0.5);
+    let intra = Link::gbps(10.0);
+    let inter = Link::mbps(100.0);
+    for &(nodes, rpn) in &[(2usize, 4usize), (4, 2)] {
+        let topo = Topology::new(nodes, rpn);
+        let inputs = strided_inputs(topo.world(), d, k);
+        let cfg = SparseConfig { topology: Some(topo), ..SparseConfig::default() };
+        let (_, measured) = run_virtual(Schedule::Hierarchical, cfg, topo, intra, inter, &inputs);
+        let model = hierarchical_time(
+            k as u64,
+            d as u64,
+            topo,
+            intra,
+            inter,
+            w,
+            Schedule::GatherAll,
+            true,
+        );
+        let err = (measured - model).abs() / model;
+        assert!(
+            err < 0.10,
+            "{}x{rpn}: measured {measured:.6}s vs model {model:.6}s (err {err:.3})",
+            topo.nodes
+        );
+    }
+}
+
+/// Scenarios move measured time in the right direction: a straggler
+/// stretches the critical path and shows up as other ranks' idle time.
+#[test]
+fn straggler_stretches_critical_path_and_idle() {
+    let d = 8192usize;
+    let n = 4usize;
+    let topo = Topology::flat(n);
+    let link = Link::mbps(100.0);
+    let inputs = strided_inputs(n, d, 512);
+    let cfg = SparseConfig { topology: Some(topo), ..SparseConfig::default() };
+    let run = |scenario: Scenario| {
+        let net = VirtualNetwork::new(topo, link, link, scenario);
+        let handles: Vec<_> = net
+            .endpoints()
+            .into_iter()
+            .zip(inputs.to_vec())
+            .map(|(ep, t)| {
+                thread::spawn(move || {
+                    Schedule::GatherAll.build(cfg).allreduce(&ep, t).unwrap()
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        (net.max_clock_s(), net.total_idle_s())
+    };
+    let (base_t, base_idle) = run(Scenario::none(3));
+    let (slow_t, slow_idle) = run(Scenario {
+        stragglers: vec![(0, 8.0)],
+        seed: 3,
+        ..Scenario::default()
+    });
+    assert!(slow_t > base_t * 2.0, "straggler must stretch: {base_t} -> {slow_t}");
+    assert!(slow_idle > base_idle, "peers must wait on the straggler");
+}
+
+// ---- trainer integration (artifact-gated, mirrors integration.rs) ----
+
+use deepreduce::coordinator::{CompressionSpec, ModelKind, TrainConfig, Trainer};
+use deepreduce::runtime::artifact_available;
+
+fn mlp_cfg(fabric: &str, straggler: &str) -> TrainConfig {
+    let mut spec = CompressionSpec::topk(0.05, "raw", f64::NAN, "raw", f64::NAN);
+    spec.schedule = "ring_rescatter_exact".into();
+    spec.fabric = fabric.into();
+    spec.straggler = straggler.into();
+    // compress every tensor so the collective (and thus the virtual
+    // clock) is guaranteed to run
+    spec.min_compress = 1;
+    let mut cfg = TrainConfig::new(ModelKind::Mlp, "mlp");
+    cfg.workers = 4;
+    cfg.steps = 3;
+    cfg.compression = Some(spec);
+    cfg
+}
+
+/// (3) `--fabric virtual` changes the timing report, not the training:
+/// losses match the instant fabric bit-for-bit and the measured fields
+/// are populated.
+#[test]
+fn trainer_on_virtual_fabric_matches_instant_and_measures_time() {
+    if !artifact_available("mlp") {
+        eprintln!("SKIP: artifact mlp missing (run `make artifacts`)");
+        return;
+    }
+    let ri = Trainer::new(mlp_cfg("instant", "")).unwrap().run().unwrap();
+    let rv = Trainer::new(mlp_cfg("virtual", "")).unwrap().run().unwrap();
+    assert_eq!(ri.steps.len(), rv.steps.len());
+    for (a, b) in ri.steps.iter().zip(&rv.steps) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "fabric must not change the math");
+        assert_eq!(a.fabric_bytes, b.fabric_bytes, "same schedule, same wire traffic");
+        assert_eq!(a.measured_step_s, 0.0, "instant fabric has no virtual clock");
+        assert!(b.measured_step_s > 0.0, "virtual fabric must measure step time");
+        assert!(b.rank_idle_s >= 0.0);
+    }
+    assert!(rv.total_measured_s() > 0.0);
+}
+
+/// A straggler scenario slows the measured clock but never the math.
+#[test]
+fn trainer_straggler_scenario_inflates_measured_time_only() {
+    if !artifact_available("mlp") {
+        eprintln!("SKIP: artifact mlp missing (run `make artifacts`)");
+        return;
+    }
+    let base = Trainer::new(mlp_cfg("virtual", "")).unwrap().run().unwrap();
+    let slow = Trainer::new(mlp_cfg("virtual", "0:16")).unwrap().run().unwrap();
+    for (a, b) in base.steps.iter().zip(&slow.steps) {
+        assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "scenario must not change the math");
+    }
+    assert!(
+        slow.total_measured_s() > base.total_measured_s(),
+        "straggler must inflate measured time: {} vs {}",
+        slow.total_measured_s(),
+        base.total_measured_s()
+    );
+    assert!(
+        slow.total_rank_idle_s() > base.total_rank_idle_s(),
+        "straggler must inflate peer idle time"
+    );
+}
