@@ -44,6 +44,10 @@ fn main() -> anyhow::Result<()> {
         ("bloom_p2", 0.001, "fitpoly"),
         ("raw", f64::NAN, "qsgd"),
         ("raw", f64::NAN, "fitdexp"),
+        // composed chains (`deepreduce list-codecs` for the full
+        // registry): a second lossless stage over the head's bytes
+        ("delta_varint+deflate", f64::NAN, "raw"),
+        ("rle+deflate", f64::NAN, "raw"),
     ] {
         let dr = DeepReduce::new(
             index_by_name(idx, idx_param, 7).unwrap(),

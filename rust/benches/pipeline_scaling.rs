@@ -14,6 +14,7 @@
 //!  - the autotuner picks at least two distinct codec pairs across a
 //!    density sweep.
 
+use deepreduce::compress::CompressSpec;
 use deepreduce::pipeline::{CodecPolicy, GradientPipeline, StepTimeline};
 use deepreduce::simnet::Link;
 use deepreduce::sparsify::Sparsifier;
@@ -88,7 +89,14 @@ fn main() {
             let mut per_tensor_serial = f64::NAN;
             for (cname, cap) in [("per-tensor", 0usize), ("256KiB", 256 << 10), ("1MiB", 1 << 20)] {
                 let mut pipe = GradientPipeline::new(
-                    &members, cap, false, true, "raw", f64::NAN, "raw", f64::NAN, 7, link, workers,
+                    &members,
+                    cap,
+                    false,
+                    true,
+                    &CompressSpec::raw(),
+                    7,
+                    link,
+                    workers,
                 )
                 .expect("pipeline");
                 let nbuckets = pipe.plan().len();
@@ -137,18 +145,17 @@ fn main() {
     summary.set("wins", Json::Num(wins as f64));
     summary.set("cases", Json::Num(cases as f64));
     summary.set("smoke", Json::Bool(smoke));
-    match summary.write() {
-        Ok(path) => println!("wrote {}", path.display()),
-        Err(e) => eprintln!("could not write bench summary: {e}"),
-    }
     println!("overlapped bucketed path beat the per-tensor serial path in {wins}/{cases} configs");
 
     // ---- codec autotuning across a density sweep ------------------
     // byte-calibrated policy (deterministic choices; throughput terms
-    // zeroed) on a slow link where wire bytes dominate the cost
+    // zeroed) on a slow link where wire bytes dominate the cost. The
+    // candidate set is enumerated from the codec registry, chains
+    // (e.g. rle+deflate) included — nothing here names codecs.
+    let (idx_candidates, val_candidates) = deepreduce::pipeline::default_candidates(false);
     let policy = CodecPolicy::calibrate_bytes_only(
-        &["raw", "rle", "elias", "bitmap"],
-        &["raw", "deflate"],
+        &idx_candidates,
+        &val_candidates,
         7,
         Link::mbps(10.0),
         workers,
@@ -180,6 +187,13 @@ fn main() {
             label.clone(),
             format!("{:.1}", est / 1e3),
         ]);
+        // full spec labels (chains included) into the bench artifact so
+        // BENCH_pipeline_scaling.json distinguishes rle+deflate from rle
+        summary.row(&[
+            ("autotune_density", Json::Num(density)),
+            ("autotune_choice", Json::Str(label.clone())),
+            ("est_bytes", Json::Num(est)),
+        ]);
         if !picks.contains(&label) {
             picks.push(label);
         }
@@ -198,10 +212,7 @@ fn main() {
         1 << 20,
         true,
         true,
-        "raw",
-        f64::NAN,
-        "raw",
-        f64::NAN,
+        &CompressSpec::raw(),
         7,
         Link::mbps(10.0),
         workers,
@@ -216,4 +227,12 @@ fn main() {
         .collect();
     let (_, _, labels) = run_step(&mut tuned, &grads, &sparse);
     println!("integrated autotuner on the 2% workload picked: {labels:?}");
+    summary.set(
+        "integrated_autotune_choices",
+        Json::Arr(labels.iter().map(|l| Json::Str(l.clone())).collect()),
+    );
+    match summary.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench summary: {e}"),
+    }
 }

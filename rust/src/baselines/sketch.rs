@@ -32,7 +32,7 @@ impl QuantileBucketValue {
 }
 
 impl ValueCodec for QuantileBucketValue {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         if self.huffman {
             "sketch_huff"
         } else {
@@ -132,7 +132,7 @@ impl ValueCodec for QuantileBucketValue {
 pub struct DeltaHuffmanIndex;
 
 impl IndexCodec for DeltaHuffmanIndex {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "delta_huffman"
     }
 

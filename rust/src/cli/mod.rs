@@ -32,7 +32,7 @@ pub const KNOWN_FLAGS: &[&str] = &[
 /// and by the `help` subcommand).
 pub fn usage() -> String {
     "\
-usage: deepreduce <train|smoke|codecs|info|help> [--opts]
+usage: deepreduce <train|smoke|codecs|list-codecs|info|help> [--opts]
 
 train — run distributed training with a DeepReduce instantiation
   --model <mlp|ncf|transformer>   benchmark family (default mlp)
@@ -45,14 +45,19 @@ train — run distributed training with a DeepReduce instantiation
   --log-every <k>                 progress line every k steps (0 = silent)
 
   compression (any of these activates the DeepReduce pipeline):
-  --index <codec>                 index codec: raw|bitmap|rle|huffman|
-                                  delta_varint|elias|bloom_p0|bloom_p1|bloom_p2
-  --value <codec>                 value codec: raw|fp16|deflate|zstd|qsgd|
-                                  fitpoly|fitdexp
+  --index <spec>                  index codec spec: a registry name
+                                  (raw|bitmap|rle|huffman|delta_varint|elias|
+                                  bloom_p0|bloom_p1|bloom_p2), optionally with
+                                  key=value params and +chained byte stages,
+                                  e.g. rle+deflate or bloom_p2(fpr=0.01)+zstd
+                                  (see `deepreduce list-codecs`)
+  --value <spec>                  value codec spec: raw|fp16|deflate|zstd|qsgd|
+                                  fitpoly|fitdexp, same chain/param syntax,
+                                  e.g. qsgd(bits=6) or raw+zstd
   --sparsifier <name>             topk|randomk|threshold|identity (default topk)
   --ratio <f>                     sparsifier keep ratio r/d (default 0.01)
-  --fpr <f>                       bloom false-positive rate (default 0.001)
-  --value-param <f>               qsgd bits / fitpoly degree
+  --fpr <f>                       legacy shim for bloom fpr= (default 0.001)
+  --value-param <f>               legacy shim: qsgd bits / fitpoly degree
   --no-ef                         disable error-feedback memory
 
   collective schedule + topology:
@@ -89,6 +94,10 @@ smoke — load the pallas smoke artifact through PJRT and execute it
 codecs — codec volume table on a synthetic sparse gradient
   --dim <n>                       gradient dimensionality (default 36864)
   --ratio <f>                     top-r keep ratio (default 0.01)
+
+list-codecs — print the codec registry: every index/value codec and
+  chain byte stage with its typed parameter schema (key:type=default),
+  losslessness, and chainability
 
 info — list artifacts and their manifests
 "
@@ -227,8 +236,10 @@ mod tests {
             );
         }
         // and every subcommand
-        for sub in ["train", "smoke", "codecs", "info"] {
+        for sub in ["train", "smoke", "codecs", "list-codecs", "info"] {
             assert!(text.contains(sub), "help text is missing {sub}");
         }
+        // the chain syntax is documented where users look for codecs
+        assert!(text.contains("rle+deflate"), "help text is missing the chain syntax example");
     }
 }

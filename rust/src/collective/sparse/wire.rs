@@ -12,14 +12,13 @@
 //! ```
 //!
 //! The index/value sections reuse the DeepReduce codec traits
-//! ([`IndexCodec`] / [`ValueCodec`]), so any lossless instantiation
-//! (raw, delta_varint, bitmap, rle, huffman × raw/fp16/deflate/zstd)
-//! plugs straight into a collective schedule. The default is
-//! raw/raw: exactly 8 bytes per entry, which keeps the α–β byte models
-//! in `crate::simnet` exact.
+//! ([`IndexCodec`] / [`ValueCodec`]), so any lossless instantiation —
+//! including registry chains like `rle+deflate` — plugs straight into a
+//! collective schedule. The default is raw/raw: exactly 8 bytes per
+//! entry, which keeps the α–β byte models in `crate::simnet` exact.
 
 use super::merge;
-use crate::compress::{index_by_name, value_by_name, IndexCodec, ValueCodec};
+use crate::compress::{build_index_spec, build_value_spec, CodecRegistry, CompressSpec, IndexCodec, ValueCodec};
 use crate::tensor::SparseTensor;
 use crate::util::varint;
 
@@ -44,55 +43,51 @@ impl SegmentCodec {
     /// The default raw/raw instantiation: 8 bytes per sparse entry.
     pub fn raw(dense_switch: f64) -> Self {
         Self::new(
-            index_by_name("raw", f64::NAN, 0).expect("raw index codec"),
-            value_by_name("raw", f64::NAN, 0).expect("raw value codec"),
+            Box::new(crate::compress::index::RawIndex),
+            Box::new(crate::compress::value::RawValue),
             dense_switch,
         )
     }
 
-    /// Build from codec names (the config-file/CLI surface).
+    /// Build from codec spec strings (the config-file/CLI surface);
+    /// full chain specs with parameters resolve through the registry.
     pub fn by_name(index: &str, value: &str, dense_switch: f64) -> Option<Self> {
         Some(Self::new(
-            index_by_name(index, f64::NAN, 0)?,
-            value_by_name(value, f64::NAN, 0)?,
+            build_index_spec(index, f64::NAN, 0).ok()?,
+            build_value_spec(value, f64::NAN, 0).ok()?,
             dense_switch,
         ))
     }
 
-    /// Compose from a compression spec's codec names, falling back to
-    /// raw for any stage that would corrupt an allreduce sum: lossy
+    /// Compose from the trainer's typed [`CompressSpec`], falling back
+    /// to raw for any side that would corrupt an allreduce sum: lossy
     /// index codecs (Bloom policies reconstruct S̃ ≠ S) and lossy value
-    /// codecs. Lossless value codecs in this crate are order-preserving.
-    pub fn lossless_or_raw(
-        index: &str,
-        index_param: f64,
-        value: &str,
-        value_param: f64,
-        seed: u64,
-        dense_switch: f64,
-    ) -> Self {
-        let idx = index_by_name(index, index_param, seed)
+    /// codecs. Lossless chains (e.g. `rle+deflate`) pass through whole;
+    /// lossless value codecs in this crate are order-preserving.
+    pub fn lossless_or_raw(compress: &CompressSpec, seed: u64, dense_switch: f64) -> Self {
+        let registry = CodecRegistry::global();
+        let idx = registry
+            .build_index(&compress.index, seed)
+            .ok()
             .filter(|c| c.lossless())
-            .unwrap_or_else(|| index_by_name("raw", f64::NAN, 0).expect("raw index codec"));
-        let val = value_by_name(value, value_param, seed)
+            .unwrap_or_else(|| Box::new(crate::compress::index::RawIndex));
+        let val = registry
+            .build_value(&compress.value, seed)
+            .ok()
             .filter(|c| c.lossless())
-            .unwrap_or_else(|| value_by_name("raw", f64::NAN, 0).expect("raw value codec"));
+            .unwrap_or_else(|| Box::new(crate::compress::value::RawValue));
         Self::new(idx, val, dense_switch)
     }
 
     /// A fresh codec with the same index/value stages and dense switch.
-    /// Sound because segment codecs only ever carry lossless stages
-    /// (see [`SegmentCodec::lossless_or_raw`]), whose constructors are
-    /// parameter-free — the stateful parameters (Bloom FPR, QSGD bits)
-    /// belong to the lossy codecs that are filtered out. Used by the
-    /// hierarchical schedule to hand its inner schedule an identical
-    /// codec for the inter-node hop.
+    /// Codec names are full canonical spec labels (chains and explicit
+    /// parameters included), so rebuilding through the registry
+    /// reproduces the exact pipeline. Used by the hierarchical schedule
+    /// to hand its inner schedule an identical codec for the inter-node
+    /// hop.
     pub fn duplicate(&self) -> Self {
-        Self::new(
-            index_by_name(self.index.name(), f64::NAN, 0).expect("codec name roundtrips"),
-            value_by_name(self.value.name(), f64::NAN, 0).expect("codec name roundtrips"),
-            self.dense_switch,
-        )
+        Self::by_name(self.index.name(), self.value.name(), self.dense_switch)
+            .expect("segment codec labels roundtrip through the registry")
     }
 
     /// Encode the segment `[lo, hi)` of `t`. `t` must already be
@@ -122,17 +117,25 @@ impl SegmentCodec {
             varint::write_u64(&mut out, nnz as u64);
             // rebase indices into the segment-local domain [0, range)
             let local: Vec<u32> = t.indices().iter().map(|&i| i - lo as u32).collect();
-            let ie = self.index.encode(range, &local);
-            debug_assert_eq!(ie.effective, local, "lossy index codecs break allreduce sums");
-            let ve = self.value.encode(t.values());
+            let mut ibytes = Vec::with_capacity(nnz * 4 + 8);
+            let effective = self.index.encode_into(range, &local, &mut ibytes);
+            debug_assert!(
+                match &effective {
+                    None => true,
+                    Some(e) => e == &local,
+                },
+                "lossy index codecs break allreduce sums"
+            );
+            let mut vbytes = Vec::with_capacity(nnz * 4);
+            let perm = self.value.encode_into(t.values(), &mut vbytes);
             assert!(
-                ve.perm.is_none(),
+                perm.is_none(),
                 "order-destroying value codecs are not supported in collective segments"
             );
-            varint::write_u64(&mut out, ie.bytes.len() as u64);
-            out.extend_from_slice(&ie.bytes);
-            varint::write_u64(&mut out, ve.bytes.len() as u64);
-            out.extend_from_slice(&ve.bytes);
+            varint::write_u64(&mut out, ibytes.len() as u64);
+            out.extend_from_slice(&ibytes);
+            varint::write_u64(&mut out, vbytes.len() as u64);
+            out.extend_from_slice(&vbytes);
         }
         out
     }
@@ -241,6 +244,48 @@ mod tests {
         // delta+varint beats raw 4B/idx on clustered supports
         let raw = SegmentCodec::raw(0.9).encode(&t, 0, 1000);
         assert!(bytes.len() < raw.len());
+    }
+
+    #[test]
+    fn composes_with_codec_chains() {
+        // a registry chain is just another lossless IndexCodec to the
+        // segment wire — periodic clustered support makes the RLE
+        // stream long and repetitive, so the deflate tail shrinks it
+        let d = 10_240usize;
+        let codec = SegmentCodec::by_name("rle+deflate", "raw", 0.95).unwrap();
+        let iv: Vec<(u32, f32)> = (0..d as u32)
+            .filter(|i| (i / 32) % 2 == 0)
+            .map(|i| (i, (i % 7) as f32 - 3.0))
+            .collect();
+        let t = st(d, &iv);
+        let bytes = codec.encode(&t, 0, d);
+        assert_eq!(codec.decode(d, &bytes).unwrap(), t);
+        let plain = SegmentCodec::by_name("rle", "raw", 0.95).unwrap().encode(&t, 0, d);
+        assert!(bytes.len() < plain.len(), "{} vs {}", bytes.len(), plain.len());
+        // duplicate() reproduces chains through the registry
+        let dup = codec.duplicate();
+        assert_eq!(dup.decode(d, &bytes).unwrap(), t);
+    }
+
+    #[test]
+    fn lossless_or_raw_accepts_chains_and_rejects_lossy() {
+        use crate::compress::CompressSpec;
+        let chain = SegmentCodec::lossless_or_raw(
+            &CompressSpec::parse("rle+deflate", "raw").unwrap(),
+            1,
+            0.5,
+        );
+        let t = st(100, &[(20, 1.5), (25, -2.0)]);
+        let bytes = chain.encode(&t, 0, 100);
+        assert_eq!(chain.decode(100, &bytes).unwrap(), t);
+        // lossy head -> whole side falls back to raw
+        let lossy = SegmentCodec::lossless_or_raw(
+            &CompressSpec::parse("bloom_p2+deflate", "qsgd").unwrap(),
+            1,
+            0.5,
+        );
+        let bytes = lossy.encode(&t, 0, 100);
+        assert_eq!(lossy.decode(100, &bytes).unwrap(), t);
     }
 
     #[test]

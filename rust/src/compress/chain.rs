@@ -1,0 +1,266 @@
+//! Composable codec chains (paper §3: index and value structures may be
+//! compressed "independently or in combination" — e.g. RLE *then*
+//! Deflate on the index bytes).
+//!
+//! A chain is a leading [`IndexCodec`]/[`ValueCodec`] followed by one
+//! or more [`ByteStage`]s — lossless byte-to-byte transforms applied to
+//! the head's output stream in order (and unwound in reverse on
+//! decode). Only the head may be lossy; byte stages are lossless by
+//! construction, which is what lets chains compose with the collective
+//! segment codec exactly like single lossless codecs.
+//!
+//! Chains are built by the [`CodecRegistry`](super::CodecRegistry) from
+//! specs like `rle+deflate`; their [`name`](IndexCodec::name) is the
+//! full canonical chain label, which is what the container header
+//! carries so the wire stays self-describing.
+
+use super::{IndexCodec, ValueCodec};
+use crate::util::varint;
+
+/// A lossless byte-to-byte transform usable as stage 2+ of a chain.
+pub trait ByteStage: Send + Sync {
+    fn name(&self) -> &str;
+
+    fn encode(&self, raw: &[u8]) -> Vec<u8>;
+
+    fn decode(&self, enc: &[u8]) -> anyhow::Result<Vec<u8>>;
+}
+
+/// Deflate (LZSS in the offline shim) over the stage input bytes.
+pub struct DeflateStage {
+    pub level: u32,
+}
+
+impl ByteStage for DeflateStage {
+    fn name(&self) -> &str {
+        "deflate"
+    }
+
+    fn encode(&self, raw: &[u8]) -> Vec<u8> {
+        use flate2::write::DeflateEncoder;
+        use std::io::Write;
+        let mut enc = DeflateEncoder::new(Vec::new(), flate2::Compression::new(self.level));
+        enc.write_all(raw).expect("in-memory deflate cannot fail");
+        enc.finish().expect("deflate finish")
+    }
+
+    fn decode(&self, enc: &[u8]) -> anyhow::Result<Vec<u8>> {
+        use flate2::read::DeflateDecoder;
+        use std::io::Read;
+        let mut out = Vec::new();
+        DeflateDecoder::new(enc).read_to_end(&mut out)?;
+        Ok(out)
+    }
+}
+
+/// Zstd over the stage input bytes. The stream is framed with the raw
+/// length (LEB128) so the decoder can bound its output buffer.
+pub struct ZstdStage {
+    pub level: i32,
+}
+
+impl ByteStage for ZstdStage {
+    fn name(&self) -> &str {
+        "zstd"
+    }
+
+    fn encode(&self, raw: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(raw.len() / 2 + 8);
+        varint::write_u64(&mut out, raw.len() as u64);
+        out.extend_from_slice(&zstd::bulk::compress(raw, self.level).expect("in-memory zstd"));
+        out
+    }
+
+    fn decode(&self, enc: &[u8]) -> anyhow::Result<Vec<u8>> {
+        let mut pos = 0usize;
+        let n = varint::read_u64(enc, &mut pos)? as usize;
+        let out = zstd::bulk::decompress(&enc[pos..], n)?;
+        anyhow::ensure!(out.len() == n, "zstd stage length mismatch: {} vs {n}", out.len());
+        Ok(out)
+    }
+}
+
+/// An index codec chain: head codec + byte stages. Lossless iff the
+/// head is (byte stages always roundtrip exactly). A chain with zero
+/// byte stages is a pure label override: the registry uses it so a
+/// parameterized single stage (`bloom_p2(fpr=0.01)`) reports its full
+/// spec — what the container header carries — instead of the bare name.
+pub struct IndexChain {
+    head: Box<dyn IndexCodec>,
+    stages: Vec<Box<dyn ByteStage>>,
+    label: String,
+}
+
+impl IndexChain {
+    pub fn new(head: Box<dyn IndexCodec>, stages: Vec<Box<dyn ByteStage>>, label: String) -> Self {
+        Self { head, stages, label }
+    }
+}
+
+impl IndexCodec for IndexChain {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn lossless(&self) -> bool {
+        self.head.lossless()
+    }
+
+    fn encode_into(&self, d: usize, support: &[u32], out: &mut Vec<u8>) -> Option<Vec<u32>> {
+        if self.stages.is_empty() {
+            // label-only shell: no staging buffer
+            return self.head.encode_into(d, support, out);
+        }
+        let mut buf = Vec::new();
+        let effective = self.head.encode_into(d, support, &mut buf);
+        for stage in &self.stages {
+            buf = stage.encode(&buf);
+        }
+        out.extend_from_slice(&buf);
+        effective
+    }
+
+    fn decode(&self, d: usize, bytes: &[u8]) -> anyhow::Result<Vec<u32>> {
+        if self.stages.is_empty() {
+            return self.head.decode(d, bytes);
+        }
+        // the outermost stage decodes straight from the input slice
+        let mut stages = self.stages.iter().rev();
+        let mut buf = stages.next().expect("stages checked non-empty").decode(bytes)?;
+        for stage in stages {
+            buf = stage.decode(&buf)?;
+        }
+        self.head.decode(d, &buf)
+    }
+}
+
+/// A value codec chain: head codec + byte stages. The head's reorder
+/// permutation (if any) passes through untouched — byte stages only see
+/// the serialized value bytes. Zero byte stages = pure label override
+/// (see [`IndexChain`]).
+pub struct ValueChain {
+    head: Box<dyn ValueCodec>,
+    stages: Vec<Box<dyn ByteStage>>,
+    label: String,
+}
+
+impl ValueChain {
+    pub fn new(head: Box<dyn ValueCodec>, stages: Vec<Box<dyn ByteStage>>, label: String) -> Self {
+        Self { head, stages, label }
+    }
+}
+
+impl ValueCodec for ValueChain {
+    fn name(&self) -> &str {
+        &self.label
+    }
+
+    fn lossless(&self) -> bool {
+        self.head.lossless()
+    }
+
+    fn encode_into(&self, values: &[f32], out: &mut Vec<u8>) -> Option<Vec<u32>> {
+        if self.stages.is_empty() {
+            return self.head.encode_into(values, out);
+        }
+        let mut buf = Vec::new();
+        let perm = self.head.encode_into(values, &mut buf);
+        for stage in &self.stages {
+            buf = stage.encode(&buf);
+        }
+        out.extend_from_slice(&buf);
+        perm
+    }
+
+    fn decode(&self, bytes: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
+        if self.stages.is_empty() {
+            return self.head.decode(bytes, n);
+        }
+        let mut stages = self.stages.iter().rev();
+        let mut buf = stages.next().expect("stages checked non-empty").decode(bytes)?;
+        for stage in stages {
+            buf = stage.decode(&buf)?;
+        }
+        self.head.decode(&buf, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::index::{RawIndex, RleIndex};
+    use crate::compress::value::RawValue;
+
+    #[test]
+    fn byte_stages_roundtrip_and_reject_garbage() {
+        let data: Vec<u8> = (0..2000u32).flat_map(|i| ((i % 7) as u8).to_le_bytes()).collect();
+        for stage in [&DeflateStage { level: 6 } as &dyn ByteStage, &ZstdStage { level: 3 }] {
+            let enc = stage.encode(&data);
+            assert!(enc.len() < data.len(), "{} did not compress", stage.name());
+            assert_eq!(stage.decode(&enc).unwrap(), data, "{}", stage.name());
+            assert_eq!(stage.decode(&stage.encode(&[])).unwrap(), Vec::<u8>::new());
+            assert!(stage.decode(&enc[..enc.len() / 2]).is_err(), "{}", stage.name());
+        }
+    }
+
+    #[test]
+    fn index_chain_roundtrips_and_compresses_clusters() {
+        let d = 65_536usize;
+        // periodic clustered support: RLE output is long and repetitive,
+        // exactly what a byte stage crushes
+        let mut support = Vec::new();
+        let mut x = 0u32;
+        while (x as usize) < d {
+            for j in 0..32u32 {
+                if ((x + j) as usize) < d {
+                    support.push(x + j);
+                }
+            }
+            x += 64;
+        }
+        let plain = RleIndex.encode(d, &support);
+        let chain = IndexChain::new(
+            Box::new(RleIndex),
+            vec![Box::new(DeflateStage { level: 6 })],
+            "rle+deflate".into(),
+        );
+        assert_eq!(chain.name(), "rle+deflate");
+        assert!(chain.lossless());
+        let enc = chain.encode(d, &support);
+        assert_eq!(enc.effective, support);
+        assert!(
+            enc.bytes.len() < plain.bytes.len(),
+            "rle+deflate {} vs rle {}",
+            enc.bytes.len(),
+            plain.bytes.len()
+        );
+        assert_eq!(chain.decode(d, &enc.bytes).unwrap(), support);
+    }
+
+    #[test]
+    fn two_byte_stages_unwind_in_reverse() {
+        let d = 4096usize;
+        let support: Vec<u32> = (100..600).collect();
+        let chain = IndexChain::new(
+            Box::new(RawIndex),
+            vec![Box::new(DeflateStage { level: 6 }), Box::new(ZstdStage { level: 3 })],
+            "raw+deflate+zstd".into(),
+        );
+        let enc = chain.encode(d, &support);
+        assert_eq!(chain.decode(d, &enc.bytes).unwrap(), support);
+    }
+
+    #[test]
+    fn value_chain_passes_perm_through() {
+        let values: Vec<f32> = (0..512).map(|i| (i % 13) as f32 * 0.25 - 1.0).collect();
+        let chain = ValueChain::new(
+            Box::new(RawValue),
+            vec![Box::new(DeflateStage { level: 6 })],
+            "raw+deflate".into(),
+        );
+        assert!(chain.lossless());
+        let enc = chain.encode(&values);
+        assert!(enc.perm.is_none());
+        assert_eq!(chain.decode(&enc.bytes, values.len()).unwrap(), values);
+    }
+}

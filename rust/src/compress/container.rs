@@ -3,25 +3,115 @@
 //! and value structures, the reordering information and any required
 //! metadata").
 //!
+//! The header is versioned. v1 (magic `DR1\n`) is emitted whenever both
+//! codec specs are plain single-stage names — byte-identical to the
+//! pre-chain format, so golden fixtures and cross-version interop hold.
+//! v2 (magic `DR2\n` + a format-version byte) carries full codec *spec*
+//! strings — chain labels like `rle+deflate`, parameters included — so
+//! the wire stays self-describing for composed pipelines
+//! ([`DeepReduce::for_container`](super::DeepReduce::for_container)
+//! rebuilds the decoder from the header alone).
+//!
 //! Layout (all integers LEB128 unless noted):
 //! ```text
-//! magic "DR1\n" | d | num_values | idx name | val name
+//! magic "DR1\n"                 | d | num_values | idx spec | val spec
+//! magic "DR2\n" | version (u8)  | ... same fields ...
 //! | idx len | idx bytes | val len | val bytes
-//! | perm flag (0/1) [| perm bit-width | packed perm]
+//! | perm flag (0/1) [| perm bit-width | perm len | packed perm]
 //! | crc32 (LE u32, over everything before it)
 //! ```
+//!
+//! Parsing never panics: every malformed, truncated or corrupt input
+//! returns a structured [`ContainerError`].
 
 use crate::util::bitio::{BitReader, BitWriter};
 use crate::util::varint;
 
-const MAGIC: &[u8; 4] = b"DR1\n";
+const MAGIC_V1: &[u8; 4] = b"DR1\n";
+const MAGIC_V2: &[u8; 4] = b"DR2\n";
+
+/// Newest container format version this build reads and writes.
+pub const FORMAT_VERSION: u8 = 2;
+
+/// Structured parse error of [`Container::from_bytes`].
+#[derive(Debug, PartialEq, Eq)]
+pub enum ContainerError {
+    /// shorter than the smallest possible container
+    TooShort { len: usize },
+    /// CRC-32 over the body does not match the stored checksum
+    ChecksumMismatch { want: u32, got: u32 },
+    /// neither the v1 nor the v2 magic
+    BadMagic,
+    /// v2 magic with a version byte this build does not understand
+    UnsupportedVersion(u8),
+    /// a length field points past the end of the buffer
+    Truncated(&'static str),
+    /// a field failed to decode (varint, utf-8, bit stream, range)
+    Malformed(String),
+    /// well-formed container followed by extra bytes
+    TrailingBytes { extra: usize },
+}
+
+impl std::fmt::Display for ContainerError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ContainerError::TooShort { len } => {
+                write!(f, "container too short ({len} bytes)")
+            }
+            ContainerError::ChecksumMismatch { want, got } => {
+                write!(f, "container checksum mismatch (stored {want:#010x}, computed {got:#010x})")
+            }
+            ContainerError::BadMagic => write!(f, "bad container magic"),
+            ContainerError::UnsupportedVersion(v) => {
+                write!(f, "unsupported container format version {v} (this build reads <= {FORMAT_VERSION})")
+            }
+            ContainerError::Truncated(what) => write!(f, "container {what} truncated"),
+            ContainerError::Malformed(what) => write!(f, "malformed container: {what}"),
+            ContainerError::TrailingBytes { extra } => {
+                write!(f, "{extra} trailing bytes after container")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ContainerError {}
+
+fn vint(body: &[u8], pos: &mut usize, what: &'static str) -> Result<u64, ContainerError> {
+    varint::read_u64(body, pos).map_err(|e| ContainerError::Malformed(format!("{what}: {e}")))
+}
+
+/// Bounds-checked slice take (overflow-safe: `pos + n` is checked).
+fn take<'a>(
+    body: &'a [u8],
+    pos: &mut usize,
+    n: usize,
+    what: &'static str,
+) -> Result<&'a [u8], ContainerError> {
+    let end = pos
+        .checked_add(n)
+        .filter(|&e| e <= body.len())
+        .ok_or(ContainerError::Truncated(what))?;
+    let s = &body[*pos..end];
+    *pos = end;
+    Ok(s)
+}
+
+fn rstr(body: &[u8], pos: &mut usize, what: &'static str) -> Result<String, ContainerError> {
+    let n = vint(body, pos, what)? as usize;
+    let raw = take(body, pos, n, what)?;
+    std::str::from_utf8(raw)
+        .map(|s| s.to_string())
+        .map_err(|e| ContainerError::Malformed(format!("{what}: {e}")))
+}
 
 /// Decoded container. `perm[j]` = original position of wire value j.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Container {
     pub dense_len: usize,
     pub num_values: usize,
+    /// index codec spec (full chain label for composed pipelines)
     pub index_codec: String,
+    /// value codec spec (full chain label for composed pipelines)
     pub value_codec: String,
     pub index_bytes: Vec<u8>,
     pub value_bytes: Vec<u8>,
@@ -41,25 +131,65 @@ impl Container {
         value_bytes: &[u8],
         perm: Option<&[u32]>,
     ) -> Self {
+        Self::pack_owned(
+            dense_len,
+            num_values,
+            index_codec,
+            value_codec,
+            index_bytes.to_vec(),
+            value_bytes.to_vec(),
+            perm.map(|p| p.to_vec()),
+        )
+    }
+
+    /// Like [`Container::pack`] but takes ownership of the payload
+    /// buffers — the hot-path route (no per-tensor payload copy).
+    pub fn pack_owned(
+        dense_len: usize,
+        num_values: usize,
+        index_codec: &str,
+        value_codec: &str,
+        index_bytes: Vec<u8>,
+        value_bytes: Vec<u8>,
+        perm: Option<Vec<u32>>,
+    ) -> Self {
         Self {
             dense_len,
             num_values,
             index_codec: index_codec.to_string(),
             value_codec: value_codec.to_string(),
-            index_bytes: index_bytes.to_vec(),
-            value_bytes: value_bytes.to_vec(),
-            perm: perm.map(|p| p.to_vec()),
+            index_bytes,
+            value_bytes,
+            perm,
             header_bytes: 0,
             reorder_bytes: 0,
         }
     }
 
-    /// Serialize to the wire format.
+    /// Whether the header needs the v2 format: chain or parameterized
+    /// specs cannot be represented in the v1 plain-name header.
+    fn wire_version(&self) -> u8 {
+        let plain = |s: &str| !s.contains('+') && !s.contains('(');
+        if plain(&self.index_codec) && plain(&self.value_codec) {
+            1
+        } else {
+            FORMAT_VERSION
+        }
+    }
+
+    /// Serialize to the wire format (v1 when both specs are plain
+    /// single-stage names, v2 otherwise).
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(
             32 + self.index_bytes.len() + self.value_bytes.len() + self.index_codec.len(),
         );
-        out.extend_from_slice(MAGIC);
+        match self.wire_version() {
+            1 => out.extend_from_slice(MAGIC_V1),
+            v => {
+                out.extend_from_slice(MAGIC_V2);
+                out.push(v);
+            }
+        }
         varint::write_u64(&mut out, self.dense_len as u64);
         varint::write_u64(&mut out, self.num_values as u64);
         write_str(&mut out, &self.index_codec);
@@ -89,48 +219,74 @@ impl Container {
         out
     }
 
-    /// Parse from the wire format, verifying the checksum.
-    pub fn from_bytes(buf: &[u8]) -> anyhow::Result<Self> {
-        anyhow::ensure!(buf.len() >= 8, "container too short");
+    /// Parse from the wire format, verifying the checksum. Returns a
+    /// structured [`ContainerError`] on any malformed input — no input
+    /// can panic this path.
+    pub fn from_bytes(buf: &[u8]) -> Result<Self, ContainerError> {
+        if buf.len() < 8 {
+            return Err(ContainerError::TooShort { len: buf.len() });
+        }
         let (body, crc_bytes) = buf.split_at(buf.len() - 4);
-        let want = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+        let want = u32::from_le_bytes(crc_bytes.try_into().expect("4-byte split"));
         let got = crc32fast_hash(body);
-        anyhow::ensure!(want == got, "container checksum mismatch");
-        anyhow::ensure!(&body[..4] == MAGIC, "bad container magic");
+        if want != got {
+            return Err(ContainerError::ChecksumMismatch { want, got });
+        }
         let mut pos = 4usize;
-        let dense_len = varint::read_u64(body, &mut pos)? as usize;
-        let num_values = varint::read_u64(body, &mut pos)? as usize;
-        let index_codec = read_str(body, &mut pos)?;
-        let value_codec = read_str(body, &mut pos)?;
-        let ilen = varint::read_u64(body, &mut pos)? as usize;
-        anyhow::ensure!(pos + ilen <= body.len(), "index section truncated");
-        let index_bytes = body[pos..pos + ilen].to_vec();
-        pos += ilen;
-        let vlen = varint::read_u64(body, &mut pos)? as usize;
-        anyhow::ensure!(pos + vlen <= body.len(), "value section truncated");
-        let value_bytes = body[pos..pos + vlen].to_vec();
-        pos += vlen;
-        let header_bytes = pos - ilen - vlen + 4; // all non-payload so far + crc
-        let flag = *body.get(pos).ok_or_else(|| anyhow::anyhow!("missing perm flag"))?;
-        pos += 1;
-        let (perm, reorder_bytes) = if flag == 1 {
-            let width = *body.get(pos).ok_or_else(|| anyhow::anyhow!("missing perm width"))?
-                as u32;
-            pos += 1;
-            anyhow::ensure!((1..=32).contains(&width), "bad perm width {width}");
-            let blen = varint::read_u64(body, &mut pos)? as usize;
-            anyhow::ensure!(pos + blen <= body.len(), "perm section truncated");
-            let mut r = BitReader::new(&body[pos..pos + blen]);
-            let mut p = Vec::with_capacity(num_values);
-            for _ in 0..num_values {
-                p.push(r.read_bits(width)? as u32);
+        if &body[..4] == MAGIC_V1 {
+            // v1: no version byte
+        } else if &body[..4] == MAGIC_V2 {
+            let v = *body.get(pos).ok_or(ContainerError::Truncated("format version"))?;
+            if !(2..=FORMAT_VERSION).contains(&v) {
+                return Err(ContainerError::UnsupportedVersion(v));
             }
-            pos += blen;
-            (Some(p), blen + 2)
+            pos += 1;
         } else {
-            (None, 0)
+            return Err(ContainerError::BadMagic);
+        }
+        let dense_len = vint(body, &mut pos, "dense_len")? as usize;
+        let num_values = vint(body, &mut pos, "num_values")? as usize;
+        let index_codec = rstr(body, &mut pos, "index codec spec")?;
+        let value_codec = rstr(body, &mut pos, "value codec spec")?;
+        let ilen = vint(body, &mut pos, "index length")? as usize;
+        let index_bytes = take(body, &mut pos, ilen, "index section")?.to_vec();
+        let vlen = vint(body, &mut pos, "value length")? as usize;
+        let value_bytes = take(body, &mut pos, vlen, "value section")?.to_vec();
+        let header_bytes = pos - ilen - vlen + 4; // all non-payload so far + crc
+        let flag = *body.get(pos).ok_or(ContainerError::Truncated("perm flag"))?;
+        pos += 1;
+        let (perm, reorder_bytes) = match flag {
+            0 => (None, 0),
+            1 => {
+                let width =
+                    *body.get(pos).ok_or(ContainerError::Truncated("perm width"))? as u32;
+                pos += 1;
+                if !(1..=32).contains(&width) {
+                    return Err(ContainerError::Malformed(format!("perm bit width {width}")));
+                }
+                let blen = vint(body, &mut pos, "perm length")? as usize;
+                let packed = take(body, &mut pos, blen, "perm section")?;
+                // bit budget check before allocating num_values slots
+                if (num_values as u64).saturating_mul(width as u64) > (blen as u64) * 8 {
+                    return Err(ContainerError::Truncated("perm bit stream"));
+                }
+                let mut r = BitReader::new(packed);
+                let mut p = Vec::with_capacity(num_values);
+                for _ in 0..num_values {
+                    let v = r
+                        .read_bits(width)
+                        .map_err(|e| ContainerError::Malformed(format!("perm entry: {e}")))?;
+                    p.push(v as u32);
+                }
+                (Some(p), blen + 2)
+            }
+            other => {
+                return Err(ContainerError::Malformed(format!("perm flag {other}")));
+            }
         };
-        anyhow::ensure!(pos == body.len(), "trailing bytes in container");
+        if pos != body.len() {
+            return Err(ContainerError::TrailingBytes { extra: body.len() - pos });
+        }
         Ok(Self {
             dense_len,
             num_values,
@@ -181,14 +337,6 @@ fn write_str(out: &mut Vec<u8>, s: &str) {
     out.extend_from_slice(s.as_bytes());
 }
 
-fn read_str(buf: &[u8], pos: &mut usize) -> anyhow::Result<String> {
-    let n = varint::read_u64(buf, pos)? as usize;
-    anyhow::ensure!(*pos + n <= buf.len(), "string truncated");
-    let s = std::str::from_utf8(&buf[*pos..*pos + n])?.to_string();
-    *pos += n;
-    Ok(s)
-}
-
 fn crc32fast_hash(data: &[u8]) -> u32 {
     let mut h = crc32fast::Hasher::new();
     h.update(data);
@@ -217,6 +365,45 @@ mod tests {
     }
 
     #[test]
+    fn plain_specs_stay_on_the_v1_wire() {
+        let c = Container::pack(100, 1, "raw", "raw", &[5], &[6], None);
+        assert_eq!(&c.to_bytes()[..4], b"DR1\n");
+    }
+
+    #[test]
+    fn chain_and_param_specs_use_the_v2_wire() {
+        for (idx, val) in [
+            ("rle+deflate", "raw"),
+            ("raw", "qsgd(bits=6)"),
+            ("bloom_p2(fpr=0.01)+zstd", "raw+deflate"),
+        ] {
+            let c = Container::pack(500, 2, idx, val, &[1, 2], &[3, 4], None);
+            let bytes = c.to_bytes();
+            assert_eq!(&bytes[..4], b"DR2\n", "{idx}|{val}");
+            assert_eq!(bytes[4], FORMAT_VERSION);
+            let back = Container::from_bytes(&bytes).unwrap();
+            assert_eq!(back.index_codec, idx);
+            assert_eq!(back.value_codec, val);
+            assert_eq!(back.index_bytes, vec![1, 2]);
+        }
+    }
+
+    #[test]
+    fn future_versions_are_rejected_with_a_structured_error() {
+        let c = Container::pack(500, 0, "rle+deflate", "raw", &[], &[], None);
+        let mut bytes = c.to_bytes();
+        // bump the version byte and re-seal the checksum
+        bytes[4] = FORMAT_VERSION + 1;
+        let body_len = bytes.len() - 4;
+        let crc = crc32fast_hash(&bytes[..body_len]);
+        bytes[body_len..].copy_from_slice(&crc.to_le_bytes());
+        assert_eq!(
+            Container::from_bytes(&bytes),
+            Err(ContainerError::UnsupportedVersion(FORMAT_VERSION + 1))
+        );
+    }
+
+    #[test]
     fn corruption_detected() {
         let c = Container::pack(100, 1, "raw", "raw", &[5], &[6], None);
         let mut bytes = c.to_bytes();
@@ -228,6 +415,71 @@ mod tests {
         assert!(Container::from_bytes(&ok[..ok.len() - 1]).is_err());
     }
 
+    /// Re-seal a body prefix with a fresh checksum so the parser (not
+    /// the CRC gate) has to survive every truncation point.
+    fn seal(body: &[u8]) -> Vec<u8> {
+        let mut out = body.to_vec();
+        out.extend_from_slice(&crc32fast_hash(body).to_le_bytes());
+        out
+    }
+
+    #[test]
+    fn every_truncation_point_yields_a_structured_error() {
+        for c in [
+            Container::pack(5000, 3, "elias", "deflate", &[7; 40], &[9; 30], Some(&[2, 0, 1])),
+            Container::pack(5000, 3, "rle+deflate", "qsgd(bits=6)", &[7; 40], &[9; 30], None),
+        ] {
+            let full = c.to_bytes();
+            let body = &full[..full.len() - 4];
+            // valid-CRC prefixes: the parser must error (never panic) at
+            // every possible cut point, including cuts inside varints,
+            // spec strings, payload sections and the perm block
+            for cut in 0..body.len() {
+                let sealed = seal(&body[..cut]);
+                let err = Container::from_bytes(&sealed)
+                    .expect_err(&format!("prefix of {cut} bytes parsed"));
+                match err {
+                    ContainerError::ChecksumMismatch { .. } => {
+                        panic!("seal() should have made the checksum valid at cut {cut}")
+                    }
+                    _ => {}
+                }
+            }
+            // raw truncations (stale CRC): also all errors
+            for cut in 0..full.len() {
+                assert!(Container::from_bytes(&full[..cut]).is_err(), "cut {cut}");
+            }
+            // and garbage of assorted sizes
+            for len in [0usize, 1, 7, 8, 9, 64] {
+                let garbage = vec![0x5Au8; len];
+                assert!(Container::from_bytes(&garbage).is_err(), "garbage len {len}");
+                assert!(Container::from_bytes(&seal(&garbage)).is_err(), "sealed garbage {len}");
+            }
+        }
+    }
+
+    #[test]
+    fn perm_bit_budget_is_checked_before_allocation() {
+        // hand-build a v1 body claiming 2^40 values with a 1-byte perm
+        let mut body = Vec::new();
+        body.extend_from_slice(MAGIC_V1);
+        varint::write_u64(&mut body, 100);
+        varint::write_u64(&mut body, 1u64 << 40); // num_values: absurd
+        write_str(&mut body, "raw");
+        write_str(&mut body, "raw");
+        varint::write_u64(&mut body, 0); // index len
+        varint::write_u64(&mut body, 0); // value len
+        body.push(1); // perm flag
+        body.push(16); // perm width
+        varint::write_u64(&mut body, 1); // perm byte length
+        body.push(0xFF);
+        let sealed = seal(&body);
+        assert_eq!(
+            Container::from_bytes(&sealed),
+            Err(ContainerError::Truncated("perm bit stream"))
+        );
+    }
+
     #[test]
     fn breakdown_sums_to_total() {
         let c = Container::pack(5000, 4, "bloom_p2", "qsgd", &[0; 100], &[0; 50], Some(&[3, 1, 0, 2]));
@@ -236,6 +488,9 @@ mod tests {
         assert_eq!(b.index_bytes, 100);
         assert_eq!(b.value_bytes, 50);
         assert!(b.reorder_bytes >= 1);
+        // v2 container: breakdown still sums exactly
+        let c2 = Container::pack(5000, 4, "rle+deflate", "qsgd(bits=6)", &[0; 10], &[0; 5], None);
+        assert_eq!(c2.breakdown().total(), c2.wire_bytes());
     }
 
     #[test]

@@ -324,7 +324,7 @@ fn select_p2(filter: &BloomFilter, positives: &[u32], r: usize, seed: u64) -> Ve
 }
 
 impl IndexCodec for BloomIndex {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         self.policy.name()
     }
 

@@ -1,7 +1,13 @@
 //! Lossless index codecs: raw keys, bitmap, bit-level RLE, Huffman over
 //! byte planes, delta+varint, and Elias-gamma gap coding.
+//!
+//! All of these implement the buffer-reusing
+//! [`encode_into`](IndexCodec::encode_into) primitive directly (they
+//! append to the caller's buffer and return `None` — lossless codecs
+//! never clone the support), with [`encode`](IndexCodec::encode)
+//! provided by the trait default.
 
-use crate::compress::{IndexCodec, IndexEncoding};
+use crate::compress::IndexCodec;
 use crate::tensor::Bitmap;
 use crate::util::bitio::{BitReader, BitWriter};
 use crate::util::elias::{gamma_decode, gamma_encode};
@@ -12,16 +18,16 @@ use crate::util::varint;
 pub struct RawIndex;
 
 impl IndexCodec for RawIndex {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "raw"
     }
 
-    fn encode(&self, _d: usize, support: &[u32]) -> IndexEncoding {
-        let mut bytes = Vec::with_capacity(support.len() * 4);
+    fn encode_into(&self, _d: usize, support: &[u32], out: &mut Vec<u8>) -> Option<Vec<u32>> {
+        out.reserve(support.len() * 4);
         for &i in support {
-            bytes.extend_from_slice(&i.to_le_bytes());
+            out.extend_from_slice(&i.to_le_bytes());
         }
-        IndexEncoding { bytes, effective: support.to_vec() }
+        None
     }
 
     fn decode(&self, d: usize, bytes: &[u8]) -> anyhow::Result<Vec<u32>> {
@@ -39,21 +45,21 @@ impl IndexCodec for RawIndex {
 pub struct BitmapIndex;
 
 impl IndexCodec for BitmapIndex {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "bitmap"
     }
 
-    fn encode(&self, d: usize, support: &[u32]) -> IndexEncoding {
+    fn encode_into(&self, d: usize, support: &[u32], out: &mut Vec<u8>) -> Option<Vec<u32>> {
         let bm = Bitmap::from_indices(d, support);
-        let mut bytes = Vec::with_capacity(d / 8 + 9);
-        varint::write_u64(&mut bytes, d as u64);
+        out.reserve(d / 8 + 9);
+        varint::write_u64(out, d as u64);
+        let start = out.len();
         for w in bm.words() {
-            bytes.extend_from_slice(&w.to_le_bytes());
+            out.extend_from_slice(&w.to_le_bytes());
         }
         // trim to ceil(d/8) payload bytes
-        let header = bytes.len() - bm.words().len() * 8;
-        bytes.truncate(header + d.div_ceil(8));
-        IndexEncoding { bytes, effective: support.to_vec() }
+        out.truncate(start + d.div_ceil(8));
+        None
     }
 
     fn decode(&self, d: usize, bytes: &[u8]) -> anyhow::Result<Vec<u32>> {
@@ -76,11 +82,11 @@ impl IndexCodec for BitmapIndex {
 pub struct RleIndex;
 
 impl IndexCodec for RleIndex {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "rle"
     }
 
-    fn encode(&self, d: usize, support: &[u32]) -> IndexEncoding {
+    fn encode_into(&self, d: usize, support: &[u32], out: &mut Vec<u8>) -> Option<Vec<u32>> {
         let bm = Bitmap::from_indices(d, support);
         let mut w = BitWriter::new();
         let mut first = true;
@@ -91,10 +97,9 @@ impl IndexCodec for RleIndex {
             }
             gamma_encode(&mut w, len as u64);
         }
-        let mut bytes = Vec::new();
-        varint::write_u64(&mut bytes, d as u64);
-        bytes.extend_from_slice(&w.finish());
-        IndexEncoding { bytes, effective: support.to_vec() }
+        varint::write_u64(out, d as u64);
+        out.extend_from_slice(&w.finish());
+        None
     }
 
     fn decode(&self, d: usize, bytes: &[u8]) -> anyhow::Result<Vec<u32>> {
@@ -160,11 +165,11 @@ fn plane_freqs(d: u64, plane: u32, freqs: &mut [u64; 256]) {
 }
 
 impl IndexCodec for HuffmanIndex {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "huffman"
     }
 
-    fn encode(&self, d: usize, support: &[u32]) -> IndexEncoding {
+    fn encode_into(&self, d: usize, support: &[u32], out: &mut Vec<u8>) -> Option<Vec<u32>> {
         let codec = Self::domain_codec(d);
         let mut w = BitWriter::new();
         for &i in support {
@@ -172,10 +177,9 @@ impl IndexCodec for HuffmanIndex {
                 codec.encode_symbol(&mut w, b);
             }
         }
-        let mut bytes = Vec::new();
-        varint::write_u64(&mut bytes, support.len() as u64);
-        bytes.extend_from_slice(&w.finish());
-        IndexEncoding { bytes, effective: support.to_vec() }
+        varint::write_u64(out, support.len() as u64);
+        out.extend_from_slice(&w.finish());
+        None
     }
 
     fn decode(&self, d: usize, bytes: &[u8]) -> anyhow::Result<Vec<u32>> {
@@ -202,20 +206,20 @@ impl IndexCodec for HuffmanIndex {
 pub struct DeltaVarint;
 
 impl IndexCodec for DeltaVarint {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "delta_varint"
     }
 
-    fn encode(&self, _d: usize, support: &[u32]) -> IndexEncoding {
-        let mut bytes = Vec::with_capacity(support.len() * 2 + 9);
-        varint::write_u64(&mut bytes, support.len() as u64);
+    fn encode_into(&self, _d: usize, support: &[u32], out: &mut Vec<u8>) -> Option<Vec<u32>> {
+        out.reserve(support.len() * 2 + 9);
+        varint::write_u64(out, support.len() as u64);
         let mut prev = 0u64;
         for (k, &i) in support.iter().enumerate() {
             let delta = if k == 0 { i as u64 } else { i as u64 - prev };
-            varint::write_u64(&mut bytes, delta);
+            varint::write_u64(out, delta);
             prev = i as u64;
         }
-        IndexEncoding { bytes, effective: support.to_vec() }
+        None
     }
 
     fn decode(&self, d: usize, bytes: &[u8]) -> anyhow::Result<Vec<u32>> {
@@ -242,13 +246,13 @@ impl IndexCodec for DeltaVarint {
 pub struct EliasIndex;
 
 impl IndexCodec for EliasIndex {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "elias"
     }
 
-    fn encode(&self, _d: usize, support: &[u32]) -> IndexEncoding {
-        let mut bytes = Vec::with_capacity(support.len() / 2 + 9);
-        varint::write_u64(&mut bytes, support.len() as u64);
+    fn encode_into(&self, _d: usize, support: &[u32], out: &mut Vec<u8>) -> Option<Vec<u32>> {
+        out.reserve(support.len() / 2 + 9);
+        varint::write_u64(out, support.len() as u64);
         let mut w = BitWriter::with_capacity(support.len());
         let mut prev = 0u64;
         for (k, &i) in support.iter().enumerate() {
@@ -256,8 +260,8 @@ impl IndexCodec for EliasIndex {
             gamma_encode(&mut w, gap);
             prev = i as u64;
         }
-        bytes.extend_from_slice(&w.finish());
-        IndexEncoding { bytes, effective: support.to_vec() }
+        out.extend_from_slice(&w.finish());
+        None
     }
 
     fn decode(&self, d: usize, bytes: &[u8]) -> anyhow::Result<Vec<u32>> {
@@ -348,5 +352,29 @@ mod tests {
         assert!(RawIndex.decode(50, &enc.bytes).is_err());
         let enc = DeltaVarint.encode(100, &[99]);
         assert!(DeltaVarint.decode(50, &enc.bytes).is_err());
+    }
+
+    #[test]
+    fn encode_into_appends_after_existing_content() {
+        let prefix = vec![0xEEu8, 0xEE];
+        for codec in [
+            &RawIndex as &dyn IndexCodec,
+            &BitmapIndex,
+            &RleIndex,
+            &HuffmanIndex,
+            &DeltaVarint,
+            &EliasIndex,
+        ] {
+            let mut buf = prefix.clone();
+            let eff = codec.encode_into(500, &[3, 4, 400], &mut buf);
+            assert!(eff.is_none(), "{} is lossless", codec.name());
+            assert_eq!(&buf[..2], &prefix[..], "{}", codec.name());
+            assert_eq!(
+                codec.decode(500, &buf[2..]).unwrap(),
+                vec![3, 4, 400],
+                "{}",
+                codec.name()
+            );
+        }
     }
 }

@@ -13,13 +13,39 @@
 //! reconstruct S̃ ≠ S); value codecs may be lossy in the *values*
 //! (QSGD, curve fits). The framework wires the two together, including
 //! the paper's §5.1 reorder mapping for order-destroying value codecs.
+//!
+//! Codecs are named and constructed through the typed
+//! [`CodecRegistry`]: each registers under a name with a declared
+//! `key=value` parameter schema, and specs like `rle+deflate` or
+//! `bloom_p2(fpr=0.01)+zstd` compose a head codec with lossless byte
+//! stages ([`chain`]) behind the same trait objects. The preferred
+//! construction route is the fluent [`DeepReduce::builder`]:
+//!
+//! ```
+//! use deepreduce::compress::DeepReduce;
+//!
+//! let dr = DeepReduce::builder()
+//!     .index("rle+deflate")
+//!     .value("qsgd(bits=6)")
+//!     .seed(7)
+//!     .build()
+//!     .unwrap();
+//! // names are full spec labels — what the container header carries
+//! assert_eq!(dr.name(), "DR[rle+deflate|qsgd(bits=6)]");
+//! ```
 
+pub mod chain;
 pub mod container;
 pub mod index;
+pub mod registry;
+pub mod spec;
 pub mod value;
 
 use crate::tensor::SparseTensor;
-pub use container::Container;
+pub use chain::ByteStage;
+pub use container::{Container, ContainerError};
+pub use registry::{CodecEntry, CodecRegistry, CodecRow, CodecSet, ParamKind, ParamSpec, ParamValue, ResolvedParams};
+pub use spec::{CodecSpec, CompressSpec, StageSpec};
 
 /// Result of index encoding.
 pub struct IndexEncoding {
@@ -31,15 +57,42 @@ pub struct IndexEncoding {
 }
 
 /// Compresses the support set S of a sparse gradient over domain [0, d).
+///
+/// Implement **at least one** of [`encode`](IndexCodec::encode) /
+/// [`encode_into`](IndexCodec::encode_into) — each default is written
+/// in terms of the other, so implementing neither compiles but loops
+/// forever on first use. Hot-path codecs implement `encode_into`,
+/// which appends to a caller-owned buffer and skips the
+/// effective-support clone on the lossless path.
 pub trait IndexCodec: Send + Sync {
-    fn name(&self) -> &'static str;
+    fn name(&self) -> &str;
 
     /// Whether the reconstructed support always equals the input support.
     fn lossless(&self) -> bool {
         true
     }
 
-    fn encode(&self, d: usize, support: &[u32]) -> IndexEncoding;
+    fn encode(&self, d: usize, support: &[u32]) -> IndexEncoding {
+        let mut bytes = Vec::new();
+        let effective =
+            self.encode_into(d, support, &mut bytes).unwrap_or_else(|| support.to_vec());
+        IndexEncoding { bytes, effective }
+    }
+
+    /// Append the encoding of `support` to `out` (no clear, no
+    /// truncate: callers may hold a prefix). Returns `None` when the
+    /// decoder reconstructs exactly `support` — the lossless fast path,
+    /// which allocates nothing beyond the bytes — or `Some(effective)`
+    /// otherwise.
+    fn encode_into(&self, d: usize, support: &[u32], out: &mut Vec<u8>) -> Option<Vec<u32>> {
+        let enc = self.encode(d, support);
+        out.extend_from_slice(&enc.bytes);
+        if enc.effective == support {
+            None
+        } else {
+            Some(enc.effective)
+        }
+    }
 
     /// Reconstruct the (effective) support, ascending.
     fn decode(&self, d: usize, bytes: &[u8]) -> anyhow::Result<Vec<u32>>;
@@ -55,15 +108,32 @@ pub struct ValueEncoding {
 }
 
 /// Compresses the value array V.
+///
+/// Implement **at least one** of [`encode`](ValueCodec::encode) /
+/// [`encode_into`](ValueCodec::encode_into) — each default is written
+/// in terms of the other, so implementing neither compiles but loops
+/// forever on first use.
 pub trait ValueCodec: Send + Sync {
-    fn name(&self) -> &'static str;
+    fn name(&self) -> &str;
 
     /// Whether decoded values are bit-exact.
     fn lossless(&self) -> bool {
         false
     }
 
-    fn encode(&self, values: &[f32]) -> ValueEncoding;
+    fn encode(&self, values: &[f32]) -> ValueEncoding {
+        let mut bytes = Vec::new();
+        let perm = self.encode_into(values, &mut bytes);
+        ValueEncoding { bytes, perm }
+    }
+
+    /// Append the encoding of `values` to `out`; returns the reorder
+    /// permutation, if the codec produced one.
+    fn encode_into(&self, values: &[f32], out: &mut Vec<u8>) -> Option<Vec<u32>> {
+        let enc = self.encode(values);
+        out.extend_from_slice(&enc.bytes);
+        enc.perm
+    }
 
     /// Decode exactly `n` values in wire order (before un-permutation).
     fn decode(&self, bytes: &[u8], n: usize) -> anyhow::Result<Vec<f32>>;
@@ -73,6 +143,49 @@ pub trait ValueCodec: Send + Sync {
 pub struct DeepReduce {
     pub index: Box<dyn IndexCodec>,
     pub value: Box<dyn ValueCodec>,
+}
+
+/// Fluent constructor for [`DeepReduce`]: codec spec strings (chains
+/// and `key=value` parameters included) resolved through the registry
+/// at [`build`](DeepReduceBuilder::build) time.
+pub struct DeepReduceBuilder {
+    index: String,
+    value: String,
+    seed: u64,
+}
+
+impl DeepReduceBuilder {
+    /// Index codec spec, e.g. `"rle"`, `"rle+deflate"`,
+    /// `"bloom_p2(fpr=0.01)"`.
+    pub fn index(mut self, spec: impl Into<String>) -> Self {
+        self.index = spec.into();
+        self
+    }
+
+    /// Value codec spec, e.g. `"raw"`, `"qsgd(bits=6)"`, `"fitpoly"`.
+    pub fn value(mut self, spec: impl Into<String>) -> Self {
+        self.value = spec.into();
+        self
+    }
+
+    /// Seed for stochastic codecs (Bloom hashing, QSGD dithering).
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// Resolve both specs against the built-in registry.
+    pub fn build(self) -> anyhow::Result<DeepReduce> {
+        self.build_with(CodecRegistry::global())
+    }
+
+    /// Resolve both specs against a caller-extended registry.
+    pub fn build_with(self, registry: &CodecRegistry) -> anyhow::Result<DeepReduce> {
+        Ok(DeepReduce::new(
+            registry.build_index(&CodecSpec::parse(&self.index)?, self.seed)?,
+            registry.build_value(&CodecSpec::parse(&self.value)?, self.seed)?,
+        ))
+    }
 }
 
 /// Volume breakdown of one encoded tensor, for the Fig 10a accounting.
@@ -95,6 +208,22 @@ impl DeepReduce {
         Self { index, value }
     }
 
+    /// Start a fluent build from codec spec strings (default `raw|raw`).
+    pub fn builder() -> DeepReduceBuilder {
+        DeepReduceBuilder { index: "raw".into(), value: "raw".into(), seed: 0 }
+    }
+
+    /// Rebuild the codec pair a container was encoded with from its
+    /// self-describing header: the stored specs (full chain labels
+    /// included) are parsed and resolved through the built-in registry.
+    pub fn for_container(c: &Container, seed: u64) -> anyhow::Result<Self> {
+        let registry = CodecRegistry::global();
+        Ok(Self::new(
+            registry.build_index(&CodecSpec::parse(&c.index_codec)?, seed)?,
+            registry.build_value(&CodecSpec::parse(&c.value_codec)?, seed)?,
+        ))
+    }
+
     pub fn name(&self) -> String {
         format!("DR[{}|{}]", self.index.name(), self.value.name())
     }
@@ -105,22 +234,23 @@ impl DeepReduce {
     /// `None`, positions outside the input support decode as 0.
     pub fn encode(&self, sparse: &SparseTensor, dense: Option<&[f32]>) -> Container {
         let d = sparse.dense_len();
-        let idx_enc = self.index.encode(d, sparse.indices());
+        let mut idx_bytes = Vec::new();
+        let effective = self.index.encode_into(d, sparse.indices(), &mut idx_bytes);
 
-        // Gather the value array for the effective support.
-        let values: Vec<f32> = if idx_enc.effective == sparse.indices() {
-            sparse.values().to_vec()
-        } else {
-            match dense {
-                Some(g) => idx_enc.effective.iter().map(|&i| g[i as usize]).collect(),
+        // Gather the value array for the effective support (None = the
+        // codec reconstructs the input support exactly: zero-copy path).
+        let values: Vec<f32> = match &effective {
+            None => sparse.values().to_vec(),
+            Some(effective) => match dense {
+                Some(g) => effective.iter().map(|&i| g[i as usize]).collect(),
                 None => {
                     // merge-join sparse values onto the effective support
-                    let mut out = vec![0.0f32; idx_enc.effective.len()];
+                    let mut out = vec![0.0f32; effective.len()];
                     let (mut a, mut b) = (0usize, 0usize);
                     let (si, sv) = (sparse.indices(), sparse.values());
-                    while a < idx_enc.effective.len() && b < si.len() {
+                    while a < effective.len() && b < si.len() {
                         use std::cmp::Ordering::*;
-                        match idx_enc.effective[a].cmp(&si[b]) {
+                        match effective[a].cmp(&si[b]) {
                             Less => a += 1,
                             Greater => b += 1,
                             Equal => {
@@ -132,18 +262,20 @@ impl DeepReduce {
                     }
                     out
                 }
-            }
+            },
         };
 
-        let val_enc = self.value.encode(&values);
-        Container::pack(
+        let num_values = values.len();
+        let mut val_bytes = Vec::new();
+        let perm = self.value.encode_into(&values, &mut val_bytes);
+        Container::pack_owned(
             d,
-            values.len(),
+            num_values,
             self.index.name(),
             self.value.name(),
-            &idx_enc.bytes,
-            &val_enc.bytes,
-            val_enc.perm.as_deref(),
+            idx_bytes,
+            val_bytes,
+            perm,
         )
     }
 
@@ -186,55 +318,50 @@ impl DeepReduce {
     }
 }
 
-/// Build an index codec by name. `param` is codec-specific:
-/// FPR for bloom variants (default 0.001 if NaN).
-pub fn index_by_name(name: &str, param: f64, seed: u64) -> Option<Box<dyn IndexCodec>> {
-    let fpr = if param.is_nan() || param <= 0.0 { 0.001 } else { param };
-    match name {
-        "raw" | "keys" => Some(Box::new(index::RawIndex)),
-        "bitmap" => Some(Box::new(index::BitmapIndex)),
-        "rle" => Some(Box::new(index::RleIndex)),
-        "huffman" => Some(Box::new(index::HuffmanIndex)),
-        "delta_varint" | "delta" => Some(Box::new(index::DeltaVarint)),
-        "elias" | "elias_gamma" => Some(Box::new(index::EliasIndex)),
-        "bloom_naive" => Some(Box::new(index::BloomIndex::new(index::BloomPolicy::Naive, fpr, seed))),
-        "bloom_p0" => Some(Box::new(index::BloomIndex::new(index::BloomPolicy::P0, fpr, seed))),
-        "bloom_p1" => Some(Box::new(index::BloomIndex::new(index::BloomPolicy::P1, fpr, seed))),
-        "bloom_p2" => Some(Box::new(index::BloomIndex::new(index::BloomPolicy::P2, fpr, seed))),
-        // SKCompress index stage (baselines module, same trait)
-        "delta_huffman" => Some(Box::new(crate::baselines::DeltaHuffmanIndex)),
-        _ => None,
-    }
+/// Build an index codec from a full spec string (chains and parameters
+/// included), applying the legacy single-`f64` parameter to the head
+/// stage's declared legacy key (Bloom FPR). The typed route is
+/// [`CodecRegistry::build_index`]; this shim exists for the old flag
+/// surface.
+pub fn build_index_spec(
+    spec: &str,
+    legacy_param: f64,
+    seed: u64,
+) -> anyhow::Result<Box<dyn IndexCodec>> {
+    let registry = CodecRegistry::global();
+    let mut cs = CodecSpec::parse(spec)?;
+    registry.apply_legacy_param(CodecSet::Index, &mut cs, legacy_param);
+    registry.build_index(&cs, seed)
 }
 
-/// Build a value codec by name. `param` is codec-specific: quantization
-/// bits for qsgd, polynomial degree for fitpoly.
+/// Build a value codec from a full spec string; the legacy `f64` maps
+/// onto qsgd bits / fitpoly degree / sketch quantiles, as the old
+/// factories did. The typed route is [`CodecRegistry::build_value`].
+pub fn build_value_spec(
+    spec: &str,
+    legacy_param: f64,
+    seed: u64,
+) -> anyhow::Result<Box<dyn ValueCodec>> {
+    let registry = CodecRegistry::global();
+    let mut cs = CodecSpec::parse(spec)?;
+    registry.apply_legacy_param(CodecSet::Value, &mut cs, legacy_param);
+    registry.build_value(&cs, seed)
+}
+
+/// Legacy factory, kept as a thin shim over the registry: every
+/// pre-registry spelling (`raw`, `keys`, `delta`, `bloom_p2`, ...)
+/// still parses, and chain specs now work here too. `param` is the old
+/// overloaded codec parameter (FPR for bloom variants; defaults when
+/// NaN or non-positive).
+pub fn index_by_name(name: &str, param: f64, seed: u64) -> Option<Box<dyn IndexCodec>> {
+    build_index_spec(name, param, seed).ok()
+}
+
+/// Legacy factory, kept as a thin shim over the registry. `param` is
+/// the old overloaded codec parameter (quantization bits for qsgd,
+/// polynomial degree for fitpoly, quantile count for sketch).
 pub fn value_by_name(name: &str, param: f64, seed: u64) -> Option<Box<dyn ValueCodec>> {
-    match name {
-        "raw" | "none" | "fp32" => Some(Box::new(value::RawValue)),
-        "fp16" => Some(Box::new(value::Fp16Value)),
-        "deflate" => Some(Box::new(value::DeflateValue::default())),
-        "zstd" => Some(Box::new(value::ZstdValue::default())),
-        "qsgd" => {
-            let bits = if param.is_nan() || param <= 0.0 { 7 } else { param as u32 };
-            Some(Box::new(value::QsgdValue::new(bits, 512, seed)))
-        }
-        "fitpoly" => {
-            let deg = if param.is_nan() || param <= 0.0 { 5 } else { param as usize };
-            Some(Box::new(value::FitPolyValue::new(deg)))
-        }
-        "fitdexp" => Some(Box::new(value::FitDExpValue::default())),
-        // SketchML / SKCompress value stages (baselines module)
-        "sketch" => {
-            let q = if param.is_nan() || param <= 0.0 { 64 } else { param as usize };
-            Some(Box::new(crate::baselines::QuantileBucketValue::new(q, false)))
-        }
-        "sketch_huff" => {
-            let q = if param.is_nan() || param <= 0.0 { 64 } else { param as usize };
-            Some(Box::new(crate::baselines::QuantileBucketValue::new(q, true)))
-        }
-        _ => None,
-    }
+    build_value_spec(name, param, seed).ok()
 }
 
 #[cfg(test)]
@@ -269,5 +396,98 @@ mod tests {
     fn factory_rejects_unknown() {
         assert!(index_by_name("nope", 0.0, 0).is_none());
         assert!(value_by_name("nope", 0.0, 0).is_none());
+        // and malformed chain syntax
+        assert!(index_by_name("rle+", 0.0, 0).is_none());
+    }
+
+    #[test]
+    fn legacy_factories_accept_chain_specs() {
+        let mut rng = Rng::new(81);
+        let g = gradient_like(&mut rng, 3000);
+        let mut topk = crate::sparsify::TopK::new(0.05);
+        use crate::sparsify::Sparsifier;
+        let sp = topk.sparsify(&g);
+        let dr = DeepReduce::new(
+            index_by_name("rle+deflate", f64::NAN, 1).unwrap(),
+            value_by_name("raw+zstd", f64::NAN, 1).unwrap(),
+        );
+        assert_eq!(dr.name(), "DR[rle+deflate|raw+zstd]");
+        let c = dr.encode(&sp, Some(&g));
+        assert_eq!(c.index_codec, "rle+deflate");
+        let back = dr.decode(&c).unwrap();
+        assert_eq!(back, sp);
+    }
+
+    #[test]
+    fn builder_builds_and_container_is_self_describing() {
+        let mut rng = Rng::new(82);
+        let g = gradient_like(&mut rng, 4000);
+        let mut topk = crate::sparsify::TopK::new(0.02);
+        use crate::sparsify::Sparsifier;
+        let sp = topk.sparsify(&g);
+        let dr = DeepReduce::builder()
+            .index("elias+deflate")
+            .value("raw")
+            .seed(9)
+            .build()
+            .unwrap();
+        let c = dr.encode(&sp, Some(&g));
+        // rebuild the decoder purely from the wire header
+        let bytes = c.to_bytes();
+        let parsed = Container::from_bytes(&bytes).unwrap();
+        let from_header = DeepReduce::for_container(&parsed, 9).unwrap();
+        assert_eq!(from_header.decode(&parsed).unwrap(), sp);
+    }
+
+    #[test]
+    fn parameterized_single_stages_stay_self_describing() {
+        // a single-stage codec with explicit params must put the FULL
+        // spec label on the wire (not the bare name), so a decoder
+        // rebuilt from the header gets identical parameters — qsgd
+        // hard-errors on a bits/bucket mismatch, which pins this
+        let mut rng = Rng::new(83);
+        let g = gradient_like(&mut rng, 3000);
+        let mut topk = crate::sparsify::TopK::new(0.05);
+        use crate::sparsify::Sparsifier;
+        let sp = topk.sparsify(&g);
+        let dr = DeepReduce::builder()
+            .index("bloom_p2(fpr=0.01)")
+            .value("qsgd(bits=6)")
+            .seed(9)
+            .build()
+            .unwrap();
+        assert_eq!(dr.name(), "DR[bloom_p2(fpr=0.01)|qsgd(bits=6)]");
+        let c = dr.encode(&sp, Some(&g));
+        assert_eq!(c.index_codec, "bloom_p2(fpr=0.01)");
+        assert_eq!(c.value_codec, "qsgd(bits=6)");
+        let parsed = Container::from_bytes(&c.to_bytes()).unwrap();
+        let from_header = DeepReduce::for_container(&parsed, 9).unwrap();
+        // both decoders agree (bloom replays the policy from the seed
+        // on its own wire; qsgd params match, so decode succeeds)
+        assert_eq!(
+            from_header.decode(&parsed).unwrap(),
+            dr.decode(&parsed).unwrap()
+        );
+    }
+
+    #[test]
+    fn builder_surfaces_registry_errors() {
+        assert!(DeepReduce::builder().index("nope").build().is_err());
+        assert!(DeepReduce::builder().value("qsgd(bits=99)").build().is_err());
+        assert!(DeepReduce::builder().index("rle(fpr=1)").build().is_err());
+    }
+
+    #[test]
+    fn encode_into_appends_without_clearing() {
+        let codec = index_by_name("raw", f64::NAN, 0).unwrap();
+        let mut buf = vec![0xAAu8; 3];
+        let eff = codec.encode_into(100, &[1, 2, 3], &mut buf);
+        assert!(eff.is_none(), "lossless codec must skip the effective clone");
+        assert_eq!(&buf[..3], &[0xAA; 3]);
+        assert_eq!(buf.len(), 3 + 12);
+        // and the default-encode route agrees with the bytes
+        let enc = codec.encode(100, &[1, 2, 3]);
+        assert_eq!(enc.bytes, &buf[3..]);
+        assert_eq!(enc.effective, vec![1, 2, 3]);
     }
 }

@@ -1,0 +1,280 @@
+//! Typed codec specs: the parsed form of a codec pipeline string.
+//!
+//! A *codec spec* names a chain of stages: a leading index or value
+//! codec, optionally followed by `+`-joined lossless byte stages, each
+//! stage optionally carrying `key=value` parameters:
+//!
+//! ```text
+//! rle                      single stage, default parameters
+//! qsgd(bits=6)             single stage, one typed parameter
+//! rle+deflate              two-stage chain (RLE, then Deflate bytes)
+//! bloom_p2(fpr=0.01)+zstd  lossy head with a parameter, byte tail
+//! ```
+//!
+//! Parsing here is purely *syntactic* — stage names are resolved (and
+//! parameters validated against the codec's declared schema) by
+//! [`CodecRegistry`](crate::compress::CodecRegistry) at build time, so
+//! a [`CodecSpec`] can be constructed, stored and shipped around before
+//! any registry exists. [`CodecSpec::label`] renders the canonical
+//! spelling back; it is what travels in the container header and in
+//! `autotune_choices` labels.
+
+/// One stage of a codec chain: a name plus raw `key=value` parameters
+/// (typed against the codec's schema at registry-build time).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StageSpec {
+    pub name: String,
+    /// parameters exactly as written, in spec order
+    pub params: Vec<(String, String)>,
+}
+
+impl StageSpec {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), params: Vec::new() }
+    }
+
+    /// The raw value of parameter `key`, if given.
+    pub fn param(&self, key: &str) -> Option<&str> {
+        self.params.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+
+    /// Set (or replace) parameter `key`.
+    pub fn set_param(&mut self, key: &str, value: impl ToString) {
+        let value = value.to_string();
+        match self.params.iter_mut().find(|(k, _)| k == key) {
+            Some((_, v)) => *v = value,
+            None => self.params.push((key.to_string(), value)),
+        }
+    }
+
+    /// Canonical spelling: `name` or `name(k=v,k2=v2)`.
+    pub fn label(&self) -> String {
+        if self.params.is_empty() {
+            self.name.clone()
+        } else {
+            let kv: Vec<String> =
+                self.params.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            format!("{}({})", self.name, kv.join(","))
+        }
+    }
+}
+
+impl std::fmt::Display for StageSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// A full codec pipeline for one set (index or value): a non-empty
+/// stage chain. The head stage is an index/value codec (the only place
+/// a lossy stage may appear); every later stage must resolve to a
+/// lossless byte stage.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CodecSpec {
+    pub stages: Vec<StageSpec>,
+}
+
+impl CodecSpec {
+    /// A single-stage spec with default parameters.
+    pub fn single(name: &str) -> Self {
+        Self { stages: vec![StageSpec::new(name)] }
+    }
+
+    /// Parse a chain spec string, e.g. `rle+deflate` or
+    /// `bloom_p2(fpr=0.01)+zstd`. Purely syntactic: stage names are not
+    /// resolved here. `+` splits stages only outside parentheses, so
+    /// parameter values may contain exponents (`fpr=1e+0`... would
+    /// still be rejected later by the typed schema if out of range).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        let s = s.trim();
+        anyhow::ensure!(!s.is_empty(), "empty codec spec");
+        let mut stages = Vec::new();
+        let mut depth = 0i32;
+        let mut start = 0usize;
+        for (i, c) in s.char_indices() {
+            match c {
+                '(' => depth += 1,
+                ')' => {
+                    depth -= 1;
+                    anyhow::ensure!(depth >= 0, "unbalanced ')' in codec spec {s:?}");
+                }
+                '+' if depth == 0 => {
+                    stages.push(Self::parse_stage(&s[start..i], s)?);
+                    start = i + 1;
+                }
+                _ => {}
+            }
+        }
+        anyhow::ensure!(depth == 0, "unbalanced '(' in codec spec {s:?}");
+        stages.push(Self::parse_stage(&s[start..], s)?);
+        Ok(Self { stages })
+    }
+
+    fn parse_stage(stage: &str, whole: &str) -> anyhow::Result<StageSpec> {
+        let stage = stage.trim();
+        let (name, inner) = match stage.find('(') {
+            None => (stage, None),
+            Some(open) => {
+                anyhow::ensure!(
+                    stage.ends_with(')'),
+                    "stage {stage:?} in codec spec {whole:?}: parameters must close with ')'"
+                );
+                (stage[..open].trim(), Some(&stage[open + 1..stage.len() - 1]))
+            }
+        };
+        anyhow::ensure!(
+            !name.is_empty() && name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_'),
+            "bad stage name {name:?} in codec spec {whole:?}"
+        );
+        let mut params: Vec<(String, String)> = Vec::new();
+        if let Some(inner) = inner {
+            for kv in inner.split(',') {
+                let kv = kv.trim();
+                if kv.is_empty() {
+                    continue;
+                }
+                let (k, v) = kv.split_once('=').ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "parameter {kv:?} of stage {name:?} must be key=value \
+                         (codec spec {whole:?})"
+                    )
+                })?;
+                let (k, v) = (k.trim(), v.trim());
+                anyhow::ensure!(
+                    !k.is_empty() && !v.is_empty(),
+                    "empty parameter key or value in stage {name:?} (codec spec {whole:?})"
+                );
+                anyhow::ensure!(
+                    !params.iter().any(|(pk, _)| pk == k),
+                    "duplicate parameter {k:?} in stage {name:?} (codec spec {whole:?})"
+                );
+                params.push((k.to_string(), v.to_string()));
+            }
+        }
+        Ok(StageSpec { name: name.to_string(), params })
+    }
+
+    /// The leading stage (the index/value codec proper).
+    pub fn head(&self) -> &StageSpec {
+        &self.stages[0]
+    }
+
+    /// Whether more than one stage is chained.
+    pub fn is_chain(&self) -> bool {
+        self.stages.len() > 1
+    }
+
+    /// Canonical spelling: stage labels joined with `+`.
+    pub fn label(&self) -> String {
+        let parts: Vec<String> = self.stages.iter().map(|s| s.label()).collect();
+        parts.join("+")
+    }
+}
+
+impl std::fmt::Display for CodecSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.label())
+    }
+}
+
+/// The typed compression spec of one DeepReduce instantiation: the
+/// index pipeline and the value pipeline. Replaces the old flat string
+/// fields (`index`/`index_param`/`value`/`value_param`) of the trainer
+/// config — parameters now live inside the stage specs where the codec
+/// that declares them can validate them.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CompressSpec {
+    pub index: CodecSpec,
+    pub value: CodecSpec,
+}
+
+impl CompressSpec {
+    /// Parse both sides from spec strings.
+    pub fn parse(index: &str, value: &str) -> anyhow::Result<Self> {
+        Ok(Self { index: CodecSpec::parse(index)?, value: CodecSpec::parse(value)? })
+    }
+
+    /// The `raw|raw` bypass pair.
+    pub fn raw() -> Self {
+        Self { index: CodecSpec::single("raw"), value: CodecSpec::single("raw") }
+    }
+
+    /// Canonical `index|value` label (the autotune-choice format).
+    pub fn label(&self) -> String {
+        format!("{}|{}", self.index.label(), self.value.label())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_singles_chains_and_params() {
+        let s = CodecSpec::parse("rle").unwrap();
+        assert_eq!(s.stages.len(), 1);
+        assert!(!s.is_chain());
+        assert_eq!(s.label(), "rle");
+
+        let c = CodecSpec::parse("rle+deflate").unwrap();
+        assert_eq!(c.stages.len(), 2);
+        assert!(c.is_chain());
+        assert_eq!(c.head().name, "rle");
+        assert_eq!(c.stages[1].name, "deflate");
+        assert_eq!(c.label(), "rle+deflate");
+
+        let p = CodecSpec::parse("bloom_p2(fpr=0.01)+zstd(level=5)").unwrap();
+        assert_eq!(p.head().param("fpr"), Some("0.01"));
+        assert_eq!(p.stages[1].param("level"), Some("5"));
+        assert_eq!(p.label(), "bloom_p2(fpr=0.01)+zstd(level=5)");
+        // label parses back to the same spec
+        assert_eq!(CodecSpec::parse(&p.label()).unwrap(), p);
+
+        let multi = CodecSpec::parse("qsgd(bits=6,bucket=256)").unwrap();
+        assert_eq!(multi.head().param("bits"), Some("6"));
+        assert_eq!(multi.head().param("bucket"), Some("256"));
+    }
+
+    #[test]
+    fn whitespace_is_tolerated() {
+        let s = CodecSpec::parse(" rle + deflate ( level = 9 ) ").unwrap();
+        assert_eq!(s.label(), "rle+deflate(level=9)");
+    }
+
+    #[test]
+    fn rejects_malformed_specs() {
+        for bad in [
+            "",
+            "   ",
+            "+rle",
+            "rle+",
+            "rle++deflate",
+            "rle(",
+            "rle)",
+            "rle(fpr)",
+            "rle(=3)",
+            "rle(fpr=)",
+            "bad-name",
+            "qsgd(bits=6,bits=7)",
+        ] {
+            assert!(CodecSpec::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn set_param_replaces_or_appends() {
+        let mut s = CodecSpec::single("bloom_p2");
+        s.stages[0].set_param("fpr", 0.01);
+        assert_eq!(s.label(), "bloom_p2(fpr=0.01)");
+        s.stages[0].set_param("fpr", 0.5);
+        assert_eq!(s.label(), "bloom_p2(fpr=0.5)");
+    }
+
+    #[test]
+    fn compress_spec_round_trips() {
+        let cs = CompressSpec::parse("rle+deflate", "qsgd(bits=6)").unwrap();
+        assert_eq!(cs.label(), "rle+deflate|qsgd(bits=6)");
+        assert_eq!(CompressSpec::raw().label(), "raw|raw");
+        assert!(CompressSpec::parse("", "raw").is_err());
+    }
+}

@@ -127,7 +127,7 @@ impl FitPolyValue {
 }
 
 impl ValueCodec for FitPolyValue {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "fitpoly"
     }
 
@@ -215,7 +215,7 @@ impl Default for FitDExpValue {
 }
 
 impl ValueCodec for FitDExpValue {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "fitdexp"
     }
 

@@ -8,7 +8,7 @@ use crate::util::f16;
 pub struct RawValue;
 
 impl ValueCodec for RawValue {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "raw"
     }
 
@@ -16,12 +16,12 @@ impl ValueCodec for RawValue {
         true
     }
 
-    fn encode(&self, values: &[f32]) -> ValueEncoding {
-        let mut bytes = Vec::with_capacity(values.len() * 4);
+    fn encode_into(&self, values: &[f32], out: &mut Vec<u8>) -> Option<Vec<u32>> {
+        out.reserve(values.len() * 4);
         for &v in values {
-            bytes.extend_from_slice(&v.to_le_bytes());
+            out.extend_from_slice(&v.to_le_bytes());
         }
-        ValueEncoding { bytes, perm: None }
+        None
     }
 
     fn decode(&self, bytes: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
@@ -34,16 +34,16 @@ impl ValueCodec for RawValue {
 pub struct Fp16Value;
 
 impl ValueCodec for Fp16Value {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "fp16"
     }
 
-    fn encode(&self, values: &[f32]) -> ValueEncoding {
-        let mut bytes = Vec::with_capacity(values.len() * 2);
+    fn encode_into(&self, values: &[f32], out: &mut Vec<u8>) -> Option<Vec<u32>> {
+        out.reserve(values.len() * 2);
         for &v in values {
-            bytes.extend_from_slice(&f16::f32_to_f16_bits(v).to_le_bytes());
+            out.extend_from_slice(&f16::f32_to_f16_bits(v).to_le_bytes());
         }
-        ValueEncoding { bytes, perm: None }
+        None
     }
 
     fn decode(&self, bytes: &[u8], n: usize) -> anyhow::Result<Vec<f32>> {
@@ -68,7 +68,7 @@ impl Default for DeflateValue {
 }
 
 impl ValueCodec for DeflateValue {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "deflate"
     }
 
@@ -111,7 +111,7 @@ impl Default for ZstdValue {
 }
 
 impl ValueCodec for ZstdValue {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "zstd"
     }
 
@@ -169,5 +169,13 @@ mod tests {
     fn decode_size_validation() {
         assert!(RawValue.decode(&[0u8; 7], 2).is_err());
         assert!(Fp16Value.decode(&[0u8; 3], 2).is_err());
+    }
+
+    #[test]
+    fn encode_into_appends_after_existing_content() {
+        let mut buf = vec![0x77u8];
+        assert!(RawValue.encode_into(&[1.0, -2.0], &mut buf).is_none());
+        assert_eq!(buf[0], 0x77);
+        assert_eq!(RawValue.decode(&buf[1..], 2).unwrap(), vec![1.0, -2.0]);
     }
 }

@@ -35,7 +35,7 @@ impl QsgdValue {
 }
 
 impl ValueCodec for QsgdValue {
-    fn name(&self) -> &'static str {
+    fn name(&self) -> &str {
         "qsgd"
     }
 

@@ -3,6 +3,7 @@
 use super::metrics::{StepMetrics, TrainReport};
 use crate::collective::sparse::{SegmentCodec, SparseAllreduce};
 use crate::collective::{Comm, Endpoint, Network, Schedule, SparseConfig, Topology};
+use crate::compress::{CodecRegistry, CodecSet, CompressSpec};
 use crate::pipeline::{unfuse, Bucket, CostSource, GradientPipeline, StepTimeline};
 use crate::runtime::{Artifact, BatchInput};
 use crate::sparsify::{self, ErrorFeedback, Sparsifier};
@@ -37,14 +38,12 @@ pub struct CompressionSpec {
     pub sparsifier: String,
     /// r/d for topk/randomk; τ for threshold
     pub ratio: f64,
-    /// index codec name (see `compress::index_by_name`)
-    pub index: String,
-    /// index codec parameter (FPR for bloom)
-    pub index_param: f64,
-    /// value codec name (see `compress::value_by_name`)
-    pub value: String,
-    /// value codec parameter (bits for qsgd, degree for fitpoly)
-    pub value_param: f64,
+    /// the typed codec pipelines (index chain + value chain, stage
+    /// parameters included) — see `compress::CompressSpec` and
+    /// DESIGN.md §10. Replaces the old flat string codec fields
+    /// (`index`/`index_param`/`value`/`value_param`); the string
+    /// constructors below keep every legacy spelling parsing.
+    pub compress: CompressSpec,
     /// error-feedback memory compensation (paper §6.3 enables it)
     pub error_feedback: bool,
     /// tensors smaller than this bypass compression (biases etc.)
@@ -111,15 +110,13 @@ pub struct CompressionSpec {
 }
 
 impl CompressionSpec {
-    /// `DR_idx^val` on top of Top-r, the paper's default arrangement.
-    pub fn topk(ratio: f64, index: &str, index_param: f64, value: &str, value_param: f64) -> Self {
+    /// `DR_idx^val` on top of Top-r from a typed [`CompressSpec`] — the
+    /// preferred construction route (chains, `key=value` parameters).
+    pub fn with_spec(ratio: f64, compress: CompressSpec) -> Self {
         Self {
             sparsifier: "topk".into(),
             ratio,
-            index: index.into(),
-            index_param,
-            value: value.into(),
-            value_param,
+            compress,
             error_feedback: true,
             min_compress: 1024,
             schedule: "gather_all".into(),
@@ -140,6 +137,22 @@ impl CompressionSpec {
         }
     }
 
+    /// `DR_idx^val` on top of Top-r, the paper's default arrangement.
+    /// Legacy string shim over [`CompressionSpec::with_spec`]: `index`/
+    /// `value` are codec spec strings (old plain spellings and chain
+    /// specs both parse; panics on malformed syntax — the CLI path
+    /// parses with proper errors before reaching this), and the two
+    /// `f64`s map onto the head stages' declared legacy keys (bloom
+    /// FPR; qsgd bits / fitpoly degree / sketch quantiles).
+    pub fn topk(ratio: f64, index: &str, index_param: f64, value: &str, value_param: f64) -> Self {
+        let mut compress = CompressSpec::parse(index, value)
+            .unwrap_or_else(|e| panic!("bad codec spec {index:?}/{value:?}: {e}"));
+        let registry = CodecRegistry::global();
+        registry.apply_legacy_param(CodecSet::Index, &mut compress.index, index_param);
+        registry.apply_legacy_param(CodecSet::Value, &mut compress.value, value_param);
+        Self::with_spec(ratio, compress)
+    }
+
     /// For inherently sparse models (NCF): no explicit sparsifier.
     pub fn identity(index: &str, index_param: f64, value: &str, value_param: f64) -> Self {
         let mut s = Self::topk(1.0, index, index_param, value, value_param);
@@ -154,7 +167,7 @@ impl CompressionSpec {
     }
 
     pub fn label(&self) -> String {
-        format!("DR[{}+{}|{}]", self.sparsifier, self.index, self.value)
+        format!("DR[{}+{}]", self.sparsifier, self.compress.label())
     }
 }
 
@@ -384,16 +397,9 @@ impl CollectivePool {
         let mut results = Vec::with_capacity(workers);
         let mut handles = Vec::with_capacity(workers);
         for ep in endpoints {
-            // segments reuse the spec's codecs where they are lossless;
-            // lossy stages fall back to raw
-            let codec = SegmentCodec::lossless_or_raw(
-                &spec.index,
-                spec.index_param,
-                &spec.value,
-                spec.value_param,
-                spec.seed,
-                cfg.dense_switch,
-            );
+            // segments reuse the spec's codecs where they are lossless
+            // (chains included); lossy stages fall back to raw
+            let codec = SegmentCodec::lossless_or_raw(&spec.compress, spec.seed, cfg.dense_switch);
             let sr = sched.build_with(cfg, codec);
             let (jtx, jrx) = channel::<StepJob>();
             let (rtx, rrx) = channel::<anyhow::Result<StepOut>>();
@@ -582,10 +588,7 @@ impl Trainer {
                     spec.bucket_bytes,
                     spec.autotune,
                     spec.error_feedback,
-                    &spec.index,
-                    spec.index_param,
-                    &spec.value,
-                    spec.value_param,
+                    &spec.compress,
                     spec.seed,
                     crate::simnet::Link::mbps(spec.pipeline_link_mbps),
                     cfg.workers,

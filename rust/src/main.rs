@@ -1,14 +1,17 @@
 //! DeepReduce leader entrypoint.
 //!
 //! Subcommands:
-//!   train   — run distributed training with a DeepReduce instantiation
-//!   smoke   — load the pallas smoke artifact through PJRT and execute it
-//!   codecs  — quick codec volume table on a synthetic sparse gradient
-//!   info    — list artifacts and their manifests
-//!   help    — print the full flag reference (`cli::usage`)
+//!   train        — run distributed training with a DeepReduce instantiation
+//!   smoke        — load the pallas smoke artifact through PJRT and execute it
+//!   codecs       — quick codec volume table on a synthetic sparse gradient
+//!   list-codecs  — print the codec registry (names, params, chainability)
+//!   info         — list artifacts and their manifests
+//!   help         — print the full flag reference (`cli::usage`)
 
 use deepreduce::cli::Args;
-use deepreduce::compress::{index_by_name, value_by_name, DeepReduce};
+use deepreduce::compress::{
+    index_by_name, value_by_name, CodecRegistry, CodecSet, CompressSpec, DeepReduce,
+};
 use deepreduce::coordinator::{CompressionSpec, ModelKind, TrainConfig, Trainer};
 use deepreduce::runtime;
 use deepreduce::sparsify::{Sparsifier, TopK};
@@ -39,6 +42,8 @@ fn main() {
         "train" => cmd_train(&args),
         "smoke" => cmd_smoke(),
         "codecs" => cmd_codecs(&args),
+        // both spellings: subcommand (documented) and bare flag
+        "list-codecs" | "--list-codecs" => cmd_list_codecs(),
         "info" => cmd_info(),
         "help" => {
             print!("{}", deepreduce::cli::usage());
@@ -93,23 +98,41 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     {
         let idx = if index.is_empty() { "raw".to_string() } else { index };
         let val = if value.is_empty() { "raw".to_string() } else { value };
-        let mut spec = if args.get_or("sparsifier", "topk") == "identity" {
-            CompressionSpec::identity(
-                &idx,
-                args.get_f64("fpr", 0.001)?,
-                &val,
-                args.get_f64("value-param", f64::NAN)?,
-            )
-        } else {
-            CompressionSpec::topk(
-                args.get_f64("ratio", 0.01)?,
-                &idx,
-                args.get_f64("fpr", 0.001)?,
-                &val,
-                args.get_f64("value-param", f64::NAN)?,
-            )
-        };
+        // the CLI is a thin parser into the typed spec: full chain
+        // syntax (`rle+deflate`, `bloom_p2(fpr=0.01)+zstd`) parses
+        // here; the legacy --fpr / --value-param flags shim onto the
+        // head stages' declared legacy parameter keys
+        let mut compress = CompressSpec::parse(&idx, &val)
+            .map_err(|e| anyhow::anyhow!("--index/--value: {e}"))?;
+        let registry = CodecRegistry::global();
+        registry.apply_legacy_param(
+            CodecSet::Index,
+            &mut compress.index,
+            args.get_f64("fpr", f64::NAN)?,
+        );
+        registry.apply_legacy_param(
+            CodecSet::Value,
+            &mut compress.value,
+            args.get_f64("value-param", f64::NAN)?,
+        );
+        // fail early with the registry's diagnostics (unknown codec,
+        // undeclared parameter, out-of-range value) instead of deep in
+        // the trainer build
+        registry
+            .build_index(&compress.index, 0)
+            .map_err(|e| anyhow::anyhow!("--index: {e}"))?;
+        registry
+            .build_value(&compress.value, 0)
+            .map_err(|e| anyhow::anyhow!("--value: {e}"))?;
+        let mut spec = CompressionSpec::with_spec(args.get_f64("ratio", 0.01)?, compress);
+        if args.get_or("sparsifier", "topk") == "identity" {
+            spec.sparsifier = "identity".into();
+            spec.ratio = 1.0;
+        }
         spec.sparsifier = args.get_or("sparsifier", &spec.sparsifier);
+        // EF follows --no-ef for every sparsifier, identity included
+        // (matches the pre-redesign CLI, which overwrote the identity
+        // constructor's EF default the same way)
         spec.error_feedback = !args.flag("no-ef");
         // sparse allreduce schedule: gather_all (default) | recursive_double
         // | ring_rescatter | ring_rescatter_exact | hierarchical
@@ -233,6 +256,10 @@ fn cmd_codecs(args: &Args) -> anyhow::Result<()> {
         ("raw", "fitpoly"),
         ("raw", "fitdexp"),
         ("bloom_p2", "fitpoly"),
+        // composed chains (DESIGN.md §10): second stage re-compresses
+        // the first stage's byte stream
+        ("rle+deflate", "raw"),
+        ("delta_varint+deflate", "raw"),
     ];
     for (i, v) in combos {
         let dr = DeepReduce::new(
@@ -250,6 +277,27 @@ fn cmd_codecs(args: &Args) -> anyhow::Result<()> {
         ]);
     }
     table.print();
+    Ok(())
+}
+
+fn cmd_list_codecs() -> anyhow::Result<()> {
+    let registry = CodecRegistry::global();
+    let mut table = Table::new(
+        "codec registry — chain syntax: <index>[+stage]... e.g. rle+deflate, bloom_p2(fpr=0.01)+zstd",
+        &["name", "set", "params (key:type=default)", "lossless", "chainable"],
+    );
+    for row in registry.rows() {
+        table.row(&[
+            row.name,
+            row.set.to_string(),
+            row.params,
+            if row.lossless { "yes" } else { "no" }.to_string(),
+            if row.chainable { "yes" } else { "leads only" }.to_string(),
+        ]);
+    }
+    table.print();
+    println!("chainable = may appear after '+'; every index/value codec may lead a chain.");
+    println!("lossy codecs may appear only as the leading stage.");
     Ok(())
 }
 

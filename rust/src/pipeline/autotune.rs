@@ -17,7 +17,7 @@
 //! `--autotune off` the trainer keeps the static `CompressionSpec`
 //! codecs unchanged.
 
-use crate::compress::{index_by_name, value_by_name};
+use crate::compress::{build_index_spec, build_value_spec};
 use crate::simnet::{allgather_time, Link};
 use crate::tensor::SparseTensor;
 use crate::util::prng::Rng;
@@ -32,7 +32,9 @@ pub const CAL_DENSITIES: [f64; 6] = [0.001, 0.01, 0.05, 0.2, 0.5, 1.0];
 /// amortizes, small enough that startup stays in the low milliseconds.
 const CAL_DOMAIN: usize = 8192;
 
-/// One codec pair the policy may pick.
+/// One codec pair the policy may pick. Both sides are full codec
+/// *spec* labels — a single name (`rle`), or a chain (`rle+deflate`) —
+/// resolvable through the registry.
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct CodecChoice {
     pub index: String,
@@ -144,50 +146,50 @@ pub struct CodecPolicy {
     measured_secs_per_byte: Option<f64>,
 }
 
-/// The candidate codec names the trainer autotunes over. Lossy stages
-/// (Bloom support, QSGD / curve-fit values) join only when error
-/// feedback is on to compensate their loss.
-pub fn default_candidates(error_feedback: bool) -> (Vec<&'static str>, Vec<&'static str>) {
-    let mut idx = vec!["raw", "rle", "elias", "bitmap"];
-    let mut val = vec!["raw", "deflate"];
-    if error_feedback {
-        idx.push("bloom_p2");
-        val.push("qsgd");
-        val.push("fitpoly");
-    }
-    (idx, val)
+/// The candidate codec specs the trainer autotunes over, enumerated
+/// from the [`CodecRegistry`](crate::compress::CodecRegistry): every
+/// `autotune`-flagged lossless *index* codec, each of those chained
+/// with every `autotune`-flagged byte stage (`rle+deflate`,
+/// `elias+deflate`, ...), the `autotune`-flagged lossless value
+/// singles (value chains are skipped: a byte stage over raw values is
+/// exactly the deflate/zstd value codec), and — only when error
+/// feedback is on to compensate their loss — the lossy candidates
+/// (Bloom support, QSGD / curve-fit values).
+pub fn default_candidates(error_feedback: bool) -> (Vec<String>, Vec<String>) {
+    crate::compress::CodecRegistry::global().autotune_candidates(error_feedback)
 }
 
 impl CodecPolicy {
     /// Calibrate every candidate at startup: encode synthetic
     /// gradient-like tensors at each density rung, recording wire bytes
-    /// and wall-clock encode throughput.
-    pub fn calibrate(
-        index_names: &[&str],
-        value_names: &[&str],
+    /// and wall-clock encode throughput. Candidates are codec *specs* —
+    /// chains like `rle+deflate` calibrate exactly like single codecs.
+    pub fn calibrate<I: AsRef<str>, V: AsRef<str>>(
+        index_specs: &[I],
+        value_specs: &[V],
         seed: u64,
         link: Link,
         workers: usize,
     ) -> Self {
-        Self::build(index_names, value_names, seed, link, workers, true)
+        Self::build(index_specs, value_specs, seed, link, workers, true)
     }
 
     /// Calibrate byte rates only, zeroing throughput terms — choices
     /// then depend solely on the (deterministic) byte estimates and the
     /// α–β model. For tests and benches that need reproducible picks.
-    pub fn calibrate_bytes_only(
-        index_names: &[&str],
-        value_names: &[&str],
+    pub fn calibrate_bytes_only<I: AsRef<str>, V: AsRef<str>>(
+        index_specs: &[I],
+        value_specs: &[V],
         seed: u64,
         link: Link,
         workers: usize,
     ) -> Self {
-        Self::build(index_names, value_names, seed, link, workers, false)
+        Self::build(index_specs, value_specs, seed, link, workers, false)
     }
 
-    fn build(
-        index_names: &[&str],
-        value_names: &[&str],
+    fn build<I: AsRef<str>, V: AsRef<str>>(
+        index_specs: &[I],
+        value_specs: &[V],
         seed: u64,
         link: Link,
         workers: usize,
@@ -195,10 +197,11 @@ impl CodecPolicy {
     ) -> Self {
         let d = CAL_DOMAIN;
         let mut rng = Rng::new(seed ^ 0xCA11_B8A7E);
-        let mut index_profiles = Vec::with_capacity(index_names.len());
-        for &name in index_names {
-            let codec = index_by_name(name, f64::NAN, seed)
-                .unwrap_or_else(|| panic!("unknown index codec candidate {name}"));
+        let mut index_profiles = Vec::with_capacity(index_specs.len());
+        for name in index_specs {
+            let name = name.as_ref();
+            let codec = build_index_spec(name, f64::NAN, seed)
+                .unwrap_or_else(|e| panic!("bad index codec candidate {name}: {e}"));
             let mut bytes_per_elem = [0.0; CAL_DENSITIES.len()];
             let mut secs_per_elem = [0.0; CAL_DENSITIES.len()];
             for (i, &p) in CAL_DENSITIES.iter().enumerate() {
@@ -218,10 +221,11 @@ impl CodecPolicy {
         }
         let n_cal = CAL_DOMAIN / 2;
         let values = gradient_like(&mut rng, n_cal);
-        let mut value_profiles = Vec::with_capacity(value_names.len());
-        for &name in value_names {
-            let codec = value_by_name(name, f64::NAN, seed)
-                .unwrap_or_else(|| panic!("unknown value codec candidate {name}"));
+        let mut value_profiles = Vec::with_capacity(value_specs.len());
+        for name in value_specs {
+            let name = name.as_ref();
+            let codec = build_value_spec(name, f64::NAN, seed)
+                .unwrap_or_else(|e| panic!("bad value codec candidate {name}: {e}"));
             let t0 = Instant::now();
             let enc = codec.encode(&values);
             let dt = t0.elapsed().as_secs_f64();
@@ -503,6 +507,29 @@ mod tests {
         p.observe_comm(f64::NAN, 5.0);
         p.observe_comm(1000.0, f64::NAN);
         assert!(p.comm_s(1.0) < before, "garbage observations must be ignored");
+    }
+
+    #[test]
+    fn chain_candidates_calibrate_and_compete() {
+        // registry-enumerated candidates (chains included) must all
+        // calibrate; the policy then chooses among specs, and a pick is
+        // always a buildable spec label
+        let (idx, val) = default_candidates(false);
+        assert!(idx.iter().any(|s| s == "rle+deflate"), "{idx:?}");
+        let p = CodecPolicy::calibrate_bytes_only(&idx, &val, 7, Link::mbps(100.0), 4);
+        assert_eq!(p.index_profiles.len(), idx.len());
+        let d = 1 << 16;
+        for nnz in [d / 1000, d / 10, d] {
+            let c = p.choose(d, nnz);
+            assert!(
+                crate::compress::build_index_spec(&c.index, f64::NAN, 1).is_ok(),
+                "{c:?}"
+            );
+            assert!(
+                crate::compress::build_value_spec(&c.value, f64::NAN, 1).is_ok(),
+                "{c:?}"
+            );
+        }
     }
 
     #[test]

@@ -30,7 +30,7 @@ pub use autotune::{default_candidates, CodecChoice, CodecPolicy, CostSource, Hie
 pub use bucket::{fuse, fuse_dense, unfuse, Bucket, BucketPlan};
 pub use overlap::{double_buffered, StepTimeline};
 
-use crate::compress::{index_by_name, value_by_name, Container, DeepReduce};
+use crate::compress::{CodecRegistry, CodecSpec, CompressSpec, Container, DeepReduce};
 use crate::simnet::Link;
 use crate::tensor::SparseTensor;
 use std::collections::BTreeMap;
@@ -60,15 +60,17 @@ pub struct EncodedBucket {
 }
 
 /// The trainer-facing pipeline: a bucket plan plus the codec machinery
-/// (static pair or autotuning policy with a cache of built pairs).
+/// (static typed [`CompressSpec`] or autotuning policy with a cache of
+/// built codec pairs — chains included).
 pub struct GradientPipeline {
     plan: BucketPlan,
     static_codec: DeepReduce,
     static_label: String,
+    /// the typed spec the static pair was built from; tuned candidates
+    /// inherit matching stage parameters from it
+    compress: CompressSpec,
     policy: Option<CodecPolicy>,
     tuned: BTreeMap<String, DeepReduce>,
-    index_param: f64,
-    value_param: f64,
     seed: u64,
     link: Link,
     workers: usize,
@@ -76,32 +78,63 @@ pub struct GradientPipeline {
     hier: Option<(crate::collective::Topology, Link, Link)>,
 }
 
+/// Candidate specs carry no explicit parameters; when the static spec
+/// configures a stage the candidate also uses (e.g. a CLI
+/// `bloom_p2(fpr=0.01)` static pair and the `bloom_p2` candidate),
+/// the configured parameters carry over. Known limitation (inherited
+/// from the pre-registry autotuner, which threaded the legacy `f64`
+/// the same way): [`CodecPolicy`] calibrates candidates at their
+/// *default* parameters, so far-from-default inherited values skew the
+/// byte estimates the pick was based on — the reported label, at
+/// least, names the codec that actually ran.
+fn inherit_params(spec: &mut CodecSpec, from: &CodecSpec) {
+    for stage in &mut spec.stages {
+        if stage.params.is_empty() {
+            if let Some(src) =
+                from.stages.iter().find(|s| s.name == stage.name && !s.params.is_empty())
+            {
+                stage.params = src.params.clone();
+            }
+        }
+    }
+}
+
+/// Build one autotune-candidate codec pair through the registry.
+fn build_candidate(
+    static_spec: &CompressSpec,
+    choice: &CodecChoice,
+    seed: u64,
+) -> anyhow::Result<DeepReduce> {
+    let registry = CodecRegistry::global();
+    let mut idx = CodecSpec::parse(&choice.index)?;
+    inherit_params(&mut idx, &static_spec.index);
+    let mut val = CodecSpec::parse(&choice.value)?;
+    inherit_params(&mut val, &static_spec.value);
+    Ok(DeepReduce::new(registry.build_index(&idx, seed)?, registry.build_value(&val, seed)?))
+}
+
 impl GradientPipeline {
     /// Build the pipeline. `members` lists the compressible tensors as
     /// `(tensor id, element count)` in exchange order; `bucket_bytes`
     /// caps fused buckets (0 = one bucket per tensor, the legacy
     /// per-tensor path); `autotune` turns the per-bucket codec policy
-    /// on (off = always the static `index`/`value` pair).
+    /// on (off = always the static `compress` pair).
     #[allow(clippy::too_many_arguments)]
     pub fn new(
         members: &[(usize, usize)],
         bucket_bytes: usize,
         autotune: bool,
         error_feedback: bool,
-        index: &str,
-        index_param: f64,
-        value: &str,
-        value_param: f64,
+        compress: &CompressSpec,
         seed: u64,
         link: Link,
         workers: usize,
     ) -> anyhow::Result<Self> {
         let plan = BucketPlan::plan(members, bucket_bytes);
+        let registry = CodecRegistry::global();
         let static_codec = DeepReduce::new(
-            index_by_name(index, index_param, seed)
-                .ok_or_else(|| anyhow::anyhow!("unknown index codec {index}"))?,
-            value_by_name(value, value_param, seed)
-                .ok_or_else(|| anyhow::anyhow!("unknown value codec {value}"))?,
+            registry.build_index(&compress.index, seed)?,
+            registry.build_value(&compress.value, seed)?,
         );
         let policy = if autotune {
             let (idx, val) = default_candidates(error_feedback);
@@ -112,11 +145,10 @@ impl GradientPipeline {
         Ok(Self {
             plan,
             static_codec,
-            static_label: format!("{index}|{value}"),
+            static_label: compress.label(),
+            compress: compress.clone(),
             policy,
             tuned: BTreeMap::new(),
-            index_param,
-            value_param,
             seed,
             link,
             workers,
@@ -165,6 +197,9 @@ impl GradientPipeline {
     }
 
     /// The codec pair for a bucket of domain `d` with `nnz` entries.
+    /// The returned label is the *built* codec's full spec label
+    /// (inherited stage parameters included), so `autotune_choices`
+    /// and the container header always name the same pipeline.
     fn codec_for(&mut self, d: usize, nnz: usize) -> (String, &DeepReduce) {
         let choice = match &self.policy {
             None => return (self.static_label.clone(), &self.static_codec),
@@ -174,14 +209,14 @@ impl GradientPipeline {
         if label == self.static_label {
             return (label, &self.static_codec);
         }
-        let (ipar, vpar, seed) = (self.index_param, self.value_param, self.seed);
-        let codec = self.tuned.entry(label.clone()).or_insert_with(|| {
-            DeepReduce::new(
-                index_by_name(&choice.index, ipar, seed).expect("candidate index codec"),
-                value_by_name(&choice.value, vpar, seed).expect("candidate value codec"),
-            )
-        });
-        (label, &*codec)
+        // steady state (cache hit) is allocation-free beyond the label
+        if !self.tuned.contains_key(&label) {
+            let built = build_candidate(&self.compress, &choice, self.seed)
+                .expect("registry-enumerated candidate builds");
+            self.tuned.insert(label.clone(), built);
+        }
+        let codec = self.tuned.get(&label).expect("present: just checked or inserted");
+        (format!("{}|{}", codec.index.name(), codec.value.name()), codec)
     }
 
     /// Fuse, pick a codec, encode, and locally decode one bucket.
@@ -254,10 +289,7 @@ mod tests {
             1 << 20, // everything fuses into one bucket
             false,
             true,
-            "raw",
-            f64::NAN,
-            "raw",
-            f64::NAN,
+            &CompressSpec::raw(),
             1,
             Link::mbps(100.0),
             4,
@@ -288,10 +320,7 @@ mod tests {
             0,
             true,
             false, // no EF -> lossless candidates only
-            "raw",
-            f64::NAN,
-            "raw",
-            f64::NAN,
+            &CompressSpec::raw(),
             1,
             Link::mbps(100.0),
             4,
@@ -315,6 +344,31 @@ mod tests {
     }
 
     #[test]
+    fn static_chain_spec_drives_the_pipeline() {
+        let sizes = [(0usize, 3000usize)];
+        let mut pipe = GradientPipeline::new(
+            &sizes,
+            0,
+            false,
+            true,
+            &CompressSpec::parse("rle+deflate", "raw").unwrap(),
+            1,
+            Link::mbps(100.0),
+            4,
+        )
+        .unwrap();
+        let mut rng = Rng::new(5);
+        let g = gradient_like(&mut rng, 3000);
+        let sp = parts_for(&g, 0.05);
+        let bucket = pipe.plan().buckets[0].clone();
+        let enc = pipe.encode_bucket(&bucket, &[&sp], &[g.as_slice()]).unwrap();
+        // the full chain label is what the metrics/bench artifacts see
+        assert_eq!(enc.choice_label, "rle+deflate|raw");
+        // chain is lossless end to end
+        assert_eq!(unfuse(&bucket, &enc.decoded), vec![sp]);
+    }
+
+    #[test]
     fn hierarchy_yields_per_hop_advice() {
         let sizes = [(0usize, 4000usize)];
         let mut pipe = GradientPipeline::new(
@@ -322,10 +376,7 @@ mod tests {
             0,
             true,
             false,
-            "raw",
-            f64::NAN,
-            "raw",
-            f64::NAN,
+            &CompressSpec::raw(),
             1,
             Link::mbps(100.0),
             4,

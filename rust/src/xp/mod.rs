@@ -50,6 +50,16 @@ pub fn dr_value(ratio: f64, value: &str, param: f64) -> CompressionSpec {
     CompressionSpec::topk(ratio, "raw", f64::NAN, value, param)
 }
 
+/// Typed-spec route over Top-r: full chain/parameter syntax on both
+/// sides, with parse errors surfaced instead of panicking —
+/// e.g. `dr_spec(0.01, "rle+deflate", "qsgd(bits=6)")`.
+pub fn dr_spec(ratio: f64, index: &str, value: &str) -> anyhow::Result<CompressionSpec> {
+    Ok(CompressionSpec::with_spec(
+        ratio,
+        crate::compress::CompressSpec::parse(index, value)?,
+    ))
+}
+
 /// Percent formatting for relative-volume columns.
 pub fn pct(x: f64) -> String {
     format!("{:.2}%", x * 100.0)

@@ -21,6 +21,8 @@ const LOSSLESS_INDEX: [&str; 6] = ["raw", "bitmap", "rle", "huffman", "delta_var
 const LOSSLESS_VALUE: [&str; 3] = ["raw", "deflate", "zstd"];
 const LOSSY_VALUE: [&str; 4] = ["fp16", "qsgd", "fitpoly", "fitdexp"];
 const BLOOM_INDEX: [&str; 4] = ["bloom_naive", "bloom_p0", "bloom_p1", "bloom_p2"];
+/// chainable byte stages (stage 2 of `head+stage` chains)
+const BYTE_STAGES: [&str; 2] = ["deflate", "zstd"];
 
 fn build(index: &str, value: &str, seed: u64) -> DeepReduce {
     DeepReduce::new(
@@ -208,6 +210,91 @@ fn bloom_policies_hold_support_contracts() {
             Ok(())
         },
     );
+}
+
+/// The canonical support shapes chains must survive: nothing, all,
+/// one contiguous block, and a periodic cluster comb (long repetitive
+/// head-codec streams — the case byte stages exist for).
+fn edge_supports(d: usize) -> Vec<Vec<u32>> {
+    let full: Vec<u32> = (0..d as u32).collect();
+    let block: Vec<u32> = (d as u32 / 4..d as u32 / 2).collect();
+    let comb: Vec<u32> = (0..d as u32).filter(|i| (i / 8) % 2 == 0).collect();
+    vec![Vec::new(), full, block, comb]
+}
+
+#[test]
+fn lossless_two_stage_chains_roundtrip_bit_exactly() {
+    // every lossless head × byte stage, on both sides of the pipe, over
+    // empty / fully-dense / clustered supports, through the full v2
+    // container wire
+    let mut rng = deepreduce::util::prng::Rng::new(0xC4A1);
+    for d in [1usize, 64, 1000] {
+        let g = gradient_like(&mut rng, d);
+        for support in edge_supports(d) {
+            let sp = SparseTensor::gather(&g, &support);
+            for idx in LOSSLESS_INDEX {
+                for stage in BYTE_STAGES {
+                    let spec = format!("{idx}+{stage}");
+                    let dr = deepreduce::compress::DeepReduce::builder()
+                        .index(&spec)
+                        .value("raw")
+                        .seed(1)
+                        .build()
+                        .unwrap_or_else(|e| panic!("{spec}: {e}"));
+                    let back = wire_roundtrip(&dr, &sp, &g)
+                        .unwrap_or_else(|e| panic!("{spec} d={d}: {e}"));
+                    assert_eq!(back, sp, "{spec} d={d} nnz={}", sp.nnz());
+                }
+            }
+            for val in LOSSLESS_VALUE {
+                for stage in BYTE_STAGES {
+                    let spec = format!("{val}+{stage}");
+                    let dr = deepreduce::compress::DeepReduce::builder()
+                        .index("raw")
+                        .value(&spec)
+                        .seed(1)
+                        .build()
+                        .unwrap_or_else(|e| panic!("{spec}: {e}"));
+                    let back = wire_roundtrip(&dr, &sp, &g)
+                        .unwrap_or_else(|e| panic!("{spec} d={d}: {e}"));
+                    assert_eq!(back, sp, "{spec} d={d} nnz={}", sp.nnz());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn chained_lossy_head_keeps_its_contracts() {
+    // lossy head + byte tail: the chain is transparent to the head's
+    // semantics — fitpoly's reorder perm still travels, bloom_p2's
+    // support contract still holds
+    let mut rng = deepreduce::util::prng::Rng::new(0xC4A2);
+    let d = 900;
+    let g = gradient_like(&mut rng, d);
+    let support = sorted_support(&mut rng, d, 90);
+    let sp = SparseTensor::gather(&g, &support);
+    let dr = deepreduce::compress::DeepReduce::builder()
+        .index("raw")
+        .value("fitpoly+deflate")
+        .seed(3)
+        .build()
+        .unwrap();
+    let back = wire_roundtrip(&dr, &sp, &g).unwrap();
+    assert_eq!(back.indices(), sp.indices(), "support must survive a value chain");
+    assert!(back.values().iter().all(|v| v.is_finite()));
+
+    let dr = deepreduce::compress::DeepReduce::builder()
+        .index("bloom_p2(fpr=0.01)+zstd")
+        .value("raw")
+        .seed(3)
+        .build()
+        .unwrap();
+    let back = wire_roundtrip(&dr, &sp, &g).unwrap();
+    assert!(back.nnz() <= sp.nnz().max(1), "P2 cardinality bound through a chain");
+    for (&i, &v) in back.indices().iter().zip(back.values()) {
+        assert_eq!(v, g[i as usize], "true value at reconstructed position {i}");
+    }
 }
 
 #[test]
