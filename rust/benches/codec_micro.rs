@@ -3,6 +3,7 @@
 //! profiling driver — not tied to one paper figure.
 
 use deepreduce::compress::{index_by_name, value_by_name};
+use deepreduce::obs;
 use deepreduce::sparsify::top_r_indices;
 use deepreduce::util::benchkit::Bench;
 use deepreduce::util::bitio::BitWriter;
@@ -76,5 +77,27 @@ fn main() {
             std::hint::black_box(codec.decode(std::hint::black_box(&enc.bytes), values.len()).unwrap());
         });
     }
+    // ---- observability hot path ----
+    // the DESIGN.md §11 overhead contract: with tracing off (no tracer
+    // installed on this thread), span()/count() must reduce to a
+    // thread-local byte read plus a branch — no allocation, no clock
+    // read. 100 ns/call is a generous ceiling; the real cost is ~1 ns.
+    let iters = 1u64 << 20;
+    let t0 = std::time::Instant::now();
+    for i in 0..iters {
+        let mut sp = obs::span(obs::SpanKind::Pack);
+        sp.set_bytes(i);
+        sp.label_with(|| unreachable!("dead span guards must not run label closures"));
+        obs::count("bench.noop", 1);
+        std::hint::black_box(&sp);
+    }
+    let per_call = t0.elapsed().as_secs_f64() / iters as f64;
+    println!("obs/disabled span+count     {:>8.1} ns per call", per_call * 1e9);
+    assert!(
+        per_call < 100e-9,
+        "disabled tracing costs {:.1} ns per span (contract: < 100 ns)",
+        per_call * 1e9
+    );
+
     println!("\ncodec_micro done: {} measurements", bench.results().len());
 }

@@ -21,6 +21,7 @@
 //! `--smoke` runs the reduced sweep CI uses.
 
 use deepreduce::collective::{Schedule, SparseConfig, Topology};
+use deepreduce::obs::{self, Lane, Span, SpanKind, StepWindow, TraceLevel, TraceReport, Tracer};
 use deepreduce::simnet::{flat_schedule_time, Link, SegWire};
 use deepreduce::tensor::SparseTensor;
 use deepreduce::util::benchkit::{BenchSummary, Table};
@@ -28,6 +29,7 @@ use deepreduce::util::json::Json;
 use deepreduce::util::prng::Rng;
 use deepreduce::util::testkit::sorted_support;
 use deepreduce::vfabric::{Scenario, VirtualNetwork};
+use std::collections::BTreeMap;
 use std::thread;
 
 /// Run one schedule over the virtual fabric; returns (measured
@@ -52,6 +54,83 @@ fn measured(
         h.join().unwrap();
     }
     (net.max_clock_s(), net.total_idle_s(), net.total_bytes())
+}
+
+/// Re-run the straggler case with full tracing installed and return the
+/// reconciliation coverage: the fraction of the measured virtual step
+/// the traced critical path (compute + recv_wait + barrier on the
+/// slowest rank) accounts for. Exact by construction — the virtual
+/// clock only advances through `elapse` and recv waits — so anything
+/// below ~100% means an instrumentation gap (DESIGN.md §11).
+fn traced_coverage(
+    topo: Topology,
+    link: Link,
+    scenario: &Scenario,
+    inputs: &[SparseTensor],
+) -> (f64, TraceReport) {
+    let n = topo.world();
+    let tracer = Tracer::new(TraceLevel::Full, n);
+    let net = VirtualNetwork::new(topo, link, link, scenario.clone());
+    let cfg = SparseConfig { topology: Some(topo), ..SparseConfig::default() };
+    let base_compute = 2e-3;
+    let handles: Vec<_> = net
+        .endpoints()
+        .into_iter()
+        .zip(inputs.to_vec())
+        .enumerate()
+        .map(|(r, (ep, t))| {
+            let tracer = tracer.clone();
+            let factor = scenario.compute_factor(r, 0);
+            thread::spawn(move || {
+                let _bind = tracer.install(r);
+                ep.sync_to(0.0);
+                {
+                    let mut sp = obs::span(SpanKind::Compute);
+                    sp.label_with(|| "replay".to_string());
+                    ep.elapse(base_compute * factor);
+                }
+                Schedule::GatherAll.build(cfg).allreduce(&ep, t).unwrap();
+                ep.now()
+            })
+        })
+        .collect();
+    let ends: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let step_end = ends.iter().copied().fold(0.0, f64::max);
+    for (r, &e) in ends.iter().enumerate() {
+        tracer.record(Span {
+            kind: SpanKind::Barrier,
+            lane: Lane::Cpu,
+            rank: r as u32,
+            step: 0,
+            depth: 0,
+            bytes: 0,
+            label: None,
+            wall0: f64::NAN,
+            wall1: f64::NAN,
+            virt0: e,
+            virt1: step_end,
+        });
+    }
+    let report = TraceReport {
+        name: "vfabric_scaling".to_string(),
+        level: TraceLevel::Full,
+        ranks: n,
+        meta: BTreeMap::from([
+            ("schedule".to_string(), Json::Str("gather_all".to_string())),
+            ("scenario".to_string(), Json::Str("straggler 0:16".to_string())),
+        ]),
+        steps: vec![StepWindow {
+            step: 0,
+            measured_s: step_end,
+            idle_mean_s: net.total_idle_s() / n as f64,
+            virt0: 0.0,
+            virt1: step_end,
+        }],
+        spans: tracer.drain(0),
+        registry: tracer.registry().snapshot(),
+    };
+    let cov = report.reconciliation(0).expect("virtual trace data");
+    (cov, report)
 }
 
 /// One scenario of the sweep: a fabric configuration whose measured
@@ -213,6 +292,29 @@ fn main() {
         }
     }
     table.print();
+    // tracing acceptance: the traced decomposition of the straggler
+    // step must explain ≥90% of the measured virtual time (it lands at
+    // ~100% — the virtual clock cannot advance outside traced spans)
+    let k = ((d as f64 * 0.001) as usize).max(1);
+    let traced_inputs: Vec<SparseTensor> = (0..n)
+        .map(|_| {
+            let support = sorted_support(&mut rng, d, k);
+            let values: Vec<f32> = (0..k).map(|_| rng.next_gaussian() as f32).collect();
+            SparseTensor::new(d, support, values)
+        })
+        .collect();
+    let (coverage, trace) = traced_coverage(flat, slow, &strag(16.0), &traced_inputs);
+    print!("{}", trace.summary());
+    match trace.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write trace report: {e}"),
+    }
+    summary.set("trace_coverage", Json::Num(coverage));
+    assert!(
+        coverage >= 0.90,
+        "traced critical path explains only {:.1}% of the measured straggler step",
+        coverage * 100.0
+    );
     summary.set("inversions", Json::Num(inversions.len() as f64));
     summary.set("cases", Json::Num(cases_run as f64));
     summary.set("smoke", Json::Bool(smoke));

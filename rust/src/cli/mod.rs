@@ -24,6 +24,8 @@ pub const KNOWN_FLAGS: &[&str] = &[
     "fabric", "straggler", "compute-jitter", "link-jitter", "node-mbps",
     // train: gradient pipeline
     "bucket-bytes", "autotune", "pipeline-link-mbps", "autotune-cost",
+    // train: observability
+    "trace", "trace-summary",
     // codecs
     "dim",
 ];
@@ -88,6 +90,13 @@ train — run distributed training with a DeepReduce instantiation
   --autotune-cost <src>           comm term of the autotuner cost:
                                   formula (alpha-beta model, default) |
                                   measured (virtual-fabric feedback)
+
+  observability (see DESIGN.md §11):
+  --trace <off|step|full>         structured span tracing: off (default,
+                                  zero-overhead), step (per-rank step anatomy),
+                                  full (codec/wire/rounds/ports/waits); writes
+                                  TRACE_train.json (open in Perfetto)
+  --trace-summary                 print the per-step critical-path breakdown
 
 smoke — load the pallas smoke artifact through PJRT and execute it
 

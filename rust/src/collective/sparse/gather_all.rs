@@ -44,6 +44,7 @@ impl SparseAllreduce for GatherAll {
             }
             acc = merge::merge_sum(&acc, &self.codec.decode(d, bytes)?);
         }
+        crate::obs::count("sched.gather_all_steps", 1);
         Ok(acc)
     }
 }

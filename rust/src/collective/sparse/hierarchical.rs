@@ -89,22 +89,34 @@ impl SparseAllreduce for Hierarchical {
 
         if me != leader {
             // phase 1 (member side): contribute to the node leader …
-            ep.send(leader, self.codec.encode(&acc, 0, d));
+            {
+                let mut hop = crate::obs::span(crate::obs::SpanKind::Round);
+                hop.label_with(|| "intra_reduce".to_string());
+                ep.send(leader, self.codec.encode(&acc, 0, d));
+            }
             // … phase 3 (member side): receive the global sum back
+            let mut hop = crate::obs::span(crate::obs::SpanKind::Round);
+            hop.label_with(|| "intra_bcast".to_string());
             return self.codec.decode(d, &ep.recv(leader));
         }
 
         // phase 1 (leader side): merge the node's contributions in rank
         // order — deterministic, so reruns are reproducible
-        for m in topo.members(node) {
-            if m != me {
-                acc = merge::merge_sum(&acc, &self.codec.decode(d, &ep.recv(m))?);
+        {
+            let mut hop = crate::obs::span(crate::obs::SpanKind::Round);
+            hop.label_with(|| "intra_reduce".to_string());
+            for m in topo.members(node) {
+                if m != me {
+                    acc = merge::merge_sum(&acc, &self.codec.decode(d, &ep.recv(m))?);
+                }
             }
         }
 
         // phase 2: node sums travel the slow links once, via the inner
         // schedule re-ranked onto the leader group
         if topo.nodes > 1 {
+            let mut hop = crate::obs::span(crate::obs::SpanKind::Round);
+            hop.label_with(|| format!("inter:{}", self.inner.name()));
             let sub = SubEndpoint::new(ep, topo.leaders());
             acc = self.inner.allreduce(&sub, acc)?;
         }
@@ -112,6 +124,8 @@ impl SparseAllreduce for Hierarchical {
         // phase 3 (leader side): broadcast the result to the node —
         // encoded once (the payload is identical for every member)
         if topo.ranks_per_node > 1 {
+            let mut hop = crate::obs::span(crate::obs::SpanKind::Round);
+            hop.label_with(|| "intra_bcast".to_string());
             let blob = self.codec.encode(&acc, 0, d);
             for m in topo.members(node) {
                 if m != me {

@@ -7,6 +7,7 @@ use crate::tensor::SparseTensor;
 /// Index-union merge: the result's support is `S_a ∪ S_b` and values at
 /// shared indices are summed. O(nnz_a + nnz_b).
 pub fn merge_sum(a: &SparseTensor, b: &SparseTensor) -> SparseTensor {
+    let mut sp = crate::obs::span(crate::obs::SpanKind::Merge);
     assert_eq!(a.dense_len(), b.dense_len(), "merge over mismatched domains");
     let (ai, av) = (a.indices(), a.values());
     let (bi, bv) = (b.indices(), b.values());
@@ -38,6 +39,11 @@ pub fn merge_sum(a: &SparseTensor, b: &SparseTensor) -> SparseTensor {
     val.extend_from_slice(&av[i..]);
     idx.extend_from_slice(&bi[j..]);
     val.extend_from_slice(&bv[j..]);
+    if sp.live() {
+        sp.set_bytes(idx.len() as u64 * 8);
+        crate::obs::observe("merge.out_nnz", idx.len() as f64);
+        crate::obs::count("merge.calls", 1);
+    }
     SparseTensor::new(a.dense_len(), idx, val)
 }
 

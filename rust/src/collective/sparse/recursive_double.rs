@@ -45,11 +45,15 @@ impl SparseAllreduce for RecursiveDouble {
         if me >= p {
             // fold out: contribute to the partner, then receive the result
             let partner = me - p;
+            let mut round = crate::obs::span(crate::obs::SpanKind::Round);
+            round.label_with(|| "fold".to_string());
             ep.send(partner, self.codec.encode(&acc, 0, d));
             let bytes = ep.recv(partner);
             return self.codec.decode(d, &bytes);
         }
         if me < extras {
+            let mut round = crate::obs::span(crate::obs::SpanKind::Round);
+            round.label_with(|| "fold".to_string());
             let folded = self.codec.decode(d, &ep.recv(p + me))?;
             acc = merge::merge_sum(&acc, &folded);
         }
@@ -60,6 +64,8 @@ impl SparseAllreduce for RecursiveDouble {
         let mut stride = 1usize;
         while stride < p {
             let partner = me ^ stride;
+            let mut round = crate::obs::span(crate::obs::SpanKind::Round);
+            round.label_with(|| format!("stride {stride}"));
             ep.send(partner, self.codec.encode(&acc, 0, d));
             let theirs = self.codec.decode(d, &ep.recv(partner))?;
             acc = merge::merge_sum(&acc, &theirs);
@@ -67,6 +73,8 @@ impl SparseAllreduce for RecursiveDouble {
         }
 
         if me < extras {
+            let mut round = crate::obs::span(crate::obs::SpanKind::Round);
+            round.label_with(|| "unfold".to_string());
             ep.send(p + me, self.codec.encode(&acc, 0, d));
         }
         Ok(acc)

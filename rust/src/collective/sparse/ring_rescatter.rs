@@ -69,6 +69,8 @@ impl SparseAllreduce for RingRescatter {
         // would let a rank with an empty input zero its whole chunk.
         let mut k_max = k_in as u64;
         for s in 0..n - 1 {
+            let mut round = crate::obs::span(crate::obs::SpanKind::Round);
+            round.label_with(|| format!("rs {s}"));
             let cs = (me + n - s) % n;
             let mut msg = Vec::new();
             varint::write_u64(&mut msg, k_max);
@@ -90,6 +92,8 @@ impl SparseAllreduce for RingRescatter {
 
         // allgather: circulate the owned chunks around the ring
         for s in 0..n - 1 {
+            let mut round = crate::obs::span(crate::obs::SpanKind::Round);
+            round.label_with(|| format!("ag {s}"));
             let cs = (me + 1 + n - s) % n;
             ep.send(next, self.codec.encode(&segs[cs], bounds[cs], bounds[cs + 1]));
             let cr = (me + n - s) % n;

@@ -93,6 +93,7 @@ impl SegmentCodec {
     /// Encode the segment `[lo, hi)` of `t`. `t` must already be
     /// restricted to the range (see `merge::slice_range`).
     pub fn encode(&self, t: &SparseTensor, lo: usize, hi: usize) -> Vec<u8> {
+        let mut sp = crate::obs::span(crate::obs::SpanKind::Pack);
         debug_assert!(lo <= hi && hi <= t.dense_len());
         debug_assert!(
             t.indices().iter().all(|&i| lo <= i as usize && (i as usize) < hi) || t.nnz() == 0,
@@ -137,12 +138,18 @@ impl SegmentCodec {
             varint::write_u64(&mut out, vbytes.len() as u64);
             out.extend_from_slice(&vbytes);
         }
+        sp.set_bytes(out.len() as u64);
+        crate::obs::count("wire.pack_calls", 1);
+        crate::obs::count("wire.pack_bytes", out.len() as u64);
         out
     }
 
     /// Decode one segment back onto the full domain `[0, d)`; indices are
     /// re-absolutized. Dense segments drop explicit zeros.
     pub fn decode(&self, d: usize, bytes: &[u8]) -> anyhow::Result<SparseTensor> {
+        let mut sp = crate::obs::span(crate::obs::SpanKind::Decode);
+        sp.set_bytes(bytes.len() as u64);
+        crate::obs::count("wire.decode_calls", 1);
         anyhow::ensure!(!bytes.is_empty(), "empty segment");
         let tag = bytes[0];
         let mut pos = 1usize;

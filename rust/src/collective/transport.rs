@@ -205,7 +205,15 @@ impl Endpoint {
     /// Blocking receive from a specific source rank.
     pub fn recv(&self, src: usize) -> Vec<u8> {
         assert_ne!(src, self.rank);
-        self.from[src].recv().expect("peer hung up")
+        // wall-clock wait only: the instant fabric has no virtual time
+        let mut wait = crate::obs::span(crate::obs::SpanKind::RecvWait);
+        let payload = self.from[src].recv().expect("peer hung up");
+        if wait.live() {
+            wait.set_bytes(payload.len() as u64);
+            wait.label_with(|| format!("from {src}"));
+        }
+        drop(wait);
+        payload
     }
 
     /// Bytes sent across the whole fabric (shared counter).

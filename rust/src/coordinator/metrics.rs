@@ -47,9 +47,11 @@ pub struct StepMetrics {
     /// `pipeline_*`/α–β figures
     pub measured_step_s: f64,
     /// mean virtual seconds a rank spent idle this step (recv waits
-    /// plus the end-of-step barrier; 0 on the instant fabric) — the
-    /// load-imbalance signal stragglers produce
-    pub rank_idle_s: f64,
+    /// plus the end-of-step barrier) — the load-imbalance signal
+    /// stragglers produce. `None` on the instant fabric, which does
+    /// not measure idleness: it serialises as `null` so downstream
+    /// plots don't average fake zeros into real measurements
+    pub rank_idle_s: Option<f64>,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -138,10 +140,10 @@ impl TrainReport {
         self.steps.iter().map(|s| s.measured_step_s).sum()
     }
 
-    /// Total mean-per-rank idle time over the run (0 unless the run
-    /// used the virtual-time fabric).
+    /// Total mean-per-rank idle time over the run. Steps without an
+    /// idle measurement (instant fabric) contribute 0.
     pub fn total_rank_idle_s(&self) -> f64 {
-        self.steps.iter().map(|s| s.rank_idle_s).sum()
+        self.steps.iter().filter_map(|s| s.rank_idle_s).sum()
     }
 
     /// JSON dump for post-processing / plotting.
@@ -170,7 +172,13 @@ impl TrainReport {
                 m.insert("pipeline_serial_s".into(), Json::Num(s.pipeline_serial_s));
                 m.insert("pipeline_overlap_s".into(), Json::Num(s.pipeline_overlap_s));
                 m.insert("measured_step_s".into(), Json::Num(s.measured_step_s));
-                m.insert("rank_idle_s".into(), Json::Num(s.rank_idle_s));
+                m.insert(
+                    "rank_idle_s".into(),
+                    match s.rank_idle_s {
+                        Some(v) => Json::Num(v),
+                        None => Json::Null,
+                    },
+                );
                 Json::Obj(m)
             })
             .collect();
@@ -212,7 +220,7 @@ mod tests {
                     pipeline_serial_s: 0.2,
                     pipeline_overlap_s: 0.15,
                     measured_step_s: 0.3,
-                    rank_idle_s: 0.05,
+                    rank_idle_s: Some(0.05),
                 })
                 .collect(),
         }
@@ -241,6 +249,17 @@ mod tests {
         let parsed = Json::parse(&j.to_string()).unwrap();
         assert_eq!(parsed.get("workers").unwrap().as_usize(), Some(2));
         assert_eq!(parsed.get("steps").unwrap().as_arr().unwrap().len(), 10);
+    }
+
+    #[test]
+    fn unmeasured_idle_is_null_not_zero() {
+        let mut r = sample();
+        r.steps[0].rank_idle_s = None;
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        let s0 = &parsed.get("steps").unwrap().as_arr().unwrap()[0];
+        assert_eq!(s0.get("rank_idle_s"), Some(&Json::Null));
+        // totals skip unmeasured steps instead of counting fake zeros
+        assert!((r.total_rank_idle_s() - 0.45).abs() < 1e-9);
     }
 
     #[test]

@@ -4,12 +4,15 @@ use super::metrics::{StepMetrics, TrainReport};
 use crate::collective::sparse::{SegmentCodec, SparseAllreduce};
 use crate::collective::{Comm, Endpoint, Network, Schedule, SparseConfig, Topology};
 use crate::compress::{CodecRegistry, CodecSet, CompressSpec};
+use crate::obs::{self, Lane, Span, SpanKind, StepWindow, TraceLevel, TraceReport, Tracer};
 use crate::pipeline::{unfuse, Bucket, CostSource, GradientPipeline, StepTimeline};
 use crate::runtime::{Artifact, BatchInput};
 use crate::sparsify::{self, ErrorFeedback, Sparsifier};
 use crate::tensor::{SparseTensor, Tensor};
+use crate::util::json::Json;
 use crate::vfabric::{Scenario, VirtualEndpoint, VirtualNetwork};
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Which benchmark family an artifact belongs to (drives the dataset).
@@ -106,6 +109,12 @@ pub struct CompressionSpec {
     /// (α–β closed form) or `measured` (virtual-fabric feedback — see
     /// [`CostSource`])
     pub autotune_cost: String,
+    /// structured tracing level (CLI `--trace`): `off` (default — the
+    /// instrumentation reduces to a thread-local byte read), `step`
+    /// (per-rank step anatomy: compute/exchange/barrier), or `full`
+    /// (codec, wire, schedule rounds, port occupancy, recv waits).
+    /// See `crate::obs` and DESIGN.md §11
+    pub trace: String,
     pub seed: u64,
 }
 
@@ -133,6 +142,7 @@ impl CompressionSpec {
             link_jitter: 0.0,
             node_mbps: String::new(),
             autotune_cost: "formula".into(),
+            trace: "off".into(),
             seed: 0xDEE9,
         }
     }
@@ -378,6 +388,7 @@ impl CollectivePool {
         cfg: SparseConfig,
         spec: &CompressionSpec,
         workers: usize,
+        tracer: Option<Arc<Tracer>>,
     ) -> anyhow::Result<Self> {
         let endpoints: Vec<AnyEndpoint> = match &fabric {
             FabricHandle::Instant(net) => {
@@ -403,7 +414,8 @@ impl CollectivePool {
             let sr = sched.build_with(cfg, codec);
             let (jtx, jrx) = channel::<StepJob>();
             let (rtx, rrx) = channel::<anyhow::Result<StepOut>>();
-            handles.push(std::thread::spawn(move || worker_loop(ep, sr, jrx, rtx)));
+            let tr = tracer.clone();
+            handles.push(std::thread::spawn(move || worker_loop(ep, sr, jrx, rtx, tr)));
             jobs.push(jtx);
             results.push(rrx);
         }
@@ -429,26 +441,44 @@ fn worker_loop(
     sr: Box<dyn SparseAllreduce>,
     jobs: Receiver<StepJob>,
     results: Sender<anyhow::Result<StepOut>>,
+    tracer: Option<Arc<Tracer>>,
 ) {
     let rank = ep.rank();
+    let _bind = tracer.as_ref().map(|t| t.install(rank));
     while let Ok(job) = jobs.recv() {
         ep.sync_to(job.sync_to);
-        ep.elapse(job.advance_s);
+        {
+            // replayed local busy time: the compute share of the rank's
+            // virtual timeline (a point in wall time)
+            let mut sp = obs::span(SpanKind::Compute);
+            sp.label_with(|| "replay".to_string());
+            ep.elapse(job.advance_s);
+        }
         let start_s = ep.now();
         let idle0 = ep.idle_s();
         let mut summed = Vec::with_capacity(job.tensors.len());
         let mut failure: Option<anyhow::Error> = None;
-        // per-tensor collectives run in order, so messages stay matched
-        // on the pairwise FIFO channels
-        for t in job.tensors {
-            match sr.allreduce(&ep, t) {
-                Ok(r) => summed.push(r),
-                Err(e) => {
-                    failure = Some(e);
-                    break;
+        {
+            let mut ex = obs::span(SpanKind::Exchange);
+            ex.label_with(|| sr.name().to_string());
+            // per-tensor collectives run in order, so messages stay
+            // matched on the pairwise FIFO channels
+            for (bi, t) in job.tensors.into_iter().enumerate() {
+                let mut bsp = obs::span(SpanKind::Bucket);
+                bsp.label_with(|| format!("bucket {bi}"));
+                bsp.set_bytes(t.nnz() as u64 * 8);
+                match sr.allreduce(&ep, t) {
+                    Ok(r) => summed.push(r),
+                    Err(e) => {
+                        failure = Some(e);
+                        break;
+                    }
                 }
             }
         }
+        // merge this thread's span buffer before the trainer can drain
+        // the step (it only does so after receiving every result)
+        obs::flush();
         let out = match failure {
             Some(e) => Err(anyhow::anyhow!("rank {rank} sparse allreduce failed: {e}")),
             None => Ok(StepOut {
@@ -488,6 +518,13 @@ pub struct Trainer {
     scenario: Scenario,
     /// whether the exchange runs on the virtual-time fabric
     fabric_virtual: bool,
+    /// Some(_) when `--trace` is `step` or `full`: the process-wide
+    /// span collector every instrumented layer writes through
+    tracer: Option<Arc<Tracer>>,
+    /// spans drained so far, stamped with their step id
+    trace_spans: Vec<Span>,
+    /// per-step timing envelopes the span attribution reconciles with
+    trace_steps: Vec<StepWindow>,
 }
 
 impl Trainer {
@@ -621,6 +658,16 @@ impl Trainer {
             })?;
             pipe.set_cost_source(source);
         }
+        // tracing: the collector is only constructed above `off`, so the
+        // default path keeps its zero-overhead contract (no tracer, and
+        // every obs entry point gates on a thread-local byte)
+        let tracer = match cfg.compression.as_ref() {
+            Some(spec) => {
+                let level = TraceLevel::parse(&spec.trace)?;
+                (level != TraceLevel::Off).then(|| Tracer::new(level, cfg.workers))
+            }
+            None => None,
+        };
         // the persistent collective machinery: fabric + one worker
         // thread per rank, built once here and reused by every step
         let (pool, scenario, fabric_virtual) =
@@ -680,7 +727,14 @@ impl Trainer {
                             None => Network::new(cfg.workers),
                         })
                     };
-                    let pool = CollectivePool::new(fabric, sched, sparse_cfg, spec, cfg.workers)?;
+                    let pool = CollectivePool::new(
+                        fabric,
+                        sched,
+                        sparse_cfg,
+                        spec,
+                        cfg.workers,
+                        tracer.clone(),
+                    )?;
                     (Some(pool), scenario, fabric_virtual)
                 }
                 _ => (None, Scenario::none(cfg.seed), false),
@@ -698,6 +752,9 @@ impl Trainer {
             pool,
             scenario,
             fabric_virtual,
+            tracer,
+            trace_spans: Vec::new(),
+            trace_steps: Vec::new(),
         })
     }
 
@@ -738,6 +795,7 @@ impl Trainer {
 
     /// One synchronous data-parallel step across all workers.
     pub fn step(&mut self, step: usize) -> anyhow::Result<StepMetrics> {
+        let step_wall0 = Instant::now();
         let n = self.cfg.workers;
         let total_params = self.artifact.manifest.total_params();
         let mut agg: Vec<Vec<f32>> = self.params.iter().map(|p| vec![0.0; p.numel()]).collect();
@@ -766,8 +824,14 @@ impl Trainer {
         let mut bucketed_bytes = 0u64;
         for w in 0..n {
             let batch = self.shards[w].next_batch();
+            // bind this thread to rank w while its share of the step is
+            // prepared, so coordinator-side spans land on its lanes
+            let _bind = self.tracer.as_ref().map(|t| t.install(w));
             let t0 = Instant::now();
-            let out = self.artifact.train_step(&self.params, &batch)?;
+            let out = {
+                let _sp = obs::span(SpanKind::Compute);
+                self.artifact.train_step(&self.params, &batch)?
+            };
             let compute = t0.elapsed().as_secs_f64();
             metrics.compute_s += compute;
             busy_s[w] += compute;
@@ -780,29 +844,32 @@ impl Trainer {
                     // tensors below min_compress bypass the pipeline
                     let mut prepared: Vec<Option<(Vec<f32>, SparseTensor)>> =
                         (0..out.grads.len()).map(|_| None).collect();
-                    for (ti, grad) in out.grads.iter().enumerate() {
-                        let flat = grad.data();
-                        if flat.len() < spec.min_compress {
-                            // bypass: raw kv on the wire
-                            metrics.bytes_per_worker += (flat.len() * 4) as u64;
-                            for (a, &g) in agg[ti].iter_mut().zip(flat) {
-                                *a += g;
+                    {
+                        let _sp = obs::span(SpanKind::Sparsify);
+                        for (ti, grad) in out.grads.iter().enumerate() {
+                            let flat = grad.data();
+                            if flat.len() < spec.min_compress {
+                                // bypass: raw kv on the wire
+                                metrics.bytes_per_worker += (flat.len() * 4) as u64;
+                                for (a, &g) in agg[ti].iter_mut().zip(flat) {
+                                    *a += g;
+                                }
+                                continue;
                             }
-                            continue;
+                            let corrected: Vec<f32> = if spec.error_feedback {
+                                self.ef[w][ti].apply(flat)
+                            } else {
+                                flat.to_vec()
+                            };
+                            let sp = self.sparsifiers[w].sparsify(&corrected);
+                            prepared[ti] = Some((corrected, sp));
                         }
-                        let corrected: Vec<f32> = if spec.error_feedback {
-                            self.ef[w][ti].apply(flat)
-                        } else {
-                            flat.to_vec()
-                        };
-                        let sp = self.sparsifiers[w].sparsify(&corrected);
-                        prepared[ti] = Some((corrected, sp));
                     }
                     // stage 2: fuse each bucket, pick its codec, encode
                     // and locally decode; the decoded fused payload is
                     // what the collective sums
                     let mut timeline = StepTimeline::new();
-                    for bucket in &buckets {
+                    for (bi, bucket) in buckets.iter().enumerate() {
                         let parts: Vec<&SparseTensor> = bucket
                             .tensors
                             .iter()
@@ -819,7 +886,13 @@ impl Trainer {
                                 p.0.as_slice()
                             })
                             .collect();
-                        let enc = pipe.encode_bucket(bucket, &parts, &dense_parts)?;
+                        let enc = {
+                            let mut sp = obs::span(SpanKind::Encode);
+                            sp.label_with(|| format!("bucket {bi}"));
+                            let enc = pipe.encode_bucket(bucket, &parts, &dense_parts)?;
+                            sp.set_bytes(enc.wire_bytes);
+                            enc
+                        };
                         metrics.encode_s += enc.encode_s;
                         metrics.decode_s += enc.decode_s;
                         busy_s[w] += enc.encode_s + enc.decode_s;
@@ -935,6 +1008,28 @@ impl Trainer {
                 for &e in &ends {
                     idle_sum += step_end - e;
                 }
+                if self.fabric_virtual {
+                    if let Some(tracer) = self.tracer.as_ref() {
+                        // synthesised barrier spans (virtual clock only:
+                        // the gap is known only after the slowest rank
+                        // reports in, so there is no wall window)
+                        for (w, &e) in ends.iter().enumerate() {
+                            tracer.record(Span {
+                                kind: SpanKind::Barrier,
+                                lane: Lane::Cpu,
+                                rank: w as u32,
+                                step: 0, // stamped at drain
+                                depth: 0,
+                                bytes: 0,
+                                label: None,
+                                wall0: f64::NAN,
+                                wall1: f64::NAN,
+                                virt0: e,
+                                virt1: step_end,
+                            });
+                        }
+                    }
+                }
                 let summed_buckets =
                     rank0.ok_or_else(|| anyhow::anyhow!("rank 0 collective result missing"))?;
                 for (bucket, summed) in buckets.iter().zip(summed_buckets) {
@@ -956,7 +1051,7 @@ impl Trainer {
                     // the primary time numbers: measured on the virtual
                     // fabric, emerging from the schedule execution
                     metrics.measured_step_s = step_end - step_start;
-                    metrics.rank_idle_s = idle_sum / n as f64;
+                    metrics.rank_idle_s = Some(idle_sum / n as f64);
                     pool.virtual_now = step_end;
                     // feed the measured exchange back to the autotuner
                     // (per-worker *bucketed* container bytes ↦ virtual
@@ -990,6 +1085,57 @@ impl Trainer {
             })
             .collect();
         self.opt.step(&mut self.params, &grads);
+        // close the step's trace window: drain every flushed span (the
+        // worker threads flush before sending their results, the
+        // coordinator guards flush on drop) and stamp it with this step
+        if let Some(tracer) = self.tracer.clone() {
+            let (measured_s, virt0, virt1) = if self.fabric_virtual {
+                let v1 = self.pool.as_ref().map(|p| p.virtual_now).unwrap_or(f64::NAN);
+                (metrics.measured_step_s, v1 - metrics.measured_step_s, v1)
+            } else {
+                (step_wall0.elapsed().as_secs_f64(), f64::NAN, f64::NAN)
+            };
+            self.trace_steps.push(StepWindow {
+                step: step as u32,
+                measured_s,
+                idle_mean_s: metrics.rank_idle_s.unwrap_or(f64::NAN),
+                virt0,
+                virt1,
+            });
+            self.trace_spans.extend(tracer.drain(step as u32));
+        }
         Ok(metrics)
+    }
+
+    /// Take the accumulated trace as an exportable [`TraceReport`]
+    /// (spans, per-step windows, metrics snapshot). `None` unless the
+    /// spec asked for `--trace step|full`.
+    pub fn take_trace(&mut self) -> Option<TraceReport> {
+        let tracer = self.tracer.as_ref()?;
+        let mut meta = std::collections::BTreeMap::new();
+        meta.insert("artifact".to_string(), Json::Str(self.cfg.artifact.clone()));
+        if let Some(spec) = self.cfg.compression.as_ref() {
+            meta.insert("schedule".to_string(), Json::Str(spec.schedule.clone()));
+            meta.insert(
+                "fabric".to_string(),
+                Json::Str(if spec.fabric.is_empty() {
+                    "instant".to_string()
+                } else {
+                    spec.fabric.clone()
+                }),
+            );
+            if !spec.straggler.is_empty() {
+                meta.insert("straggler".to_string(), Json::Str(spec.straggler.clone()));
+            }
+        }
+        Some(TraceReport {
+            name: "train".to_string(),
+            level: tracer.level(),
+            ranks: tracer.ranks(),
+            meta,
+            steps: std::mem::take(&mut self.trace_steps),
+            spans: std::mem::take(&mut self.trace_spans),
+            registry: tracer.registry().snapshot(),
+        })
     }
 }

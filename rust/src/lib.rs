@@ -35,6 +35,9 @@
 //!   virtual clocks, port serialization, and scenario knobs
 //!   (stragglers, jitter, heterogeneous links); measured step times
 //!   cross-validated against the [`simnet`] closed forms.
+//! - [`obs`] — structured tracing + metrics: per-rank typed spans on
+//!   both the wall and virtual clocks, a counter/histogram registry,
+//!   and Chrome-trace / terminal exporters (`--trace off|step|full`).
 //! - [`data`] — deterministic synthetic shards (CIFAR / NCF / corpus
 //!   stand-ins).
 //! - [`tensor`], [`linalg`], [`optim`], [`util`] — dense/sparse tensors,
@@ -49,6 +52,7 @@ pub mod compress;
 pub mod coordinator;
 pub mod data;
 pub mod linalg;
+pub mod obs;
 pub mod optim;
 pub mod pipeline;
 pub mod runtime;

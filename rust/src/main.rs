@@ -86,14 +86,15 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let scenario_flags = ["straggler", "compute-jitter", "link-jitter", "node-mbps"]
         .iter()
         .any(|&f| args.get(f).is_some());
-    // --schedule / --topology / --fabric / a scenario knob alone
-    // activates the compression pipeline (raw/raw) so none of these
-    // flags is ever silently ignored
+    // --schedule / --topology / --fabric / --trace / a scenario knob
+    // alone activates the compression pipeline (raw/raw) so none of
+    // these flags is ever silently ignored
     if !index.is_empty()
         || !value.is_empty()
         || args.get("schedule").is_some()
         || args.get("topology").is_some()
         || args.get("fabric").is_some()
+        || args.get("trace").is_some()
         || scenario_flags
     {
         let idx = if index.is_empty() { "raw".to_string() } else { index };
@@ -171,8 +172,16 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             Some(other) => anyhow::bail!("--autotune expects on|off, got {other}"),
             None => args.flag("autotune"),
         };
+        // structured tracing (DESIGN.md §11); validated here so a typo
+        // fails before the trainer builds
+        spec.trace = args.get_or("trace", &spec.trace);
+        deepreduce::obs::TraceLevel::parse(&spec.trace).map_err(|e| anyhow::anyhow!("--trace: {e}"))?;
         cfg.compression = Some(spec);
     }
+    anyhow::ensure!(
+        !args.flag("trace-summary") || cfg.compression.as_ref().is_some_and(|s| s.trace != "off"),
+        "--trace-summary requires --trace step|full"
+    );
     let mut trainer = Trainer::new(cfg)?;
     let report = trainer.run()?;
     println!("{}", report.to_json().to_string());
@@ -206,6 +215,14 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
                 overlap
             );
         }
+    }
+    // trace artifact + optional terminal breakdown (--trace step|full)
+    if let Some(trace) = trainer.take_trace() {
+        if args.flag("trace-summary") {
+            eprint!("{}", trace.summary());
+        }
+        let path = trace.write()?;
+        eprintln!("trace written to {}", path.display());
     }
     Ok(())
 }

@@ -1,0 +1,436 @@
+//! Trace exporters: Chrome `trace_event` JSON, the `TRACE_<name>.json`
+//! artifact, and the terminal critical-path summary.
+//!
+//! One artifact serves every consumer: `TRACE_<name>.json` is a JSON
+//! object whose `traceEvents` array is valid Chrome trace format (drop the
+//! file into Perfetto / `chrome://tracing` and each rank renders as a
+//! process with one thread per lane), while the sibling `spans`, `steps`,
+//! and `registry` fields carry the full dual-clock data for scripted
+//! analysis. The timeline clock is the vfabric virtual clock when any
+//! span carries one (virtual-fabric runs), else the wall clock.
+
+use super::span::{Lane, Span, SpanKind};
+use super::TraceLevel;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+/// Schema version for `TRACE_*.json` artifacts (see also
+/// [`crate::util::benchkit::SCHEMA_VERSION`] for `BENCH_*.json`).
+pub const TRACE_SCHEMA_VERSION: u32 = 1;
+
+/// Per-step timing envelope recorded by the trainer: the numbers the span
+/// attribution must reconcile with.
+#[derive(Clone, Debug)]
+pub struct StepWindow {
+    pub step: u32,
+    /// `measured_step_s` for this step (virtual seconds on the virtual
+    /// fabric, wall seconds on the instant fabric).
+    pub measured_s: f64,
+    /// Mean per-rank idle (NaN when the fabric doesn't measure idleness).
+    pub idle_mean_s: f64,
+    /// Virtual-clock extent of the step (NaN on the instant fabric).
+    pub virt0: f64,
+    pub virt1: f64,
+}
+
+/// A drained, exportable trace for one run.
+pub struct TraceReport {
+    /// Artifact stem: written as `TRACE_<name>.json`.
+    pub name: String,
+    pub level: TraceLevel,
+    pub ranks: usize,
+    /// Free-form run metadata (schedule, model, fabric, scenario).
+    pub meta: BTreeMap<String, Json>,
+    pub steps: Vec<StepWindow>,
+    pub spans: Vec<Span>,
+    /// Snapshot of the run's [`super::MetricsRegistry`].
+    pub registry: Json,
+}
+
+/// Virtual seconds of clock-advancing activity (compute + recv_wait +
+/// barrier) on one rank's cpu lane. These three kinds partition a rank's
+/// virtual timeline by construction — the virtual clock only advances in
+/// `elapse`, `recv`, and the end-of-step barrier — so their sum is the
+/// critical-path decomposition that must reconcile with `measured_step_s`.
+pub fn attributed_s(spans: &[Span], rank: u32) -> f64 {
+    spans
+        .iter()
+        .filter(|s| {
+            s.rank == rank
+                && s.lane == Lane::Cpu
+                && s.has_virtual()
+                && matches!(s.kind, SpanKind::Compute | SpanKind::RecvWait | SpanKind::Barrier)
+        })
+        .map(|s| s.virt_dur())
+        .sum()
+}
+
+impl TraceReport {
+    /// True when the report carries virtual-clock data (virtual fabric).
+    pub fn has_virtual(&self) -> bool {
+        self.spans.iter().any(|s| s.has_virtual())
+    }
+
+    /// Chrome `trace_event` JSON: `{"traceEvents": [...]}`. Ranks map to
+    /// processes, lanes to threads; `ts`/`dur` are microseconds on the
+    /// report's timeline clock. Spans lacking that clock are omitted from
+    /// the timeline (they remain in [`TraceReport::spans`]).
+    pub fn chrome_trace(&self) -> Json {
+        let virt = self.has_virtual();
+        let mut events = Vec::new();
+        let mut lanes_seen: BTreeMap<(u32, u32), &'static str> = BTreeMap::new();
+        for s in &self.spans {
+            let (t0, t1) = if virt {
+                if !s.has_virtual() {
+                    continue;
+                }
+                (s.virt0, s.virt1)
+            } else {
+                if !s.has_wall() {
+                    continue;
+                }
+                (s.wall0, s.wall1)
+            };
+            lanes_seen.insert((s.rank, s.lane.tid()), s.lane.name());
+            let mut ev = BTreeMap::new();
+            let name = match &s.label {
+                Some(l) => format!("{} {}", s.kind.name(), l),
+                None => s.kind.name().to_string(),
+            };
+            ev.insert("name".to_string(), Json::Str(name));
+            ev.insert("cat".to_string(), Json::Str(s.kind.name().to_string()));
+            ev.insert("ph".to_string(), Json::Str("X".to_string()));
+            ev.insert("pid".to_string(), Json::Num(s.rank as f64));
+            ev.insert("tid".to_string(), Json::Num(s.lane.tid() as f64));
+            ev.insert("ts".to_string(), Json::Num(t0 * 1e6));
+            ev.insert("dur".to_string(), Json::Num((t1 - t0).max(0.0) * 1e6));
+            let mut args = BTreeMap::new();
+            args.insert("step".to_string(), Json::Num(s.step as f64));
+            if s.bytes > 0 {
+                args.insert("bytes".to_string(), Json::Num(s.bytes as f64));
+            }
+            ev.insert("args".to_string(), Json::Obj(args));
+            events.push(Json::Obj(ev));
+        }
+        // metadata events: name each rank's process and each lane's thread
+        for rank in 0..self.ranks as u32 {
+            events.push(meta_event("process_name", rank, None, &format!("rank {rank}")));
+        }
+        for ((rank, tid), name) in lanes_seen {
+            events.push(meta_event("thread_name", rank, Some(tid), name));
+        }
+        let mut top = BTreeMap::new();
+        top.insert("traceEvents".to_string(), Json::Arr(events));
+        top.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+        Json::Obj(top)
+    }
+
+    /// The full `TRACE_<name>.json` payload: Chrome `traceEvents` plus the
+    /// dual-clock span list, per-step windows, and the metrics snapshot.
+    pub fn to_json(&self) -> Json {
+        let Json::Obj(mut top) = self.chrome_trace() else { unreachable!() };
+        top.insert("schema_version".to_string(), Json::Num(TRACE_SCHEMA_VERSION as f64));
+        top.insert("name".to_string(), Json::Str(self.name.clone()));
+        top.insert("level".to_string(), Json::Str(self.level.name().to_string()));
+        top.insert("ranks".to_string(), Json::Num(self.ranks as f64));
+        top.insert("clock".to_string(), Json::Str(
+            if self.has_virtual() { "virtual" } else { "wall" }.to_string(),
+        ));
+        for (k, v) in &self.meta {
+            top.insert(k.clone(), v.clone());
+        }
+        let steps = self
+            .steps
+            .iter()
+            .map(|w| {
+                let mut m = BTreeMap::new();
+                m.insert("step".to_string(), Json::Num(w.step as f64));
+                m.insert("measured_s".to_string(), Json::Num(w.measured_s));
+                m.insert("idle_mean_s".to_string(), finite_or_null(w.idle_mean_s));
+                m.insert("virt0".to_string(), finite_or_null(w.virt0));
+                m.insert("virt1".to_string(), finite_or_null(w.virt1));
+                Json::Obj(m)
+            })
+            .collect();
+        top.insert("steps".to_string(), Json::Arr(steps));
+        top.insert("spans".to_string(), Json::Arr(self.spans.iter().map(Span::to_json).collect()));
+        top.insert("registry".to_string(), self.registry.clone());
+        Json::Obj(top)
+    }
+
+    /// Write `TRACE_<name>.json` at the repo root (next to the
+    /// `BENCH_*.json` trajectory artifacts) and return the path.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("."));
+        let path = root.join(format!("TRACE_{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_string())?;
+        Ok(path)
+    }
+
+    /// Critical-path fraction of `measured_s` explained by the traced
+    /// decomposition of the slowest rank in `step`. `None` without
+    /// virtual-clock data or a matching step window.
+    pub fn reconciliation(&self, step: u32) -> Option<f64> {
+        let w = self.steps.iter().find(|w| w.step == step)?;
+        if !w.measured_s.is_finite() || w.measured_s <= 0.0 {
+            return None;
+        }
+        let (_, att) = self.slowest_rank(step)?;
+        Some(att / w.measured_s)
+    }
+
+    /// The rank with the largest attributed virtual time in `step` — the
+    /// critical-path rank — and its attribution.
+    fn slowest_rank(&self, step: u32) -> Option<(u32, f64)> {
+        let in_step: Vec<Span> =
+            self.spans.iter().filter(|s| s.step == step).cloned().collect();
+        if !in_step.iter().any(|s| s.has_virtual()) {
+            return None;
+        }
+        // the critical-path rank is the one that is least idle: largest
+        // compute + recv_wait (barrier excluded — the slowest rank's
+        // barrier is ~0 while early finishers park in theirs)
+        let busy = |rank: u32| -> f64 {
+            in_step
+                .iter()
+                .filter(|s| {
+                    s.rank == rank
+                        && s.lane == Lane::Cpu
+                        && s.has_virtual()
+                        && matches!(s.kind, SpanKind::Compute | SpanKind::RecvWait)
+                })
+                .map(|s| s.virt_dur())
+                .sum()
+        };
+        let slowest =
+            (0..self.ranks as u32).max_by(|a, b| busy(*a).partial_cmp(&busy(*b)).unwrap())?;
+        Some((slowest, attributed_s(&in_step, slowest)))
+    }
+
+    /// Terminal per-step critical-path breakdown (`--trace-summary`).
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "trace '{}': {} rank(s), level {}, {} span(s), clock {}",
+            self.name,
+            self.ranks,
+            self.level.name(),
+            self.spans.len(),
+            if self.has_virtual() { "virtual" } else { "wall" },
+        );
+        for w in &self.steps {
+            let in_step: Vec<&Span> =
+                self.spans.iter().filter(|s| s.step == w.step).collect();
+            match self.slowest_rank(w.step) {
+                Some((rank, att)) => {
+                    let sum_kind = |k: SpanKind| -> f64 {
+                        in_step
+                            .iter()
+                            .filter(|s| s.rank == rank && s.has_virtual() && s.kind == k)
+                            .map(|s| s.virt_dur())
+                            .sum()
+                    };
+                    let compute = sum_kind(SpanKind::Compute);
+                    let wait = sum_kind(SpanKind::RecvWait);
+                    let barrier = sum_kind(SpanKind::Barrier);
+                    let cov = if w.measured_s > 0.0 { att / w.measured_s } else { f64::NAN };
+                    let pct = |x: f64| {
+                        if w.measured_s > 0.0 { 100.0 * x / w.measured_s } else { f64::NAN }
+                    };
+                    let _ = writeln!(
+                        out,
+                        "step {:>3}  measured {}  slowest rank {}: compute {} ({:.1}%) | \
+                         recv_wait {} ({:.1}%) | barrier {} | coverage {:.1}%",
+                        w.step,
+                        fmt_s(w.measured_s),
+                        rank,
+                        fmt_s(compute),
+                        pct(compute),
+                        fmt_s(wait),
+                        pct(wait),
+                        fmt_s(barrier),
+                        100.0 * cov,
+                    );
+                    // top detail spans on the critical rank's path
+                    let mut detail: Vec<&&Span> = in_step
+                        .iter()
+                        .filter(|s| {
+                            s.rank == rank
+                                && s.has_virtual()
+                                && matches!(
+                                    s.kind,
+                                    SpanKind::RecvWait | SpanKind::Round | SpanKind::Bucket
+                                )
+                        })
+                        .collect();
+                    detail.sort_by(|a, b| b.virt_dur().partial_cmp(&a.virt_dur()).unwrap());
+                    if !detail.is_empty() {
+                        let tops: Vec<String> = detail
+                            .iter()
+                            .take(3)
+                            .map(|s| match &s.label {
+                                Some(l) => format!("{}[{}] {}", s.kind.name(), l, fmt_s(s.virt_dur())),
+                                None => format!("{} {}", s.kind.name(), fmt_s(s.virt_dur())),
+                            })
+                            .collect();
+                        let _ = writeln!(out, "          top: {}", tops.join("; "));
+                    }
+                }
+                None => {
+                    // wall-only run: per-kind totals across ranks (worker
+                    // threads overlap in wall time, so no coverage claim)
+                    let mut by_kind: BTreeMap<&'static str, f64> = BTreeMap::new();
+                    for s in &in_step {
+                        if s.has_wall() {
+                            *by_kind.entry(s.kind.name()).or_default() += s.wall_dur();
+                        }
+                    }
+                    let mut parts: Vec<String> = by_kind
+                        .into_iter()
+                        .map(|(k, v)| format!("{k} {}", fmt_s(v)))
+                        .collect();
+                    parts.sort();
+                    let _ = writeln!(
+                        out,
+                        "step {:>3}  measured {} (wall)  totals: {}",
+                        w.step,
+                        fmt_s(w.measured_s),
+                        parts.join(" | "),
+                    );
+                }
+            }
+        }
+        out
+    }
+}
+
+fn meta_event(name: &str, pid: u32, tid: Option<u32>, value: &str) -> Json {
+    let mut ev = BTreeMap::new();
+    ev.insert("name".to_string(), Json::Str(name.to_string()));
+    ev.insert("ph".to_string(), Json::Str("M".to_string()));
+    ev.insert("pid".to_string(), Json::Num(pid as f64));
+    if let Some(t) = tid {
+        ev.insert("tid".to_string(), Json::Num(t as f64));
+    }
+    let mut args = BTreeMap::new();
+    args.insert("name".to_string(), Json::Str(value.to_string()));
+    ev.insert("args".to_string(), Json::Obj(args));
+    Json::Obj(ev)
+}
+
+fn finite_or_null(x: f64) -> Json {
+    if x.is_finite() { Json::Num(x) } else { Json::Null }
+}
+
+fn fmt_s(s: f64) -> String {
+    crate::util::benchkit::fmt_duration(s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{Tracer, TraceLevel};
+
+    fn vspan(kind: SpanKind, rank: u32, v0: f64, v1: f64) -> Span {
+        Span {
+            kind,
+            lane: Lane::Cpu,
+            rank,
+            step: 0,
+            depth: 0,
+            bytes: 0,
+            label: None,
+            wall0: f64::NAN,
+            wall1: f64::NAN,
+            virt0: v0,
+            virt1: v1,
+        }
+    }
+
+    fn report(spans: Vec<Span>, steps: Vec<StepWindow>) -> TraceReport {
+        TraceReport {
+            name: "unit".to_string(),
+            level: TraceLevel::Full,
+            ranks: 2,
+            meta: BTreeMap::new(),
+            steps,
+            spans,
+            registry: Tracer::new(TraceLevel::Full, 2).registry().snapshot(),
+        }
+    }
+
+    #[test]
+    fn reconciliation_explains_measured_time() {
+        // rank 0: compute 1.0 + wait 3.0 (slowest); rank 1: compute 1.0,
+        // barrier 3.0. measured step = 4.0.
+        let spans = vec![
+            vspan(SpanKind::Compute, 0, 0.0, 1.0),
+            vspan(SpanKind::RecvWait, 0, 1.0, 4.0),
+            vspan(SpanKind::Compute, 1, 0.0, 1.0),
+            vspan(SpanKind::Barrier, 1, 1.0, 4.0),
+        ];
+        let w = StepWindow { step: 0, measured_s: 4.0, idle_mean_s: 1.5, virt0: 0.0, virt1: 4.0 };
+        let r = report(spans, vec![w]);
+        let cov = r.reconciliation(0).unwrap();
+        assert!((cov - 1.0).abs() < 1e-9, "coverage {cov}");
+        let text = r.summary();
+        assert!(text.contains("slowest rank 0"), "{text}");
+        assert!(text.contains("coverage 100.0%"), "{text}");
+    }
+
+    #[test]
+    fn chrome_trace_roundtrips_and_separates_lanes() {
+        let mut port = vspan(SpanKind::Send, 0, 0.5, 1.5);
+        port.lane = Lane::EgressIntra;
+        port.bytes = 4096;
+        port.wall0 = 0.01;
+        port.wall1 = 0.01;
+        let spans = vec![vspan(SpanKind::Compute, 0, 0.0, 1.0), port];
+        let r = report(spans, vec![]);
+        let j = r.to_json();
+        // round-trips through the repo's own JSON parser
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("schema_version").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.get("clock").unwrap().as_str(), Some("virtual"));
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        let xs: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").unwrap().as_str() == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 2);
+        let send = xs.iter().find(|e| e.get("cat").unwrap().as_str() == Some("send")).unwrap();
+        assert_eq!(send.get("tid").unwrap().as_usize(), Some(Lane::EgressIntra.tid() as usize));
+        assert_eq!(send.get("ts").unwrap().as_f64(), Some(0.5e6));
+        assert_eq!(send.get("dur").unwrap().as_f64(), Some(1e6));
+        // process/thread metadata present for Perfetto
+        assert!(events.iter().any(|e| e.get("name").unwrap().as_str() == Some("process_name")));
+        assert!(events.iter().any(|e| e.get("name").unwrap().as_str() == Some("thread_name")));
+    }
+
+    #[test]
+    fn wall_only_report_uses_wall_clock() {
+        let mut s = vspan(SpanKind::Compute, 0, f64::NAN, f64::NAN);
+        s.wall0 = 0.0;
+        s.wall1 = 0.25;
+        let w = StepWindow {
+            step: 0,
+            measured_s: 0.25,
+            idle_mean_s: f64::NAN,
+            virt0: f64::NAN,
+            virt1: f64::NAN,
+        };
+        let r = report(vec![s], vec![w]);
+        assert!(!r.has_virtual());
+        assert!(r.reconciliation(0).is_none());
+        let j = r.to_json();
+        assert_eq!(j.get("clock").unwrap().as_str(), Some("wall"));
+        let text = r.summary();
+        assert!(text.contains("(wall)"), "{text}");
+    }
+}

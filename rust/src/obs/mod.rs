@@ -1,0 +1,553 @@
+//! Structured tracing + metrics: attribute every virtual second of a step.
+//!
+//! Per-step aggregates (`measured_step_s`, `rank_idle_s`) say *that* a
+//! configuration is slow; this module says *where* — per rank, per bucket,
+//! per schedule round, on both the wall clock and the vfabric virtual
+//! clock. It is the instrument the chunked-streaming and fleet-scale
+//! roadmap items are validated with.
+//!
+//! # Architecture
+//!
+//! - A process-wide [`Tracer`] (one per trainer/bench run) owns the trace
+//!   level, the epoch, the merged span sink, and the [`MetricsRegistry`].
+//! - Each rank thread calls [`Tracer::install`] once; instrumented code
+//!   then uses the free functions ([`span`], [`port_span`], [`vclock`],
+//!   [`count`], [`observe`]) which write to a **thread-local collector** —
+//!   the hot path takes no locks and allocates only for labels. Buffers
+//!   are merged into the sink at [`flush`] (end of step) or on guard drop.
+//! - The trainer drains the sink per step ([`Tracer::drain`]), stamping
+//!   the step id, and assembles a [`TraceReport`] with exporters: Chrome
+//!   `trace_event` JSON (one process per rank, one thread per [`Lane`] —
+//!   open `TRACE_<name>.json` in Perfetto), a terminal critical-path
+//!   summary, and the `TRACE_<name>.json` artifact itself.
+//!
+//! # Overhead contract
+//!
+//! With tracing off (the default), every entry point reduces to one
+//! thread-local byte read and a branch — no allocation, no clock read, no
+//! atomics. `benches/codec_micro.rs` asserts this stays under 100 ns per
+//! call. Label closures ([`SpanGuard::label_with`]) only run when the span
+//! is live.
+
+pub mod export;
+pub mod registry;
+pub mod span;
+
+pub use export::{StepWindow, TraceReport};
+pub use registry::{Counter, Histogram, MetricsRegistry};
+pub use span::{check_nesting, Lane, Span, SpanKind};
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// How much to record, per `--trace off|step|full`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum TraceLevel {
+    /// No-op: the hot path reduces to a thread-local read + branch.
+    #[default]
+    Off = 0,
+    /// Step anatomy only: compute / exchange / barrier per rank.
+    Step = 1,
+    /// Everything: codec, wire, merge, rounds, port occupancy, waits.
+    Full = 2,
+}
+
+impl TraceLevel {
+    pub fn parse(s: &str) -> anyhow::Result<TraceLevel> {
+        match s {
+            "off" => Ok(TraceLevel::Off),
+            "step" => Ok(TraceLevel::Step),
+            "full" => Ok(TraceLevel::Full),
+            other => anyhow::bail!("unknown trace level '{other}' (expected off|step|full)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TraceLevel::Off => "off",
+            TraceLevel::Step => "step",
+            TraceLevel::Full => "full",
+        }
+    }
+}
+
+/// Process-wide trace collector for one run.
+pub struct Tracer {
+    level: TraceLevel,
+    ranks: usize,
+    epoch: Instant,
+    sink: Mutex<Vec<Span>>,
+    registry: MetricsRegistry,
+}
+
+impl Tracer {
+    pub fn new(level: TraceLevel, ranks: usize) -> Arc<Tracer> {
+        Arc::new(Tracer {
+            level,
+            ranks,
+            epoch: Instant::now(),
+            sink: Mutex::new(Vec::new()),
+            registry: MetricsRegistry::new(),
+        })
+    }
+
+    pub fn level(&self) -> TraceLevel {
+        self.level
+    }
+
+    pub fn ranks(&self) -> usize {
+        self.ranks
+    }
+
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.registry
+    }
+
+    /// Wall seconds since the tracer epoch.
+    pub fn now(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Push one span straight into the sink (cold path — used by the
+    /// trainer to synthesise spans it computes after the fact, e.g. the
+    /// end-of-step barrier gap per rank).
+    pub fn record(&self, s: Span) {
+        if self.level != TraceLevel::Off {
+            self.sink.lock().unwrap().push(s);
+        }
+    }
+
+    fn record_all(&self, spans: &mut Vec<Span>) {
+        if spans.is_empty() {
+            return;
+        }
+        self.sink.lock().unwrap().append(spans);
+    }
+
+    /// Take everything flushed so far, stamp it with `step`, and return it
+    /// ordered by (rank, lane, start time). Called once per step by the
+    /// trainer, or once at the end of a bench run.
+    pub fn drain(&self, step: u32) -> Vec<Span> {
+        let mut spans = std::mem::take(&mut *self.sink.lock().unwrap());
+        for s in &mut spans {
+            s.step = step;
+        }
+        spans.sort_by(|a, b| {
+            (a.rank, a.lane)
+                .cmp(&(b.rank, b.lane))
+                .then_with(|| sort_key(a).partial_cmp(&sort_key(b)).unwrap())
+        });
+        spans
+    }
+
+    /// Bind this thread to `rank`: spans recorded on this thread go to the
+    /// rank's lanes. Returns a guard that flushes and restores the
+    /// previous binding on drop (bindings nest — the coordinator installs
+    /// per-worker around encode sections).
+    pub fn install(self: &Arc<Self>, rank: usize) -> InstallGuard {
+        let prev = if self.level == TraceLevel::Off {
+            TLS.with(|t| t.borrow_mut().take())
+        } else {
+            let c = Collector {
+                tracer: self.clone(),
+                rank: rank as u32,
+                depth: 0,
+                vnow: f64::NAN,
+                buf: Vec::with_capacity(64),
+                counters: HashMap::new(),
+                hists: HashMap::new(),
+            };
+            TLS.with(|t| t.borrow_mut().replace(c))
+        };
+        let prev_level = LEVEL.with(|l| l.replace(self.level as u8));
+        InstallGuard { prev, prev_level }
+    }
+}
+
+fn sort_key(s: &Span) -> f64 {
+    if s.wall0.is_finite() { s.wall0 } else { s.virt0 }
+}
+
+struct Collector {
+    tracer: Arc<Tracer>,
+    rank: u32,
+    depth: u16,
+    /// Latest virtual-clock stamp seen on this thread (NaN before the
+    /// fabric first publishes one).
+    vnow: f64,
+    buf: Vec<Span>,
+    // per-thread handle caches so count()/observe() stay lock-free after
+    // the first touch of each name
+    counters: HashMap<&'static str, Counter>,
+    hists: HashMap<&'static str, Histogram>,
+}
+
+impl Collector {
+    fn now(&self) -> f64 {
+        self.tracer.now()
+    }
+}
+
+thread_local! {
+    // fast-path gate: 0 = off, 1 = step, 2 = full
+    static LEVEL: Cell<u8> = const { Cell::new(0) };
+    static TLS: RefCell<Option<Collector>> = const { RefCell::new(None) };
+}
+
+/// Restores the previous thread binding (and flushes) on drop.
+pub struct InstallGuard {
+    prev: Option<Collector>,
+    prev_level: u8,
+}
+
+impl Drop for InstallGuard {
+    fn drop(&mut self) {
+        flush();
+        TLS.with(|t| *t.borrow_mut() = self.prev.take());
+        LEVEL.with(|l| l.set(self.prev_level));
+    }
+}
+
+#[inline]
+fn lvl() -> u8 {
+    LEVEL.with(|l| l.get())
+}
+
+#[inline]
+fn enabled(kind: SpanKind) -> bool {
+    let l = lvl();
+    l == 2 || (l == 1 && kind.step_level())
+}
+
+/// RAII span: opened by [`span`], recorded into the thread buffer on drop.
+/// When tracing is off (or the kind is below the level) the guard is dead
+/// and every method is a branch on a bool.
+pub struct SpanGuard {
+    live: bool,
+    kind: SpanKind,
+    lane: Lane,
+    bytes: u64,
+    label: Option<Box<str>>,
+    wall0: f64,
+    virt0: f64,
+}
+
+impl SpanGuard {
+    /// True when the span is being recorded (use to skip expensive
+    /// bookkeeping that only feeds the trace).
+    pub fn live(&self) -> bool {
+        self.live
+    }
+
+    /// Attach payload bytes.
+    pub fn set_bytes(&mut self, n: u64) {
+        if self.live {
+            self.bytes = n;
+        }
+    }
+
+    /// Attach a label; the closure only runs when the span is live.
+    pub fn label_with<F: FnOnce() -> String>(&mut self, f: F) {
+        if self.live {
+            self.label = Some(f().into_boxed_str());
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        if !self.live {
+            return;
+        }
+        TLS.with(|t| {
+            let mut b = t.borrow_mut();
+            if let Some(c) = b.as_mut() {
+                c.depth = c.depth.saturating_sub(1);
+                let s = Span {
+                    kind: self.kind,
+                    lane: self.lane,
+                    rank: c.rank,
+                    step: 0,
+                    depth: c.depth,
+                    bytes: self.bytes,
+                    label: self.label.take(),
+                    wall0: self.wall0,
+                    wall1: c.now(),
+                    virt0: self.virt0,
+                    virt1: c.vnow,
+                };
+                c.buf.push(s);
+            }
+        });
+    }
+}
+
+/// Open a span on the current rank's cpu lane. Stamped with the wall clock
+/// now and the virtual clock as of the latest [`vclock`] update; closed
+/// (and buffered) when the guard drops.
+#[inline]
+pub fn span(kind: SpanKind) -> SpanGuard {
+    span_on(kind, Lane::Cpu)
+}
+
+/// Open a span on an explicit lane of the current rank. Used by code that
+/// runs concurrently with the rank's main timeline by design (the
+/// double-buffered pipeline encoder records on [`Lane::Encoder`] so its
+/// spans never violate the cpu lane's nesting invariant).
+#[inline]
+pub fn span_on(kind: SpanKind, lane: Lane) -> SpanGuard {
+    if !enabled(kind) {
+        return SpanGuard {
+            live: false,
+            kind,
+            lane,
+            bytes: 0,
+            label: None,
+            wall0: f64::NAN,
+            virt0: f64::NAN,
+        };
+    }
+    TLS.with(|t| {
+        let mut b = t.borrow_mut();
+        let c = b.as_mut().expect("obs: trace level set without a collector");
+        c.depth += 1;
+        SpanGuard {
+            live: true,
+            kind,
+            lane,
+            bytes: 0,
+            label: None,
+            wall0: c.now(),
+            virt0: c.vnow,
+        }
+    })
+}
+
+/// Record a span with an explicit **virtual** extent on a port lane. The
+/// virtual fabric books port occupancy into the future (sends are
+/// non-blocking), so there is no RAII window to measure; wall stamps
+/// record when the booking happened (a point).
+pub fn port_span(kind: SpanKind, lane: Lane, v0: f64, v1: f64, bytes: u64) {
+    if !enabled(kind) {
+        return;
+    }
+    TLS.with(|t| {
+        let mut b = t.borrow_mut();
+        if let Some(c) = b.as_mut() {
+            let w = c.now();
+            c.buf.push(Span {
+                kind,
+                lane,
+                rank: c.rank,
+                step: 0,
+                depth: 0,
+                bytes,
+                label: None,
+                wall0: w,
+                wall1: w,
+                virt0: v0,
+                virt1: v1,
+            });
+        }
+    });
+}
+
+/// Publish the rank's virtual clock to the tracing layer (monotonic max).
+/// The virtual fabric calls this whenever its per-rank clock advances, so
+/// spans opened afterwards carry virtual stamps.
+#[inline]
+pub fn vclock(t: f64) {
+    if lvl() == 0 {
+        return;
+    }
+    TLS.with(|tl| {
+        if let Some(c) = tl.borrow_mut().as_mut() {
+            // NaN-aware max: the first stamp always lands
+            if !(t <= c.vnow) {
+                c.vnow = t;
+            }
+        }
+    });
+}
+
+/// Bump a named registry counter. Handle resolution is cached per thread;
+/// steady state is one relaxed atomic add.
+#[inline]
+pub fn count(name: &'static str, n: u64) {
+    if lvl() == 0 {
+        return;
+    }
+    TLS.with(|t| {
+        let mut b = t.borrow_mut();
+        if let Some(c) = b.as_mut() {
+            let reg = &c.tracer.registry;
+            c.counters.entry(name).or_insert_with(|| reg.counter(name)).add(n);
+        }
+    });
+}
+
+/// Record a value into a named registry histogram.
+#[inline]
+pub fn observe(name: &'static str, v: f64) {
+    if lvl() == 0 {
+        return;
+    }
+    TLS.with(|t| {
+        let mut b = t.borrow_mut();
+        if let Some(c) = b.as_mut() {
+            let reg = &c.tracer.registry;
+            c.hists.entry(name).or_insert_with(|| reg.histogram(name)).observe(v);
+        }
+    });
+}
+
+/// Merge this thread's span buffer into the tracer sink. Cold path —
+/// called once per step by the rank loop (and by guard drops).
+pub fn flush() {
+    TLS.with(|t| {
+        let mut b = t.borrow_mut();
+        if let Some(c) = b.as_mut() {
+            let mut buf = std::mem::take(&mut c.buf);
+            c.tracer.record_all(&mut buf);
+        }
+    });
+}
+
+/// The current thread's tracer binding, for handing to a helper thread
+/// (e.g. the pipeline's overlapped encoder): the helper re-installs it
+/// with [`Tracer::install`] so its spans land on the same rank.
+pub fn scope() -> Option<(Arc<Tracer>, usize)> {
+    if lvl() == 0 {
+        return None;
+    }
+    TLS.with(|t| t.borrow().as_ref().map(|c| (c.tracer.clone(), c.rank as usize)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_level_records_nothing() {
+        let tracer = Tracer::new(TraceLevel::Off, 1);
+        {
+            let _g = tracer.install(0);
+            let mut s = span(SpanKind::Compute);
+            assert!(!s.live());
+            s.label_with(|| panic!("label closure must not run when dead"));
+            count("x", 1);
+            observe("y", 1.0);
+            vclock(5.0);
+        }
+        assert!(tracer.drain(0).is_empty());
+        assert_eq!(tracer.registry().counter("x").get(), 0);
+    }
+
+    #[test]
+    fn step_level_filters_detail_kinds() {
+        let tracer = Tracer::new(TraceLevel::Step, 1);
+        {
+            let _g = tracer.install(0);
+            drop(span(SpanKind::Compute)); // step-level: recorded
+            drop(span(SpanKind::Pack)); // full-level: dropped
+            flush();
+        }
+        let spans = tracer.drain(0);
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].kind, SpanKind::Compute);
+    }
+
+    #[test]
+    fn spans_nest_and_stamp_both_clocks() {
+        let tracer = Tracer::new(TraceLevel::Full, 2);
+        {
+            let _g = tracer.install(1);
+            vclock(10.0);
+            {
+                let mut outer = span(SpanKind::Exchange);
+                outer.label_with(|| "outer".to_string());
+                {
+                    let mut inner = span(SpanKind::Pack);
+                    inner.set_bytes(128);
+                    vclock(12.5);
+                }
+            }
+            flush();
+        }
+        let spans = tracer.drain(3);
+        assert_eq!(spans.len(), 2);
+        // children buffer before parents; drain orders by start time
+        let outer = spans.iter().find(|s| s.kind == SpanKind::Exchange).unwrap();
+        let inner = spans.iter().find(|s| s.kind == SpanKind::Pack).unwrap();
+        assert_eq!(outer.depth, 0);
+        assert_eq!(inner.depth, 1);
+        assert_eq!(outer.rank, 1);
+        assert_eq!(outer.step, 3);
+        assert_eq!(inner.bytes, 128);
+        assert_eq!(outer.label.as_deref(), Some("outer"));
+        assert!((outer.virt0 - 10.0).abs() < 1e-12);
+        assert!((outer.virt1 - 12.5).abs() < 1e-12);
+        assert!(outer.has_wall());
+        assert!(outer.wall_dur() >= inner.wall_dur());
+        check_nesting(&spans).unwrap();
+    }
+
+    #[test]
+    fn install_nests_and_restores() {
+        let tracer = Tracer::new(TraceLevel::Full, 2);
+        let _outer = tracer.install(0);
+        {
+            let _inner = tracer.install(1);
+            drop(span(SpanKind::Encode));
+        }
+        // back on rank 0
+        drop(span(SpanKind::Sparsify));
+        flush();
+        let spans = tracer.drain(0);
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans.iter().find(|s| s.kind == SpanKind::Encode).unwrap().rank, 1);
+        assert_eq!(spans.iter().find(|s| s.kind == SpanKind::Sparsify).unwrap().rank, 0);
+    }
+
+    #[test]
+    fn registry_counts_via_tls_cache() {
+        let tracer = Tracer::new(TraceLevel::Full, 1);
+        {
+            let _g = tracer.install(0);
+            count("wire.bytes", 100);
+            count("wire.bytes", 50);
+            observe("merge.nnz", 32.0);
+        }
+        assert_eq!(tracer.registry().counter("wire.bytes").get(), 150);
+        assert_eq!(tracer.registry().histogram("merge.nnz").count(), 1);
+    }
+
+    #[test]
+    fn port_span_lands_on_port_lane() {
+        let tracer = Tracer::new(TraceLevel::Full, 1);
+        {
+            let _g = tracer.install(0);
+            port_span(SpanKind::Send, Lane::egress(1), 2.0, 3.5, 4096);
+            flush();
+        }
+        let spans = tracer.drain(0);
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].lane, Lane::EgressInter);
+        assert!((spans[0].virt_dur() - 1.5).abs() < 1e-12);
+        assert_eq!(spans[0].bytes, 4096);
+        // wall extent is a point (the booking instant)
+        assert_eq!(spans[0].wall0, spans[0].wall1);
+    }
+
+    #[test]
+    fn trace_level_parse() {
+        assert_eq!(TraceLevel::parse("off").unwrap(), TraceLevel::Off);
+        assert_eq!(TraceLevel::parse("step").unwrap(), TraceLevel::Step);
+        assert_eq!(TraceLevel::parse("full").unwrap(), TraceLevel::Full);
+        assert!(TraceLevel::parse("verbose").is_err());
+        assert_eq!(TraceLevel::Full.name(), "full");
+    }
+}

@@ -1,0 +1,237 @@
+//! Metrics registry: named counters and log2-binned histograms.
+//!
+//! The registry is the durable, queryable side of the obs subsystem: spans
+//! answer "where did the time go", the registry answers "how much of what
+//! happened" (bytes per link class, codec invocations, merge output
+//! sizes, egress backlog). Handles are `Arc`-backed atomics, so the
+//! instrumented hot path pays one relaxed atomic op per event; the name →
+//! handle map is only locked when a handle is first resolved (the
+//! thread-local collector in [`crate::obs`] caches handles per thread).
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonic counter handle. Cloning shares the underlying cell.
+#[derive(Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+const BINS: usize = 66;
+/// Bin 0 holds `v <= 0`; bin i (1..=65) holds `2^(i-34) <= v < 2^(i-33)`,
+/// covering ~1e-10 (sub-ns waits) through ~4e9 (multi-GB byte sizes).
+const BIN_OFFSET: i32 = 33;
+
+struct HistInner {
+    count: AtomicU64,
+    /// f64 bits, CAS-accumulated.
+    sum_bits: AtomicU64,
+    /// f64 bits of the max observed value.
+    max_bits: AtomicU64,
+    bins: [AtomicU64; BINS],
+}
+
+/// Lock-free histogram handle with power-of-two bins.
+#[derive(Clone)]
+pub struct Histogram(Arc<HistInner>);
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram(Arc::new(HistInner {
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+            max_bits: AtomicU64::new(f64::NEG_INFINITY.to_bits()),
+            bins: std::array::from_fn(|_| AtomicU64::new(0)),
+        }))
+    }
+}
+
+impl Histogram {
+    fn bin(v: f64) -> usize {
+        if v <= 0.0 || !v.is_finite() {
+            0
+        } else {
+            (v.log2().floor() as i32 + BIN_OFFSET + 1).clamp(1, BINS as i32 - 1) as usize
+        }
+    }
+
+    /// Upper edge of bin `i` (inclusive-exclusive binning).
+    fn bin_edge(i: usize) -> f64 {
+        if i == 0 { 0.0 } else { 2f64.powi(i as i32 - BIN_OFFSET) }
+    }
+
+    pub fn observe(&self, v: f64) {
+        let h = &*self.0;
+        h.count.fetch_add(1, Ordering::Relaxed);
+        h.bins[Self::bin(v)].fetch_add(1, Ordering::Relaxed);
+        // CAS loops: contention here is per-thread-rare (one event per
+        // encode/merge/send), not per-element.
+        let _ = h.sum_bits.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+            Some((f64::from_bits(bits) + v).to_bits())
+        });
+        let _ = h.max_bits.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+            if v > f64::from_bits(bits) { Some(v.to_bits()) } else { None }
+        });
+    }
+
+    pub fn count(&self) -> u64 {
+        self.0.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.0.sum_bits.load(Ordering::Relaxed))
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 { f64::NAN } else { self.sum() / n as f64 }
+    }
+
+    pub fn max(&self) -> f64 {
+        let m = f64::from_bits(self.0.max_bits.load(Ordering::Relaxed));
+        if self.count() == 0 { f64::NAN } else { m }
+    }
+
+    /// Approximate quantile: the upper edge of the bin where the
+    /// cumulative count crosses `q` (within 2x of the true value).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * n as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for i in 0..BINS {
+            acc += self.0.bins[i].load(Ordering::Relaxed);
+            if acc >= target {
+                return Self::bin_edge(i);
+            }
+        }
+        self.max()
+    }
+}
+
+/// Name → handle registry shared by all ranks of one trainer/bench run.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    counters: Mutex<BTreeMap<String, Counter>>,
+    hists: Mutex<BTreeMap<String, Histogram>>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Resolve (or create) a counter handle. Locks the map; callers on hot
+    /// paths should cache the handle.
+    pub fn counter(&self, name: &str) -> Counter {
+        self.counters.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    /// Resolve (or create) a histogram handle.
+    pub fn histogram(&self, name: &str) -> Histogram {
+        self.hists.lock().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    /// Snapshot every metric as JSON:
+    /// `{"counters": {name: n}, "histograms": {name: {count, sum, mean, max, p50}}}`.
+    pub fn snapshot(&self) -> Json {
+        let mut counters = BTreeMap::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            counters.insert(name.clone(), Json::Num(c.get() as f64));
+        }
+        let mut hists = BTreeMap::new();
+        for (name, h) in self.hists.lock().unwrap().iter() {
+            let mut m = BTreeMap::new();
+            m.insert("count".to_string(), Json::Num(h.count() as f64));
+            m.insert("sum".to_string(), Json::Num(h.sum()));
+            m.insert("mean".to_string(), finite_or_null(h.mean()));
+            m.insert("max".to_string(), finite_or_null(h.max()));
+            m.insert("p50".to_string(), finite_or_null(h.quantile(0.5)));
+            hists.insert(name.clone(), Json::Obj(m));
+        }
+        let mut top = BTreeMap::new();
+        top.insert("counters".to_string(), Json::Obj(counters));
+        top.insert("histograms".to_string(), Json::Obj(hists));
+        Json::Obj(top)
+    }
+}
+
+fn finite_or_null(x: f64) -> Json {
+    if x.is_finite() { Json::Num(x) } else { Json::Null }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates_and_shares() {
+        let r = MetricsRegistry::new();
+        let a = r.counter("bytes");
+        let b = r.counter("bytes");
+        a.add(3);
+        b.add(4);
+        assert_eq!(r.counter("bytes").get(), 7);
+        assert_eq!(r.counter("other").get(), 0);
+    }
+
+    #[test]
+    fn histogram_stats() {
+        let r = MetricsRegistry::new();
+        let h = r.histogram("merge.nnz");
+        for v in [1.0, 2.0, 4.0, 1024.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 1031.0).abs() < 1e-9);
+        assert!((h.max() - 1024.0).abs() < 1e-9);
+        // p50 lands in the bin containing 2.0 → upper edge 4.0
+        assert!(h.quantile(0.5) <= 4.0 + 1e-9);
+        assert!(h.quantile(1.0) >= 1024.0);
+    }
+
+    #[test]
+    fn histogram_handles_edge_values() {
+        let h = Histogram::default();
+        h.observe(0.0);
+        h.observe(-1.0);
+        h.observe(f64::NAN);
+        h.observe(1e-12); // below the smallest bin: clamps, doesn't panic
+        h.observe(1e300); // above the largest bin: clamps
+        assert_eq!(h.count(), 5);
+    }
+
+    #[test]
+    fn empty_histogram_is_nan_not_panic() {
+        let h = Histogram::default();
+        assert!(h.mean().is_nan());
+        assert!(h.max().is_nan());
+        assert!(h.quantile(0.5).is_nan());
+    }
+
+    #[test]
+    fn snapshot_shape() {
+        let r = MetricsRegistry::new();
+        r.counter("a").add(1);
+        r.histogram("b").observe(2.0);
+        let j = r.snapshot();
+        assert_eq!(j.get("counters").unwrap().get("a").unwrap().as_usize(), Some(1));
+        let b = j.get("histograms").unwrap().get("b").unwrap();
+        assert_eq!(b.get("count").unwrap().as_usize(), Some(1));
+        // round-trips through the repo's own parser
+        let s = j.to_string();
+        assert_eq!(Json::parse(&s).unwrap(), j);
+    }
+}

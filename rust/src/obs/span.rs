@@ -1,0 +1,314 @@
+//! Span model: what one traced interval looks like.
+//!
+//! A [`Span`] is a typed interval on one rank's timeline, stamped on **two
+//! clocks**: the wall clock (seconds since the tracer epoch, from
+//! `Instant`) and the vfabric virtual clock (seconds of modelled time).
+//! Either stamp may be absent (`NaN` internally, `null` in JSON): spans
+//! recorded on the coordinator thread have no virtual coordinate, and
+//! port-occupancy spans booked into the virtual future have no meaningful
+//! wall extent.
+//!
+//! Spans on one rank are split across [`Lane`]s so that each lane is a
+//! properly nested tree: the cpu lane carries the rank's execution
+//! (compute, encode, waits), while the egress/ingress lanes carry the
+//! fabric port busy intervals, which overlap the cpu timeline by design
+//! (sends are non-blocking). [`check_nesting`] verifies the tree property
+//! per `(rank, lane, clock)`.
+
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+
+/// What kind of work a span covers. `step_level` kinds are recorded at
+/// `--trace step` and above; the rest only at `--trace full`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SpanKind {
+    /// Replayed forward/backward compute (virtual `elapse`) or the
+    /// coordinator-side model step (wall).
+    Compute,
+    /// One rank's whole collective exchange for a step.
+    Exchange,
+    /// End-of-step synchronisation gap: the rank finished early and waits
+    /// for the slowest rank.
+    Barrier,
+    /// Gradient residual + top-k selection on the coordinator.
+    Sparsify,
+    /// One gradient bucket's allreduce inside an exchange.
+    Bucket,
+    /// One schedule round / phase (recursive-doubling stride, ring slot,
+    /// hierarchical hop) — labelled.
+    Round,
+    /// Codec-chain container encode (pipeline side).
+    Encode,
+    /// Wire segment pack (schedule side, via `SegmentCodec`).
+    Pack,
+    /// Wire segment decode.
+    Decode,
+    /// Sparse merge of a decoded peer contribution.
+    Merge,
+    /// Egress port occupancy for one message.
+    Send,
+    /// Ingress port occupancy for one message.
+    Recv,
+    /// Receiver blocked waiting for a message to be delivered.
+    RecvWait,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Compute => "compute",
+            SpanKind::Exchange => "exchange",
+            SpanKind::Barrier => "barrier",
+            SpanKind::Sparsify => "sparsify",
+            SpanKind::Bucket => "bucket",
+            SpanKind::Round => "round",
+            SpanKind::Encode => "encode",
+            SpanKind::Pack => "pack",
+            SpanKind::Decode => "decode",
+            SpanKind::Merge => "merge",
+            SpanKind::Send => "send",
+            SpanKind::Recv => "recv",
+            SpanKind::RecvWait => "recv_wait",
+        }
+    }
+
+    /// Recorded at `--trace step` (coarse step anatomy); everything else
+    /// needs `--trace full`.
+    pub fn step_level(self) -> bool {
+        matches!(self, SpanKind::Compute | SpanKind::Exchange | SpanKind::Barrier)
+    }
+}
+
+/// Which timeline of a rank a span lives on. Chrome-trace export maps the
+/// rank to a process and the lane to a thread, so overlapping port
+/// bookings never collide with the cpu tree.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Lane {
+    /// The rank's execution timeline (a nested span tree).
+    Cpu,
+    /// The rank's overlapped encoder thread (double-buffered pipeline):
+    /// runs concurrently with [`Lane::Cpu`] by design.
+    Encoder,
+    /// Intra-node egress port occupancy.
+    EgressIntra,
+    /// Inter-node egress port occupancy.
+    EgressInter,
+    /// Intra-node ingress port occupancy.
+    IngressIntra,
+    /// Inter-node ingress port occupancy.
+    IngressInter,
+}
+
+impl Lane {
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::Cpu => "cpu",
+            Lane::Encoder => "encoder",
+            Lane::EgressIntra => "egress.intra",
+            Lane::EgressInter => "egress.inter",
+            Lane::IngressIntra => "ingress.intra",
+            Lane::IngressInter => "ingress.inter",
+        }
+    }
+
+    /// Stable thread id for Chrome-trace export (0 sorts first).
+    pub fn tid(self) -> u32 {
+        match self {
+            Lane::Cpu => 0,
+            Lane::Encoder => 1,
+            Lane::EgressIntra => 2,
+            Lane::EgressInter => 3,
+            Lane::IngressIntra => 4,
+            Lane::IngressInter => 5,
+        }
+    }
+
+    /// Egress lane for a vfabric link class (0 = intra, 1 = inter).
+    pub fn egress(class: usize) -> Lane {
+        if class == 0 { Lane::EgressIntra } else { Lane::EgressInter }
+    }
+
+    /// Ingress lane for a vfabric link class.
+    pub fn ingress(class: usize) -> Lane {
+        if class == 0 { Lane::IngressIntra } else { Lane::IngressInter }
+    }
+}
+
+/// One traced interval. Times are `f64` seconds; `NaN` means "no stamp on
+/// this clock" and serialises as `null`.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub kind: SpanKind,
+    pub lane: Lane,
+    pub rank: u32,
+    /// Training step the span belongs to (stamped when the tracer drains).
+    pub step: u32,
+    /// Nesting depth within the lane (0 = top level).
+    pub depth: u16,
+    /// Payload bytes attributed to the span (0 when not applicable).
+    pub bytes: u64,
+    /// Free-form qualifier ("bucket 1", "stride 2", "hop intra_reduce").
+    pub label: Option<Box<str>>,
+    /// Wall clock, seconds since tracer epoch.
+    pub wall0: f64,
+    pub wall1: f64,
+    /// Virtual clock, seconds of modelled fabric time.
+    pub virt0: f64,
+    pub virt1: f64,
+}
+
+impl Span {
+    pub fn has_wall(&self) -> bool {
+        self.wall0.is_finite() && self.wall1.is_finite()
+    }
+
+    pub fn has_virtual(&self) -> bool {
+        self.virt0.is_finite() && self.virt1.is_finite()
+    }
+
+    pub fn wall_dur(&self) -> f64 {
+        self.wall1 - self.wall0
+    }
+
+    pub fn virt_dur(&self) -> f64 {
+        self.virt1 - self.virt0
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("kind".to_string(), Json::Str(self.kind.name().to_string()));
+        m.insert("lane".to_string(), Json::Str(self.lane.name().to_string()));
+        m.insert("rank".to_string(), Json::Num(self.rank as f64));
+        m.insert("step".to_string(), Json::Num(self.step as f64));
+        m.insert("depth".to_string(), Json::Num(self.depth as f64));
+        if self.bytes > 0 {
+            m.insert("bytes".to_string(), Json::Num(self.bytes as f64));
+        }
+        if let Some(l) = &self.label {
+            m.insert("label".to_string(), Json::Str(l.to_string()));
+        }
+        m.insert("wall0".to_string(), numf(self.wall0));
+        m.insert("wall1".to_string(), numf(self.wall1));
+        m.insert("virt0".to_string(), numf(self.virt0));
+        m.insert("virt1".to_string(), numf(self.virt1));
+        Json::Obj(m)
+    }
+}
+
+fn numf(x: f64) -> Json {
+    if x.is_finite() { Json::Num(x) } else { Json::Null }
+}
+
+/// Verify that spans form proper trees per `(rank, lane)`: siblings on one
+/// lane never partially overlap — any two spans are either disjoint or one
+/// contains the other. Checked independently on each clock a span carries.
+/// Returns the first violation as an error string.
+pub fn check_nesting(spans: &[Span]) -> Result<(), String> {
+    // (rank, lane, clock) -> intervals
+    let mut groups: BTreeMap<(u32, u32, u8), Vec<(f64, f64, SpanKind)>> = BTreeMap::new();
+    for s in spans {
+        if s.has_wall() {
+            groups.entry((s.rank, s.lane.tid(), 0)).or_default().push((
+                s.wall0, s.wall1, s.kind,
+            ));
+        }
+        if s.has_virtual() {
+            groups.entry((s.rank, s.lane.tid(), 1)).or_default().push((
+                s.virt0, s.virt1, s.kind,
+            ));
+        }
+    }
+    const EPS: f64 = 1e-12;
+    for ((rank, tid, clock), mut iv) in groups {
+        // sort by start asc, end desc: a containing span precedes its children
+        iv.sort_by(|a, b| {
+            a.0.partial_cmp(&b.0).unwrap().then(b.1.partial_cmp(&a.1).unwrap())
+        });
+        let mut stack: Vec<(f64, f64)> = Vec::new();
+        for (t0, t1, kind) in iv {
+            if t1 < t0 - EPS {
+                return Err(format!(
+                    "negative span {} on rank {rank} lane {tid}: [{t0}, {t1}]",
+                    kind.name()
+                ));
+            }
+            while let Some(&(_, top1)) = stack.last() {
+                if top1 <= t0 + EPS {
+                    stack.pop();
+                } else {
+                    break;
+                }
+            }
+            if let Some(&(top0, top1)) = stack.last() {
+                if t1 > top1 + EPS {
+                    let clk = if clock == 0 { "wall" } else { "virtual" };
+                    return Err(format!(
+                        "overlapping siblings on rank {rank} lane {tid} ({clk} clock): \
+                         {} [{t0}, {t1}] straddles enclosing [{top0}, {top1}]",
+                        kind.name()
+                    ));
+                }
+            }
+            stack.push((t0, t1));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sp(rank: u32, w0: f64, w1: f64) -> Span {
+        Span {
+            kind: SpanKind::Compute,
+            lane: Lane::Cpu,
+            rank,
+            step: 0,
+            depth: 0,
+            bytes: 0,
+            label: None,
+            wall0: w0,
+            wall1: w1,
+            virt0: f64::NAN,
+            virt1: f64::NAN,
+        }
+    }
+
+    #[test]
+    fn nesting_accepts_trees() {
+        // parent [0,10] with children [1,4], [4,9]; sibling [10,12]
+        let spans =
+            vec![sp(0, 0.0, 10.0), sp(0, 1.0, 4.0), sp(0, 4.0, 9.0), sp(0, 10.0, 12.0)];
+        assert!(check_nesting(&spans).is_ok());
+    }
+
+    #[test]
+    fn nesting_rejects_partial_overlap() {
+        let spans = vec![sp(0, 0.0, 5.0), sp(0, 3.0, 8.0)];
+        let err = check_nesting(&spans).unwrap_err();
+        assert!(err.contains("overlapping"), "{err}");
+    }
+
+    #[test]
+    fn nesting_is_per_rank_and_lane() {
+        // identical overlapping intervals on different ranks: fine
+        let spans = vec![sp(0, 0.0, 5.0), sp(1, 3.0, 8.0)];
+        assert!(check_nesting(&spans).is_ok());
+        // and on different lanes of one rank: fine
+        let mut a = sp(0, 0.0, 5.0);
+        let mut b = sp(0, 3.0, 8.0);
+        a.lane = Lane::Cpu;
+        b.lane = Lane::EgressIntra;
+        assert!(check_nesting(&[a, b]).is_ok());
+    }
+
+    #[test]
+    fn span_json_nulls_missing_clock() {
+        let s = sp(2, 0.5, 1.5);
+        let j = s.to_json();
+        assert_eq!(j.get("wall0").unwrap().as_f64(), Some(0.5));
+        assert_eq!(j.get("virt0"), Some(&Json::Null));
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("compute"));
+    }
+}

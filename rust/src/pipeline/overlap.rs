@@ -67,12 +67,25 @@ where
     if count == 0 {
         return;
     }
+    // hand the caller's tracer binding to the encoder thread so its
+    // encode spans land on the same rank's lane
+    let trace = crate::obs::scope();
     std::thread::scope(|scope| {
         let (tx, rx) = std::sync::mpsc::sync_channel::<(usize, T)>(1);
         scope.spawn(move || {
+            let _bind = trace.map(|(tracer, rank)| tracer.install(rank));
             let mut encode = encode;
             for i in 0..count {
-                let item = encode(i);
+                let item = {
+                    // encoder lane: runs concurrently with the shipper's
+                    // cpu lane by design, so it gets its own nesting tree
+                    let mut sp = crate::obs::span_on(
+                        crate::obs::SpanKind::Encode,
+                        crate::obs::Lane::Encoder,
+                    );
+                    sp.label_with(|| format!("overlap bucket {i}"));
+                    encode(i)
+                };
                 if tx.send((i, item)).is_err() {
                     return; // shipper bailed; nothing left to feed
                 }
@@ -80,6 +93,8 @@ where
         });
         for _ in 0..count {
             let (i, item) = rx.recv().expect("encoder thread hung up");
+            let mut sp = crate::obs::span(crate::obs::SpanKind::Send);
+            sp.label_with(|| format!("overlap ship {i}"));
             ship(i, item);
         }
     });

@@ -12,6 +12,12 @@ use super::stats::{mad, median, percentile};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
+/// Schema version stamped into every `BENCH_*.json` (see also
+/// [`crate::obs::export::TRACE_SCHEMA_VERSION`] for `TRACE_*.json`).
+/// Bump when the top-level shape of the summary changes; version 1 is
+/// the pre-versioned shape (no `schema_version` key at all).
+pub const SCHEMA_VERSION: u32 = 2;
+
 /// One measured benchmark.
 #[derive(Clone, Debug)]
 pub struct Measurement {
@@ -289,6 +295,7 @@ impl BenchSummary {
 
     pub fn to_json(&self) -> Json {
         let mut top = self.meta.clone();
+        top.insert("schema_version".into(), Json::Num(SCHEMA_VERSION as f64));
         top.insert("bench".into(), Json::Str(self.name.clone()));
         top.insert("rows".into(), Json::Arr(self.rows.clone()));
         Json::Obj(top)
@@ -360,6 +367,10 @@ mod tests {
         assert_eq!(s.len(), 2);
         let parsed = Json::parse(&s.to_json().to_string()).unwrap();
         assert_eq!(parsed.get("bench").unwrap().as_str(), Some("unit_test"));
+        assert_eq!(
+            parsed.get("schema_version").unwrap().as_usize(),
+            Some(SCHEMA_VERSION as usize)
+        );
         assert_eq!(parsed.get("sweep").unwrap().as_str(), Some("n x density"));
         let rows = parsed.get("rows").unwrap().as_arr().unwrap();
         assert_eq!(rows.len(), 2);

@@ -76,6 +76,7 @@ mod scenario;
 pub use scenario::Scenario;
 
 use crate::collective::{Comm, Topology};
+use crate::obs;
 use crate::simnet::Link;
 use crate::util::prng::{mix64, Rng};
 use std::cell::{Cell, RefCell};
@@ -352,14 +353,20 @@ impl VirtualEndpoint {
     pub fn sync_to(&self, t: f64) {
         if t > self.clock.get() {
             self.clock.set(t);
-            self.publish();
         }
+        // publish even when no catch-up happened: this seeds the
+        // tracer's per-thread virtual clock at step start, so the very
+        // first span of a step carries a virtual start stamp
+        self.publish();
     }
 
     fn publish(&self) {
         let slot = &self.clocks[self.rank];
         slot.clock.store(self.clock.get().to_bits(), Ordering::Relaxed);
         slot.idle.store(self.idle.get().to_bits(), Ordering::Relaxed);
+        // tell the tracing layer where this rank's virtual clock is, so
+        // spans opened on this thread carry virtual stamps
+        obs::vclock(self.clock.get());
     }
 
     /// Port occupancy of a transfer to `dst` (jitter applied — drawn
@@ -387,6 +394,10 @@ impl VirtualEndpoint {
         let busy = self.occupancy(dst, payload.len());
         let depart = self.clock.get().max(self.egress_free[c].get());
         self.egress_free[c].set(depart + busy);
+        // egress port occupancy + queueing delay behind earlier sends
+        obs::port_span(obs::SpanKind::Send, obs::Lane::egress(c), depart, depart + busy, len);
+        obs::count(if c == INTRA { "vfabric.intra_bytes" } else { "vfabric.inter_bytes" }, len);
+        obs::observe("vfabric.egress_backlog_s", depart - self.clock.get());
         self.to[dst].send(Msg { depart, busy, payload }).expect("peer hung up");
     }
 
@@ -394,6 +405,11 @@ impl VirtualEndpoint {
     /// this rank's clock to the delivery time (waiting counts as idle).
     pub fn recv(&self, src: usize) -> Vec<u8> {
         assert_ne!(src, self.rank);
+        // the wait span's virtual extent is [clock before, clock after]:
+        // exactly the idle this recv adds (zero when the message already
+        // arrived). Wall extent covers the blocking channel recv.
+        obs::vclock(self.clock.get());
+        let mut wait = obs::span(obs::SpanKind::RecvWait);
         let msg = self.from[src].recv().expect("peer hung up");
         let c = self.class[src];
         let delivery = self.ingress_free[c].get().max(msg.depart) + msg.busy;
@@ -404,6 +420,19 @@ impl VirtualEndpoint {
             self.clock.set(delivery);
         }
         self.publish();
+        if wait.live() {
+            wait.set_bytes(msg.payload.len() as u64);
+            wait.label_with(|| format!("from {src}"));
+            // ingress port occupancy for this message
+            obs::port_span(
+                obs::SpanKind::Recv,
+                obs::Lane::ingress(c),
+                delivery - msg.busy,
+                delivery,
+                msg.payload.len() as u64,
+            );
+        }
+        drop(wait);
         msg.payload
     }
 }

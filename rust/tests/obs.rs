@@ -1,0 +1,302 @@
+//! Observability validation (DESIGN.md §11):
+//!
+//! 1. **Golden span sequence** — a 2-rank GatherAll on the virtual
+//!    fabric produces a pinned cpu-lane span sequence per rank
+//!    (pack → recv_wait → decode → merge) plus one egress and one
+//!    ingress port booking, with a positive virtual wait.
+//! 2. **Chrome-trace export round-trip** — `TraceReport::to_json`
+//!    serialises, re-parses through `util::json`, and carries the
+//!    schema version, clock tag, and well-formed `traceEvents`.
+//! 3. **Nesting property** — every schedule's full-level trace forms a
+//!    proper tree per (rank, lane, clock) under `check_nesting`.
+//! 4. **Reconciliation by construction** — the virtual clock only
+//!    advances through elapse / recv-wait, so compute + wait + barrier
+//!    attribution on the slowest rank explains the whole measured step.
+
+use deepreduce::collective::{Schedule, SparseConfig, Topology};
+use deepreduce::obs::{
+    self, check_nesting, Lane, Span, SpanKind, StepWindow, TraceLevel, TraceReport, Tracer,
+};
+use deepreduce::simnet::Link;
+use deepreduce::tensor::SparseTensor;
+use deepreduce::util::json::Json;
+use deepreduce::vfabric::{Scenario, VirtualNetwork};
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::thread;
+
+/// A slow-enough link that every transfer takes visible virtual time.
+fn slow_link() -> Link {
+    Link { bandwidth_bps: 1e6, latency_s: 1e-3 }
+}
+
+/// Disjoint strided supports so merges are non-trivial on every rank.
+fn inputs(n: usize, d: usize, k: usize) -> Vec<SparseTensor> {
+    (0..n)
+        .map(|r| {
+            let idx: Vec<u32> = (0..k).map(|j| ((j * n + r) % d) as u32).collect();
+            let val: Vec<f32> = (0..k).map(|j| 1.0 + (r * k + j) as f32 / 10.0).collect();
+            SparseTensor::new(d, idx, val)
+        })
+        .collect()
+}
+
+/// Run `sched` on a fully-traced virtual fabric; returns the drained
+/// spans (step-stamped 0) and the fabric's critical path.
+fn run_traced(
+    sched: Schedule,
+    cfg: SparseConfig,
+    topo: Topology,
+    tracer: &Arc<Tracer>,
+) -> (Vec<Span>, f64) {
+    let n = topo.world();
+    let net = VirtualNetwork::new(topo, slow_link(), slow_link(), Scenario::none(0));
+    let handles: Vec<_> = net
+        .endpoints()
+        .into_iter()
+        .zip(inputs(n, 512, 16))
+        .enumerate()
+        .map(|(r, (ep, t))| {
+            let tracer = tracer.clone();
+            thread::spawn(move || {
+                let _bind = tracer.install(r);
+                sched.build(cfg).allreduce(&ep, t).unwrap()
+                // InstallGuard drop flushes this thread's buffer
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    (tracer.drain(0), net.max_clock_s())
+}
+
+/// (1) the golden fixture: exact per-rank cpu-lane anatomy of a 2-rank
+/// GatherAll, pinned so instrumentation cannot silently drift.
+#[test]
+fn golden_gather_all_two_rank_span_sequence() {
+    let tracer = Tracer::new(TraceLevel::Full, 2);
+    let (spans, _) = run_traced(
+        Schedule::GatherAll,
+        SparseConfig::default(),
+        Topology::flat(2),
+        &tracer,
+    );
+    for r in 0..2u32 {
+        let cpu: Vec<SpanKind> = spans
+            .iter()
+            .filter(|s| s.rank == r && s.lane == Lane::Cpu)
+            .map(|s| s.kind)
+            .collect();
+        assert_eq!(
+            cpu,
+            vec![SpanKind::Pack, SpanKind::RecvWait, SpanKind::Decode, SpanKind::Merge],
+            "rank {r} cpu lane"
+        );
+        let sends: Vec<&Span> = spans
+            .iter()
+            .filter(|s| s.rank == r && s.lane == Lane::EgressIntra)
+            .collect();
+        let recvs: Vec<&Span> = spans
+            .iter()
+            .filter(|s| s.rank == r && s.lane == Lane::IngressIntra)
+            .collect();
+        assert_eq!(sends.len(), 1, "rank {r} egress bookings");
+        assert_eq!(recvs.len(), 1, "rank {r} ingress bookings");
+        assert_eq!(sends[0].kind, SpanKind::Send);
+        assert_eq!(recvs[0].kind, SpanKind::Recv);
+        assert!(sends[0].bytes > 0 && sends[0].virt_dur() > 0.0);
+        // both ranks start at virtual 0 and send first, so each one
+        // waits at least the link latency for the peer's message
+        let wait = spans
+            .iter()
+            .find(|s| s.rank == r && s.kind == SpanKind::RecvWait)
+            .unwrap();
+        assert!(wait.has_virtual(), "recv_wait must carry virtual stamps");
+        assert!(wait.virt_dur() >= 1e-3, "rank {r} waited {}s", wait.virt_dur());
+    }
+    check_nesting(&spans).unwrap();
+    // registry sees one pack/decode per rank
+    assert_eq!(tracer.registry().counter("wire.pack_calls").get(), 2);
+    assert_eq!(tracer.registry().counter("wire.decode_calls").get(), 2);
+    assert_eq!(tracer.registry().counter("sched.gather_all_steps").get(), 2);
+    assert!(tracer.registry().counter("vfabric.intra_bytes").get() > 0);
+}
+
+/// (2) the exported artifact re-parses through the repo's own JSON
+/// parser and keeps the schema/clock contract.
+#[test]
+fn chrome_export_roundtrips_through_json_parser() {
+    let tracer = Tracer::new(TraceLevel::Full, 2);
+    let (spans, critical_path) = run_traced(
+        Schedule::GatherAll,
+        SparseConfig::default(),
+        Topology::flat(2),
+        &tracer,
+    );
+    let n_spans = spans.len();
+    let report = TraceReport {
+        name: "golden".to_string(),
+        level: TraceLevel::Full,
+        ranks: 2,
+        meta: BTreeMap::from([(
+            "schedule".to_string(),
+            Json::Str("gather_all".to_string()),
+        )]),
+        steps: vec![StepWindow {
+            step: 0,
+            measured_s: critical_path,
+            idle_mean_s: f64::NAN,
+            virt0: 0.0,
+            virt1: critical_path,
+        }],
+        spans,
+        registry: tracer.registry().snapshot(),
+    };
+    let text = report.to_json().to_string();
+    let parsed = Json::parse(&text).expect("trace JSON must re-parse");
+    assert_eq!(parsed.get("schema_version").unwrap().as_f64(), Some(1.0));
+    assert_eq!(parsed.get("clock").unwrap().as_str(), Some("virtual"));
+    assert_eq!(parsed.get("ranks").unwrap().as_f64(), Some(2.0));
+    assert_eq!(parsed.get("schedule").unwrap().as_str(), Some("gather_all"));
+    assert_eq!(parsed.get("spans").unwrap().as_arr().unwrap().len(), n_spans);
+    // Chrome trace_event contract: every X event is a complete interval
+    // on a known (pid=rank, tid=lane) pair; metadata names the lanes
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let mut x_events = 0;
+    let mut thread_names = 0;
+    for e in events {
+        match e.get("ph").unwrap().as_str().unwrap() {
+            "X" => {
+                x_events += 1;
+                let pid = e.get("pid").unwrap().as_f64().unwrap();
+                let tid = e.get("tid").unwrap().as_f64().unwrap();
+                assert!(pid < 2.0, "pid is a rank");
+                assert!(tid <= Lane::IngressInter.tid() as f64, "tid is a lane");
+                assert!(e.get("dur").unwrap().as_f64().unwrap() >= 0.0);
+            }
+            "M" => {
+                if e.get("name").unwrap().as_str() == Some("thread_name") {
+                    thread_names += 1;
+                }
+            }
+            other => panic!("unexpected phase {other}"),
+        }
+    }
+    assert!(x_events > 0, "no interval events exported");
+    assert!(thread_names > 0, "lanes must be named for Perfetto");
+    // registry snapshot rode along
+    assert!(parsed.get("registry").unwrap().get("counters").is_some());
+    // and the terminal summary renders without panicking
+    let summary = report.summary();
+    assert!(summary.contains("golden"), "{summary}");
+    assert!(summary.contains("slowest rank"), "{summary}");
+}
+
+/// (3) nesting property: every schedule's full-level trace is a proper
+/// tree per (rank, lane, clock) — rounds contain their packs/waits,
+/// nothing straddles a sibling.
+#[test]
+fn span_trees_nest_for_every_schedule() {
+    let cases: Vec<(Schedule, Topology)> = vec![
+        (Schedule::GatherAll, Topology::flat(4)),
+        (Schedule::RecursiveDouble, Topology::flat(4)),
+        // non-power-of-two exercises the fold/unfold pre-rounds
+        (Schedule::RecursiveDouble, Topology::flat(3)),
+        (Schedule::RingRescatter, Topology::flat(4)),
+        (Schedule::Hierarchical, Topology::new(2, 2)),
+    ];
+    for (sched, topo) in cases {
+        let cfg = SparseConfig {
+            topology: (sched == Schedule::Hierarchical).then_some(topo),
+            ..SparseConfig::default()
+        };
+        let tracer = Tracer::new(TraceLevel::Full, topo.world());
+        let (spans, _) = run_traced(sched, cfg, topo, &tracer);
+        assert!(!spans.is_empty(), "{} produced no spans", sched.name());
+        if let Err(e) = check_nesting(&spans) {
+            panic!("{} violates span nesting: {e}", sched.name());
+        }
+    }
+}
+
+/// (4) reconciliation: compute + recv-wait + barrier attribution on the
+/// slowest rank explains (essentially all of) the measured virtual step
+/// — the invariant the `--trace-summary` coverage column relies on.
+#[test]
+fn attribution_reconciles_virtual_step_time() {
+    let n = 4usize;
+    let tracer = Tracer::new(TraceLevel::Full, n);
+    let net = VirtualNetwork::new(
+        Topology::flat(n),
+        slow_link(),
+        slow_link(),
+        Scenario::none(0),
+    );
+    let handles: Vec<_> = net
+        .endpoints()
+        .into_iter()
+        .zip(inputs(n, 512, 16))
+        .enumerate()
+        .map(|(r, (ep, t))| {
+            let tracer = tracer.clone();
+            thread::spawn(move || {
+                let _bind = tracer.install(r);
+                ep.sync_to(0.0); // publish the clock so compute gets virtual stamps
+                {
+                    let mut sp = obs::span(SpanKind::Compute);
+                    sp.label_with(|| "replay".to_string());
+                    // rank 0 is a 4x straggler
+                    ep.elapse(if r == 0 { 0.040 } else { 0.010 });
+                }
+                Schedule::GatherAll
+                    .build(SparseConfig::default())
+                    .allreduce(&ep, t)
+                    .unwrap();
+                ep.now()
+            })
+        })
+        .collect();
+    let ends: Vec<f64> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let step_end = ends.iter().copied().fold(0.0, f64::max);
+    // synthesise the end-of-step barrier gap per rank, as the trainer does
+    for (r, &e) in ends.iter().enumerate() {
+        tracer.record(Span {
+            kind: SpanKind::Barrier,
+            lane: Lane::Cpu,
+            rank: r as u32,
+            step: 0,
+            depth: 0,
+            bytes: 0,
+            label: None,
+            wall0: f64::NAN,
+            wall1: f64::NAN,
+            virt0: e,
+            virt1: step_end,
+        });
+    }
+    let report = TraceReport {
+        name: "reconcile".to_string(),
+        level: TraceLevel::Full,
+        ranks: n,
+        meta: BTreeMap::new(),
+        steps: vec![StepWindow {
+            step: 0,
+            measured_s: step_end,
+            idle_mean_s: f64::NAN,
+            virt0: 0.0,
+            virt1: step_end,
+        }],
+        spans: tracer.drain(0),
+        registry: tracer.registry().snapshot(),
+    };
+    let coverage = report.reconciliation(0).expect("virtual data present");
+    // the virtual clock only advances through elapse and recv-wait, so
+    // the decomposition is exact up to float summation
+    assert!(
+        (coverage - 1.0).abs() < 1e-6,
+        "attribution explains {:.4} of the step, expected ~1.0",
+        coverage
+    );
+}

@@ -272,8 +272,9 @@ fn trainer_on_virtual_fabric_matches_instant_and_measures_time() {
         assert_eq!(a.loss.to_bits(), b.loss.to_bits(), "fabric must not change the math");
         assert_eq!(a.fabric_bytes, b.fabric_bytes, "same schedule, same wire traffic");
         assert_eq!(a.measured_step_s, 0.0, "instant fabric has no virtual clock");
+        assert!(a.rank_idle_s.is_none(), "instant fabric does not measure idleness");
         assert!(b.measured_step_s > 0.0, "virtual fabric must measure step time");
-        assert!(b.rank_idle_s >= 0.0);
+        assert!(b.rank_idle_s.unwrap() >= 0.0);
     }
     assert!(rv.total_measured_s() > 0.0);
 }
