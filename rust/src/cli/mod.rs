@@ -19,7 +19,7 @@ pub const KNOWN_FLAGS: &[&str] = &[
     // train: DeepReduce instantiation
     "index", "value", "sparsifier", "ratio", "fpr", "value-param", "no-ef",
     // train: collective schedule + topology
-    "schedule", "topology", "inner-schedule", "intra-mbps", "inter-mbps",
+    "schedule", "topology", "inner-schedule", "chunks", "intra-mbps", "inter-mbps",
     // train: virtual-time fabric + scenarios
     "fabric", "straggler", "compute-jitter", "link-jitter", "node-mbps",
     // train: gradient pipeline
@@ -64,11 +64,14 @@ train — run distributed training with a DeepReduce instantiation
 
   collective schedule + topology:
   --schedule <name>               gather_all|recursive_double|ring_rescatter|
-                                  ring_rescatter_exact|hierarchical
+                                  ring_rescatter_exact|chunked_rescatter|
+                                  hierarchical
   --topology <NxR>                node grid, e.g. 2x4 (N nodes × R ranks;
                                   implies --schedule hierarchical if unset)
   --inner-schedule <name>         flat schedule the node leaders run
                                   (default gather_all)
+  --chunks <n>                    chunked_rescatter chunk count, rounded up to
+                                  a multiple of the world size (0 = auto)
   --intra-mbps <f>                modelled intra-node link, Mbps (default 10000)
   --inter-mbps <f>                modelled inter-node link, Mbps (default 100)
 

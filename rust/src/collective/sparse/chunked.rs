@@ -1,0 +1,223 @@
+//! `ChunkedRescatter`: balanced chunked reduce-scatter + allgather with
+//! intra-step streaming (DESIGN.md §12).
+//!
+//! The whole-bucket ring schedules move O(n·k) *accumulated* bytes
+//! through every link — under a straggler, the slow rank's ports stay
+//! saturated with forwarded traffic that never needed to touch it. This
+//! schedule splits the support into `m·n` chunks balanced by estimated
+//! encoded bytes and reduces each chunk with a pairwise direct exchange,
+//! so each rank's own k entries cross its links exactly once:
+//!
+//! 1. **Histogram** — every rank allgathers a varint-encoded bin
+//!    histogram of its support (`merge::bin_counts` over the
+//!    deterministic `merge::balance_bins(d, m·n)` binning). The summed
+//!    histogram drives `merge::balanced_bounds`, so all ranks derive the
+//!    identical byte-balanced partition without further coordination.
+//!    Group `g` (owned by rank `g`) covers sub-chunks `g·m .. (g+1)·m`.
+//! 2. **Pairwise reduce-scatter** — at offset `s ∈ 1..n` each rank
+//!    sends the `m` sub-chunks of group `(me+s) mod n` *directly* to
+//!    that owner and merges the sub-chunks arriving from
+//!    `(me−s) mod n` into its own accumulator. Ring-ordered offsets
+//!    spread load; no accumulated payload is ever forwarded.
+//! 3. **Ring allgather** — the fully-reduced groups circulate around
+//!    the ring, `m` sub-chunk frames per step.
+//!
+//! Inside every phase-1 offset and phase-2 step the `m` sub-chunk
+//! frames run through [`crate::pipeline::overlap::streamed`]: the
+//! encoder lane packs sub-chunk `i+1` while sub-chunk `i` is in flight
+//! (send/recv/merge on the calling thread). No re-sparsification
+//! happens anywhere, so the result is the exact sum — byte-identical to
+//! [`super::GatherAll`] on integer-valued gradients.
+
+use super::{merge, SegmentCodec, SparseAllreduce, SparseConfig};
+use crate::collective::{all_gather_peers, Comm};
+use crate::pipeline::overlap::streamed;
+use crate::tensor::SparseTensor;
+use crate::util::varint;
+
+pub struct ChunkedRescatter {
+    codec: SegmentCodec,
+    chunks: usize,
+}
+
+impl ChunkedRescatter {
+    pub fn new(cfg: SparseConfig) -> Self {
+        Self { codec: SegmentCodec::raw(cfg.dense_switch), chunks: cfg.chunks }
+    }
+
+    pub fn with_codec(codec: SegmentCodec, chunks: usize) -> Self {
+        Self { codec, chunks }
+    }
+
+    /// Sub-chunks per owner group: the `chunks` knob rounded up to a
+    /// multiple of the world size, so every rank owns the same number of
+    /// chunks. `0` = auto: one chunk per rank (`m = 1`), which the
+    /// straggler sweeps show is the right default — extra sub-chunks buy
+    /// finer streaming overlap at α cost per frame.
+    pub fn sub_chunks(chunks: usize, n: usize) -> usize {
+        if chunks == 0 {
+            1
+        } else {
+            chunks.div_ceil(n).max(1)
+        }
+    }
+}
+
+impl SparseAllreduce for ChunkedRescatter {
+    fn name(&self) -> &'static str {
+        "chunked_rescatter"
+    }
+
+    fn allreduce(&self, ep: &dyn Comm, input: SparseTensor) -> anyhow::Result<SparseTensor> {
+        let n = ep.world();
+        let me = ep.rank();
+        if n == 1 {
+            return Ok(input);
+        }
+        let d = input.dense_len();
+        let m = Self::sub_chunks(self.chunks, n);
+        let p = m * n;
+
+        // phase 0: histogram allgather → balanced bounds. The binning is
+        // deterministic in (d, p) and the summed histogram is rank-order
+        // independent, so every rank computes the identical partition. A
+        // peer's histogram can only skew balance, never correctness: any
+        // monotone edge list is a valid partition of [0, d).
+        let bins = merge::balance_bins(d, p);
+        let counts = merge::bin_counts(&input, bins);
+        let mut blob = Vec::with_capacity(bins * 2);
+        for &c in &counts {
+            varint::write_u64(&mut blob, c);
+        }
+        let mut total = counts;
+        {
+            let mut round = crate::obs::span(crate::obs::SpanKind::Round);
+            round.label_with(|| "hist".to_string());
+            let peers = all_gather_peers(ep, blob);
+            for (peer, pb) in peers.iter().enumerate() {
+                if peer == me {
+                    continue;
+                }
+                let mut pos = 0usize;
+                for t in total.iter_mut() {
+                    *t = t.saturating_add(varint::read_u64(pb, &mut pos)?);
+                }
+                if pos != pb.len() {
+                    anyhow::bail!(
+                        "rank {peer} histogram has {} trailing byte(s)",
+                        pb.len() - pos
+                    );
+                }
+            }
+        }
+        let bounds = merge::balanced_bounds(&total, d, p);
+
+        // split my contribution once; my own group's slices seed the
+        // accumulator (their segs slots are never encoded: no phase-1
+        // offset targets me)
+        let mut segs = merge::split_ranges(&input, &bounds);
+        let mut acc: Vec<SparseTensor> = (0..m)
+            .map(|j| {
+                std::mem::replace(
+                    &mut segs[me * m + j],
+                    SparseTensor::new(d, Vec::new(), Vec::new()),
+                )
+            })
+            .collect();
+
+        // phase 1: pairwise direct exchange. At offset s send group
+        // (me+s) mod n to its owner, merge the frames from (me−s) mod n.
+        // Per-pair FIFO channels keep sub-chunk j the j-th arrival.
+        let codec = &self.codec;
+        for s in 1..n {
+            let dst = (me + s) % n;
+            let src = (me + n - s) % n;
+            let mut round = crate::obs::span(crate::obs::SpanKind::Round);
+            round.label_with(|| format!("px {s}"));
+            let mut err: Option<anyhow::Error> = None;
+            {
+                let segs = &segs;
+                let bounds = &bounds;
+                streamed(
+                    m,
+                    1,
+                    move |j| {
+                        let c = dst * m + j;
+                        codec.encode(&segs[c], bounds[c], bounds[c + 1])
+                    },
+                    |j, msg| {
+                        ep.send(dst, msg);
+                        let raw = ep.recv(src);
+                        if err.is_none() {
+                            match codec.decode(d, &raw) {
+                                Ok(incoming) => acc[j] = merge::merge_sum(&acc[j], &incoming),
+                                Err(e) => err = Some(e),
+                            }
+                        }
+                    },
+                );
+            }
+            if let Some(e) = err {
+                return Err(e);
+            }
+        }
+
+        // phase 2: ring allgather of the merged groups — own group goes
+        // out first, then forward whatever arrived last step.
+        let next = (me + 1) % n;
+        let prev = (me + n - 1) % n;
+        let mut groups: Vec<Vec<SparseTensor>> = (0..n).map(|_| Vec::new()).collect();
+        groups[me] = acc;
+        for s in 0..n - 1 {
+            let gs = (me + n - s) % n;
+            let gr = (me + n - s - 1) % n;
+            let mut round = crate::obs::span(crate::obs::SpanKind::Round);
+            round.label_with(|| format!("ag {s}"));
+            // take the send group so the encoder's borrow cannot alias
+            // the slot the incoming group lands in
+            let send_group = std::mem::take(&mut groups[gs]);
+            let mut recvd: Vec<SparseTensor> = Vec::with_capacity(m);
+            let mut err: Option<anyhow::Error> = None;
+            {
+                let sg = &send_group;
+                let bounds = &bounds;
+                streamed(
+                    m,
+                    1,
+                    move |j| {
+                        let c = gs * m + j;
+                        codec.encode(&sg[j], bounds[c], bounds[c + 1])
+                    },
+                    |_j, msg| {
+                        ep.send(next, msg);
+                        let raw = ep.recv(prev);
+                        if err.is_none() {
+                            match codec.decode(d, &raw) {
+                                Ok(t) => recvd.push(t),
+                                Err(e) => err = Some(e),
+                            }
+                        }
+                    },
+                );
+            }
+            groups[gs] = send_group;
+            if let Some(e) = err {
+                return Err(e);
+            }
+            groups[gr] = recvd;
+        }
+
+        // groups are disjoint ordered ranges (group g covers
+        // [bounds[g·m], bounds[(g+1)·m])): concatenate in group order
+        let mut idx = Vec::new();
+        let mut val = Vec::new();
+        for g in groups {
+            for sub in g {
+                let (_, i, v) = sub.into_parts();
+                idx.extend(i);
+                val.extend(v);
+            }
+        }
+        Ok(SparseTensor::new(d, idx, val))
+    }
+}

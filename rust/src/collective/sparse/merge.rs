@@ -84,6 +84,65 @@ pub fn split_ranges(t: &SparseTensor, bounds: &[usize]) -> Vec<SparseTensor> {
     out
 }
 
+/// Bin resolution the chunked schedule balances at: a few bins per
+/// chunk, capped by the domain. Deterministic in `(d, chunks)` only, so
+/// every rank derives the identical binning without coordination — and
+/// the simnet byte model can reproduce the histogram-exchange volume
+/// exactly.
+pub fn balance_bins(d: usize, chunks: usize) -> usize {
+    (4 * chunks.max(1)).min(d).max(1)
+}
+
+/// Per-bin entry counts of `t` over `bins` equal-width bins (edges at
+/// `i * d / bins`, mirroring [`chunk_bounds`]). One pass over the sorted
+/// support.
+pub fn bin_counts(t: &SparseTensor, bins: usize) -> Vec<u64> {
+    let d = t.dense_len();
+    let edges = chunk_bounds(d, bins);
+    let mut out = vec![0u64; bins];
+    let mut b = 0usize;
+    for &i in t.indices() {
+        while b + 1 < bins && (i as usize) >= edges[b + 1] {
+            b += 1;
+        }
+        out[b] += 1;
+    }
+    out
+}
+
+/// Balanced chunk boundaries from a (globally summed) bin histogram:
+/// boundary `c` is the smallest bin edge whose prefix weight reaches
+/// `c/chunks` of the total estimated encoded bytes. Sparse entries all
+/// weigh the same on the wire (8 B under the raw segment codec), so the
+/// per-entry byte weight cancels in the ratio and the histogram counts
+/// *are* the byte estimate. An all-zero histogram falls back to the
+/// equal-width partition. Boundaries are monotone, land on bin edges,
+/// and start/end at `0`/`d` — so `split_ranges` over them partitions
+/// the domain even when some chunks come out empty.
+pub fn balanced_bounds(counts: &[u64], d: usize, chunks: usize) -> Vec<usize> {
+    let bins = counts.len();
+    let total: u128 = counts.iter().map(|&c| c as u128).sum();
+    if total == 0 || bins == 0 {
+        return chunk_bounds(d, chunks);
+    }
+    let edges = chunk_bounds(d, bins);
+    let mut out = Vec::with_capacity(chunks + 1);
+    out.push(0);
+    let mut prefix: u128 = 0;
+    let mut e = 0usize;
+    for c in 1..chunks {
+        // first edge where prefix/total >= c/chunks, in exact integer
+        // arithmetic (u128 keeps count * chunks from overflowing)
+        while e < bins && prefix * chunks as u128 < c as u128 * total {
+            prefix += counts[e] as u128;
+            e += 1;
+        }
+        out.push(edges[e]);
+    }
+    out.push(d);
+    out
+}
+
 /// Keep the `r` largest-magnitude entries (ties broken by lower index),
 /// support returned sorted — the in-flight re-sparsification kernel.
 pub fn top_r_sparse(t: &SparseTensor, r: usize) -> SparseTensor {
@@ -167,6 +226,51 @@ mod tests {
         let t = st(2, &[(0, 1.0), (1, 2.0)]);
         let segs = split_ranges(&t, &b);
         assert_eq!(segs.iter().map(|s| s.nnz()).collect::<Vec<_>>(), vec![0, 1, 0, 1]);
+    }
+
+    #[test]
+    fn bin_counts_cover_the_support() {
+        let t = st(12, &[(0, 1.0), (1, 1.0), (2, 1.0), (11, 1.0)]);
+        let counts = bin_counts(&t, 4); // edges [0, 3, 6, 9, 12]
+        assert_eq!(counts, vec![3, 0, 0, 1]);
+        assert_eq!(counts.iter().sum::<u64>(), t.nnz() as u64);
+        // degenerate: one bin swallows everything
+        assert_eq!(bin_counts(&t, 1), vec![4]);
+    }
+
+    #[test]
+    fn balanced_bounds_equalize_skewed_mass() {
+        // all mass in the first quarter: equal-width bounds would give
+        // chunk 0 everything; balanced bounds subdivide the hot region
+        let d = 16usize;
+        let counts = vec![8u64, 8, 0, 0]; // bins over [0,4),[4,8),[8,12),[12,16)
+        let b = balanced_bounds(&counts, d, 4);
+        assert_eq!(b.first(), Some(&0));
+        assert_eq!(b.last(), Some(&16));
+        assert!(b.windows(2).all(|w| w[0] <= w[1]), "{b:?}");
+        // the two hot bins are split apart instead of lumped together
+        assert!(b[1] <= 4 && b[2] <= 8, "{b:?}");
+    }
+
+    #[test]
+    fn balanced_bounds_uniform_histogram_matches_equal_width() {
+        let d = 8192usize;
+        let chunks = 8usize;
+        let bins = balance_bins(d, chunks);
+        assert_eq!(bins, 32);
+        let counts = vec![16u64; bins];
+        assert_eq!(balanced_bounds(&counts, d, chunks), chunk_bounds(d, chunks));
+    }
+
+    #[test]
+    fn balanced_bounds_empty_histogram_falls_back() {
+        assert_eq!(balanced_bounds(&[0, 0, 0, 0], 10, 3), chunk_bounds(10, 3));
+        assert_eq!(balanced_bounds(&[], 10, 3), chunk_bounds(10, 3));
+        // tiny domains: bins capped at d, bounds still well-formed
+        assert_eq!(balance_bins(2, 8), 2);
+        let b = balanced_bounds(&[1, 1], 2, 8);
+        assert_eq!((b[0], b[b.len() - 1], b.len()), (0, 2, 9));
+        assert!(b.windows(2).all(|w| w[0] <= w[1]));
     }
 
     #[test]

@@ -4,7 +4,7 @@
 //! ships every rank's compressed blob to every peer (Horovod allgather),
 //! which is O(n·k) per worker. SparCML (Renggli et al.) and Ok-Topk
 //! (Li et al.) show that *schedule-aware* sparse collectives do much
-//! better. This subsystem provides a [`SparseAllreduce`] trait with four
+//! better. This subsystem provides a [`SparseAllreduce`] trait with six
 //! schedules:
 //!
 //! - [`GatherAll`] — the baseline behaviour, refactored in: allgather of
@@ -14,7 +14,12 @@
 //!   to dense representation once union density crosses a threshold.
 //! - [`RingRescatter`] — Ok-Topk-style sparse reduce-scatter over chunk
 //!   ranges, optional re-sparsification of the owned chunk back to
-//!   ~k/n entries, then a ring allgather of the reduced chunks.
+//!   ~k/n entries, then a ring allgather of the reduced chunks (the
+//!   exact variant is [`Schedule::RingRescatterExact`]).
+//! - [`ChunkedRescatter`] — histogram-balanced chunk partition, pairwise
+//!   direct-exchange reduce-scatter (no accumulated forwarding through
+//!   stragglers), ring allgather of the merged chunks, with intra-step
+//!   encode/ship streaming per sub-chunk. Exact.
 //! - [`Hierarchical`] — leader-based two-level schedule over a
 //!   node × rank [`Topology`]: intra-node reduce to a per-node leader,
 //!   any of the flat schedules among the leaders across the slow
@@ -58,6 +63,7 @@
 //! assert!(net.total_bytes() > 0);
 //! ```
 
+mod chunked;
 mod gather_all;
 mod hierarchical;
 pub mod merge;
@@ -65,11 +71,12 @@ mod recursive_double;
 mod ring_rescatter;
 mod wire;
 
+pub use chunked::ChunkedRescatter;
 pub use gather_all::GatherAll;
 pub use hierarchical::Hierarchical;
 pub use recursive_double::RecursiveDouble;
 pub use ring_rescatter::RingRescatter;
-pub use wire::SegmentCodec;
+pub use wire::{SegmentCodec, SegmentError};
 
 use super::{Comm, Topology};
 use crate::tensor::SparseTensor;
@@ -99,6 +106,9 @@ pub struct SparseConfig {
     /// Inter-node schedule the leaders run inside [`Hierarchical`]
     /// (must be flat; a hierarchical inner falls back to GatherAll).
     pub inner: Schedule,
+    /// Total chunk count for [`ChunkedRescatter`], rounded up to a
+    /// multiple of the world size. `0` = auto (one chunk per rank).
+    pub chunks: usize,
 }
 
 impl Default for SparseConfig {
@@ -108,6 +118,7 @@ impl Default for SparseConfig {
             resparsify: true,
             topology: None,
             inner: Schedule::GatherAll,
+            chunks: 0,
         }
     }
 }
@@ -140,6 +151,10 @@ pub enum Schedule {
     RingRescatter,
     /// RingRescatter with re-sparsification forced off (exact sum).
     RingRescatterExact,
+    /// Histogram-balanced chunked reduce-scatter + allgather with
+    /// intra-step streaming (exact; chunk count from
+    /// `SparseConfig.chunks`, 0 = one per rank).
+    ChunkedRescatter,
     /// Two-level leader schedule over `SparseConfig.topology`, running
     /// `SparseConfig.inner` among the node leaders.
     Hierarchical,
@@ -152,6 +167,7 @@ impl Schedule {
             "recursive_double" | "recursive_doubling" | "rd" => Schedule::RecursiveDouble,
             "ring_rescatter" | "ring" | "ok_topk" => Schedule::RingRescatter,
             "ring_rescatter_exact" | "ring_exact" => Schedule::RingRescatterExact,
+            "chunked_rescatter" | "chunked" => Schedule::ChunkedRescatter,
             "hierarchical" | "hier" | "two_level" => Schedule::Hierarchical,
             _ => return None,
         })
@@ -163,16 +179,18 @@ impl Schedule {
             Schedule::RecursiveDouble => "recursive_double",
             Schedule::RingRescatter => "ring_rescatter",
             Schedule::RingRescatterExact => "ring_rescatter_exact",
+            Schedule::ChunkedRescatter => "chunked_rescatter",
             Schedule::Hierarchical => "hierarchical",
         }
     }
 
-    pub fn all() -> [Schedule; 5] {
+    pub fn all() -> [Schedule; 6] {
         [
             Schedule::GatherAll,
             Schedule::RecursiveDouble,
             Schedule::RingRescatter,
             Schedule::RingRescatterExact,
+            Schedule::ChunkedRescatter,
             Schedule::Hierarchical,
         ]
     }
@@ -180,12 +198,13 @@ impl Schedule {
     /// The flat schedules (everything but [`Schedule::Hierarchical`]) —
     /// the valid inner schedules of the hierarchical one, and the
     /// baselines its benches compare against.
-    pub fn flat() -> [Schedule; 4] {
+    pub fn flat() -> [Schedule; 5] {
         [
             Schedule::GatherAll,
             Schedule::RecursiveDouble,
             Schedule::RingRescatter,
             Schedule::RingRescatterExact,
+            Schedule::ChunkedRescatter,
         ]
     }
 
@@ -201,6 +220,9 @@ impl Schedule {
             Schedule::RecursiveDouble => Box::new(RecursiveDouble::with_codec(codec)),
             Schedule::RingRescatter => Box::new(RingRescatter::with_codec(codec, cfg.resparsify)),
             Schedule::RingRescatterExact => Box::new(RingRescatter::with_codec(codec, false)),
+            Schedule::ChunkedRescatter => {
+                Box::new(ChunkedRescatter::with_codec(codec, cfg.chunks))
+            }
             Schedule::Hierarchical => {
                 // the leader group is flat by construction; guard against
                 // a recursive inner pick
@@ -237,6 +259,7 @@ mod tests {
         assert!(Schedule::RecursiveDouble.build(cfg).exact());
         assert!(!Schedule::RingRescatter.build(cfg).exact());
         assert!(Schedule::RingRescatterExact.build(cfg).exact());
+        assert!(Schedule::ChunkedRescatter.build(cfg).exact());
         // hierarchical exactness follows the inner schedule
         assert!(Schedule::Hierarchical.build(cfg).exact());
         let lossy = SparseConfig { inner: Schedule::RingRescatter, ..cfg };

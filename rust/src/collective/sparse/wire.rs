@@ -25,6 +25,42 @@ use crate::util::varint;
 const TAG_SPARSE: u8 = 0;
 const TAG_DENSE: u8 = 1;
 
+/// Structured decode failures for segment frames (the wire-level mirror
+/// of `compress::container::ContainerError`). Every length read off the
+/// wire is validated against the remaining buffer *before* it is used as
+/// an allocation size or slice bound, so a truncated or corrupted frame
+/// fails with a typed error instead of a panic or an oversized
+/// allocation.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SegmentError {
+    /// the frame ended before the named field could be read
+    Truncated(&'static str),
+    /// a field is structurally invalid (tag, range, count, section size)
+    Malformed(String),
+    /// decoded cleanly but bytes were left over
+    TrailingBytes { extra: usize },
+}
+
+impl std::fmt::Display for SegmentError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Truncated(what) => write!(f, "segment truncated reading {what}"),
+            Self::Malformed(why) => write!(f, "malformed segment: {why}"),
+            Self::TrailingBytes { extra } => {
+                write!(f, "segment has {extra} trailing byte(s)")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SegmentError {}
+
+/// Read one varint, converting the untyped varint error into the
+/// field-naming [`SegmentError`].
+fn vint(bytes: &[u8], pos: &mut usize, what: &'static str) -> Result<u64, SegmentError> {
+    varint::read_u64(bytes, pos).map_err(|_| SegmentError::Truncated(what))
+}
+
 /// Encoder/decoder for segments, parameterized by DeepReduce codecs.
 pub struct SegmentCodec {
     index: Box<dyn IndexCodec>,
@@ -146,25 +182,48 @@ impl SegmentCodec {
 
     /// Decode one segment back onto the full domain `[0, d)`; indices are
     /// re-absolutized. Dense segments drop explicit zeros.
+    ///
+    /// Every count and section length carried by the frame is checked
+    /// against the remaining buffer (and against the declared range)
+    /// before anything is allocated or sliced; structural failures
+    /// surface as [`SegmentError`] values inside the `anyhow` error.
     pub fn decode(&self, d: usize, bytes: &[u8]) -> anyhow::Result<SparseTensor> {
         let mut sp = crate::obs::span(crate::obs::SpanKind::Decode);
         sp.set_bytes(bytes.len() as u64);
         crate::obs::count("wire.decode_calls", 1);
-        anyhow::ensure!(!bytes.is_empty(), "empty segment");
-        let tag = bytes[0];
-        let mut pos = 1usize;
-        let lo = varint::read_u64(bytes, &mut pos)? as usize;
-        let hi = varint::read_u64(bytes, &mut pos)? as usize;
-        anyhow::ensure!(lo <= hi && hi <= d, "segment range [{lo}, {hi}) outside domain {d}");
+        let (tag, mut pos) = match bytes.first() {
+            Some(&t) => (t, 1usize),
+            None => return Err(SegmentError::Truncated("tag").into()),
+        };
+        let lo64 = vint(bytes, &mut pos, "lo")?;
+        let hi64 = vint(bytes, &mut pos, "hi")?;
+        // the +1 keeps hi == 2^32 (a full u32-addressed domain) legal:
+        // indices themselves stay strictly below hi
+        if lo64 > hi64 || hi64 > d as u64 || hi64 > u32::MAX as u64 + 1 {
+            return Err(SegmentError::Malformed(format!(
+                "range [{lo64}, {hi64}) outside domain {d}"
+            ))
+            .into());
+        }
+        let (lo, hi) = (lo64 as usize, hi64 as usize);
         let range = hi - lo;
         match tag {
             TAG_DENSE => {
-                anyhow::ensure!(bytes.len() - pos == range * 4, "dense segment size mismatch");
+                // overflow-safe: compare in u64, never trust range * 4
+                let have = (bytes.len() - pos) as u64;
+                if have != range as u64 * 4 {
+                    return Err(SegmentError::Malformed(format!(
+                        "dense payload {have} B != {range} elems * 4"
+                    ))
+                    .into());
+                }
                 let mut idx = Vec::new();
                 let mut val = Vec::new();
                 for (off, c) in bytes[pos..].chunks_exact(4).enumerate() {
-                    let v = f32::from_le_bytes(c.try_into().unwrap());
+                    let v = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
                     if v != 0.0 {
+                        // off < range and hi <= u32::MAX + 1, so this
+                        // cannot wrap
                         idx.push((lo + off) as u32);
                         val.push(v);
                     }
@@ -172,19 +231,63 @@ impl SegmentCodec {
                 Ok(SparseTensor::new(d, idx, val))
             }
             TAG_SPARSE => {
-                let nnz = varint::read_u64(bytes, &mut pos)? as usize;
-                let ilen = varint::read_u64(bytes, &mut pos)? as usize;
-                anyhow::ensure!(pos + ilen <= bytes.len(), "index section truncated");
+                let nnz64 = vint(bytes, &mut pos, "nnz")?;
+                // bound the count before it sizes any decode: a segment
+                // cannot carry more entries than its range has slots
+                if nnz64 > range as u64 {
+                    return Err(SegmentError::Malformed(format!(
+                        "nnz {nnz64} exceeds range {range}"
+                    ))
+                    .into());
+                }
+                let nnz = nnz64 as usize;
+                let ilen64 = vint(bytes, &mut pos, "index section length")?;
+                // compare against what is left, never compute pos + ilen
+                if ilen64 > (bytes.len() - pos) as u64 {
+                    return Err(SegmentError::Truncated("index section").into());
+                }
+                let ilen = ilen64 as usize;
                 let local = self.index.decode(range, &bytes[pos..pos + ilen])?;
                 pos += ilen;
-                anyhow::ensure!(local.len() == nnz, "support length {} != {nnz}", local.len());
-                let vlen = varint::read_u64(bytes, &mut pos)? as usize;
-                anyhow::ensure!(pos + vlen == bytes.len(), "value section size mismatch");
-                let values = self.value.decode(&bytes[pos..pos + vlen], nnz)?;
+                if local.len() != nnz {
+                    return Err(SegmentError::Malformed(format!(
+                        "support length {} != declared nnz {nnz}",
+                        local.len()
+                    ))
+                    .into());
+                }
+                // the index codec ran over untrusted bytes: re-validate
+                // the tensor invariants (sorted, unique, inside the
+                // range) the rest of the crate only debug-asserts
+                if !local.windows(2).all(|w| w[0] < w[1])
+                    || local.last().is_some_and(|&i| i as usize >= range)
+                {
+                    return Err(SegmentError::Malformed(
+                        "decoded support not sorted/unique inside range".into(),
+                    )
+                    .into());
+                }
+                let vlen64 = vint(bytes, &mut pos, "value section length")?;
+                let rest = (bytes.len() - pos) as u64;
+                if vlen64 > rest {
+                    return Err(SegmentError::Truncated("value section").into());
+                }
+                if vlen64 < rest {
+                    return Err(SegmentError::TrailingBytes { extra: (rest - vlen64) as usize }
+                        .into());
+                }
+                let values = self.value.decode(&bytes[pos..], nnz)?;
+                if values.len() != nnz {
+                    return Err(SegmentError::Malformed(format!(
+                        "value count {} != declared nnz {nnz}",
+                        values.len()
+                    ))
+                    .into());
+                }
                 let idx: Vec<u32> = local.iter().map(|&i| i + lo as u32).collect();
                 Ok(SparseTensor::new(d, idx, values))
             }
-            other => anyhow::bail!("unknown segment tag {other}"),
+            other => Err(SegmentError::Malformed(format!("unknown tag {other}")).into()),
         }
     }
 }
@@ -305,5 +408,111 @@ mod tests {
         let mut bad = bytes.clone();
         bad[0] = 9;
         assert!(codec.decode(10, &bad).is_err());
+    }
+
+    /// Every strict prefix of a valid frame must fail to decode — no
+    /// prefix may silently parse as a shorter segment (varints
+    /// self-terminate, section lengths are validated against the
+    /// remaining buffer, and trailing bytes are rejected).
+    #[test]
+    fn every_strict_prefix_fails_sparse_and_dense() {
+        let codec = SegmentCodec::raw(0.5);
+        let sparse = codec.encode(&st(100, &[(20, 1.5), (25, -2.0), (39, 0.25)]), 20, 40);
+        assert_eq!(sparse[0], TAG_SPARSE);
+        let dense = codec.encode(&st(50, &[(10, 1.0), (11, 2.0), (12, 3.0)]), 10, 14);
+        assert_eq!(dense[0], TAG_DENSE);
+        for frame in [&sparse, &dense] {
+            for cut in 0..frame.len() {
+                assert!(
+                    codec.decode(100, &frame[..cut]).is_err(),
+                    "prefix of {cut}/{} bytes decoded",
+                    frame.len()
+                );
+            }
+        }
+    }
+
+    /// Corrupting any single header byte must never panic: it either
+    /// errors or decodes to a tensor that still satisfies the domain
+    /// invariants (flipped value bytes are legitimately undetectable).
+    #[test]
+    fn corrupted_prefix_never_panics() {
+        let codec = SegmentCodec::raw(0.5);
+        let d = 1 << 20;
+        let t = st(d, &[(100, 1.0), (5000, -2.0), (99_000, 3.5)]);
+        let frame = codec.encode(&t, 0, 1 << 17);
+        for i in 0..frame.len() {
+            for fill in [0x00u8, 0x7f, 0x80, 0xff] {
+                let mut bad = frame.clone();
+                bad[i] = fill;
+                if let Ok(out) = codec.decode(d, &bad) {
+                    assert_eq!(out.dense_len(), d);
+                    assert!(out.indices().windows(2).all(|w| w[0] < w[1]));
+                    assert!(out.indices().iter().all(|&j| (j as usize) < d));
+                }
+            }
+        }
+    }
+
+    /// Structural failures carry typed [`SegmentError`] values.
+    #[test]
+    fn structured_errors_downcast() {
+        let codec = SegmentCodec::raw(0.5);
+        let seg = |e: anyhow::Error| e.downcast::<SegmentError>().expect("SegmentError");
+        // empty frame
+        assert_eq!(seg(codec.decode(10, &[]).unwrap_err()), SegmentError::Truncated("tag"));
+        // nnz lies past the range
+        let mut f = vec![TAG_SPARSE];
+        varint::write_u64(&mut f, 0); // lo
+        varint::write_u64(&mut f, 10); // hi
+        varint::write_u64(&mut f, 1000); // nnz > range
+        varint::write_u64(&mut f, 0);
+        varint::write_u64(&mut f, 0);
+        assert!(matches!(seg(codec.decode(10, &f).unwrap_err()), SegmentError::Malformed(_)));
+        // index section length exceeds the buffer
+        let mut f = vec![TAG_SPARSE];
+        varint::write_u64(&mut f, 0);
+        varint::write_u64(&mut f, 10);
+        varint::write_u64(&mut f, 1);
+        varint::write_u64(&mut f, 1 << 40); // ilen: would overflow pos + ilen
+        assert_eq!(
+            seg(codec.decode(10, &f).unwrap_err()),
+            SegmentError::Truncated("index section")
+        );
+        // trailing garbage after the value section
+        let mut ok = codec.encode(&st(10, &[(1, 1.0)]), 0, 10);
+        ok.push(0xAB);
+        assert_eq!(
+            seg(codec.decode(10, &ok).unwrap_err()),
+            SegmentError::TrailingBytes { extra: 1 }
+        );
+        // hi beyond the u32-addressable domain
+        let mut f = vec![TAG_DENSE];
+        varint::write_u64(&mut f, 0);
+        varint::write_u64(&mut f, 1 << 33);
+        assert!(matches!(
+            seg(codec.decode(usize::MAX, &f).unwrap_err()),
+            SegmentError::Malformed(_)
+        ));
+    }
+
+    /// Corrupt index bytes that decode to an out-of-range or unsorted
+    /// support are rejected before a tensor is built (the tensor type
+    /// only debug-asserts these invariants).
+    #[test]
+    fn out_of_range_decoded_support_is_rejected() {
+        let codec = SegmentCodec::raw(0.5);
+        // hand-build a sparse frame whose raw index section holds an
+        // index >= range
+        let mut f = vec![TAG_SPARSE];
+        varint::write_u64(&mut f, 0); // lo
+        varint::write_u64(&mut f, 10); // hi -> range 10
+        varint::write_u64(&mut f, 1); // nnz
+        varint::write_u64(&mut f, 4); // ilen
+        f.extend_from_slice(&99u32.to_le_bytes()); // local index 99 >= 10
+        varint::write_u64(&mut f, 4); // vlen
+        f.extend_from_slice(&1.0f32.to_le_bytes());
+        let err = codec.decode(10, &f).unwrap_err().downcast::<SegmentError>().unwrap();
+        assert!(matches!(err, SegmentError::Malformed(_)), "{err}");
     }
 }

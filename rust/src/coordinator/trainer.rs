@@ -67,6 +67,9 @@ pub struct CompressionSpec {
     /// inter-node schedule the hierarchical leaders run (CLI
     /// `--inner-schedule`; any flat schedule name, default `gather_all`)
     pub inner_schedule: String,
+    /// `chunked_rescatter` chunk count (CLI `--chunks`), rounded up to
+    /// a multiple of the world size; 0 = auto (one chunk per rank)
+    pub chunks: usize,
     /// modelled intra-node link bandwidth, Mbps (CLI `--intra-mbps`;
     /// fast by default — node-local interconnects)
     pub intra_mbps: f64,
@@ -131,6 +134,7 @@ impl CompressionSpec {
             schedule: "gather_all".into(),
             topology: String::new(),
             inner_schedule: "gather_all".into(),
+            chunks: 0,
             intra_mbps: 10_000.0,
             inter_mbps: 100.0,
             bucket_bytes: 0,
@@ -601,7 +605,15 @@ impl Trainer {
                     inner != Schedule::Hierarchical,
                     "--inner-schedule must be a flat schedule"
                 );
-                (topo, SparseConfig { topology: topo, inner, ..SparseConfig::default() })
+                (
+                    topo,
+                    SparseConfig {
+                        topology: topo,
+                        inner,
+                        chunks: spec.chunks,
+                        ..SparseConfig::default()
+                    },
+                )
             }
             None => (None, SparseConfig::default()),
         };

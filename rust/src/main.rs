@@ -136,7 +136,8 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         // constructor's EF default the same way)
         spec.error_feedback = !args.flag("no-ef");
         // sparse allreduce schedule: gather_all (default) | recursive_double
-        // | ring_rescatter | ring_rescatter_exact | hierarchical
+        // | ring_rescatter | ring_rescatter_exact | chunked_rescatter
+        // | hierarchical
         spec.schedule = args.get_or("schedule", &spec.schedule);
         // two-level node × rank grid: --topology NxR meters intra vs
         // inter bytes for any schedule, and (when --schedule is not
@@ -146,6 +147,9 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             spec.schedule = "hierarchical".into();
         }
         spec.inner_schedule = args.get_or("inner-schedule", &spec.inner_schedule);
+        // chunked_rescatter chunk count (rounded up to a multiple of
+        // the world size; 0 = auto, one chunk per rank)
+        spec.chunks = args.get_usize("chunks", spec.chunks)?;
         spec.intra_mbps = args.get_f64("intra-mbps", spec.intra_mbps)?;
         spec.inter_mbps = args.get_f64("inter-mbps", spec.inter_mbps)?;
         // virtual-time fabric + scenario knobs: any scenario flag

@@ -195,6 +195,33 @@ thread_local! {
     // fast-path gate: 0 = off, 1 = step, 2 = full
     static LEVEL: Cell<u8> = const { Cell::new(0) };
     static TLS: RefCell<Option<Collector>> = const { RefCell::new(None) };
+    // lane [`span`] opens on; helper threads (the pipeline encoder)
+    // override it via `lane_scope` so library spans opened inside their
+    // closures (codec Pack/Decode, merge) land on the helper's lane
+    // instead of colliding with the main thread's cpu-lane nesting
+    static DEFAULT_LANE: Cell<Lane> = const { Cell::new(Lane::Cpu) };
+}
+
+/// Restores the thread's previous default span lane on drop.
+pub struct LaneGuard {
+    prev: Lane,
+}
+
+impl Drop for LaneGuard {
+    fn drop(&mut self) {
+        DEFAULT_LANE.with(|l| l.set(self.prev));
+    }
+}
+
+/// Redirect this thread's [`span`] calls to `lane` until the guard drops.
+///
+/// The nesting checker treats each (rank, lane) pair as one timeline, so
+/// a thread running concurrently with the rank's main timeline must keep
+/// *all* its spans — including ones opened deep inside shared library
+/// code such as [`crate::collective::sparse::SegmentCodec`] — off the
+/// cpu lane. Explicit [`span_on`] calls are unaffected.
+pub fn lane_scope(lane: Lane) -> LaneGuard {
+    LaneGuard { prev: DEFAULT_LANE.with(|l| l.replace(lane)) }
 }
 
 /// Restores the previous thread binding (and flushes) on drop.
@@ -285,12 +312,13 @@ impl Drop for SpanGuard {
     }
 }
 
-/// Open a span on the current rank's cpu lane. Stamped with the wall clock
-/// now and the virtual clock as of the latest [`vclock`] update; closed
-/// (and buffered) when the guard drops.
+/// Open a span on the current thread's default lane (the cpu lane unless
+/// a [`lane_scope`] override is active). Stamped with the wall clock now
+/// and the virtual clock as of the latest [`vclock`] update; closed (and
+/// buffered) when the guard drops.
 #[inline]
 pub fn span(kind: SpanKind) -> SpanGuard {
-    span_on(kind, Lane::Cpu)
+    span_on(kind, DEFAULT_LANE.with(|l| l.get()))
 }
 
 /// Open a span on an explicit lane of the current rank. Used by code that

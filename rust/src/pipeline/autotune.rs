@@ -374,6 +374,47 @@ impl CodecPolicy {
     pub fn density_of(t: &SparseTensor) -> f64 {
         crate::collective::sparse::merge::density(t.nnz(), t.dense_len())
     }
+
+    /// Pick the flat collective schedule minimizing the α–β modelled
+    /// exchange time for a bucket of domain `d` with `nnz` entries
+    /// across `workers` ranks on `link`. Every flat schedule is
+    /// enumerated; [`Schedule::ChunkedRescatter`] is additionally swept
+    /// over chunk counts `{n, 2n, 4n}` (the streaming-granularity knob:
+    /// more chunks pay more α per frame). Returns the winner and its
+    /// chunk count (`0` for the non-chunked schedules). Note the lossy
+    /// `RingRescatter` competes on its reduced traffic — callers that
+    /// need the exact sum should skip it when it wins.
+    pub fn choose_schedule(
+        &self,
+        d: usize,
+        nnz: usize,
+        workers: usize,
+        link: Link,
+    ) -> (crate::collective::Schedule, usize) {
+        use crate::collective::Schedule;
+        use crate::simnet::{chunked_rescatter_time, flat_schedule_time, SegWire};
+        let w = SegWire::raw(0.5);
+        let mut best = (f64::INFINITY, Schedule::GatherAll, 0usize);
+        for sched in Schedule::flat() {
+            let chunk_counts: &[usize] = if sched == Schedule::ChunkedRescatter {
+                &[workers, 2 * workers, 4 * workers]
+            } else {
+                &[0]
+            };
+            for &chunks in chunk_counts {
+                let t = if sched == Schedule::ChunkedRescatter {
+                    chunked_rescatter_time(nnz as u64, d as u64, workers, chunks, link, w)
+                } else {
+                    flat_schedule_time(sched, nnz as u64, d as u64, workers, link, w, true)
+                };
+                if t < best.0 {
+                    best = (t, sched, chunks);
+                }
+            }
+        }
+        let (_, sched, chunks) = best;
+        (sched, chunks)
+    }
 }
 
 #[cfg(test)]
@@ -529,6 +570,34 @@ mod tests {
                 crate::compress::build_value_spec(&c.value, f64::NAN, 1).is_ok(),
                 "{c:?}"
             );
+        }
+    }
+
+    #[test]
+    fn schedule_choice_is_model_minimal() {
+        use crate::collective::Schedule;
+        use crate::simnet::{chunked_rescatter_time, flat_schedule_time, SegWire};
+        let p = bytes_only_policy();
+        let w = SegWire::raw(0.5);
+        let d = 1 << 16;
+        for (nnz, workers) in [(d / 1000, 8usize), (d / 100, 4), (d / 10, 8)] {
+            let link = Link::mbps(100.0);
+            let (sched, chunks) = p.choose_schedule(d, nnz, workers, link);
+            let picked = if sched == Schedule::ChunkedRescatter {
+                assert!(chunks >= workers, "{sched:?} chunks={chunks}");
+                chunked_rescatter_time(nnz as u64, d as u64, workers, chunks, link, w)
+            } else {
+                assert_eq!(chunks, 0, "{sched:?}");
+                flat_schedule_time(sched, nnz as u64, d as u64, workers, link, w, true)
+            };
+            for other in Schedule::flat() {
+                let t = if other == Schedule::ChunkedRescatter {
+                    chunked_rescatter_time(nnz as u64, d as u64, workers, workers, link, w)
+                } else {
+                    flat_schedule_time(other, nnz as u64, d as u64, workers, link, w, true)
+                };
+                assert!(picked <= t + 1e-15, "{sched:?} beaten by {other:?}: {picked} vs {t}");
+            }
         }
     }
 

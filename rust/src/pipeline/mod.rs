@@ -28,7 +28,7 @@ pub mod overlap;
 
 pub use autotune::{default_candidates, CodecChoice, CodecPolicy, CostSource, HierChoices};
 pub use bucket::{fuse, fuse_dense, unfuse, Bucket, BucketPlan};
-pub use overlap::{double_buffered, StepTimeline};
+pub use overlap::{double_buffered, streamed, StepTimeline};
 
 use crate::compress::{CodecRegistry, CodecSpec, CompressSpec, Container, DeepReduce};
 use crate::simnet::Link;
@@ -81,12 +81,14 @@ pub struct GradientPipeline {
 /// Candidate specs carry no explicit parameters; when the static spec
 /// configures a stage the candidate also uses (e.g. a CLI
 /// `bloom_p2(fpr=0.01)` static pair and the `bloom_p2` candidate),
-/// the configured parameters carry over. Known limitation (inherited
-/// from the pre-registry autotuner, which threaded the legacy `f64`
-/// the same way): [`CodecPolicy`] calibrates candidates at their
-/// *default* parameters, so far-from-default inherited values skew the
-/// byte estimates the pick was based on — the reported label, at
-/// least, names the codec that actually ran.
+/// the configured parameters carry over. Inheritance is applied to the
+/// candidate list *before* [`CodecPolicy`] calibration (see
+/// [`inherit_candidates`]), so the byte/throughput profiles describe
+/// the codec that will actually run — a far-from-default inherited
+/// parameter (say `bloom_p2(fpr=1e-9)`, whose filter outweighs raw
+/// indices) can and should flip the pick. Earlier revisions calibrated
+/// at default parameters and only inherited at build time, which skewed
+/// the estimates the pick was based on.
 fn inherit_params(spec: &mut CodecSpec, from: &CodecSpec) {
     for stage in &mut spec.stages {
         if stage.params.is_empty() {
@@ -97,6 +99,24 @@ fn inherit_params(spec: &mut CodecSpec, from: &CodecSpec) {
             }
         }
     }
+}
+
+/// Rewrite each candidate spec to its post-inheritance canonical label
+/// against the static spec, so calibration profiles (and the labels the
+/// policy reports) name the exact codec `build_candidate` will build.
+/// Unparsable entries pass through untouched — calibration will surface
+/// the error with the offending name.
+fn inherit_candidates(specs: Vec<String>, from: &CodecSpec) -> Vec<String> {
+    specs
+        .into_iter()
+        .map(|s| match CodecSpec::parse(&s) {
+            Ok(mut spec) => {
+                inherit_params(&mut spec, from);
+                spec.label()
+            }
+            Err(_) => s,
+        })
+        .collect()
 }
 
 /// Build one autotune-candidate codec pair through the registry.
@@ -138,6 +158,11 @@ impl GradientPipeline {
         );
         let policy = if autotune {
             let (idx, val) = default_candidates(error_feedback);
+            // calibrate at post-inheritance parameters: the static
+            // spec's explicit params apply to any candidate sharing the
+            // stage, and the profiles must describe that configuration
+            let idx = inherit_candidates(idx, &compress.index);
+            let val = inherit_candidates(val, &compress.value);
             Some(CodecPolicy::calibrate(&idx, &val, seed, link, workers))
         } else {
             None
@@ -341,6 +366,37 @@ mod tests {
         assert!(pipe.tuned.len() <= 1);
         // no hierarchy configured: no per-hop advice
         assert!(enc.hier_choices.is_none());
+    }
+
+    #[test]
+    fn calibration_happens_at_inherited_params() {
+        // the static spec pins a far-from-default fpr: ~43 bits/entry
+        // of Bloom filter (power-of-2 rounded) vs 32 bits for raw
+        // indices, so at the *inherited* parameters raw must win the
+        // index slot
+        let spec = CompressSpec::parse("bloom_p2(fpr=1e-9)", "raw").unwrap();
+        let idx = inherit_candidates(vec!["raw".into(), "bloom_p2".into()], &spec.index);
+        assert_eq!(idx, vec!["raw".to_string(), "bloom_p2(fpr=1e-9)".to_string()]);
+        let d = 1 << 14;
+        let nnz = d / 100;
+        let tuned =
+            CodecPolicy::calibrate_bytes_only(&idx, &["raw"], 7, Link::mbps(100.0), 4);
+        assert_eq!(tuned.choose(d, nnz).index, "raw");
+        // the pre-fix behaviour — calibrating the bare candidate at its
+        // default fpr (0.001, ~14 bits/entry) — picks the Bloom filter
+        // and would then build and ship a 3x larger one than estimated
+        let stale = CodecPolicy::calibrate_bytes_only(
+            &["raw", "bloom_p2"],
+            &["raw"],
+            7,
+            Link::mbps(100.0),
+            4,
+        );
+        assert_eq!(stale.choose(d, nnz).index, "bloom_p2");
+        // candidates whose stages the static spec does not configure
+        // pass through unchanged
+        let plain = inherit_candidates(vec!["rle+deflate".into()], &spec.index);
+        assert_eq!(plain, vec!["rle+deflate".to_string()]);
     }
 
     #[test]

@@ -54,11 +54,21 @@ impl StepTimeline {
     }
 }
 
-/// Run `count` buckets through a two-stage encode→ship pipeline with a
-/// one-slot hand-off: the encoder thread stays at most one bucket ahead
-/// of the shipper (classic double buffering), so bucket *i+1* encodes
-/// while bucket *i* is in flight.
-pub fn double_buffered<T, E, S>(count: usize, encode: E, mut ship: S)
+/// Run `count` items through a two-stage encode→ship pipeline: the
+/// encoder thread stays at most `lookahead` items ahead of the shipper,
+/// so item *i+1* encodes while item *i* is in flight. This is the
+/// chunk-granular streaming state machine the chunked collective
+/// schedule runs *inside* a ring step (encode of sub-chunk *i+1*
+/// overlapping send/recv/merge of sub-chunk *i*); `double_buffered`
+/// below is the one-slot bucket-level specialization.
+///
+/// The encoder thread re-installs the caller's tracer and redirects its
+/// default span lane to [`crate::obs::Lane::Encoder`], so spans opened
+/// *inside* the encode closure (the segment codec's `Pack`, merge
+/// kernels, …) stay off the shipper's cpu lane and the per-(rank, lane)
+/// nesting invariant holds. `ship` runs on the calling thread and is
+/// not wrapped in any span — callers own the shipping spans.
+pub fn streamed<T, E, S>(count: usize, lookahead: usize, encode: E, mut ship: S)
 where
     T: Send,
     E: FnMut(usize) -> T + Send,
@@ -71,19 +81,22 @@ where
     // encode spans land on the same rank's lane
     let trace = crate::obs::scope();
     std::thread::scope(|scope| {
-        let (tx, rx) = std::sync::mpsc::sync_channel::<(usize, T)>(1);
+        let (tx, rx) = std::sync::mpsc::sync_channel::<(usize, T)>(lookahead.max(1));
         scope.spawn(move || {
             let _bind = trace.map(|(tracer, rank)| tracer.install(rank));
+            // encoder lane: runs concurrently with the shipper's cpu
+            // lane by design, so it gets its own nesting tree — and the
+            // lane override extends it to spans opened by library code
+            // the closure calls into
+            let _lane = crate::obs::lane_scope(crate::obs::Lane::Encoder);
             let mut encode = encode;
             for i in 0..count {
                 let item = {
-                    // encoder lane: runs concurrently with the shipper's
-                    // cpu lane by design, so it gets its own nesting tree
                     let mut sp = crate::obs::span_on(
                         crate::obs::SpanKind::Encode,
                         crate::obs::Lane::Encoder,
                     );
-                    sp.label_with(|| format!("overlap bucket {i}"));
+                    sp.label_with(|| format!("overlap encode {i}"));
                     encode(i)
                 };
                 if tx.send((i, item)).is_err() {
@@ -93,10 +106,25 @@ where
         });
         for _ in 0..count {
             let (i, item) = rx.recv().expect("encoder thread hung up");
-            let mut sp = crate::obs::span(crate::obs::SpanKind::Send);
-            sp.label_with(|| format!("overlap ship {i}"));
             ship(i, item);
         }
+    });
+}
+
+/// Run `count` buckets through a two-stage encode→ship pipeline with a
+/// one-slot hand-off: the encoder thread stays at most one bucket ahead
+/// of the shipper (classic double buffering), so bucket *i+1* encodes
+/// while bucket *i* is in flight.
+pub fn double_buffered<T, E, S>(count: usize, encode: E, mut ship: S)
+where
+    T: Send,
+    E: FnMut(usize) -> T + Send,
+    S: FnMut(usize, T),
+{
+    streamed(count, 1, encode, |i, item| {
+        let mut sp = crate::obs::span(crate::obs::SpanKind::Send);
+        sp.label_with(|| format!("overlap ship {i}"));
+        ship(i, item);
     });
 }
 
@@ -131,6 +159,24 @@ mod tests {
         assert_eq!(shipped, (0..10).collect::<Vec<_>>());
         // empty pipeline is a no-op
         double_buffered(0, |_| 0u8, |_, _| panic!("nothing to ship"));
+    }
+
+    #[test]
+    fn streamed_lookahead_preserves_order() {
+        for lookahead in [1usize, 2, 4, 16] {
+            let mut shipped = Vec::new();
+            streamed(
+                7,
+                lookahead,
+                |i| i + 100,
+                |i, v| {
+                    assert_eq!(v, i + 100);
+                    shipped.push(i);
+                },
+            );
+            assert_eq!(shipped, (0..7).collect::<Vec<_>>(), "lookahead {lookahead}");
+        }
+        streamed(0, 3, |_| 0u8, |_, _| panic!("nothing to ship"));
     }
 
     #[test]

@@ -233,6 +233,61 @@ pub fn ring_rescatter_time(
     t
 }
 
+/// Total fabric bytes of ChunkedRescatter under uniform load: the
+/// varint histogram allgather (every rank ships `balance_bins` counts of
+/// ~`nnz/bins` entries each to n−1 peers), the pairwise direct-exchange
+/// reduce-scatter (`m` sub-chunk frames of `nnz/p` entries per peer,
+/// p = m·n), and the ring allgather of the merged groups (`m` frames of
+/// up to `n·nnz/p` entries per step). `chunks = 0` models the auto
+/// split (one chunk per rank), mirroring `ChunkedRescatter::sub_chunks`.
+pub fn chunked_rescatter_bytes(nnz: u64, d: u64, n: usize, chunks: usize, w: SegWire) -> u64 {
+    if n <= 1 {
+        return 0;
+    }
+    let nn = n as u64;
+    let m = crate::collective::sparse::ChunkedRescatter::sub_chunks(chunks, n) as u64;
+    let p = m * nn;
+    let bins = crate::collective::sparse::merge::balance_bins(d as usize, p as usize) as u64;
+    let hist_blob = bins * crate::util::varint::encoded_len(nnz / bins) as u64;
+    let sub_w = d / p;
+    let sub_k = (nnz / p).min(sub_w);
+    let merged = (nn * (nnz / p)).min(sub_w);
+    nn * (nn - 1)
+        * (hist_blob
+            + m * (w.segment_bytes(sub_k, sub_w) + w.segment_bytes(merged, sub_w)))
+}
+
+/// Per-worker α–β time of ChunkedRescatter: n−1 histogram transfers,
+/// then (n−1)·m pairwise reduce-scatter frames and (n−1)·m allgather
+/// frames. Every frame pays α, so larger chunk counts trade latency for
+/// finer streaming overlap — the knob the autotuner sweeps.
+pub fn chunked_rescatter_time(
+    nnz: u64,
+    d: u64,
+    n: usize,
+    chunks: usize,
+    link: Link,
+    w: SegWire,
+) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let nn = n as u64;
+    let m = crate::collective::sparse::ChunkedRescatter::sub_chunks(chunks, n) as u64;
+    let p = m * nn;
+    let bins = crate::collective::sparse::merge::balance_bins(d as usize, p as usize) as u64;
+    let hist_blob = bins * crate::util::varint::encoded_len(nnz / bins) as u64;
+    let sub_w = d / p;
+    let sub_k = (nnz / p).min(sub_w);
+    let merged = (nn * (nnz / p)).min(sub_w);
+    (n - 1) as f64
+        * ((link.latency_s + hist_blob as f64 / link.bandwidth_bps)
+            + m as f64
+                * (link.latency_s + w.segment_bytes(sub_k, sub_w) as f64 / link.bandwidth_bps)
+            + m as f64
+                * (link.latency_s + w.segment_bytes(merged, sub_w) as f64 / link.bandwidth_bps))
+}
+
 // ---------------------------------------------------------------------
 // Two-level (node × rank) models for the hierarchical schedule
 // (collective::sparse::Hierarchical, DESIGN.md §8). Real clusters have
@@ -259,6 +314,7 @@ pub fn flat_schedule_bytes(
         Schedule::RecursiveDouble => recursive_double_bytes(nnz, d, n, w),
         Schedule::RingRescatter => ring_rescatter_bytes(nnz, d, n, w, resparsify),
         Schedule::RingRescatterExact => ring_rescatter_bytes(nnz, d, n, w, false),
+        Schedule::ChunkedRescatter => chunked_rescatter_bytes(nnz, d, n, 0, w),
     }
 }
 
@@ -278,6 +334,7 @@ pub fn flat_schedule_time(
         Schedule::RecursiveDouble => recursive_double_time(nnz, d, n, link, w),
         Schedule::RingRescatter => ring_rescatter_time(nnz, d, n, link, w, resparsify),
         Schedule::RingRescatterExact => ring_rescatter_time(nnz, d, n, link, w, false),
+        Schedule::ChunkedRescatter => chunked_rescatter_time(nnz, d, n, 0, link, w),
     }
 }
 
@@ -475,6 +532,8 @@ mod tests {
         assert_eq!(gather_all_time(100, 1000, 1, Link::gbps(1.0), w), 0.0);
         assert_eq!(recursive_double_time(100, 1000, 1, Link::gbps(1.0), w), 0.0);
         assert_eq!(ring_rescatter_time(100, 1000, 1, Link::gbps(1.0), w, true), 0.0);
+        assert_eq!(chunked_rescatter_bytes(100, 1000, 1, 0, w), 0);
+        assert_eq!(chunked_rescatter_time(100, 1000, 1, 0, Link::gbps(1.0), w), 0.0);
         let solo = Topology::flat(1);
         assert_eq!(hierarchical_bytes(100, 1000, solo, w, Schedule::GatherAll, true), (0, 0));
         assert_eq!(
@@ -555,6 +614,50 @@ mod tests {
                     (wire - predicted).abs() / predicted < 0.02,
                     "{sched:?} n={n}: wire {wire} vs model {predicted}"
                 );
+            }
+        }
+    }
+
+    /// The chunked model must track the fabric within 2% across world
+    /// sizes, densities and chunk counts (histogram exchange included).
+    #[test]
+    fn chunked_byte_model_matches_wire() {
+        use crate::collective::sparse::{Schedule, SparseConfig};
+        use crate::collective::Network;
+        use std::thread;
+
+        let d = 8192usize;
+        let w = SegWire::raw(0.5);
+        for n in [4usize, 8] {
+            for k in [512usize, 1024] {
+                for chunks in [0usize, 2 * n] {
+                    let inputs = strided_inputs(n, d, k);
+                    let net = Network::new(n);
+                    let cfg = SparseConfig { chunks, ..SparseConfig::default() };
+                    let handles: Vec<_> = net
+                        .endpoints()
+                        .into_iter()
+                        .zip(inputs)
+                        .map(|(ep, t)| {
+                            thread::spawn(move || {
+                                Schedule::ChunkedRescatter
+                                    .build(cfg)
+                                    .allreduce(&ep, t)
+                                    .unwrap()
+                            })
+                        })
+                        .collect();
+                    for h in handles {
+                        h.join().unwrap();
+                    }
+                    let wire = net.total_bytes() as f64;
+                    let model =
+                        chunked_rescatter_bytes(k as u64, d as u64, n, chunks, w) as f64;
+                    assert!(
+                        (wire - model).abs() / model < 0.02,
+                        "n={n} k={k} chunks={chunks}: wire {wire} vs model {model}"
+                    );
+                }
             }
         }
     }

@@ -205,11 +205,17 @@ fn span_trees_nest_for_every_schedule() {
         // non-power-of-two exercises the fold/unfold pre-rounds
         (Schedule::RecursiveDouble, Topology::flat(3)),
         (Schedule::RingRescatter, Topology::flat(4)),
+        // chunks=8 forces two sub-chunks per rank at n=4 (three at
+        // n=3), so the streamed encoder lane and the per-round frame
+        // interleave are both exercised
+        (Schedule::ChunkedRescatter, Topology::flat(4)),
+        (Schedule::ChunkedRescatter, Topology::flat(3)),
         (Schedule::Hierarchical, Topology::new(2, 2)),
     ];
     for (sched, topo) in cases {
         let cfg = SparseConfig {
             topology: (sched == Schedule::Hierarchical).then_some(topo),
+            chunks: if sched == Schedule::ChunkedRescatter { 8 } else { 0 },
             ..SparseConfig::default()
         };
         let tracer = Tracer::new(TraceLevel::Full, topo.world());

@@ -287,9 +287,12 @@ fn hierarchical_byte_identical_to_gather_all_across_node_shapes() {
             let d = 30 + rng.below(400) as usize;
             let inputs = integer_inputs(&mut rng, n, d);
             let reference = run_schedule(Schedule::GatherAll, &inputs);
-            for inner in
-                [Schedule::GatherAll, Schedule::RecursiveDouble, Schedule::RingRescatterExact]
-            {
+            for inner in [
+                Schedule::GatherAll,
+                Schedule::RecursiveDouble,
+                Schedule::RingRescatterExact,
+                Schedule::ChunkedRescatter,
+            ] {
                 let cfg = SparseConfig {
                     topology: Some(topo),
                     inner,
@@ -307,6 +310,77 @@ fn hierarchical_byte_identical_to_gather_all_across_node_shapes() {
     }
 }
 
+/// The acceptance pin of the chunked schedule: across world sizes 2–8
+/// (non-powers-of-two included) and chunk counts {auto, 1, P, 4P} (the
+/// knob rounds up to a multiple of the world size), the result must be
+/// *byte-identical* to GatherAll on integer-valued gradients on every
+/// rank — no re-sparsification, no merge-order divergence.
+#[test]
+fn chunked_byte_identical_to_gather_all() {
+    let mut rng = Rng::new(0xC4C4);
+    for n in 2usize..=8 {
+        let d = 30 + rng.below(400) as usize;
+        let inputs = integer_inputs(&mut rng, n, d);
+        let reference = run_schedule(Schedule::GatherAll, &inputs);
+        for chunks in [0usize, 1, n, 4 * n] {
+            let cfg = SparseConfig { chunks, ..SparseConfig::default() };
+            let outs = run_with(Schedule::ChunkedRescatter, cfg, &inputs);
+            for (rank, (out, want)) in outs.iter().zip(&reference).enumerate() {
+                assert_eq!(
+                    out, want,
+                    "n={n} chunks={chunks} rank {rank} diverged from gather_all"
+                );
+            }
+        }
+    }
+}
+
+/// Heavily clustered supports: the balanced bounds subdivide the hot
+/// region and leave most of the domain in empty chunks — empty-chunk
+/// frames and fully-dense sub-chunk frames must both survive, and the
+/// sum stays byte-identical to GatherAll.
+#[test]
+fn chunked_balances_skewed_support_with_empty_chunks() {
+    let d = 4096usize;
+    for n in [3usize, 4, 8] {
+        // every rank's support lives in the first 1/16 of the domain,
+        // fully dense there — the equal-width partition would hand
+        // chunk 0 everything
+        let hot = d / 16;
+        let inputs: Vec<SparseTensor> = (0..n)
+            .map(|r| {
+                let idx: Vec<u32> = (0..hot as u32).collect();
+                let val: Vec<f32> = (0..hot).map(|i| ((i + r) % 7 + 1) as f32).collect();
+                SparseTensor::new(d, idx, val)
+            })
+            .collect();
+        let reference = run_schedule(Schedule::GatherAll, &inputs);
+        for chunks in [0usize, 4 * n] {
+            let cfg = SparseConfig { chunks, ..SparseConfig::default() };
+            let outs = run_with(Schedule::ChunkedRescatter, cfg, &inputs);
+            for (rank, (out, want)) in outs.iter().zip(&reference).enumerate() {
+                assert_eq!(out, want, "n={n} chunks={chunks} rank {rank}");
+            }
+        }
+    }
+}
+
+/// An empty rank contributes an all-zero histogram and empty frames;
+/// the remaining ranks' sum must still come through untouched.
+#[test]
+fn chunked_survives_empty_rank_input() {
+    let mut rng = Rng::new(0xC4C5);
+    let n = 5;
+    let d = 300;
+    let mut inputs = integer_inputs(&mut rng, n, d);
+    inputs[0] = SparseTensor::new(d, Vec::new(), Vec::new());
+    let reference = run_schedule(Schedule::GatherAll, &inputs);
+    let outs = run_schedule(Schedule::ChunkedRescatter, &inputs);
+    for (rank, (out, want)) in outs.iter().zip(&reference).enumerate() {
+        assert_eq!(out, want, "rank {rank}");
+    }
+}
+
 /// Gaussian-valued differential test (tolerance-based, where f32
 /// association noise is expected): hierarchical must match the dense
 /// ring allreduce on every rank, for every node shape and inner.
@@ -319,9 +393,12 @@ fn hierarchical_matches_dense_reference_gaussian() {
         let d = 64 + rng.below(500) as usize;
         let inputs = random_inputs(&mut rng, n, d);
         let reference = dense_reference(&inputs);
-        for inner in
-            [Schedule::GatherAll, Schedule::RecursiveDouble, Schedule::RingRescatterExact]
-        {
+        for inner in [
+            Schedule::GatherAll,
+            Schedule::RecursiveDouble,
+            Schedule::RingRescatterExact,
+            Schedule::ChunkedRescatter,
+        ] {
             let cfg = SparseConfig { topology: Some(topo), inner, ..SparseConfig::default() };
             for (rank, out) in run_with(Schedule::Hierarchical, cfg, &inputs).iter().enumerate() {
                 let dense = out.to_dense();
