@@ -22,14 +22,23 @@
 //!
 //! `--smoke` runs the reduced sweep CI uses.
 
+//! `--fabric fleet [--ranks N]` switches the sweep onto the
+//! single-threaded fleet event-loop runner (`deepreduce::fleetsim`):
+//! same schedules, same virtual clocks and byte meters, no OS threads —
+//! the path that scales to 10k ranks (see the README fleet-scale
+//! cookbook). At ≥4096 ranks the chunked step must finish under 60 s
+//! of wall time (asserted).
+
+use deepreduce::collective::sparse::SegmentCodec;
 use deepreduce::collective::{Schedule, SparseConfig, Topology};
+use deepreduce::fleetsim::FleetFabric;
 use deepreduce::obs::{self, Lane, Span, SpanKind, StepWindow, TraceLevel, TraceReport, Tracer};
 use deepreduce::simnet::{flat_schedule_time, Link, SegWire};
 use deepreduce::tensor::SparseTensor;
 use deepreduce::util::benchkit::{BenchSummary, Table};
 use deepreduce::util::json::Json;
 use deepreduce::util::prng::Rng;
-use deepreduce::util::testkit::sorted_support;
+use deepreduce::util::testkit::{scenario_corpus, sorted_support};
 use deepreduce::vfabric::{Scenario, VirtualNetwork};
 use std::collections::BTreeMap;
 use std::thread;
@@ -135,6 +144,173 @@ fn traced_coverage(
     (cov, report)
 }
 
+/// Run one schedule on the single-threaded fleet event-loop runner;
+/// returns (measured critical-path seconds, total rank idle seconds,
+/// (total, intra, inter) fabric bytes). The event-loop twin of
+/// [`measured`] — byte- and virtual-time-identical to it at every
+/// differential point (`tests/fleetsim_equivalence.rs`), but with no
+/// OS threads, which is what lets the sweep scale to 10k ranks.
+fn measured_fleet(
+    sched: Schedule,
+    topo: Topology,
+    intra: Link,
+    inter: Link,
+    scenario: &Scenario,
+    inputs: &[SparseTensor],
+) -> (f64, f64, (u64, u64, u64)) {
+    let mut fabric = FleetFabric::new(topo, intra, inter, scenario.clone());
+    let cfg = SparseConfig { topology: Some(topo), ..SparseConfig::default() };
+    let codec = SegmentCodec::raw(cfg.dense_switch);
+    fabric.allreduce(sched, &cfg, &codec, inputs.to_vec()).unwrap();
+    (
+        fabric.max_clock_s(),
+        fabric.total_idle_s(),
+        (fabric.total_bytes(), fabric.intra_bytes(), fabric.inter_bytes()),
+    )
+}
+
+/// The `--fabric fleet` sweep. Two legs:
+///
+/// 1. **corpus leg** (n = 8): every flat schedule × every
+///    [`scenario_corpus`] entry on the fleet runner, with a threaded
+///    cross-check (GatherAll clocks must agree to ±1e-9) — a cheap
+///    bench-level echo of the differential test suite.
+/// 2. **scale leg** (n = `--ranks`, default 4096): one
+///    `chunked_rescatter` step at d = 2^20, density 0.001 on a flat
+///    topology under the inactive scenario (the barrage fast path).
+///    Asserts the step stays under 60 s of wall time at n ≥ 4096 —
+///    the fleet-scale acceptance bar (see the README cookbook).
+fn fleet_sweep(ranks: usize, smoke: bool) {
+    // distinct summary name: CI runs both modes and BENCH_<name>.json
+    // lands at the repo root — same name would clobber the threaded run
+    let mut summary = BenchSummary::new("vfabric_scaling_fleet");
+    summary.set("fabric", Json::Str("fleet".to_string()));
+    summary.set("ranks", Json::Num(ranks as f64));
+    summary.set("smoke", Json::Bool(smoke));
+    let slow = Link::mbps(100.0);
+    let mut rng = Rng::new(42);
+
+    // ---- corpus leg: n = 8, all flat schedules × scenario corpus ----
+    let n = 8usize;
+    let d = 1usize << 15;
+    let k = ((d as f64 * 0.001) as usize).max(1);
+    let inputs: Vec<SparseTensor> = (0..n)
+        .map(|_| {
+            let support = sorted_support(&mut rng, d, k);
+            let values: Vec<f32> = (0..k).map(|_| rng.next_gaussian() as f32).collect();
+            SparseTensor::new(d, support, values)
+        })
+        .collect();
+    let mut table = Table::new(
+        "fleet event-loop runner — measured virtual step time, scenario corpus @ n=8",
+        &["scenario", "schedule", "measured", "idle(sum)", "bytes"],
+    );
+    let corpus = scenario_corpus(7, n);
+    let labels = ["baseline", "straggled", "jittery", "hetero", "flappy", "stormy"];
+    for (scenario, label) in corpus.iter().zip(labels) {
+        for sched in Schedule::flat() {
+            let (t, idle, (bytes, _, _)) =
+                measured_fleet(sched, Topology::flat(n), slow, slow, scenario, &inputs);
+            table.row(&[
+                label.to_string(),
+                sched.name().to_string(),
+                format!("{:.3}ms", t * 1e3),
+                format!("{:.3}ms", idle * 1e3),
+                format!("{bytes}"),
+            ]);
+            summary.row(&[
+                ("leg", Json::Str("corpus".to_string())),
+                ("scenario", Json::Str(label.to_string())),
+                ("schedule", Json::Str(sched.name().to_string())),
+                ("measured_s", Json::Num(t)),
+                ("idle_s", Json::Num(idle)),
+                ("fabric_bytes", Json::Num(bytes as f64)),
+            ]);
+        }
+        // cross-check against the threaded fabric: the differential
+        // suite pins all schedules; one per scenario keeps the bench
+        // honest without re-running it
+        let (ft, fi, _) =
+            measured_fleet(Schedule::GatherAll, Topology::flat(n), slow, slow, scenario, &inputs);
+        let (tt, ti, _) =
+            measured(Schedule::GatherAll, Topology::flat(n), slow, slow, scenario, &inputs);
+        assert!(
+            (ft - tt).abs() <= 1e-9 && (fi - ti).abs() <= 1e-9,
+            "fleet/threaded divergence under {label}: clock {ft} vs {tt}, idle {fi} vs {ti}"
+        );
+    }
+    table.print();
+    println!("  [cross-check] fleet == threaded (±1e-9) across {} corpus scenarios", corpus.len());
+
+    // ---- scale leg: one step at `ranks` ranks ----
+    let d = 1usize << 20;
+    let k = ((d as f64 * 0.001) as usize).max(1);
+    let scale_inputs: Vec<SparseTensor> = (0..ranks)
+        .map(|r| {
+            // lattice supports: deterministic and cheap (sampling via
+            // Rng at 10k ranks would dominate setup time); an odd
+            // multiplier is invertible mod the power-of-two domain, so
+            // each rank gets exactly k distinct indices
+            let a = ranks | 1;
+            let mut support: Vec<u32> = (0..k).map(|i| ((i * a + r) % d) as u32).collect();
+            support.sort_unstable();
+            support.dedup();
+            let values: Vec<f32> =
+                (0..support.len()).map(|i| (i % 7) as f32 * 0.25 + 0.5).collect();
+            SparseTensor::new(d, support, values)
+        })
+        .collect();
+    let mut scale_table = Table::new(
+        "fleet event-loop runner — fleet-scale single step",
+        &["ranks", "schedule", "virtual", "wall", "inter bytes"],
+    );
+    // chunked only: gather_all's merge cost is O(n·min(n·k, d)) per
+    // rank — the accumulator densifies at d, which at 4096+ ranks is
+    // ~1e13 element ops fleet-wide. The chunked schedule's per-rank
+    // work stays O(n·k/n + k) and is the scale story being measured.
+    for sched in [Schedule::ChunkedRescatter] {
+        let t0 = std::time::Instant::now();
+        let (t, idle, (_, _, inter)) = measured_fleet(
+            sched,
+            Topology::flat(ranks),
+            slow,
+            slow,
+            &Scenario::none(7),
+            &scale_inputs,
+        );
+        let wall = t0.elapsed().as_secs_f64();
+        scale_table.row(&[
+            format!("{ranks}"),
+            sched.name().to_string(),
+            format!("{t:.3}s"),
+            format!("{wall:.2}s"),
+            format!("{inter}"),
+        ]);
+        summary.row(&[
+            ("leg", Json::Str("scale".to_string())),
+            ("ranks", Json::Num(ranks as f64)),
+            ("schedule", Json::Str(sched.name().to_string())),
+            ("measured_s", Json::Num(t)),
+            ("idle_s", Json::Num(idle)),
+            ("wall_s", Json::Num(wall)),
+            ("inter_bytes", Json::Num(inter as f64)),
+        ]);
+        if sched == Schedule::ChunkedRescatter && ranks >= 4096 {
+            assert!(
+                wall < 60.0,
+                "chunked_rescatter step at {ranks} ranks took {wall:.1}s wall \
+                 (fleet-scale acceptance bar is 60s)"
+            );
+            println!("  [scale] chunked step at {ranks} ranks: {wall:.2}s wall (< 60s bar)");
+        }
+    }
+    scale_table.print();
+    match summary.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench summary: {e}"),
+    }
+}
+
 /// One scenario of the sweep: a fabric configuration whose measured
 /// schedule ranking is compared against `baseline_of` (None = this IS
 /// a baseline).
@@ -148,7 +324,25 @@ struct Case {
 }
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let value_of = |key: &str| -> Option<String> {
+        argv.iter()
+            .position(|a| a == key)
+            .and_then(|i| argv.get(i + 1).cloned())
+            .or_else(|| {
+                argv.iter()
+                    .find_map(|a| a.strip_prefix(&format!("{key}=")).map(String::from))
+            })
+    };
+    let fleet = value_of("--fabric").as_deref() == Some("fleet");
+    if fleet {
+        let ranks: usize = value_of("--ranks")
+            .map(|s| s.parse().expect("--ranks expects an integer"))
+            .unwrap_or(4096);
+        fleet_sweep(ranks, smoke);
+        return;
+    }
     let d = 1usize << 15;
     let n = 8usize;
     let flat = Topology::flat(n);

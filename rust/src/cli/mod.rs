@@ -22,6 +22,7 @@ pub const KNOWN_FLAGS: &[&str] = &[
     "schedule", "topology", "inner-schedule", "chunks", "intra-mbps", "inter-mbps",
     // train: virtual-time fabric + scenarios
     "fabric", "straggler", "compute-jitter", "link-jitter", "node-mbps",
+    "link-flap", "crash",
     // train: gradient pipeline
     "bucket-bytes", "autotune", "pipeline-link-mbps", "autotune-cost",
     // train: observability
@@ -76,14 +77,22 @@ train — run distributed training with a DeepReduce instantiation
   --inter-mbps <f>                modelled inter-node link, Mbps (default 100)
 
   virtual-time fabric (scenario knobs imply --fabric virtual):
-  --fabric <instant|virtual>      instant = zero-time delivery (default);
+  --fabric <instant|virtual|fleet> instant = zero-time delivery (default);
                                   virtual = event-driven virtual clocks, adds
-                                  measured_step_s / rank_idle_s to the report
+                                  measured_step_s / rank_idle_s to the report;
+                                  fleet = single-threaded event-loop twin of
+                                  virtual (same clocks and byte meters, no OS
+                                  threads — scales to 10k+ ranks)
   --straggler <R:F[,R:F...]>      rank R computes Fx slower, links at beta/F
   --compute-jitter <f>            per-step compute jitter amplitude (e.g. 0.3)
   --link-jitter <f>               per-transfer time jitter amplitude
   --node-mbps <N:MBPS[,...]>      per-node inter-link bandwidth overrides
                                   (heterogeneous clusters)
+  --link-flap <N:A-B:F[,...]>     node N's inter links run F x slower in the
+                                  virtual-time window [A, B) seconds
+  --crash <R:A-B[,...]>           rank R sits out steps [A, B) (lost-gradient
+                                  semantics; implies --fabric fleet, flat
+                                  topology only)
 
   gradient pipeline:
   --bucket-bytes <n>              fused bucket cap in bytes (0 = per-tensor)

@@ -28,6 +28,9 @@
 //! (send/recv/merge on the calling thread). No re-sparsification
 //! happens anywhere, so the result is the exact sum — byte-identical to
 //! [`super::GatherAll`] on integer-valued gradients.
+//!
+//! Lockstep: `fleetsim::kernels::ChunkedTask` mirrors this send/recv
+//! program order exactly — change one, change both (DESIGN.md §13).
 
 use super::{merge, SegmentCodec, SparseAllreduce, SparseConfig};
 use crate::collective::{all_gather_peers, Comm};

@@ -2,6 +2,9 @@
 //! hard-wired — every rank ships its whole compressed tensor to every
 //! peer and sums locally. O(n·k) per worker; refactored behind the
 //! [`SparseAllreduce`] trait so the better schedules are drop-in.
+//!
+//! Lockstep: `fleetsim::kernels::GatherAllTask` mirrors this send/recv
+//! program order exactly — change one, change both (DESIGN.md §13).
 
 use super::{merge, SegmentCodec, SparseAllreduce, SparseConfig};
 use crate::collective::{all_gather_peers, Comm};

@@ -29,6 +29,9 @@
 //! in `tests/sparse_allreduce.rs` pin byte-identical results on
 //! integer-valued gradients).
 //!
+//! Lockstep: `fleetsim::kernels::HierTask` mirrors this send/recv
+//! program order exactly — change one, change both (DESIGN.md §13).
+//!
 //! [`GatherAll`]: super::GatherAll
 //! [`RecursiveDouble`]: super::RecursiveDouble
 //! [`RingRescatter`]: super::RingRescatter

@@ -7,6 +7,10 @@
 //!
 //! Non-power-of-two worlds fold the `n − p` extra ranks into the first
 //! `p = 2^⌊log₂ n⌋` before doubling and unfold the result after.
+//!
+//! Lockstep: `fleetsim::kernels::RecursiveDoubleTask` mirrors this
+//! send/recv program order exactly — change one, change both
+//! (DESIGN.md §13).
 
 use super::{merge, prev_power_of_two, SegmentCodec, SparseAllreduce, SparseConfig};
 use crate::collective::Comm;

@@ -14,6 +14,9 @@
 //! the dropped mass is *not* fed back into any error-feedback memory —
 //! callers that need exact sums (or EF-accurate compensation) should use
 //! the `resparsify: false` variant (`Schedule::RingRescatterExact`).
+//!
+//! Lockstep: `fleetsim::kernels::RingTask` mirrors this send/recv
+//! program order exactly — change one, change both (DESIGN.md §13).
 
 use super::{merge, SegmentCodec, SparseAllreduce, SparseConfig};
 use crate::collective::Comm;

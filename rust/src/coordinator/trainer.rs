@@ -90,10 +90,13 @@ pub struct CompressionSpec {
     /// step-time metrics (matches the paper's 100 Mbps default)
     pub pipeline_link_mbps: f64,
     /// which fabric the gradient exchange runs on: `instant` (default;
-    /// zero-time delivery, formula-only timing) or `virtual` — the
+    /// zero-time delivery, formula-only timing), `virtual` — the
     /// event-driven virtual-time fabric (`crate::vfabric`) that
     /// *measures* `measured_step_s`/`rank_idle_s` and enables the
-    /// scenario knobs below
+    /// scenario knobs below — or `fleet`, the single-threaded
+    /// event-loop twin (`crate::fleetsim`): same virtual clock and byte
+    /// meters, no OS threads, scales to 10k+ ranks and supports
+    /// `--crash`
     pub fabric: String,
     /// straggler list `R:F[,R:F…]` (CLI `--straggler`): rank R computes
     /// F× slower and its links run at β/F. Virtual fabric only;
@@ -108,6 +111,15 @@ pub struct CompressionSpec {
     /// per-node inter-link bandwidth overrides `N:MBPS[,…]` (CLI
     /// `--node-mbps`; heterogeneous clusters, virtual fabric only)
     pub node_mbps: String,
+    /// transient inter-link degradation windows
+    /// `NODE:START-END:FACTOR[,…]` (CLI `--link-flap`; virtual and
+    /// fleet fabrics)
+    pub link_flap: String,
+    /// rank crash/rejoin windows `R:A-B[,…]` (CLI `--crash`): rank R
+    /// sits out steps `[A, B)` and its gradient is lost those steps
+    /// (synchronous lost-worker semantics — the divisor stays the world
+    /// size). Fleet fabric only, flat topology only
+    pub crash: String,
     /// autotuner comm-cost source (CLI `--autotune-cost`): `formula`
     /// (α–β closed form) or `measured` (virtual-fabric feedback — see
     /// [`CostSource`])
@@ -145,6 +157,8 @@ impl CompressionSpec {
             compute_jitter: 0.0,
             link_jitter: 0.0,
             node_mbps: String::new(),
+            link_flap: String::new(),
+            crash: String::new(),
             autotune_cost: "formula".into(),
             trace: "off".into(),
             seed: 0xDEE9,
@@ -501,6 +515,71 @@ fn worker_loop(
     }
 }
 
+/// The fleet-fabric counterpart of [`CollectivePool`]: no threads, no
+/// channels — every rank's collective runs as a state machine inside
+/// [`crate::fleetsim::FleetFabric`]'s event loop, on the same virtual
+/// clock and byte meters as the threaded virtual fabric. This is the
+/// path that scales past thread-per-rank (10k+ ranks) and the one that
+/// supports elastic membership (`--crash`).
+struct FleetPool {
+    fabric: crate::fleetsim::FleetFabric,
+    sched: Schedule,
+    cfg: SparseConfig,
+    codec: SegmentCodec,
+    /// the virtual time the last completed step ended at
+    virtual_now: f64,
+}
+
+impl FleetPool {
+    /// Run one step's exchange: replay each alive rank's busy time,
+    /// then allreduce every bucket over the alive membership. Returns
+    /// the summed buckets plus `(start, end, idle)` per world rank
+    /// (crashed ranks report a zero-width window at the barrier).
+    #[allow(clippy::type_complexity)]
+    fn exchange(
+        &mut self,
+        pending: Vec<Vec<SparseTensor>>,
+        advance_s: &[f64],
+        step_start: f64,
+        step: usize,
+        scenario: &Scenario,
+    ) -> anyhow::Result<(Vec<SparseTensor>, Vec<(f64, f64, f64)>)> {
+        let n = self.fabric.n();
+        let alive = scenario.alive_members(n, step);
+        anyhow::ensure!(!alive.is_empty(), "every rank is crashed at step {step}");
+        for &r in &alive {
+            self.fabric.sync_to(r, step_start);
+            self.fabric.elapse(r, advance_s[r]);
+        }
+        let starts: Vec<f64> = (0..n).map(|r| self.fabric.clock_s(r)).collect();
+        let idle0: Vec<f64> = (0..n).map(|r| self.fabric.idle_s(r)).collect();
+        let buckets = pending[alive[0]].len();
+        let mut feeds: Vec<std::vec::IntoIter<SparseTensor>> =
+            pending.into_iter().map(|v| v.into_iter()).collect();
+        let mut summed = Vec::with_capacity(buckets);
+        for _ in 0..buckets {
+            let inputs: Vec<SparseTensor> = alive
+                .iter()
+                .map(|&r| feeds[r].next().expect("bucket counts match across ranks"))
+                .collect();
+            let outs =
+                self.fabric.allreduce_members(&alive, self.sched, &self.cfg, &self.codec, inputs)?;
+            // all members hold identical sums; keep the first
+            summed.push(outs.into_iter().next().expect("nonempty membership"));
+        }
+        let windows = (0..n)
+            .map(|r| {
+                if scenario.alive(r, step) {
+                    (starts[r], self.fabric.clock_s(r), self.fabric.idle_s(r) - idle0[r])
+                } else {
+                    (step_start, step_start, 0.0)
+                }
+            })
+            .collect();
+        Ok((summed, windows))
+    }
+}
+
 pub struct Trainer {
     cfg: TrainConfig,
     artifact: Artifact,
@@ -515,9 +594,13 @@ pub struct Trainer {
     threelc: Option<crate::baselines::ThreeLC>,
     /// `ef[worker][tensor]`
     ef: Vec<Vec<ErrorFeedback>>,
-    /// Some(_) whenever compression is on: the persistent fabric +
-    /// worker threads that run the gradient exchange every step
+    /// Some(_) whenever compression is on and the fabric is threaded:
+    /// the persistent fabric + worker threads that run the gradient
+    /// exchange every step
     pool: Option<CollectivePool>,
+    /// Some(_) when `--fabric fleet`: the inline event-loop exchange
+    /// (mutually exclusive with `pool`)
+    fleet: Option<FleetPool>,
     /// parsed scenario knobs (trivial unless the virtual fabric is on)
     scenario: Scenario,
     /// whether the exchange runs on the virtual-time fabric
@@ -682,21 +765,27 @@ impl Trainer {
         };
         // the persistent collective machinery: fabric + one worker
         // thread per rank, built once here and reused by every step
-        let (pool, scenario, fabric_virtual) =
+        let (pool, fleet, scenario, fabric_virtual) =
             match (cfg.compression.as_ref(), collective_schedule) {
                 (Some(spec), Some(sched)) => {
-                    let fabric_virtual = match spec.fabric.as_str() {
-                        "" | "instant" => false,
-                        "virtual" | "vfabric" | "event" => true,
-                        other => {
-                            anyhow::bail!("unknown fabric {other} (expected instant|virtual)")
-                        }
-                    };
+                    let fabric_fleet = matches!(spec.fabric.as_str(), "fleet" | "fleetsim");
+                    let fabric_virtual = fabric_fleet
+                        || match spec.fabric.as_str() {
+                            "" | "instant" | "fleet" | "fleetsim" => false,
+                            "virtual" | "vfabric" | "event" => true,
+                            other => {
+                                anyhow::bail!(
+                                    "unknown fabric {other} (expected instant|virtual|fleet)"
+                                )
+                            }
+                        };
                     let scenario = Scenario {
                         stragglers: Scenario::parse_stragglers(&spec.straggler)?,
                         compute_jitter: spec.compute_jitter,
                         link_jitter: spec.link_jitter,
                         node_mbps: Scenario::parse_node_mbps(&spec.node_mbps)?,
+                        link_flaps: Scenario::parse_link_flaps(&spec.link_flap)?,
+                        crashes: Scenario::parse_crashes(&spec.crash)?,
                         seed: spec.seed,
                     };
                     let grid = topology.unwrap_or_else(|| Topology::flat(cfg.workers));
@@ -714,10 +803,37 @@ impl Trainer {
                             grid.nodes
                         );
                     }
+                    for f in &scenario.link_flaps {
+                        anyhow::ensure!(
+                            f.node < grid.nodes,
+                            "link-flap node {} out of range (nodes = {})",
+                            f.node,
+                            grid.nodes
+                        );
+                    }
+                    for &(r, _, _) in &scenario.crashes {
+                        anyhow::ensure!(
+                            r < cfg.workers,
+                            "crash rank {r} out of range (workers = {})",
+                            cfg.workers
+                        );
+                    }
                     anyhow::ensure!(
                         fabric_virtual || !scenario.is_active(),
-                        "--straggler / --compute-jitter / --link-jitter / --node-mbps \
-                         require --fabric virtual"
+                        "--straggler / --compute-jitter / --link-jitter / --node-mbps / \
+                         --link-flap / --crash require --fabric virtual or fleet"
+                    );
+                    // elastic membership only works where the collective
+                    // can run over a rank subset: the fleet event loop
+                    // with a flat grid (a two-level hierarchy pins ranks
+                    // to leader roles that a crash would orphan)
+                    anyhow::ensure!(
+                        scenario.crashes.is_empty() || fabric_fleet,
+                        "--crash requires --fabric fleet"
+                    );
+                    anyhow::ensure!(
+                        scenario.crashes.is_empty() || spec.topology.is_empty(),
+                        "--crash requires a flat topology"
                     );
                     anyhow::ensure!(
                         fabric_virtual
@@ -726,30 +842,52 @@ impl Trainer {
                         "--autotune-cost measured requires --fabric virtual \
                          (the feedback is measured on the virtual clock)"
                     );
-                    let fabric = if fabric_virtual {
-                        FabricHandle::Virtual(VirtualNetwork::new(
+                    if fabric_fleet {
+                        let fabric = crate::fleetsim::FleetFabric::new(
                             grid,
                             crate::simnet::Link::mbps(spec.intra_mbps),
                             crate::simnet::Link::mbps(spec.inter_mbps),
                             scenario.clone(),
-                        ))
+                        );
+                        let codec = SegmentCodec::lossless_or_raw(
+                            &spec.compress,
+                            spec.seed,
+                            sparse_cfg.dense_switch,
+                        );
+                        let fleet = FleetPool {
+                            fabric,
+                            sched,
+                            cfg: sparse_cfg,
+                            codec,
+                            virtual_now: 0.0,
+                        };
+                        (None, Some(fleet), scenario, fabric_virtual)
                     } else {
-                        FabricHandle::Instant(match topology {
-                            Some(t) => Network::with_topology(t),
-                            None => Network::new(cfg.workers),
-                        })
-                    };
-                    let pool = CollectivePool::new(
-                        fabric,
-                        sched,
-                        sparse_cfg,
-                        spec,
-                        cfg.workers,
-                        tracer.clone(),
-                    )?;
-                    (Some(pool), scenario, fabric_virtual)
+                        let fabric = if fabric_virtual {
+                            FabricHandle::Virtual(VirtualNetwork::new(
+                                grid,
+                                crate::simnet::Link::mbps(spec.intra_mbps),
+                                crate::simnet::Link::mbps(spec.inter_mbps),
+                                scenario.clone(),
+                            ))
+                        } else {
+                            FabricHandle::Instant(match topology {
+                                Some(t) => Network::with_topology(t),
+                                None => Network::new(cfg.workers),
+                            })
+                        };
+                        let pool = CollectivePool::new(
+                            fabric,
+                            sched,
+                            sparse_cfg,
+                            spec,
+                            cfg.workers,
+                            tracer.clone(),
+                        )?;
+                        (Some(pool), None, scenario, fabric_virtual)
+                    }
                 }
-                _ => (None, Scenario::none(cfg.seed), false),
+                _ => (None, None, Scenario::none(cfg.seed), false),
             };
         Ok(Self {
             cfg,
@@ -762,6 +900,7 @@ impl Trainer {
             threelc,
             ef,
             pool,
+            fleet,
             scenario,
             fabric_virtual,
             tracer,
@@ -1077,6 +1216,79 @@ impl Trainer {
                 }
             }
         }
+        // fleet fabric: the same exchange, run inline through the
+        // single-threaded event loop (no jobs/results plumbing), over
+        // the alive membership of this step
+        if !buckets.is_empty() {
+            if let Some(fleet) = self.fleet.as_mut() {
+                let step_start = fleet.virtual_now;
+                let advance: Vec<f64> =
+                    (0..n).map(|w| busy_s[w] * self.scenario.compute_factor(w, step)).collect();
+                let (summed_buckets, windows) = fleet.exchange(
+                    std::mem::take(&mut pending),
+                    &advance,
+                    step_start,
+                    step,
+                    &self.scenario,
+                )?;
+                let step_end = windows.iter().fold(step_start, |a, w| a.max(w.1));
+                let mut max_start = step_start;
+                let mut idle_sum = 0.0f64;
+                for (w, &(s0, e, idle)) in windows.iter().enumerate() {
+                    if !self.scenario.alive(w, step) {
+                        continue;
+                    }
+                    max_start = max_start.max(s0);
+                    // recv-wait idle plus the end-of-step barrier wait
+                    idle_sum += idle + (step_end - e);
+                }
+                if let Some(tracer) = self.tracer.as_ref() {
+                    // synthesised per-rank exchange + barrier spans: the
+                    // event loop multiplexes every rank on one thread,
+                    // so only the virtual windows are meaningful
+                    for (w, &(s0, e, _)) in windows.iter().enumerate() {
+                        if !self.scenario.alive(w, step) {
+                            continue;
+                        }
+                        for (kind, v0, v1) in
+                            [(SpanKind::Exchange, s0, e), (SpanKind::Barrier, e, step_end)]
+                        {
+                            tracer.record(Span {
+                                kind,
+                                lane: Lane::Cpu,
+                                rank: w as u32,
+                                step: 0, // stamped at drain
+                                depth: 0,
+                                bytes: 0,
+                                label: None,
+                                wall0: f64::NAN,
+                                wall1: f64::NAN,
+                                virt0: v0,
+                                virt1: v1,
+                            });
+                        }
+                    }
+                }
+                for (bucket, summed) in buckets.iter().zip(summed_buckets) {
+                    let parts = unfuse(bucket, &summed);
+                    for (part, &ti) in parts.iter().zip(&bucket.tensors) {
+                        part.add_into(&mut agg[ti]);
+                    }
+                }
+                metrics.fabric_bytes += fleet.fabric.total_bytes();
+                metrics.intra_bytes += fleet.fabric.intra_bytes();
+                metrics.inter_bytes += fleet.fabric.inter_bytes();
+                fleet.fabric.reset_bytes();
+                metrics.measured_step_s = step_end - step_start;
+                metrics.rank_idle_s = Some(idle_sum / n as f64);
+                fleet.virtual_now = step_end;
+                let per_worker_bytes = bucketed_bytes as f64 / n as f64;
+                let comm_s = (step_end - max_start).max(0.0);
+                if let Some(pipe) = self.pipeline.as_mut() {
+                    pipe.observe_comm(per_worker_bytes, comm_s);
+                }
+            }
+        }
         // bytes_per_worker accumulated across workers -> average
         if self.pipeline.is_some() || self.threelc.is_some() {
             metrics.bytes_per_worker /= n as u64;
@@ -1102,7 +1314,12 @@ impl Trainer {
         // coordinator guards flush on drop) and stamp it with this step
         if let Some(tracer) = self.tracer.clone() {
             let (measured_s, virt0, virt1) = if self.fabric_virtual {
-                let v1 = self.pool.as_ref().map(|p| p.virtual_now).unwrap_or(f64::NAN);
+                let v1 = self
+                    .pool
+                    .as_ref()
+                    .map(|p| p.virtual_now)
+                    .or_else(|| self.fleet.as_ref().map(|p| p.virtual_now))
+                    .unwrap_or(f64::NAN);
                 (metrics.measured_step_s, v1 - metrics.measured_step_s, v1)
             } else {
                 (step_wall0.elapsed().as_secs_f64(), f64::NAN, f64::NAN)

@@ -1,0 +1,807 @@
+//! Rank state machines for the fleet runner: each schedule's per-rank
+//! program order from `crate::collective::sparse`, reified as a
+//! resumable [`RankTask`].
+//!
+//! **Lockstep invariant:** every kernel here must perform the *exact*
+//! send/recv/merge sequence of its threaded twin — same peers, same
+//! payload bytes, same merge order, same jitter-stream draws — because
+//! `tests/fleetsim_equivalence.rs` pins the two fabrics bit-identical
+//! on byte meters and virtual clocks. Anyone changing a schedule in
+//! `collective/sparse/` must mirror the change here (the differential
+//! test catches a miss at every n ≤ 8 point).
+//!
+//! The threaded kernels also open wall-clock `Round` RAII spans; those
+//! are intentionally omitted here — wall time is meaningless when one
+//! OS thread multiplexes every rank, and the differential tests compare
+//! virtual-stamped spans only. Byte meters, virtual clocks, payload
+//! bytes, and `sched.*` counters are all mirrored exactly.
+//!
+//! Structure: sends never park (the fabric's channels are unbounded),
+//! so each kernel is an enum-state machine whose states sit exactly at
+//! the receive points; `poll` runs forward until a `try_recv` misses.
+//! Two fleet-only adaptations preserve results while cutting the
+//! O(n²)-rank costs of the all-to-all histogram phase:
+//!
+//! - the gather sub-machine streams arrivals instead of buffering all
+//!   n−1 blobs (and switches to the barrage fast path on large uniform
+//!   rosters — see `fleetsim` module docs);
+//! - the chunked schedule computes its balanced bounds once, at roster
+//!   position 0, and publishes them through the runner's shared
+//!   scratch. The summed histogram is order-independent (`u64`
+//!   saturating adds of partial sums that cannot saturate), so the
+//!   shared bounds are byte-identical to every rank's own computation.
+
+use super::{FleetCtx, RankTask, Roster, TaskPoll};
+use crate::collective::sparse::{merge, prev_power_of_two, SegmentCodec};
+use crate::collective::{Schedule, SparseConfig, Topology};
+use crate::tensor::SparseTensor;
+use crate::util::varint;
+use std::rc::Rc;
+
+/// Build the state machine for `roster.me`'s side of one collective —
+/// the fleet twin of `Schedule::build_with` (same dispatch, same
+/// hierarchical-inner fallback, codecs duplicated per rank).
+pub(crate) fn build(
+    sched: Schedule,
+    cfg: &SparseConfig,
+    codec: &SegmentCodec,
+    roster: Roster,
+    input: SparseTensor,
+) -> Box<dyn RankTask> {
+    match sched {
+        Schedule::GatherAll => Box::new(GatherAllTask::new(codec.duplicate(), roster, input)),
+        Schedule::RecursiveDouble => {
+            Box::new(RecursiveDoubleTask::new(codec.duplicate(), roster, input))
+        }
+        Schedule::RingRescatter => {
+            Box::new(RingTask::new(codec.duplicate(), cfg.resparsify, roster, input))
+        }
+        Schedule::RingRescatterExact => {
+            Box::new(RingTask::new(codec.duplicate(), false, roster, input))
+        }
+        Schedule::ChunkedRescatter => {
+            Box::new(ChunkedTask::new(codec.duplicate(), cfg.chunks, roster, input))
+        }
+        Schedule::Hierarchical => Box::new(HierTask::new(codec.duplicate(), *cfg, roster, input)),
+    }
+}
+
+fn empty(d: usize) -> SparseTensor {
+    SparseTensor::new(d, Vec::new(), Vec::new())
+}
+
+// ---------------------------------------------------------------- gather
+
+/// Streaming twin of `collective::all_gather_peers`: same ring send
+/// order (`me+1, me+2, …`) and reverse-ring receive order
+/// (`me−1, me−2, …`), yielding arrivals one at a time so callers decide
+/// whether to keep them.
+enum AgpEvent {
+    /// blob from roster-local `peer` arrived
+    Got(usize, Rc<Vec<u8>>),
+    Pending,
+    Finished,
+}
+
+struct AllGatherPeers {
+    roster: Roster,
+    blob: Option<Rc<Vec<u8>>>,
+    barrage: bool,
+    sent: bool,
+    /// next receive index, 1..n
+    j: usize,
+}
+
+impl AllGatherPeers {
+    fn new(roster: Roster, blob: Vec<u8>) -> Self {
+        Self { roster, blob: Some(Rc::new(blob)), barrage: false, sent: false, j: 1 }
+    }
+
+    fn step(&mut self, ctx: &mut FleetCtx) -> AgpEvent {
+        let n = self.roster.n();
+        let me = self.roster.me;
+        if !self.sent {
+            self.sent = true;
+            let blob = self.blob.take().expect("gather blob");
+            self.barrage = ctx.barrage_ok(&self.roster);
+            if self.barrage {
+                ctx.barrage_send_all(&self.roster, blob);
+            } else {
+                for j in 1..n {
+                    ctx.send_rc(self.roster.global((me + j) % n), Rc::clone(&blob));
+                }
+            }
+        }
+        if self.j >= n {
+            return AgpEvent::Finished;
+        }
+        let peer = (me + n - self.j) % n;
+        let src = self.roster.global(peer);
+        let got = if self.barrage {
+            // my position in src's ring send order
+            ctx.barrage_recv(src, (me + n - peer) % n)
+        } else {
+            ctx.try_recv(src)
+        };
+        match got {
+            None => AgpEvent::Pending,
+            Some(raw) => {
+                self.j += 1;
+                AgpEvent::Got(peer, raw)
+            }
+        }
+    }
+}
+
+pub(crate) struct GatherAllTask {
+    codec: SegmentCodec,
+    roster: Roster,
+    d: usize,
+    acc: Option<SparseTensor>,
+    agp: Option<AllGatherPeers>,
+    blobs: Vec<Option<Rc<Vec<u8>>>>,
+}
+
+impl GatherAllTask {
+    pub(crate) fn new(codec: SegmentCodec, roster: Roster, input: SparseTensor) -> Self {
+        let n = roster.n();
+        let d = input.dense_len();
+        let agp = if n > 1 {
+            Some(AllGatherPeers::new(roster.clone(), codec.encode(&input, 0, d)))
+        } else {
+            None
+        };
+        Self { codec, roster, d, acc: Some(input), agp, blobs: (0..n).map(|_| None).collect() }
+    }
+}
+
+impl RankTask for GatherAllTask {
+    fn poll(&mut self, ctx: &mut FleetCtx) -> anyhow::Result<TaskPoll> {
+        let n = self.roster.n();
+        if n == 1 {
+            return Ok(TaskPoll::Done(self.acc.take().expect("input")));
+        }
+        let agp = self.agp.as_mut().expect("gather sub-machine");
+        loop {
+            match agp.step(ctx) {
+                AgpEvent::Pending => return Ok(TaskPoll::Pending),
+                AgpEvent::Got(peer, raw) => self.blobs[peer] = Some(raw),
+                AgpEvent::Finished => break,
+            }
+        }
+        // merge in ascending peer order — the threaded kernel's order,
+        // so f32 sums are bit-identical
+        let mut acc = self.acc.take().expect("input");
+        for peer in 0..n {
+            if peer == self.roster.me {
+                continue;
+            }
+            let raw = self.blobs[peer].take().expect("gathered blob");
+            acc = merge::merge_sum(&acc, &self.codec.decode(self.d, &raw)?);
+        }
+        crate::obs::count("sched.gather_all_steps", 1);
+        Ok(TaskPoll::Done(acc))
+    }
+}
+
+// ------------------------------------------------------ recursive double
+
+enum RdState {
+    Start,
+    /// folded-out extra (me ≥ p): sent, awaiting the result back
+    FoldBack,
+    /// fold target (me < extras): awaiting the extra's contribution
+    FoldIn,
+    /// doubling round: sent to `me ^ stride`, awaiting the partner
+    Stride(usize),
+}
+
+pub(crate) struct RecursiveDoubleTask {
+    codec: SegmentCodec,
+    roster: Roster,
+    d: usize,
+    p: usize,
+    extras: usize,
+    acc: Option<SparseTensor>,
+    state: RdState,
+}
+
+impl RecursiveDoubleTask {
+    pub(crate) fn new(codec: SegmentCodec, roster: Roster, input: SparseTensor) -> Self {
+        let n = roster.n();
+        let p = prev_power_of_two(n);
+        Self {
+            codec,
+            roster,
+            d: input.dense_len(),
+            p,
+            extras: n - p,
+            acc: Some(input),
+            state: RdState::Start,
+        }
+    }
+
+    fn enter_stride(&mut self, ctx: &mut FleetCtx, stride: usize) {
+        let partner = self.roster.global(self.roster.me ^ stride);
+        let blob = self.codec.encode(self.acc.as_ref().expect("acc"), 0, self.d);
+        ctx.send(partner, blob);
+        self.state = RdState::Stride(stride);
+    }
+}
+
+impl RankTask for RecursiveDoubleTask {
+    fn poll(&mut self, ctx: &mut FleetCtx) -> anyhow::Result<TaskPoll> {
+        let me = self.roster.me;
+        loop {
+            match self.state {
+                RdState::Start => {
+                    if self.roster.n() == 1 {
+                        return Ok(TaskPoll::Done(self.acc.take().expect("input")));
+                    }
+                    if me >= self.p {
+                        let partner = self.roster.global(me - self.p);
+                        let blob = self.codec.encode(self.acc.as_ref().expect("acc"), 0, self.d);
+                        ctx.send(partner, blob);
+                        self.state = RdState::FoldBack;
+                    } else if me < self.extras {
+                        self.state = RdState::FoldIn;
+                    } else {
+                        self.enter_stride(ctx, 1);
+                    }
+                }
+                RdState::FoldBack => {
+                    let partner = self.roster.global(me - self.p);
+                    match ctx.try_recv(partner) {
+                        None => return Ok(TaskPoll::Pending),
+                        Some(raw) => return Ok(TaskPoll::Done(self.codec.decode(self.d, &raw)?)),
+                    }
+                }
+                RdState::FoldIn => {
+                    let src = self.roster.global(self.p + me);
+                    match ctx.try_recv(src) {
+                        None => return Ok(TaskPoll::Pending),
+                        Some(raw) => {
+                            let folded = self.codec.decode(self.d, &raw)?;
+                            let acc = self.acc.take().expect("acc");
+                            self.acc = Some(merge::merge_sum(&acc, &folded));
+                            self.enter_stride(ctx, 1);
+                        }
+                    }
+                }
+                RdState::Stride(stride) => {
+                    let partner = self.roster.global(me ^ stride);
+                    match ctx.try_recv(partner) {
+                        None => return Ok(TaskPoll::Pending),
+                        Some(raw) => {
+                            let theirs = self.codec.decode(self.d, &raw)?;
+                            let acc = self.acc.take().expect("acc");
+                            self.acc = Some(merge::merge_sum(&acc, &theirs));
+                            let next = stride << 1;
+                            if next < self.p {
+                                self.enter_stride(ctx, next);
+                            } else {
+                                if me < self.extras {
+                                    let blob = self
+                                        .codec
+                                        .encode(self.acc.as_ref().expect("acc"), 0, self.d);
+                                    ctx.send(self.roster.global(self.p + me), blob);
+                                }
+                                return Ok(TaskPoll::Done(self.acc.take().expect("acc")));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------- ring rescatter
+
+enum RingState {
+    Start,
+    /// reduce-scatter round `s`: sent, awaiting the previous rank
+    RsRecv(usize),
+    /// allgather round `s`: sent, awaiting the previous rank
+    AgRecv(usize),
+}
+
+pub(crate) struct RingTask {
+    codec: SegmentCodec,
+    resparsify: bool,
+    roster: Roster,
+    d: usize,
+    bounds: Vec<usize>,
+    segs: Vec<SparseTensor>,
+    k_max: u64,
+    state: RingState,
+    input: Option<SparseTensor>,
+}
+
+impl RingTask {
+    pub(crate) fn new(
+        codec: SegmentCodec,
+        resparsify: bool,
+        roster: Roster,
+        input: SparseTensor,
+    ) -> Self {
+        let n = roster.n();
+        let d = input.dense_len();
+        let k_max = input.nnz() as u64;
+        let (bounds, segs, input) = if n > 1 {
+            let bounds = merge::chunk_bounds(d, n);
+            let segs = merge::split_ranges(&input, &bounds);
+            (bounds, segs, None)
+        } else {
+            (Vec::new(), Vec::new(), Some(input))
+        };
+        Self { codec, resparsify, roster, d, bounds, segs, k_max, state: RingState::Start, input }
+    }
+
+    fn send_rs(&mut self, ctx: &mut FleetCtx, s: usize) {
+        let n = self.roster.n();
+        let me = self.roster.me;
+        let cs = (me + n - s) % n;
+        let mut msg = Vec::new();
+        varint::write_u64(&mut msg, self.k_max);
+        msg.extend_from_slice(&self.codec.encode(
+            &self.segs[cs],
+            self.bounds[cs],
+            self.bounds[cs + 1],
+        ));
+        ctx.send(self.roster.global((me + 1) % n), msg);
+    }
+
+    fn send_ag(&mut self, ctx: &mut FleetCtx, s: usize) {
+        let n = self.roster.n();
+        let me = self.roster.me;
+        let cs = (me + 1 + n - s) % n;
+        let blob = self.codec.encode(&self.segs[cs], self.bounds[cs], self.bounds[cs + 1]);
+        ctx.send(self.roster.global((me + 1) % n), blob);
+    }
+}
+
+impl RankTask for RingTask {
+    fn poll(&mut self, ctx: &mut FleetCtx) -> anyhow::Result<TaskPoll> {
+        let n = self.roster.n();
+        let me = self.roster.me;
+        let prev = if n > 1 { self.roster.global((me + n - 1) % n) } else { 0 };
+        loop {
+            match self.state {
+                RingState::Start => {
+                    if n == 1 {
+                        return Ok(TaskPoll::Done(self.input.take().expect("input")));
+                    }
+                    self.send_rs(ctx, 0);
+                    self.state = RingState::RsRecv(0);
+                }
+                RingState::RsRecv(s) => {
+                    let Some(raw) = ctx.try_recv(prev) else {
+                        return Ok(TaskPoll::Pending);
+                    };
+                    let mut pos = 0usize;
+                    self.k_max = self.k_max.max(varint::read_u64(&raw, &mut pos)?);
+                    let incoming = self.codec.decode(self.d, &raw[pos..])?;
+                    let cr = (me + n - s - 1) % n;
+                    self.segs[cr] = merge::merge_sum(&self.segs[cr], &incoming);
+                    if s + 1 < n - 1 {
+                        self.send_rs(ctx, s + 1);
+                        self.state = RingState::RsRecv(s + 1);
+                    } else {
+                        let own = (me + 1) % n;
+                        if self.resparsify {
+                            self.segs[own] = merge::top_r_sparse(
+                                &self.segs[own],
+                                (self.k_max as usize).div_ceil(n),
+                            );
+                        }
+                        self.send_ag(ctx, 0);
+                        self.state = RingState::AgRecv(0);
+                    }
+                }
+                RingState::AgRecv(s) => {
+                    let Some(raw) = ctx.try_recv(prev) else {
+                        return Ok(TaskPoll::Pending);
+                    };
+                    let cr = (me + n - s) % n;
+                    self.segs[cr] = self.codec.decode(self.d, &raw)?;
+                    if s + 1 < n - 1 {
+                        self.send_ag(ctx, s + 1);
+                        self.state = RingState::AgRecv(s + 1);
+                    } else {
+                        let mut idx = Vec::with_capacity(self.segs.iter().map(|t| t.nnz()).sum());
+                        let mut val = Vec::with_capacity(idx.capacity());
+                        for seg in self.segs.drain(..) {
+                            let (_, i, v) = seg.into_parts();
+                            idx.extend(i);
+                            val.extend(v);
+                        }
+                        return Ok(TaskPoll::Done(SparseTensor::new(self.d, idx, val)));
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------ chunked rescatter
+
+enum ChState {
+    /// histogram allgather in flight
+    Hist,
+    /// non-zero roster positions: awaiting the published bounds
+    WaitBounds,
+    /// phase-1 offset `s`, frame `j`: sent, awaiting the source's frame
+    PxRecv(usize, usize),
+    /// phase-2 round `s`, frame `j`: sent, awaiting the previous rank
+    AgRecv(usize, usize),
+}
+
+pub(crate) struct ChunkedTask {
+    codec: SegmentCodec,
+    roster: Roster,
+    d: usize,
+    m: usize,
+    p: usize,
+    state: ChState,
+    agp: Option<AllGatherPeers>,
+    /// roster position 0 accumulates the summed histogram here
+    total: Option<Vec<u64>>,
+    bounds: Option<Rc<Vec<usize>>>,
+    input: Option<SparseTensor>,
+    segs: Vec<SparseTensor>,
+    acc: Vec<SparseTensor>,
+    groups: Vec<Vec<SparseTensor>>,
+    send_group: Vec<SparseTensor>,
+    recvd: Vec<SparseTensor>,
+}
+
+impl ChunkedTask {
+    pub(crate) fn new(
+        codec: SegmentCodec,
+        chunks: usize,
+        roster: Roster,
+        input: SparseTensor,
+    ) -> Self {
+        let n = roster.n();
+        let d = input.dense_len();
+        let m = crate::collective::sparse::ChunkedRescatter::sub_chunks(chunks, n);
+        let p = m * n;
+        let (agp, total) = if n > 1 {
+            let bins = merge::balance_bins(d, p);
+            let counts = merge::bin_counts(&input, bins);
+            let mut blob = Vec::with_capacity(bins * 2);
+            for &c in &counts {
+                varint::write_u64(&mut blob, c);
+            }
+            let total = if roster.me == 0 { Some(counts) } else { None };
+            (Some(AllGatherPeers::new(roster.clone(), blob)), total)
+        } else {
+            (None, None)
+        };
+        Self {
+            codec,
+            roster,
+            d,
+            m,
+            p,
+            state: ChState::Hist,
+            agp,
+            total,
+            bounds: None,
+            input: Some(input),
+            segs: Vec::new(),
+            acc: Vec::new(),
+            groups: Vec::new(),
+            send_group: Vec::new(),
+            recvd: Vec::new(),
+        }
+    }
+
+    /// Bounds are in: split my contribution and seed the accumulator
+    /// with my own group's slices, then open phase-1 offset 1.
+    fn start_phase1(&mut self, ctx: &mut FleetCtx) {
+        let bounds = self.bounds.as_ref().expect("bounds");
+        let input = self.input.take().expect("input");
+        self.segs = merge::split_ranges(&input, bounds);
+        let me = self.roster.me;
+        self.acc = (0..self.m)
+            .map(|j| std::mem::replace(&mut self.segs[me * self.m + j], empty(self.d)))
+            .collect();
+        self.px_send(ctx, 1, 0);
+        self.state = ChState::PxRecv(1, 0);
+    }
+
+    fn px_send(&mut self, ctx: &mut FleetCtx, s: usize, j: usize) {
+        let n = self.roster.n();
+        let dst = (self.roster.me + s) % n;
+        let c = dst * self.m + j;
+        let bounds = self.bounds.as_ref().expect("bounds");
+        let blob = self.codec.encode(&self.segs[c], bounds[c], bounds[c + 1]);
+        ctx.send(self.roster.global(dst), blob);
+    }
+
+    /// Open phase-2 round `s`: take the outgoing group, ship its first
+    /// frame.
+    fn ag_enter(&mut self, ctx: &mut FleetCtx, s: usize) {
+        let n = self.roster.n();
+        let gs = (self.roster.me + n - s) % n;
+        self.send_group = std::mem::take(&mut self.groups[gs]);
+        self.recvd = Vec::with_capacity(self.m);
+        self.ag_send(ctx, s, 0);
+        self.state = ChState::AgRecv(s, 0);
+    }
+
+    fn ag_send(&mut self, ctx: &mut FleetCtx, s: usize, j: usize) {
+        let n = self.roster.n();
+        let me = self.roster.me;
+        let gs = (me + n - s) % n;
+        let c = gs * self.m + j;
+        let bounds = self.bounds.as_ref().expect("bounds");
+        let blob = self.codec.encode(&self.send_group[j], bounds[c], bounds[c + 1]);
+        ctx.send(self.roster.global((me + 1) % n), blob);
+    }
+}
+
+impl RankTask for ChunkedTask {
+    fn poll(&mut self, ctx: &mut FleetCtx) -> anyhow::Result<TaskPoll> {
+        let n = self.roster.n();
+        let me = self.roster.me;
+        loop {
+            match self.state {
+                ChState::Hist => {
+                    if n == 1 {
+                        return Ok(TaskPoll::Done(self.input.take().expect("input")));
+                    }
+                    let agp = self.agp.as_mut().expect("hist gather");
+                    loop {
+                        match agp.step(ctx) {
+                            AgpEvent::Pending => return Ok(TaskPoll::Pending),
+                            AgpEvent::Got(peer, raw) => {
+                                // only position 0 folds histograms in; the
+                                // sum is arrival-order independent, so its
+                                // bounds equal what any rank would compute
+                                if let Some(total) = self.total.as_mut() {
+                                    let mut pos = 0usize;
+                                    for t in total.iter_mut() {
+                                        *t = t.saturating_add(varint::read_u64(&raw, &mut pos)?);
+                                    }
+                                    if pos != raw.len() {
+                                        anyhow::bail!(
+                                            "rank {peer} histogram has {} trailing byte(s)",
+                                            raw.len() - pos
+                                        );
+                                    }
+                                }
+                            }
+                            AgpEvent::Finished => break,
+                        }
+                    }
+                    self.agp = None;
+                    if let Some(total) = self.total.take() {
+                        let bounds = merge::balanced_bounds(&total, self.d, self.p);
+                        ctx.publish_bounds(self.roster.key(), bounds);
+                        self.bounds = ctx.shared_bounds(self.roster.key());
+                        self.start_phase1(ctx);
+                    } else {
+                        self.state = ChState::WaitBounds;
+                    }
+                }
+                ChState::WaitBounds => match ctx.shared_bounds(self.roster.key()) {
+                    None => {
+                        ctx.park_shared();
+                        return Ok(TaskPoll::Pending);
+                    }
+                    Some(b) => {
+                        self.bounds = Some(b);
+                        self.start_phase1(ctx);
+                    }
+                },
+                ChState::PxRecv(s, j) => {
+                    let src = self.roster.global((me + n - s) % n);
+                    let Some(raw) = ctx.try_recv(src) else {
+                        return Ok(TaskPoll::Pending);
+                    };
+                    let incoming = self.codec.decode(self.d, &raw)?;
+                    self.acc[j] = merge::merge_sum(&self.acc[j], &incoming);
+                    if j + 1 < self.m {
+                        self.px_send(ctx, s, j + 1);
+                        self.state = ChState::PxRecv(s, j + 1);
+                    } else if s + 1 < n {
+                        self.px_send(ctx, s + 1, 0);
+                        self.state = ChState::PxRecv(s + 1, 0);
+                    } else {
+                        self.segs = Vec::new();
+                        self.groups = (0..n).map(|_| Vec::new()).collect();
+                        self.groups[me] = std::mem::take(&mut self.acc);
+                        self.ag_enter(ctx, 0);
+                    }
+                }
+                ChState::AgRecv(s, j) => {
+                    let prev = self.roster.global((me + n - 1) % n);
+                    let Some(raw) = ctx.try_recv(prev) else {
+                        return Ok(TaskPoll::Pending);
+                    };
+                    self.recvd.push(self.codec.decode(self.d, &raw)?);
+                    if j + 1 < self.m {
+                        self.ag_send(ctx, s, j + 1);
+                        self.state = ChState::AgRecv(s, j + 1);
+                    } else {
+                        let gs = (me + n - s) % n;
+                        let gr = (me + n - s - 1) % n;
+                        self.groups[gs] = std::mem::take(&mut self.send_group);
+                        self.groups[gr] = std::mem::take(&mut self.recvd);
+                        if s + 1 < n - 1 {
+                            self.ag_enter(ctx, s + 1);
+                        } else {
+                            let mut idx = Vec::new();
+                            let mut val = Vec::new();
+                            for g in self.groups.drain(..) {
+                                for sub in g {
+                                    let (_, i, v) = sub.into_parts();
+                                    idx.extend(i);
+                                    val.extend(v);
+                                }
+                            }
+                            return Ok(TaskPoll::Done(SparseTensor::new(self.d, idx, val)));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ----------------------------------------------------------- hierarchical
+
+enum HState {
+    Start,
+    /// member: contributed, awaiting the broadcast back
+    MemberRecv,
+    /// leader: draining member contributions in rank order
+    LeadGather,
+    /// leader: inner schedule running among the leaders
+    Inner,
+}
+
+pub(crate) struct HierTask {
+    codec: SegmentCodec,
+    cfg: SparseConfig,
+    roster: Roster,
+    d: usize,
+    /// resolved at Start (cfg.topology or flat world)
+    topo: Topology,
+    acc: Option<SparseTensor>,
+    inner: Option<Box<dyn RankTask>>,
+    /// next roster-local member rank to gather from
+    gather_next: usize,
+    state: HState,
+}
+
+impl HierTask {
+    pub(crate) fn new(codec: SegmentCodec, cfg: SparseConfig, roster: Roster, input: SparseTensor) -> Self {
+        let d = input.dense_len();
+        Self {
+            codec,
+            cfg,
+            roster,
+            d,
+            topo: Topology::flat(1),
+            acc: Some(input),
+            inner: None,
+            gather_next: 0,
+            state: HState::Start,
+        }
+    }
+
+    /// Phase 3, leader side: encode once, ship the shared buffer to
+    /// every member.
+    fn bcast(&mut self, ctx: &mut FleetCtx) {
+        if self.topo.ranks_per_node > 1 {
+            let me = self.roster.me;
+            let node = self.topo.node_of(me);
+            let blob = Rc::new(self.codec.encode(self.acc.as_ref().expect("acc"), 0, self.d));
+            for m in self.topo.members(node) {
+                if m != me {
+                    ctx.send_rc(self.roster.global(m), Rc::clone(&blob));
+                }
+            }
+        }
+    }
+}
+
+impl RankTask for HierTask {
+    fn poll(&mut self, ctx: &mut FleetCtx) -> anyhow::Result<TaskPoll> {
+        let n = self.roster.n();
+        let me = self.roster.me;
+        loop {
+            match self.state {
+                HState::Start => {
+                    if n == 1 {
+                        return Ok(TaskPoll::Done(self.acc.take().expect("input")));
+                    }
+                    let topo = self.cfg.topology.unwrap_or_else(|| Topology::flat(n));
+                    anyhow::ensure!(
+                        topo.world() == n,
+                        "topology {} expects {} ranks, world is {n}",
+                        topo.label(),
+                        topo.world()
+                    );
+                    self.topo = topo;
+                    let node = topo.node_of(me);
+                    let leader = topo.leader_of(node);
+                    if me != leader {
+                        let blob = self.codec.encode(self.acc.as_ref().expect("acc"), 0, self.d);
+                        ctx.send(self.roster.global(leader), blob);
+                        self.state = HState::MemberRecv;
+                    } else {
+                        self.gather_next = topo.members(node).start;
+                        self.state = HState::LeadGather;
+                    }
+                }
+                HState::MemberRecv => {
+                    let leader = self.topo.leader_of(self.topo.node_of(me));
+                    match ctx.try_recv(self.roster.global(leader)) {
+                        None => return Ok(TaskPoll::Pending),
+                        Some(raw) => return Ok(TaskPoll::Done(self.codec.decode(self.d, &raw)?)),
+                    }
+                }
+                HState::LeadGather => {
+                    let node = self.topo.node_of(me);
+                    let members = self.topo.members(node);
+                    while self.gather_next < members.end {
+                        let m = self.gather_next;
+                        if m == me {
+                            self.gather_next += 1;
+                            continue;
+                        }
+                        let Some(raw) = ctx.try_recv(self.roster.global(m)) else {
+                            return Ok(TaskPoll::Pending);
+                        };
+                        let theirs = self.codec.decode(self.d, &raw)?;
+                        let acc = self.acc.take().expect("acc");
+                        self.acc = Some(merge::merge_sum(&acc, &theirs));
+                        self.gather_next += 1;
+                    }
+                    if self.topo.nodes > 1 {
+                        // the leader group is flat by construction; guard
+                        // against a recursive inner pick (same fallback
+                        // as Schedule::build_with)
+                        let inner_sched = if self.cfg.inner == Schedule::Hierarchical {
+                            Schedule::GatherAll
+                        } else {
+                            self.cfg.inner
+                        };
+                        let inner_members: Vec<usize> =
+                            self.topo.leaders().iter().map(|&l| self.roster.global(l)).collect();
+                        let inner_roster =
+                            Roster { members: Rc::new(inner_members), me: node };
+                        let input = self.acc.take().expect("acc");
+                        self.inner = Some(build(
+                            inner_sched,
+                            &self.cfg,
+                            &self.codec,
+                            inner_roster,
+                            input,
+                        ));
+                        self.state = HState::Inner;
+                    } else {
+                        self.bcast(ctx);
+                        return Ok(TaskPoll::Done(self.acc.take().expect("acc")));
+                    }
+                }
+                HState::Inner => {
+                    match self.inner.as_mut().expect("inner task").poll(ctx)? {
+                        TaskPoll::Pending => return Ok(TaskPoll::Pending),
+                        TaskPoll::Done(t) => {
+                            self.inner = None;
+                            self.acc = Some(t);
+                            self.bcast(ctx);
+                            return Ok(TaskPoll::Done(self.acc.take().expect("acc")));
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

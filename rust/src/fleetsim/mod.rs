@@ -1,0 +1,876 @@
+//! Fleet-scale event-loop runner (DESIGN.md §13): the threaded virtual
+//! fabric re-hosted on one thread.
+//!
+//! The threaded vfabric runs one OS thread per rank, which caps every
+//! experiment at laptop-core counts. But the fabric's virtual-time model
+//! is a Kahn process network: `send` never blocks, `recv` blocks on one
+//! *specific* source, and all timing state is rank-local (clock, idle,
+//! per-class port frees) plus the `(depart, busy)` stamps riding on each
+//! message. A process network's outcome depends only on each process's
+//! program order — never on the interleaving — so the same collectives
+//! can run cooperatively on a single thread and produce **bit-identical**
+//! byte meters and virtual clocks (`tests/fleetsim_equivalence.rs` pins
+//! this against the threaded runner).
+//!
+//! Each rank's collective step is reified as a resumable state machine
+//! (`RankTask`, built in the private `kernels` module): `poll` runs the rank's program
+//! until it completes or a `try_recv` misses, at which point the rank
+//! *parks* on the awaited source. The runner keeps a ready queue seeded
+//! in rank order; delivering a message to a rank parked on its sender
+//! re-queues the receiver. Tie-breaking is deterministic: FIFO rank
+//! order by default, with LIFO and seeded-shuffle [`ReadyPolicy`]s that
+//! the determinism suite uses to prove results are queue-order-free (the
+//! process-network argument made executable).
+//!
+//! Occupancy math is shared with the threaded fabric —
+//! `vfabric::transfer_busy` / `resolve_link` — so the exact
+//! f64 operation order is common by construction. Jitter draws come from
+//! the same per-rank streams (`seed ^ mix64(rank)`), one draw per send
+//! in program order.
+//!
+//! Scale: a 10k-rank `chunked_rescatter` step is ~10⁸ message events.
+//! Two things keep that cheap: payloads are `Rc`-shared (a broadcast is
+//! one buffer, n−1 pointer bumps), and the all-to-all histogram phase
+//! uses a *barrage* fast path on uniform-class rosters (no jitter, no
+//! flaps, no stragglers, >64 ranks): the sender books its egress port
+//! once for all n−1 identical copies and receivers reconstruct their
+//! copy's departure as `d0 + (j−1)·busy` instead of materializing n²
+//! queued messages. The closed form differs from sequential accumulation
+//! only in f64 rounding (~1 ulp), and the fast path is size-gated far
+//! above every bit-exactness test point.
+
+pub(crate) mod kernels;
+
+use crate::collective::sparse::SegmentCodec;
+use crate::collective::{Schedule, SparseConfig, Topology};
+use crate::obs;
+use crate::simnet::Link;
+use crate::tensor::SparseTensor;
+use crate::util::prng::{mix64, Rng};
+use crate::vfabric::{self, Scenario, INTRA};
+use std::collections::{HashMap, VecDeque};
+use std::rc::Rc;
+
+/// Rosters at or below this size never use the barrage fast path, so
+/// every differential test point (n ≤ 8, and well beyond) exercises the
+/// sequential per-message path that is bit-identical to the threaded
+/// fabric.
+const BARRAGE_MIN: usize = 64;
+
+/// Deterministic hasher for runner-internal maps. Keys are small
+/// integers (peer ranks), so one `mix64` round beats SipHash — and
+/// unlike `std::collections::hash_map::RandomState` it is identical on
+/// every platform and run, which the determinism suite relies on.
+#[derive(Clone, Copy, Default)]
+pub(crate) struct FleetHash(u64);
+
+impl std::hash::Hasher for FleetHash {
+    fn finish(&self) -> u64 {
+        self.0
+    }
+    fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = mix64(self.0 ^ u64::from(b));
+        }
+    }
+    fn write_usize(&mut self, i: usize) {
+        self.0 = mix64(self.0 ^ i as u64);
+    }
+    fn write_u64(&mut self, i: u64) {
+        self.0 = mix64(self.0 ^ i);
+    }
+}
+
+#[derive(Clone, Copy, Default)]
+pub(crate) struct FleetBuildHash;
+
+impl std::hash::BuildHasher for FleetBuildHash {
+    type Hasher = FleetHash;
+    fn build_hasher(&self) -> FleetHash {
+        FleetHash(0x9E37_79B9_7F4A_7C15)
+    }
+}
+
+/// One in-flight transfer with its virtual-time stamps — the fleet twin
+/// of the threaded fabric's channel message, with the payload behind an
+/// `Rc` so broadcasts share one buffer.
+pub(crate) struct Msg {
+    depart: f64,
+    busy: f64,
+    payload: Rc<Vec<u8>>,
+}
+
+/// Per-rank queued messages, keyed by source (per-pair FIFO order, same
+/// as the threaded fabric's per-pair channels).
+type Inbox = HashMap<usize, VecDeque<Msg>, FleetBuildHash>;
+
+/// Persistent per-rank virtual-time state: the exact fields a threaded
+/// [`crate::vfabric::VirtualEndpoint`] keeps, surviving across
+/// collectives so multi-step runs accumulate clocks the same way.
+struct RankState {
+    clock: f64,
+    idle: f64,
+    egress_free: [f64; 2],
+    ingress_free: [f64; 2],
+    rng: Rng,
+}
+
+/// Single-threaded byte meters (same accounting as the fabrics).
+#[derive(Default)]
+struct Meters {
+    bytes: u64,
+    intra: u64,
+    inter: u64,
+}
+
+impl Meters {
+    fn add(&mut self, class: usize, len: u64) {
+        self.bytes += len;
+        if class == INTRA {
+            self.intra += len;
+        } else {
+            self.inter += len;
+        }
+    }
+}
+
+/// How the runner breaks ties among simultaneously-ready ranks. Every
+/// policy yields bit-identical results, meters, and clocks — the
+/// determinism tests run all three to prove it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReadyPolicy {
+    /// First-ready-first-polled, seeded in rank order (the default).
+    Fifo,
+    /// Newest-ready-first.
+    Lifo,
+    /// Seeded pseudo-random pops from the ready set.
+    Shuffle(u64),
+}
+
+/// What a parked rank is waiting for.
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum Waiting {
+    /// `try_recv(src)` missed: woken by the next message (or barrage
+    /// announcement) from that global rank.
+    Msg(usize),
+    /// Waiting on a shared-scratch publication (chunked bounds).
+    Shared,
+}
+
+/// A registered uniform broadcast: one egress booking covers all n−1
+/// copies; receiver `j` (ring order) reconstructs its copy's departure
+/// as `d0 + (j−1)·busy`.
+struct Barrage {
+    payload: Rc<Vec<u8>>,
+    d0: f64,
+    busy: f64,
+}
+
+/// Per-collective cross-rank scratch. The chunked schedule's balanced
+/// bounds are a pure function of the summed histogram, identical on
+/// every rank — so roster position 0 computes them once and publishes
+/// here instead of every rank decoding n−1 histograms (O(n²·bins) work
+/// at fleet scale). Keyed by `(first member, roster len)` so a
+/// hierarchical inner chunked run gets its own slot.
+#[derive(Default)]
+struct SharedScratch {
+    bounds: HashMap<(usize, usize), Rc<Vec<usize>>, FleetBuildHash>,
+}
+
+/// A sub-communicator view: `members` are global ranks (ascending, or
+/// node order for leader groups), `me` is this rank's index in it. The
+/// fleet twin of [`crate::collective::SubEndpoint`] re-ranking.
+#[derive(Clone)]
+pub(crate) struct Roster {
+    pub members: Rc<Vec<usize>>,
+    pub me: usize,
+}
+
+impl Roster {
+    pub fn n(&self) -> usize {
+        self.members.len()
+    }
+    pub fn global(&self, j: usize) -> usize {
+        self.members[j]
+    }
+    /// Shared-scratch key: unique among concurrently-active rosters
+    /// (an inner leader group always has fewer members than its world).
+    pub fn key(&self) -> (usize, usize) {
+        (self.members[0], self.members.len())
+    }
+}
+
+/// Result of polling a rank's state machine.
+pub(crate) enum TaskPoll {
+    /// Parked — the context records what it waits on.
+    Pending,
+    /// The rank's collective completed with this result.
+    Done(SparseTensor),
+}
+
+/// A rank's collective step as a resumable state machine: `poll` runs
+/// the rank's program order until completion or a missed `try_recv`.
+/// Contract: a `Pending` return must follow a missed receive (or an
+/// explicit [`FleetCtx::park_shared`]) in the same poll — the runner
+/// treats an unparked `Pending` as a kernel bug.
+pub(crate) trait RankTask {
+    fn poll(&mut self, ctx: &mut FleetCtx) -> anyhow::Result<TaskPoll>;
+}
+
+/// The execution context handed to a rank for one poll: its own
+/// virtual-time state plus the runner's routing surfaces. Send/receive
+/// semantics mirror [`crate::vfabric::VirtualEndpoint`] operation for
+/// operation (same meters, same obs counters, spans via
+/// [`obs::virtual_span`] with the explicit rank — never the thread-local
+/// vclock, which would corrupt under rank multiplexing).
+pub(crate) struct FleetCtx<'a> {
+    /// this rank's global id
+    pub me: usize,
+    topo: Topology,
+    intra: Link,
+    inter: Link,
+    scenario: &'a Scenario,
+    state: &'a mut RankState,
+    inbox: &'a mut Inbox,
+    outbox: &'a mut Vec<(usize, Msg)>,
+    barrage: &'a mut Vec<Option<Barrage>>,
+    shared: &'a mut SharedScratch,
+    meters: &'a mut Meters,
+    missed: Option<usize>,
+    missed_shared: bool,
+    announced: bool,
+    published: bool,
+}
+
+impl FleetCtx<'_> {
+    pub fn send(&mut self, dst: usize, payload: Vec<u8>) {
+        self.send_rc(dst, Rc::new(payload));
+    }
+
+    /// Non-blocking virtual send: books the egress port, stamps the
+    /// delivery window, meters the bytes — the exact operation order of
+    /// the threaded `VirtualEndpoint::send`.
+    pub fn send_rc(&mut self, dst: usize, payload: Rc<Vec<u8>>) {
+        assert_ne!(dst, self.me, "self-send not allowed");
+        let len = payload.len() as u64;
+        let (alpha, beta, class) =
+            vfabric::resolve_link(self.topo, self.me, dst, self.intra, self.inter, self.scenario);
+        self.meters.add(class, len);
+        let busy = vfabric::transfer_busy(
+            alpha,
+            beta,
+            class,
+            payload.len(),
+            self.state.clock,
+            self.topo.node_of(self.me),
+            self.topo.node_of(dst),
+            self.scenario,
+            &mut self.state.rng,
+        );
+        let depart = self.state.clock.max(self.state.egress_free[class]);
+        self.state.egress_free[class] = depart + busy;
+        obs::virtual_span(
+            obs::SpanKind::Send,
+            obs::Lane::egress(class),
+            self.me,
+            depart,
+            depart + busy,
+            len,
+        );
+        obs::count(if class == INTRA { "vfabric.intra_bytes" } else { "vfabric.inter_bytes" }, len);
+        obs::observe("vfabric.egress_backlog_s", depart - self.state.clock);
+        self.outbox.push((dst, Msg { depart, busy, payload }));
+    }
+
+    /// Non-blocking receive from `src`: on a hit, books the ingress port
+    /// and advances this rank's clock exactly like the threaded `recv`;
+    /// on a miss, records the awaited source so the runner parks us.
+    pub fn try_recv(&mut self, src: usize) -> Option<Rc<Vec<u8>>> {
+        assert_ne!(src, self.me);
+        match self.inbox.get_mut(&src).and_then(|q| q.pop_front()) {
+            Some(msg) => Some(self.deliver(src, msg)),
+            None => {
+                self.missed = Some(src);
+                None
+            }
+        }
+    }
+
+    /// Ingress booking shared by inbox and barrage deliveries.
+    fn deliver(&mut self, src: usize, msg: Msg) -> Rc<Vec<u8>> {
+        let (_, _, class) =
+            vfabric::resolve_link(self.topo, self.me, src, self.intra, self.inter, self.scenario);
+        let before = self.state.clock;
+        let delivery = self.state.ingress_free[class].max(msg.depart) + msg.busy;
+        self.state.ingress_free[class] = delivery;
+        if delivery > before {
+            self.state.idle += delivery - before;
+            self.state.clock = delivery;
+        }
+        let len = msg.payload.len() as u64;
+        obs::virtual_span(
+            obs::SpanKind::RecvWait,
+            obs::Lane::Cpu,
+            self.me,
+            before,
+            self.state.clock,
+            len,
+        );
+        obs::virtual_span(
+            obs::SpanKind::Recv,
+            obs::Lane::ingress(class),
+            self.me,
+            delivery - msg.busy,
+            delivery,
+            len,
+        );
+        msg.payload
+    }
+
+    /// Whether the uniform-copy broadcast fast path is valid for this
+    /// roster: every copy must get identical `(α, β, class)` and draw
+    /// nothing from the jitter stream, and the roster must be big enough
+    /// that n² message materialization is worth avoiding.
+    pub fn barrage_ok(&self, roster: &Roster) -> bool {
+        if roster.n() <= BARRAGE_MIN {
+            return false;
+        }
+        let s = self.scenario;
+        if s.link_jitter > 0.0
+            || !s.link_flaps.is_empty()
+            || !s.stragglers.is_empty()
+            || !s.node_mbps.is_empty()
+        {
+            return false;
+        }
+        // uniform link class: all members on one node (all intra) or one
+        // member per node (all inter). Members are node-sorted, so a
+        // pairwise-adjacent check covers the whole roster.
+        let nodes: Vec<usize> = roster.members.iter().map(|&g| self.topo.node_of(g)).collect();
+        nodes.windows(2).all(|w| w[0] == w[1]) || nodes.windows(2).all(|w| w[0] < w[1])
+    }
+
+    /// Register this rank's copy of `payload` toward every other roster
+    /// member in ring order: one egress booking for all n−1 copies.
+    /// Callers must have checked [`FleetCtx::barrage_ok`].
+    pub fn barrage_send_all(&mut self, roster: &Roster, payload: Rc<Vec<u8>>) {
+        let k = roster.n();
+        debug_assert!(k > BARRAGE_MIN);
+        let peer = roster.global((roster.me + 1) % k);
+        let (alpha, beta, class) =
+            vfabric::resolve_link(self.topo, self.me, peer, self.intra, self.inter, self.scenario);
+        let len = payload.len() as u64;
+        let copies = (k - 1) as u64;
+        self.meters.add(class, len * copies);
+        // gated: no flap, no jitter — occupancy is the bare α + b/β
+        let busy = alpha + payload.len() as f64 / beta;
+        let d0 = self.state.clock.max(self.state.egress_free[class]);
+        self.state.egress_free[class] = d0 + copies as f64 * busy;
+        obs::virtual_span(
+            obs::SpanKind::Send,
+            obs::Lane::egress(class),
+            self.me,
+            d0,
+            d0 + copies as f64 * busy,
+            len * copies,
+        );
+        obs::count(
+            if class == INTRA { "vfabric.intra_bytes" } else { "vfabric.inter_bytes" },
+            len * copies,
+        );
+        obs::observe("vfabric.egress_backlog_s", d0 - self.state.clock);
+        self.barrage[self.me] = Some(Barrage { payload, d0, busy });
+        self.announced = true;
+    }
+
+    /// Receive the barrage copy from `src`, where `j ∈ 1..n` is this
+    /// rank's position in the sender's ring send order. Parks until the
+    /// sender has announced.
+    pub fn barrage_recv(&mut self, src: usize, j: usize) -> Option<Rc<Vec<u8>>> {
+        debug_assert!(j >= 1);
+        let msg = match &self.barrage[src] {
+            Some(b) => Msg {
+                depart: b.d0 + (j - 1) as f64 * b.busy,
+                busy: b.busy,
+                payload: Rc::clone(&b.payload),
+            },
+            None => {
+                self.missed = Some(src);
+                return None;
+            }
+        };
+        Some(self.deliver(src, msg))
+    }
+
+    /// Look up a published chunked-bounds result for this roster.
+    pub fn shared_bounds(&self, key: (usize, usize)) -> Option<Rc<Vec<usize>>> {
+        self.shared.bounds.get(&key).cloned()
+    }
+
+    /// Publish the chunked bounds for this roster, waking every rank
+    /// parked on a shared publication.
+    pub fn publish_bounds(&mut self, key: (usize, usize), bounds: Vec<usize>) {
+        self.shared.bounds.insert(key, Rc::new(bounds));
+        self.published = true;
+    }
+
+    /// Park until the next shared publication (re-check on wake:
+    /// publications for other rosters wake spuriously).
+    pub fn park_shared(&mut self) {
+        self.missed_shared = true;
+    }
+}
+
+/// The fleet fabric: persistent per-rank virtual-time state plus byte
+/// meters, executing whole collectives single-threadedly via
+/// [`FleetFabric::allreduce`]. Mirrors the accessor surface of
+/// [`crate::vfabric::VirtualNetwork`], with `elapse`/`sync_to` taking
+/// the rank explicitly (there are no per-rank endpoint objects).
+pub struct FleetFabric {
+    topo: Topology,
+    intra: Link,
+    inter: Link,
+    scenario: Scenario,
+    policy: ReadyPolicy,
+    states: Vec<RankState>,
+    meters: Meters,
+}
+
+impl FleetFabric {
+    /// Build the fabric over `topo` with per-class link parameters and a
+    /// [`Scenario`] — the same constructor shape (and the same per-rank
+    /// jitter stream seeding) as the threaded `VirtualNetwork`.
+    pub fn new(topo: Topology, intra: Link, inter: Link, scenario: Scenario) -> Self {
+        let n = topo.world();
+        assert!(n >= 1);
+        let states = (0..n)
+            .map(|rank| RankState {
+                clock: 0.0,
+                idle: 0.0,
+                egress_free: [0.0; 2],
+                ingress_free: [0.0; 2],
+                rng: Rng::new(scenario.seed ^ mix64(rank as u64)),
+            })
+            .collect();
+        Self {
+            topo,
+            intra,
+            inter,
+            scenario,
+            policy: ReadyPolicy::Fifo,
+            states,
+            meters: Meters::default(),
+        }
+    }
+
+    /// Flat single-node fabric with one link everywhere and no scenario.
+    pub fn flat(n: usize, link: Link) -> Self {
+        Self::new(Topology::flat(n), link, link, Scenario::none(0))
+    }
+
+    /// Override the ready-queue tie-breaking policy (builder style).
+    pub fn with_policy(mut self, policy: ReadyPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn n(&self) -> usize {
+        self.topo.world()
+    }
+
+    pub fn topology(&self) -> Topology {
+        self.topo
+    }
+
+    /// This rank's virtual clock, seconds.
+    pub fn clock_s(&self, rank: usize) -> f64 {
+        self.states[rank].clock
+    }
+
+    /// The fabric-wide virtual time: the maximum rank clock.
+    pub fn max_clock_s(&self) -> f64 {
+        self.states.iter().map(|s| s.clock).fold(0.0, f64::max)
+    }
+
+    /// Accumulated recv-wait idle time of `rank`, seconds.
+    pub fn idle_s(&self, rank: usize) -> f64 {
+        self.states[rank].idle
+    }
+
+    /// Total recv-wait idle time across all ranks, seconds.
+    pub fn total_idle_s(&self) -> f64 {
+        self.states.iter().map(|s| s.idle).sum()
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.meters.bytes
+    }
+
+    pub fn intra_bytes(&self) -> u64 {
+        self.meters.intra
+    }
+
+    pub fn inter_bytes(&self) -> u64 {
+        self.meters.inter
+    }
+
+    pub fn reset_bytes(&mut self) {
+        self.meters = Meters::default();
+    }
+
+    /// Local work: advance `rank`'s clock by `dt` seconds.
+    pub fn elapse(&mut self, rank: usize, dt: f64) {
+        if dt > 0.0 {
+            self.states[rank].clock += dt;
+        }
+    }
+
+    /// Barrier alignment: advance `rank`'s clock to at least `t` without
+    /// counting the gap as idle.
+    pub fn sync_to(&mut self, rank: usize, t: f64) {
+        let s = &mut self.states[rank];
+        if t > s.clock {
+            s.clock = t;
+        }
+    }
+
+    /// Run one sparse allreduce over the whole world. `inputs[r]` is
+    /// rank r's contribution; returns every rank's result.
+    pub fn allreduce(
+        &mut self,
+        sched: Schedule,
+        cfg: &SparseConfig,
+        codec: &SegmentCodec,
+        inputs: Vec<SparseTensor>,
+    ) -> anyhow::Result<Vec<SparseTensor>> {
+        let members: Vec<usize> = (0..self.topo.world()).collect();
+        self.allreduce_members(&members, sched, cfg, codec, inputs)
+    }
+
+    /// Run one sparse allreduce over a subset of ranks (elastic
+    /// membership: crashed ranks simply sit out — see
+    /// [`Scenario::alive_members`]). `members` must be ascending global
+    /// ranks; `inputs[j]` belongs to `members[j]`, and results come back
+    /// in the same order. Non-member rank state is untouched.
+    pub fn allreduce_members(
+        &mut self,
+        members: &[usize],
+        sched: Schedule,
+        cfg: &SparseConfig,
+        codec: &SegmentCodec,
+        inputs: Vec<SparseTensor>,
+    ) -> anyhow::Result<Vec<SparseTensor>> {
+        anyhow::ensure!(!members.is_empty(), "fleet collective needs at least one member");
+        anyhow::ensure!(
+            inputs.len() == members.len(),
+            "{} inputs for {} members",
+            inputs.len(),
+            members.len()
+        );
+        anyhow::ensure!(
+            members.windows(2).all(|w| w[0] < w[1]),
+            "fleet members must be ascending and unique"
+        );
+        let shared_members = Rc::new(members.to_vec());
+        let tasks: Vec<Box<dyn RankTask>> = inputs
+            .into_iter()
+            .enumerate()
+            .map(|(j, input)| {
+                let roster = Roster { members: Rc::clone(&shared_members), me: j };
+                kernels::build(sched, cfg, codec, roster, input)
+            })
+            .collect();
+        self.run(members, tasks)
+    }
+
+    /// The event loop: poll ready ranks, route their sends, wake parked
+    /// receivers, until every task completes (or nothing can progress —
+    /// a schedule bug, reported with who-waits-on-whom diagnostics).
+    fn run(
+        &mut self,
+        participants: &[usize],
+        mut tasks: Vec<Box<dyn RankTask>>,
+    ) -> anyhow::Result<Vec<SparseTensor>> {
+        let world = self.topo.world();
+        let k = participants.len();
+        let policy = self.policy;
+        let mut part_of: Vec<Option<u32>> = vec![None; world];
+        for (j, &g) in participants.iter().enumerate() {
+            anyhow::ensure!(g < world, "fleet member {g} outside world {world}");
+            part_of[g] = Some(j as u32);
+        }
+        let mut inboxes: Vec<Inbox> = (0..k).map(|_| Inbox::default()).collect();
+        let mut parked: Vec<Option<Waiting>> = (0..k).map(|_| None).collect();
+        let mut queue: VecDeque<usize> = (0..k).collect();
+        let mut in_queue = vec![true; k];
+        let mut barrage: Vec<Option<Barrage>> = (0..world).map(|_| None).collect();
+        let mut shared = SharedScratch::default();
+        let mut outbox: Vec<(usize, Msg)> = Vec::new();
+        let mut results: Vec<Option<SparseTensor>> = (0..k).map(|_| None).collect();
+        let mut remaining = k;
+        let mut pol_rng = match policy {
+            ReadyPolicy::Shuffle(seed) => Some(Rng::new(seed)),
+            _ => None,
+        };
+
+        let FleetFabric { topo, intra, inter, scenario, states, meters, .. } = self;
+        let (topo, intra, inter) = (*topo, *intra, *inter);
+        let scenario: &Scenario = scenario;
+
+        while remaining > 0 {
+            let Some(pi) = pop_ready(&mut queue, policy, &mut pol_rng) else {
+                let stuck: Vec<String> = parked
+                    .iter()
+                    .enumerate()
+                    .filter_map(|(j, w)| {
+                        w.map(|w| match w {
+                            Waiting::Msg(src) => {
+                                format!("rank {} awaits rank {src}", participants[j])
+                            }
+                            Waiting::Shared => {
+                                format!("rank {} awaits shared bounds", participants[j])
+                            }
+                        })
+                    })
+                    .collect();
+                anyhow::bail!(
+                    "fleetsim deadlock with {remaining} unfinished rank(s): [{}]",
+                    stuck.join(", ")
+                );
+            };
+            in_queue[pi] = false;
+            let g = participants[pi];
+            let mut ctx = FleetCtx {
+                me: g,
+                topo,
+                intra,
+                inter,
+                scenario,
+                state: &mut states[g],
+                inbox: &mut inboxes[pi],
+                outbox: &mut outbox,
+                barrage: &mut barrage,
+                shared: &mut shared,
+                meters: &mut *meters,
+                missed: None,
+                missed_shared: false,
+                announced: false,
+                published: false,
+            };
+            let polled = tasks[pi].poll(&mut ctx);
+            let (missed, missed_shared) = (ctx.missed, ctx.missed_shared);
+            let (announced, published) = (ctx.announced, ctx.published);
+            drop(ctx);
+            match polled {
+                Err(e) => return Err(e.context(format!("fleet rank {g} sparse allreduce failed"))),
+                Ok(TaskPoll::Done(t)) => {
+                    results[pi] = Some(t);
+                    remaining -= 1;
+                }
+                Ok(TaskPoll::Pending) => {
+                    if missed_shared {
+                        parked[pi] = Some(Waiting::Shared);
+                    } else if let Some(src) = missed {
+                        parked[pi] = Some(Waiting::Msg(src));
+                    } else {
+                        anyhow::bail!("fleetsim rank {g}: Pending poll without a parked wait");
+                    }
+                }
+            }
+            // route this poll's sends; wake receivers parked on us
+            for (dst, msg) in outbox.drain(..) {
+                let Some(dpi) = part_of[dst] else {
+                    anyhow::bail!("fleet rank {g} sent to rank {dst}, not in this collective");
+                };
+                let dpi = dpi as usize;
+                inboxes[dpi].entry(g).or_default().push_back(msg);
+                if parked[dpi] == Some(Waiting::Msg(g)) {
+                    parked[dpi] = None;
+                    if !in_queue[dpi] {
+                        queue.push_back(dpi);
+                        in_queue[dpi] = true;
+                    }
+                }
+            }
+            if announced {
+                // a barrage is "a message to everyone": wake all ranks
+                // parked on this sender
+                for (dpi, w) in parked.iter_mut().enumerate() {
+                    if *w == Some(Waiting::Msg(g)) {
+                        *w = None;
+                        if !in_queue[dpi] {
+                            queue.push_back(dpi);
+                            in_queue[dpi] = true;
+                        }
+                    }
+                }
+            }
+            if published {
+                for (dpi, w) in parked.iter_mut().enumerate() {
+                    if *w == Some(Waiting::Shared) {
+                        *w = None;
+                        if !in_queue[dpi] {
+                            queue.push_back(dpi);
+                            in_queue[dpi] = true;
+                        }
+                    }
+                }
+            }
+        }
+        Ok(results.into_iter().map(|r| r.expect("completed rank result")).collect())
+    }
+}
+
+fn pop_ready(
+    queue: &mut VecDeque<usize>,
+    policy: ReadyPolicy,
+    rng: &mut Option<Rng>,
+) -> Option<usize> {
+    match policy {
+        ReadyPolicy::Fifo => queue.pop_front(),
+        ReadyPolicy::Lifo => queue.pop_back(),
+        ReadyPolicy::Shuffle(_) => {
+            if queue.is_empty() {
+                return None;
+            }
+            let i = rng.as_mut().expect("shuffle rng").below(queue.len() as u64) as usize;
+            queue.swap(i, queue.len() - 1);
+            queue.pop_back()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::sparse::SegmentCodec;
+
+    fn link(alpha: f64, bps: f64) -> Link {
+        Link { bandwidth_bps: bps, latency_s: alpha }
+    }
+
+    fn inputs(n: usize, d: usize) -> Vec<SparseTensor> {
+        (0..n)
+            .map(|r| {
+                SparseTensor::new(d, vec![r as u32, (r + n) as u32], vec![1.0, (r + 1) as f32])
+            })
+            .collect()
+    }
+
+    fn correct_sum(n: usize, d: usize) -> Vec<f32> {
+        let mut want = vec![0.0f32; d];
+        for t in inputs(n, d) {
+            for (&i, &v) in t.indices().iter().zip(t.values()) {
+                want[i as usize] += v;
+            }
+        }
+        want
+    }
+
+    #[test]
+    fn every_schedule_sums_exactly_across_policies() {
+        let d = 64;
+        for policy in [ReadyPolicy::Fifo, ReadyPolicy::Lifo, ReadyPolicy::Shuffle(7)] {
+            for sched in Schedule::all() {
+                for n in [1usize, 2, 4, 7] {
+                    let topo =
+                        if n % 2 == 0 { Topology::new(2, n / 2) } else { Topology::flat(n) };
+                    let mut fab =
+                        FleetFabric::new(topo, link(1e-6, 1e9), link(1e-5, 1e8), Scenario::none(3))
+                            .with_policy(policy);
+                    let cfg = SparseConfig {
+                        topology: Some(topo),
+                        resparsify: false,
+                        ..SparseConfig::default()
+                    };
+                    let codec = SegmentCodec::raw(cfg.dense_switch);
+                    let outs = fab
+                        .allreduce(sched, &cfg, &codec, inputs(n, d))
+                        .unwrap_or_else(|e| panic!("{} n={n}: {e:?}", sched.name()));
+                    let want = correct_sum(n, d);
+                    for (r, out) in outs.iter().enumerate() {
+                        assert_eq!(
+                            out.to_dense().data(),
+                            want.as_slice(),
+                            "{} n={n} rank {r} policy {policy:?}",
+                            sched.name()
+                        );
+                    }
+                    if n > 1 {
+                        assert!(fab.total_bytes() > 0);
+                        assert!(fab.max_clock_s() > 0.0);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn members_subset_excludes_crashed_ranks() {
+        let n = 6;
+        let d = 32;
+        let mut fab = FleetFabric::flat(n, link(0.0, 1e6));
+        let members = vec![0usize, 1, 3, 4, 5]; // rank 2 crashed
+        let ins: Vec<SparseTensor> =
+            members.iter().map(|&r| SparseTensor::new(d, vec![r as u32], vec![1.0])).collect();
+        let cfg = SparseConfig::default();
+        let codec = SegmentCodec::raw(cfg.dense_switch);
+        let outs = fab
+            .allreduce_members(&members, Schedule::GatherAll, &cfg, &codec, ins)
+            .unwrap();
+        for out in &outs {
+            assert_eq!(out.indices(), &[0, 1, 3, 4, 5]);
+        }
+        // the crashed rank never moved
+        assert_eq!(fab.clock_s(2), 0.0);
+        assert!(fab.clock_s(0) > 0.0);
+    }
+
+    #[test]
+    fn deadlock_reports_who_waits_on_whom() {
+        struct StuckTask;
+        impl RankTask for StuckTask {
+            fn poll(&mut self, ctx: &mut FleetCtx) -> anyhow::Result<TaskPoll> {
+                // wait on a message nobody sends
+                let src = (ctx.me + 1) % 2;
+                match ctx.try_recv(src) {
+                    Some(_) => unreachable!(),
+                    None => Ok(TaskPoll::Pending),
+                }
+            }
+        }
+        let mut fab = FleetFabric::flat(2, Link::ideal());
+        let tasks: Vec<Box<dyn RankTask>> = vec![Box::new(StuckTask), Box::new(StuckTask)];
+        let err = fab.run(&[0, 1], tasks).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("deadlock"), "{msg}");
+        assert!(msg.contains("rank 0 awaits rank 1"), "{msg}");
+    }
+
+    #[test]
+    fn clocks_and_meters_persist_across_collectives() {
+        let d = 32;
+        let n = 4;
+        let mut fab = FleetFabric::flat(n, link(0.0, 100.0));
+        let cfg = SparseConfig::default();
+        let codec = SegmentCodec::raw(cfg.dense_switch);
+        fab.allreduce(Schedule::GatherAll, &cfg, &codec, inputs(n, d)).unwrap();
+        let c1 = fab.max_clock_s();
+        let b1 = fab.total_bytes();
+        assert!(c1 > 0.0 && b1 > 0);
+        fab.allreduce(Schedule::GatherAll, &cfg, &codec, inputs(n, d)).unwrap();
+        // second step starts where the first left off
+        assert!(fab.max_clock_s() > c1);
+        assert_eq!(fab.total_bytes(), 2 * b1);
+        fab.reset_bytes();
+        assert_eq!(fab.total_bytes(), 0);
+        // elapse / sync_to move individual rank clocks
+        let c = fab.clock_s(0);
+        fab.elapse(0, 1.5);
+        assert!((fab.clock_s(0) - (c + 1.5)).abs() < 1e-12);
+        fab.sync_to(1, 100.0);
+        assert_eq!(fab.clock_s(1), 100.0);
+        fab.sync_to(1, 1.0); // never moves backwards
+        assert_eq!(fab.clock_s(1), 100.0);
+    }
+}

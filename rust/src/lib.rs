@@ -35,6 +35,11 @@
 //!   virtual clocks, port serialization, and scenario knobs
 //!   (stragglers, jitter, heterogeneous links); measured step times
 //!   cross-validated against the [`simnet`] closed forms.
+//! - [`fleetsim`] — the fleet-scale twin of [`vfabric`]: a
+//!   single-threaded deterministic event-loop runner that executes
+//!   every rank's collective as a resumable state machine on the same
+//!   virtual clock, pinned byte- and time-identical to the threaded
+//!   fabric by a differential test harness and usable to 10k+ ranks.
 //! - [`obs`] — structured tracing + metrics: per-rank typed spans on
 //!   both the wall and virtual clocks, a counter/histogram registry,
 //!   and Chrome-trace / terminal exporters (`--trace off|step|full`).
@@ -51,6 +56,7 @@ pub mod collective;
 pub mod compress;
 pub mod coordinator;
 pub mod data;
+pub mod fleetsim;
 pub mod linalg;
 pub mod obs;
 pub mod optim;

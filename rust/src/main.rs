@@ -83,9 +83,10 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     let index = args.get_or("index", "");
     let value = args.get_or("value", "");
     // any scenario knob runs on the virtual-time fabric
-    let scenario_flags = ["straggler", "compute-jitter", "link-jitter", "node-mbps"]
-        .iter()
-        .any(|&f| args.get(f).is_some());
+    let scenario_flags =
+        ["straggler", "compute-jitter", "link-jitter", "node-mbps", "link-flap", "crash"]
+            .iter()
+            .any(|&f| args.get(f).is_some());
     // --schedule / --topology / --fabric / --trace / a scenario knob
     // alone activates the compression pipeline (raw/raw) so none of
     // these flags is ever silently ignored
@@ -156,12 +157,17 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         // implies --fabric virtual when --fabric is not given
         spec.fabric = args.get_or("fabric", &spec.fabric);
         if scenario_flags && args.get("fabric").is_none() {
-            spec.fabric = "virtual".into();
+            // --crash needs elastic membership, which only the fleet
+            // event loop provides; other knobs default to virtual
+            spec.fabric =
+                if args.get("crash").is_some() { "fleet".into() } else { "virtual".into() };
         }
         spec.straggler = args.get_or("straggler", &spec.straggler);
         spec.compute_jitter = args.get_f64("compute-jitter", spec.compute_jitter)?;
         spec.link_jitter = args.get_f64("link-jitter", spec.link_jitter)?;
         spec.node_mbps = args.get_or("node-mbps", &spec.node_mbps);
+        spec.link_flap = args.get_or("link-flap", &spec.link_flap);
+        spec.crash = args.get_or("crash", &spec.crash);
         spec.autotune_cost = args.get_or("autotune-cost", &spec.autotune_cost);
         // gradient pipeline: --bucket-bytes caps fused buckets (0 = one
         // bucket per tensor); --autotune [on|off] picks codecs per bucket

@@ -383,6 +383,38 @@ pub fn port_span(kind: SpanKind, lane: Lane, v0: f64, v1: f64, bytes: u64) {
     });
 }
 
+/// Record a span for an explicit `rank` with a pure **virtual** extent
+/// and no wall stamps (`NaN` walls serialise as `null`). Used by the
+/// single-threaded fleet runner, which multiplexes every rank onto one
+/// collector thread: the thread-local collector's rank/wall/vnow state
+/// would be meaningless for the simulated ranks, so the caller supplies
+/// the rank and the virtual window directly. Spans recorded this way are
+/// bit-deterministic (no wall clock), which is what the fleetsim
+/// determinism suite asserts on.
+pub fn virtual_span(kind: SpanKind, lane: Lane, rank: usize, v0: f64, v1: f64, bytes: u64) {
+    if !enabled(kind) {
+        return;
+    }
+    TLS.with(|t| {
+        let mut b = t.borrow_mut();
+        if let Some(c) = b.as_mut() {
+            c.buf.push(Span {
+                kind,
+                lane,
+                rank: rank as u32,
+                step: 0,
+                depth: 0,
+                bytes,
+                label: None,
+                wall0: f64::NAN,
+                wall1: f64::NAN,
+                virt0: v0,
+                virt1: v1,
+            });
+        }
+    });
+}
+
 /// Publish the rank's virtual clock to the tracing layer (monotonic max).
 /// The virtual fabric calls this whenever its per-rank clock advances, so
 /// spans opened afterwards carry virtual stamps.
@@ -568,6 +600,24 @@ mod tests {
         assert_eq!(spans[0].bytes, 4096);
         // wall extent is a point (the booking instant)
         assert_eq!(spans[0].wall0, spans[0].wall1);
+    }
+
+    #[test]
+    fn virtual_span_carries_explicit_rank_and_no_wall() {
+        let tracer = Tracer::new(TraceLevel::Full, 8);
+        {
+            // collector installed for rank 0, span recorded for rank 5
+            let _g = tracer.install(0);
+            virtual_span(SpanKind::Recv, Lane::ingress(0), 5, 1.0, 2.25, 512);
+            flush();
+        }
+        let spans = tracer.drain(0);
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].rank, 5);
+        assert_eq!(spans[0].lane, Lane::IngressIntra);
+        assert!(!spans[0].has_wall());
+        assert!((spans[0].virt_dur() - 1.25).abs() < 1e-12);
+        assert_eq!(spans[0].bytes, 512);
     }
 
     #[test]

@@ -68,6 +68,11 @@ impl StepTimeline {
 /// kernels, …) stay off the shipper's cpu lane and the per-(rank, lane)
 /// nesting invariant holds. `ship` runs on the calling thread and is
 /// not wrapped in any span — callers own the shipping spans.
+///
+/// Lockstep: `fleetsim::kernels::ChunkedTask` replays the ship-side
+/// frame order of this pipeline cooperatively (encode inline, same
+/// send/recv sequence) — change the frame order here, change it there
+/// (DESIGN.md §13).
 pub fn streamed<T, E, S>(count: usize, lookahead: usize, encode: E, mut ship: S)
 where
     T: Send,

@@ -84,6 +84,42 @@ pub fn sorted_support(rng: &mut Rng, d: usize, r: usize) -> Vec<u32> {
     idx
 }
 
+/// Deterministic scenario corpus for fabric differential / determinism
+/// tests and the scaling bench: the cross product of straggler
+/// placement × link jitter × heterogeneous node links × a link flap,
+/// all derived from `seed` so two calls with the same arguments build
+/// byte-identical scenarios. `world` scales rank/node references so
+/// the same corpus works from 2 to 10k ranks.
+pub fn scenario_corpus(seed: u64, world: usize) -> Vec<crate::vfabric::Scenario> {
+    use crate::vfabric::{LinkFlap, Scenario};
+    let mut out = vec![Scenario::none(seed)];
+
+    let mut straggled = Scenario::none(seed ^ 1);
+    straggled.stragglers = vec![(0, 2.0), (world / 2, 1.5)];
+    out.push(straggled);
+
+    let mut jittery = Scenario::none(seed ^ 2);
+    jittery.link_jitter = 0.25;
+    out.push(jittery);
+
+    let mut hetero = Scenario::none(seed ^ 3);
+    hetero.node_mbps = vec![(0, 400.0), (1, 900.0)];
+    out.push(hetero);
+
+    let mut flappy = Scenario::none(seed ^ 4);
+    flappy.link_flaps = vec![LinkFlap { node: 0, start_s: 0.0, end_s: 1e6, factor: 4.0 }];
+    out.push(flappy);
+
+    let mut stormy = Scenario::none(seed ^ 5);
+    stormy.stragglers = vec![(world.saturating_sub(1), 1.7)];
+    stormy.link_jitter = 0.1;
+    stormy.node_mbps = vec![(0, 600.0)];
+    stormy.link_flaps = vec![LinkFlap { node: 1, start_s: 0.0, end_s: 1e6, factor: 2.5 }];
+    out.push(stormy);
+
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,6 +154,21 @@ mod tests {
             |rng, size| rng.below(size as u64 + 10),
             |&v| if v < 5 { Ok(()) } else { Err(format!("v={v} >= 5")) },
         );
+    }
+
+    #[test]
+    fn scenario_corpus_is_deterministic_and_varied() {
+        let a = scenario_corpus(7, 8);
+        let b = scenario_corpus(7, 8);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.len(), 6);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(format!("{x:?}"), format!("{y:?}"));
+        }
+        assert!(a.iter().any(|s| !s.stragglers.is_empty()));
+        assert!(a.iter().any(|s| s.link_jitter > 0.0));
+        assert!(a.iter().any(|s| !s.node_mbps.is_empty()));
+        assert!(a.iter().any(|s| !s.link_flaps.is_empty()));
     }
 
     #[test]

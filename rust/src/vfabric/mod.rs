@@ -73,7 +73,7 @@
 
 mod scenario;
 
-pub use scenario::Scenario;
+pub use scenario::{stable_unit, LinkFlap, Scenario};
 
 use crate::collective::{Comm, Topology};
 use crate::obs;
@@ -85,9 +85,9 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 
 /// Link-class index: intra-node.
-const INTRA: usize = 0;
+pub(crate) const INTRA: usize = 0;
 /// Link-class index: inter-node.
-const INTER: usize = 1;
+pub(crate) const INTER: usize = 1;
 
 /// One in-flight transfer with its virtual-time stamps.
 struct Msg {
@@ -184,7 +184,7 @@ impl VirtualNetwork {
                 idle: Cell::new(0.0),
                 egress_free: [Cell::new(0.0), Cell::new(0.0)],
                 ingress_free: [Cell::new(0.0), Cell::new(0.0)],
-                link_jitter: scenario.link_jitter,
+                scenario: scenario.clone(),
                 rng: RefCell::new(Rng::new(scenario.seed ^ mix64(rank as u64))),
                 meters: Arc::clone(&meters),
                 clocks: Arc::clone(&clocks),
@@ -269,8 +269,11 @@ impl VirtualNetwork {
 
 /// Effective `(α, β, class)` of the `rank → dst` link under a scenario:
 /// per-node inter bandwidth overrides take the min over both endpoints,
-/// and a straggler divides β on every link touching it.
-fn resolve_link(
+/// and a straggler divides β on every link touching it. Shared with the
+/// fleet runner (`crate::fleetsim`), which resolves links on the fly
+/// instead of precomputing per-peer tables — same pure function, so the
+/// two fabrics agree bit-for-bit.
+pub(crate) fn resolve_link(
     topo: Topology,
     rank: usize,
     dst: usize,
@@ -287,6 +290,41 @@ fn resolve_link(
             .min(scenario.node_beta(topo.node_of(dst), inter.bandwidth_bps));
         (inter.latency_s, b / straggle, INTER)
     }
+}
+
+/// Port occupancy of one transfer: `α + bytes/β` with the scenario's
+/// timed link flaps (inter links only, evaluated at the sender's clock
+/// when the transfer is initiated) and per-transfer jitter applied.
+///
+/// Both fabrics — the threaded [`VirtualEndpoint`] and the fleet
+/// runner's rank contexts — compute occupancy through this one
+/// function, so the exact f64 operation order is shared by
+/// construction and the differential tests can pin **bit** equality,
+/// not just ±ε. With no flaps active the β division is by exactly 1.0
+/// (an identity on f64), so adding the flap path changed no existing
+/// measured time.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn transfer_busy(
+    alpha: f64,
+    beta: f64,
+    class: usize,
+    bytes: usize,
+    clock: f64,
+    node_src: usize,
+    node_dst: usize,
+    scenario: &Scenario,
+    rng: &mut Rng,
+) -> f64 {
+    let beta = if class == INTER && !scenario.link_flaps.is_empty() {
+        beta / scenario.flap_factor(node_src, node_dst, clock)
+    } else {
+        beta
+    };
+    let mut busy = alpha + bytes as f64 / beta;
+    if scenario.link_jitter > 0.0 {
+        busy *= 1.0 + scenario.link_jitter * rng.next_f64();
+    }
+    busy
 }
 
 /// A rank's handle onto the virtual-time fabric. Owned by exactly one
@@ -308,7 +346,7 @@ pub struct VirtualEndpoint {
     idle: Cell<f64>,
     egress_free: [Cell<f64>; 2],
     ingress_free: [Cell<f64>; 2],
-    link_jitter: f64,
+    scenario: Scenario,
     rng: RefCell<Rng>,
     meters: Arc<Meters>,
     clocks: Arc<Vec<RankClock>>,
@@ -369,14 +407,20 @@ impl VirtualEndpoint {
         obs::vclock(self.clock.get());
     }
 
-    /// Port occupancy of a transfer to `dst` (jitter applied — drawn
-    /// from this rank's own deterministic stream).
+    /// Port occupancy of a transfer to `dst` (flap + jitter applied —
+    /// the jitter draw comes from this rank's own deterministic stream).
     fn occupancy(&self, dst: usize, bytes: usize) -> f64 {
-        let mut busy = self.alpha[dst] + bytes as f64 / self.beta[dst];
-        if self.link_jitter > 0.0 {
-            busy *= 1.0 + self.link_jitter * self.rng.borrow_mut().next_f64();
-        }
-        busy
+        transfer_busy(
+            self.alpha[dst],
+            self.beta[dst],
+            self.class[dst],
+            bytes,
+            self.clock.get(),
+            self.topo.node_of(self.rank),
+            self.topo.node_of(dst),
+            &self.scenario,
+            &mut self.rng.borrow_mut(),
+        )
     }
 
     /// Non-blocking virtual send: books the egress port, stamps the
@@ -617,6 +661,35 @@ mod tests {
         // 16 transfers of 1s base, jitter in [1, 1.5): total in [16, 24)
         assert!((16.0..24.0).contains(&x), "got {x}");
         assert!(x > 16.0, "jitter must actually perturb the transfers");
+    }
+
+    #[test]
+    fn link_flap_slows_inter_transfers_in_its_window() {
+        // 2×1 grid: only inter links. β = 100 B/s; node 0 flaps ×4
+        // during [0, 10): a transfer initiated inside the window takes
+        // 4× longer, one initiated after it runs at full rate.
+        let topo = Topology::new(2, 1);
+        let l = link(0.0, 100.0);
+        let scen = Scenario {
+            link_flaps: vec![LinkFlap { node: 0, start_s: 0.0, end_s: 10.0, factor: 4.0 }],
+            seed: 1,
+            ..Scenario::default()
+        };
+        let net = VirtualNetwork::new(topo, l, l, scen);
+        let mut eps = net.endpoints();
+        let b = eps.pop().unwrap();
+        let a = eps.pop().unwrap();
+        let t = thread::spawn(move || {
+            a.send(1, vec![0; 100]); // initiated at clock 0 → flapped, 4s
+            a.elapse(20.0); // move past the flap window
+            a.send(1, vec![0; 100]); // full rate, 1s
+        });
+        b.recv(0);
+        assert!((b.now() - 4.0).abs() < 1e-12, "flapped transfer: {}", b.now());
+        t.join().unwrap();
+        b.recv(0);
+        // second departs at 20 (past egress_free = 4), lands at 21
+        assert!((b.now() - 21.0).abs() < 1e-12, "got {}", b.now());
     }
 
     #[test]
