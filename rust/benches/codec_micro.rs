@@ -99,5 +99,47 @@ fn main() {
         per_call * 1e9
     );
 
+    // the DESIGN.md §14 streaming-aggregation contract: under `--trace
+    // sampled` every span folds into the fleet telemetry instead of
+    // being retained, so FleetTelemetry::fold (one log-bucket histogram
+    // observe + per-rank running sums) must stay under 200 ns/span —
+    // that bound, not a wall-clock fraction, is what keeps the sampled
+    // plane viable at fleet message volumes.
+    let world = 4096usize;
+    let mut telemetry = obs::FleetTelemetry::new(world);
+    let spans: Vec<obs::Span> = (0..(1usize << 16))
+        .map(|i| obs::Span {
+            kind: match i % 3 {
+                0 => obs::SpanKind::Compute,
+                1 => obs::SpanKind::RecvWait,
+                _ => obs::SpanKind::Send,
+            },
+            lane: if i % 3 == 2 { obs::Lane::EgressInter } else { obs::Lane::Cpu },
+            rank: (i % world) as u32,
+            step: 0,
+            depth: 0,
+            bytes: 512,
+            label: None,
+            wall0: f64::NAN,
+            wall1: f64::NAN,
+            virt0: 0.0,
+            virt1: 1e-4 + (i % 7) as f64 * 3e-5,
+        })
+        .collect();
+    let reps = 16u64;
+    let t0 = std::time::Instant::now();
+    for _ in 0..reps {
+        for s in &spans {
+            std::hint::black_box(telemetry.fold(std::hint::black_box(s)));
+        }
+    }
+    let per_fold = t0.elapsed().as_secs_f64() / (reps * spans.len() as u64) as f64;
+    println!("obs/telemetry fold          {:>8.1} ns per span", per_fold * 1e9);
+    assert!(
+        per_fold < 200e-9,
+        "sampled-telemetry fold costs {:.1} ns per span (contract: < 200 ns)",
+        per_fold * 1e9
+    );
+
     println!("\ncodec_micro done: {} measurements", bench.results().len());
 }

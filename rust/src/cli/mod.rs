@@ -26,7 +26,7 @@ pub const KNOWN_FLAGS: &[&str] = &[
     // train: gradient pipeline
     "bucket-bytes", "autotune", "pipeline-link-mbps", "autotune-cost",
     // train: observability
-    "trace", "trace-summary",
+    "trace", "trace-summary", "health-summary",
     // codecs
     "dim",
 ];
@@ -103,12 +103,18 @@ train — run distributed training with a DeepReduce instantiation
                                   formula (alpha-beta model, default) |
                                   measured (virtual-fabric feedback)
 
-  observability (see DESIGN.md §11):
-  --trace <off|step|full>         structured span tracing: off (default,
+  observability (see DESIGN.md §11, §14):
+  --trace <off|step|sampled|full> structured span tracing: off (default,
                                   zero-overhead), step (per-rank step anatomy),
-                                  full (codec/wire/rounds/ports/waits); writes
+                                  full (codec/wire/rounds/ports/waits),
+                                  sampled (fleet-scale: streaming per-step
+                                  aggregation + anomaly detection, full spans
+                                  kept only for K exemplar ranks; writes
+                                  HEALTH_train.json too); writes
                                   TRACE_train.json (open in Perfetto)
   --trace-summary                 print the per-step critical-path breakdown
+  --health-summary                print the fleet health report (percentiles,
+                                  flagged ranks; requires --trace sampled)
 
 smoke — load the pallas smoke artifact through PJRT and execute it
 

@@ -1224,13 +1224,22 @@ impl Trainer {
                 let step_start = fleet.virtual_now;
                 let advance: Vec<f64> =
                     (0..n).map(|w| busy_s[w] * self.scenario.compute_factor(w, step)).collect();
-                let (summed_buckets, windows) = fleet.exchange(
+                // bind the coordinator thread to the tracer for the
+                // duration of the event loop: the runner's per-message
+                // spans (Send/Recv/RecvWait) and byte counters are
+                // recorded through the thread-local collector, and at
+                // --trace sampled they fold into the fleet aggregate
+                // inside the loop instead of materialising per rank
+                let obs_bind = self.tracer.as_ref().map(|t| t.install(0));
+                let exchanged = fleet.exchange(
                     std::mem::take(&mut pending),
                     &advance,
                     step_start,
                     step,
                     &self.scenario,
-                )?;
+                );
+                drop(obs_bind);
+                let (summed_buckets, windows) = exchanged?;
                 let step_end = windows.iter().fold(step_start, |a, w| a.max(w.1));
                 let mut max_start = step_start;
                 let mut idle_sum = 0.0f64;
@@ -1243,16 +1252,21 @@ impl Trainer {
                     idle_sum += idle + (step_end - e);
                 }
                 if let Some(tracer) = self.tracer.as_ref() {
-                    // synthesised per-rank exchange + barrier spans: the
-                    // event loop multiplexes every rank on one thread,
-                    // so only the virtual windows are meaningful
+                    // synthesised per-rank compute + exchange + barrier
+                    // spans: the event loop multiplexes every rank on one
+                    // thread, so only the virtual windows are meaningful.
+                    // The three kinds tile [step_start, step_end] per
+                    // rank, which is what the trace-summary coverage and
+                    // the health detector's per-rank totals key off.
                     for (w, &(s0, e, _)) in windows.iter().enumerate() {
                         if !self.scenario.alive(w, step) {
                             continue;
                         }
-                        for (kind, v0, v1) in
-                            [(SpanKind::Exchange, s0, e), (SpanKind::Barrier, e, step_end)]
-                        {
+                        for (kind, v0, v1) in [
+                            (SpanKind::Compute, step_start, s0),
+                            (SpanKind::Exchange, s0, e),
+                            (SpanKind::Barrier, e, step_end),
+                        ] {
                             tracer.record(Span {
                                 kind,
                                 lane: Lane::Cpu,
@@ -1332,15 +1346,20 @@ impl Trainer {
                 virt1,
             });
             self.trace_spans.extend(tracer.drain(step as u32));
+            // at --trace sampled: freeze the streaming aggregate's step
+            // (detector + flag log + exemplar refresh); no-op otherwise
+            tracer.end_health_step(
+                step as u32,
+                measured_s,
+                (virt0, virt1),
+                Some(&self.scenario),
+            );
         }
         Ok(metrics)
     }
 
-    /// Take the accumulated trace as an exportable [`TraceReport`]
-    /// (spans, per-step windows, metrics snapshot). `None` unless the
-    /// spec asked for `--trace step|full`.
-    pub fn take_trace(&mut self) -> Option<TraceReport> {
-        let tracer = self.tracer.as_ref()?;
+    /// Run metadata shared by the TRACE and HEALTH artifacts.
+    fn trace_meta(&self) -> std::collections::BTreeMap<String, Json> {
         let mut meta = std::collections::BTreeMap::new();
         meta.insert("artifact".to_string(), Json::Str(self.cfg.artifact.clone()));
         if let Some(spec) = self.cfg.compression.as_ref() {
@@ -1356,7 +1375,20 @@ impl Trainer {
             if !spec.straggler.is_empty() {
                 meta.insert("straggler".to_string(), Json::Str(spec.straggler.clone()));
             }
+            if !spec.link_flap.is_empty() {
+                meta.insert("link_flap".to_string(), Json::Str(spec.link_flap.clone()));
+            }
         }
+        meta
+    }
+
+    /// Take the accumulated trace as an exportable [`TraceReport`]
+    /// (spans, per-step windows, metrics snapshot). `None` unless the
+    /// spec asked for `--trace step|sampled|full`; at `sampled` the span
+    /// list holds only the exemplar ranks' spans.
+    pub fn take_trace(&mut self) -> Option<TraceReport> {
+        let tracer = self.tracer.as_ref()?;
+        let meta = self.trace_meta();
         Some(TraceReport {
             name: "train".to_string(),
             level: tracer.level(),
@@ -1366,5 +1398,17 @@ impl Trainer {
             spans: std::mem::take(&mut self.trace_spans),
             registry: tracer.registry().snapshot(),
         })
+    }
+
+    /// Take the fleet-health aggregate as an exportable
+    /// [`crate::obs::HealthReport`] (per-step percentile series, flag
+    /// log with attributed causes, exemplar-trace section). `None` unless
+    /// the spec asked for `--trace sampled`. The report's name matches
+    /// [`Self::take_trace`]'s, so `HEALTH_train.json` points at
+    /// `TRACE_train.json` for the exemplar timelines.
+    pub fn take_health(&mut self) -> Option<crate::obs::HealthReport> {
+        let meta = self.trace_meta();
+        let telemetry = self.tracer.as_ref()?.take_health()?;
+        Some(telemetry.report("train", meta))
     }
 }

@@ -38,6 +38,13 @@
 //! queued messages. The closed form differs from sequential accumulation
 //! only in f64 rounding (~1 ulp), and the fast path is size-gated far
 //! above every bit-exactness test point.
+//!
+//! Observability at this scale goes through `--trace sampled`
+//! (DESIGN.md §14): the per-message `Send`/`Recv`/`RecvWait` spans the
+//! runner records are folded into streaming per-step histograms at the
+//! collector chokepoint instead of being retained, so a 10k-rank traced
+//! step stays O(ranks) in memory while full span traces survive only
+//! for the exemplar ranks.
 
 pub(crate) mod kernels;
 

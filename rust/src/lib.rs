@@ -42,7 +42,9 @@
 //!   fabric by a differential test harness and usable to 10k+ ranks.
 //! - [`obs`] — structured tracing + metrics: per-rank typed spans on
 //!   both the wall and virtual clocks, a counter/histogram registry,
-//!   and Chrome-trace / terminal exporters (`--trace off|step|full`).
+//!   Chrome-trace / terminal exporters, and the fleet-scale sampled
+//!   telemetry plane (`--trace off|step|sampled|full`) with streaming
+//!   aggregation, straggler detection, and `HEALTH_*.json` export.
 //! - [`data`] — deterministic synthetic shards (CIFAR / NCF / corpus
 //!   stand-ins).
 //! - [`tensor`], [`linalg`], [`optim`], [`util`] — dense/sparse tensors,

@@ -190,7 +190,12 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
     }
     anyhow::ensure!(
         !args.flag("trace-summary") || cfg.compression.as_ref().is_some_and(|s| s.trace != "off"),
-        "--trace-summary requires --trace step|full"
+        "--trace-summary requires --trace step|sampled|full"
+    );
+    anyhow::ensure!(
+        !args.flag("health-summary")
+            || cfg.compression.as_ref().is_some_and(|s| s.trace == "sampled"),
+        "--health-summary requires --trace sampled"
     );
     let mut trainer = Trainer::new(cfg)?;
     let report = trainer.run()?;
@@ -226,13 +231,23 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
             );
         }
     }
-    // trace artifact + optional terminal breakdown (--trace step|full)
+    // trace artifact + optional terminal breakdown (--trace step|full;
+    // at sampled the trace holds only the exemplar ranks' timelines)
     if let Some(trace) = trainer.take_trace() {
         if args.flag("trace-summary") {
             eprint!("{}", trace.summary());
         }
         let path = trace.write()?;
         eprintln!("trace written to {}", path.display());
+    }
+    // fleet health artifact (--trace sampled): percentile series, flagged
+    // ranks with attributed causes, exemplar-trace pointer
+    if let Some(health) = trainer.take_health() {
+        if args.flag("health-summary") {
+            eprint!("{}", health.summary());
+        }
+        let path = health.write()?;
+        eprintln!("health written to {}", path.display());
     }
     Ok(())
 }

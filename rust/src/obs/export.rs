@@ -49,20 +49,26 @@ pub struct TraceReport {
     pub registry: Json,
 }
 
-/// Virtual seconds of clock-advancing activity (compute + recv_wait +
-/// barrier) on one rank's cpu lane. These three kinds partition a rank's
-/// virtual timeline by construction — the virtual clock only advances in
-/// `elapse`, `recv`, and the end-of-step barrier — so their sum is the
-/// critical-path decomposition that must reconcile with `measured_step_s`.
+/// Virtual seconds of clock-advancing activity on one rank's cpu lane.
+///
+/// The decomposition is chosen from the lanes the run actually
+/// instruments: when the rank has cpu-lane `Exchange` spans (the threaded
+/// workers wrap the whole exchange section in one, and the fleet runner
+/// synthesises one per rank), the partition is compute + exchange +
+/// barrier — recv waits *nest inside* the exchange window, so counting
+/// both would double-attribute and the coverage column would over-report.
+/// Only when no exchange span exists (step-anatomy traces built from raw
+/// wait spans) does the sum fall back to compute + recv_wait + barrier.
+/// Either way the chosen kinds tile the rank's virtual timeline, so the
+/// sum reconciles with `measured_step_s`.
 pub fn attributed_s(spans: &[Span], rank: u32) -> f64 {
+    let on_cpu = |s: &&Span| s.rank == rank && s.lane == Lane::Cpu && s.has_virtual();
+    let has_exchange = spans.iter().filter(on_cpu).any(|s| s.kind == SpanKind::Exchange);
+    let mid = if has_exchange { SpanKind::Exchange } else { SpanKind::RecvWait };
     spans
         .iter()
-        .filter(|s| {
-            s.rank == rank
-                && s.lane == Lane::Cpu
-                && s.has_virtual()
-                && matches!(s.kind, SpanKind::Compute | SpanKind::RecvWait | SpanKind::Barrier)
-        })
+        .filter(on_cpu)
+        .filter(|s| matches!(s.kind, SpanKind::Compute | SpanKind::Barrier) || s.kind == mid)
         .map(|s| s.virt_dur())
         .sum()
 }
@@ -193,17 +199,19 @@ impl TraceReport {
             return None;
         }
         // the critical-path rank is the one that is least idle: largest
-        // compute + recv_wait (barrier excluded — the slowest rank's
-        // barrier is ~0 while early finishers park in theirs)
+        // compute + exchange (or compute + recv_wait when the rank has no
+        // exchange span — same instrumentation-aware rule as
+        // [`attributed_s`]); barrier excluded — the slowest rank's barrier
+        // is ~0 while early finishers park in theirs
         let busy = |rank: u32| -> f64 {
+            let on_cpu =
+                |s: &&Span| s.rank == rank && s.lane == Lane::Cpu && s.has_virtual();
+            let has_exchange = in_step.iter().filter(on_cpu).any(|s| s.kind == SpanKind::Exchange);
+            let mid = if has_exchange { SpanKind::Exchange } else { SpanKind::RecvWait };
             in_step
                 .iter()
-                .filter(|s| {
-                    s.rank == rank
-                        && s.lane == Lane::Cpu
-                        && s.has_virtual()
-                        && matches!(s.kind, SpanKind::Compute | SpanKind::RecvWait)
-                })
+                .filter(on_cpu)
+                .filter(|s| s.kind == SpanKind::Compute || s.kind == mid)
                 .map(|s| s.virt_dur())
                 .sum()
         };
@@ -239,6 +247,12 @@ impl TraceReport {
                     let compute = sum_kind(SpanKind::Compute);
                     let wait = sum_kind(SpanKind::RecvWait);
                     let barrier = sum_kind(SpanKind::Barrier);
+                    let exchange = sum_kind(SpanKind::Exchange);
+                    // same instrumentation-aware middle column as
+                    // [`attributed_s`]: exchange when the rank records one
+                    // (waits nest inside it), recv_wait otherwise
+                    let (mid_name, mid) =
+                        if exchange > 0.0 { ("exchange", exchange) } else { ("recv_wait", wait) };
                     let cov = if w.measured_s > 0.0 { att / w.measured_s } else { f64::NAN };
                     let pct = |x: f64| {
                         if w.measured_s > 0.0 { 100.0 * x / w.measured_s } else { f64::NAN }
@@ -246,14 +260,15 @@ impl TraceReport {
                     let _ = writeln!(
                         out,
                         "step {:>3}  measured {}  slowest rank {}: compute {} ({:.1}%) | \
-                         recv_wait {} ({:.1}%) | barrier {} | coverage {:.1}%",
+                         {} {} ({:.1}%) | barrier {} | coverage {:.1}%",
                         w.step,
                         fmt_s(w.measured_s),
                         rank,
                         fmt_s(compute),
                         pct(compute),
-                        fmt_s(wait),
-                        pct(wait),
+                        mid_name,
+                        fmt_s(mid),
+                        pct(mid),
                         fmt_s(barrier),
                         100.0 * cov,
                     );
@@ -308,6 +323,19 @@ impl TraceReport {
         }
         out
     }
+}
+
+/// The canonical JSON string literal for `s`: surrounding quotes
+/// included, with `"`, `\`, and every control character escaped. All
+/// artifact writers — `BENCH_*` ([`crate::util::benchkit`]), `TRACE_*`
+/// (this module), `HEALTH_*` ([`super::fleet`]) — serialise through
+/// [`Json`], which delegates to the same single escaper this function
+/// wraps ([`crate::util::json::write_escaped`]); use this entry point
+/// when emitting JSON text outside the [`Json`] tree.
+pub fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    crate::util::json::write_escaped(&mut out, s);
+    out
 }
 
 fn meta_event(name: &str, pid: u32, tid: Option<u32>, value: &str) -> Json {
@@ -382,6 +410,77 @@ mod tests {
         let text = r.summary();
         assert!(text.contains("slowest rank 0"), "{text}");
         assert!(text.contains("coverage 100.0%"), "{text}");
+    }
+
+    #[test]
+    fn exchange_spans_replace_waits_in_coverage_not_double_count() {
+        // fleet-style trace: synthesized Compute/Exchange/Barrier tile the
+        // step, with the runner's RecvWait spans nested INSIDE the
+        // exchange window. Coverage must be exactly 100%, not 100% + the
+        // nested waits.
+        let spans = vec![
+            vspan(SpanKind::Compute, 0, 0.0, 1.0),
+            vspan(SpanKind::Exchange, 0, 1.0, 4.0),
+            vspan(SpanKind::RecvWait, 0, 1.5, 3.5), // nested in the exchange
+            vspan(SpanKind::Barrier, 0, 4.0, 4.0),
+            vspan(SpanKind::Compute, 1, 0.0, 1.0),
+            vspan(SpanKind::Exchange, 1, 1.0, 2.0),
+            vspan(SpanKind::Barrier, 1, 2.0, 4.0),
+        ];
+        let w = StepWindow { step: 0, measured_s: 4.0, idle_mean_s: 1.0, virt0: 0.0, virt1: 4.0 };
+        let r = report(spans, vec![w]);
+        let cov = r.reconciliation(0).unwrap();
+        assert!((cov - 1.0).abs() < 1e-9, "coverage {cov} (waits double-counted?)");
+        let text = r.summary();
+        assert!(text.contains("slowest rank 0"), "{text}");
+        assert!(text.contains("exchange"), "{text}");
+        assert!(text.contains("coverage 100.0%"), "{text}");
+    }
+
+    #[test]
+    fn json_escape_roundtrips_hostile_strings() {
+        // every control character, plus quote/backslash/unicode mixtures —
+        // parse(escape(s)) must give back exactly s
+        let mut corpus: Vec<String> = (0u32..0x20).map(|c| {
+            format!("a{}b", char::from_u32(c).unwrap())
+        }).collect();
+        corpus.extend(
+            [
+                "",
+                "plain",
+                "quote\"inside",
+                "back\\slash",
+                "\\\"both\\\"",
+                "tab\there\nnewline\rcr",
+                "trailing backslash\\",
+                "\"",
+                "\\",
+                "unicode: π ≈ 3, ランク, 🚀",
+                "\u{1b}[31mansi\u{1b}[0m",
+                "nul\u{0}embedded",
+            ]
+            .map(String::from),
+        );
+        // pseudo-random mixtures of the hostile alphabet
+        let alphabet = ['"', '\\', '\n', '\r', '\t', '\u{1}', '\u{1f}', 'x', 'é'];
+        let mut state = 0x9e3779b97f4a7c15u64;
+        for len in 0..64 {
+            let mut s = String::new();
+            for _ in 0..len {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                s.push(alphabet[(state >> 33) as usize % alphabet.len()]);
+            }
+            corpus.push(s);
+        }
+        for s in &corpus {
+            let lit = json_escape(s);
+            let parsed = Json::parse(&lit)
+                .unwrap_or_else(|e| panic!("escape of {s:?} produced unparseable {lit:?}: {e:?}"));
+            assert_eq!(parsed.as_str(), Some(s.as_str()), "round-trip of {s:?} via {lit:?}");
+            // and embedded in an object, as the artifact writers emit it
+            let obj = format!("{{{}:{}}}", json_escape("k"), lit);
+            assert_eq!(Json::parse(&obj).unwrap().get("k").unwrap().as_str(), Some(s.as_str()));
+        }
     }
 
     #[test]

@@ -1,0 +1,747 @@
+//! Streaming fleet telemetry: per-step aggregation, straggler/anomaly
+//! detection, and exemplar trace sampling (`--trace sampled`).
+//!
+//! PR 6's per-rank Chrome traces are intractable at fleetsim rank counts
+//! (10k ranks × full-span lanes is hundreds of MB per step). This module
+//! is the bounded alternative: under [`crate::obs::TraceLevel::Sampled`]
+//! every span is **folded** into a [`FleetTelemetry`] aggregate at record
+//! time — per-rank time totals plus fleet-wide [`FixedHistogram`]s per
+//! [`TimeClass`] — and only the spans of at most K *exemplar ranks*
+//! (always rank 0, plus the per-step slowest rank and every flagged
+//! anomaly, first-come capped at K) are retained for the Perfetto trace.
+//! Memory and artifact size are therefore O(K + histograms) per step, not
+//! O(ranks × spans).
+//!
+//! At the end of each step [`FleetTelemetry::end_step`] freezes the
+//! aggregate into a [`StepHealth`] snapshot, runs the robust MAD detector
+//! (see [`crate::obs::health`] for the math) over per-rank compute and
+//! recv-wait seconds, detects crash windows (ranks with zero telemetry
+//! while peers report), and cross-checks every flag against the injected
+//! [`Scenario`] to attribute a cause. [`FleetTelemetry::report`] then
+//! assembles the schema-versioned `HEALTH_<name>.json` artifact
+//! ([`HealthReport`]) with the per-step percentile series, the
+//! flagged-rank log, and the exemplar-trace section.
+
+use super::health::{robust_threshold, FixedHistogram, TimeClass};
+use super::span::{Lane, Span, SpanKind};
+use crate::util::json::Json;
+use crate::util::stats::median;
+use crate::vfabric::Scenario;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::path::PathBuf;
+
+/// Schema version for `HEALTH_*.json` artifacts (see also
+/// [`super::export::TRACE_SCHEMA_VERSION`] for `TRACE_*.json`).
+pub const HEALTH_SCHEMA_VERSION: u32 = 1;
+
+/// Default exemplar budget K: full traces are retained for at most this
+/// many distinct ranks over a run.
+pub const DEFAULT_EXEMPLARS: usize = 8;
+
+/// Per-rank running totals for the step being folded.
+#[derive(Clone, Copy, Default)]
+struct RankAccum {
+    spans: u32,
+    compute_s: f64,
+    exchange_s: f64,
+    recv_wait_s: f64,
+    barrier_s: f64,
+}
+
+/// The in-flight aggregate of the current step.
+struct StepAccum {
+    class: [FixedHistogram; 5],
+    per_rank: Vec<RankAccum>,
+    intra_bytes: u64,
+    inter_bytes: u64,
+    folded: u64,
+}
+
+impl StepAccum {
+    fn new(world: usize) -> Self {
+        StepAccum {
+            class: std::array::from_fn(|_| FixedHistogram::new()),
+            per_rank: vec![RankAccum::default(); world],
+            intra_bytes: 0,
+            inter_bytes: 0,
+            folded: 0,
+        }
+    }
+}
+
+/// The duration a span contributes to its time class. Clock-advancing
+/// classes prefer the virtual extent (the modelled time the fleet
+/// percentiles are about); encode-side work happens at a virtual instant
+/// and is wall-measured. Missing clocks contribute 0 rather than NaN.
+#[inline]
+fn class_dur(s: &Span, class: TimeClass) -> f64 {
+    let d = if class == TimeClass::Encode {
+        if s.has_wall() { s.wall_dur() } else { s.virt_dur() }
+    } else if s.has_virtual() {
+        s.virt_dur()
+    } else {
+        s.wall_dur()
+    };
+    if d.is_finite() { d.max(0.0) } else { 0.0 }
+}
+
+/// One frozen step of fleet health: class histograms, detector output,
+/// and byte totals. Produced by [`FleetTelemetry::end_step`].
+pub struct StepHealth {
+    pub step: u32,
+    /// `measured_step_s` of the step (virtual seconds on the virtual
+    /// fabrics, wall seconds on the instant fabric).
+    pub measured_s: f64,
+    /// Virtual-clock extent of the step (NaN without a virtual clock).
+    pub virt0: f64,
+    pub virt1: f64,
+    class: [FixedHistogram; 5],
+    /// The busiest present rank (compute + exchange/recv-wait), `None`
+    /// when no rank reported any telemetry.
+    pub slowest_rank: Option<u32>,
+    /// Ranks whose compute seconds exceeded the robust threshold.
+    pub flagged: Vec<u32>,
+    /// Ranks whose recv-wait seconds exceeded the robust threshold.
+    pub wait_flagged: Vec<u32>,
+    /// Ranks with zero spans while at least one peer reported (crash
+    /// candidates, cross-checked against the scenario in the flag log).
+    pub absent: Vec<u32>,
+    pub intra_bytes: u64,
+    pub inter_bytes: u64,
+    pub spans_folded: u64,
+}
+
+impl StepHealth {
+    /// The step's histogram for one time class.
+    pub fn class_hist(&self, c: TimeClass) -> &FixedHistogram {
+        &self.class[c.idx()]
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("step".to_string(), Json::Num(self.step as f64));
+        m.insert("measured_s".to_string(), finite_or_null(self.measured_s));
+        m.insert("virt0".to_string(), finite_or_null(self.virt0));
+        m.insert("virt1".to_string(), finite_or_null(self.virt1));
+        m.insert(
+            "slowest_rank".to_string(),
+            self.slowest_rank.map_or(Json::Null, |r| Json::Num(r as f64)),
+        );
+        m.insert("flagged".to_string(), ranks_json(&self.flagged));
+        m.insert("wait_flagged".to_string(), ranks_json(&self.wait_flagged));
+        m.insert("absent".to_string(), ranks_json(&self.absent));
+        m.insert("intra_bytes".to_string(), Json::Num(self.intra_bytes as f64));
+        m.insert("inter_bytes".to_string(), Json::Num(self.inter_bytes as f64));
+        m.insert("spans_folded".to_string(), Json::Num(self.spans_folded as f64));
+        let mut classes = BTreeMap::new();
+        for c in TimeClass::ALL {
+            classes.insert(c.name().to_string(), self.class[c.idx()].to_json());
+        }
+        m.insert("classes".to_string(), Json::Obj(classes));
+        Json::Obj(m)
+    }
+}
+
+/// One detector flag: which rank, which metric, how far past the
+/// threshold, and the attributed cause (cross-checked against the
+/// injected [`Scenario`] — `expected` is true when the scenario explains
+/// the anomaly).
+pub struct RankFlag {
+    pub step: u32,
+    pub rank: u32,
+    /// `"compute_s"`, `"recv_wait_s"`, or `"absent"`.
+    pub metric: &'static str,
+    pub value_s: f64,
+    pub median_s: f64,
+    pub threshold_s: f64,
+    pub cause: String,
+    pub expected: bool,
+}
+
+impl RankFlag {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("step".to_string(), Json::Num(self.step as f64));
+        m.insert("rank".to_string(), Json::Num(self.rank as f64));
+        m.insert("metric".to_string(), Json::Str(self.metric.to_string()));
+        m.insert("value_s".to_string(), finite_or_null(self.value_s));
+        m.insert("median_s".to_string(), finite_or_null(self.median_s));
+        m.insert("threshold_s".to_string(), finite_or_null(self.threshold_s));
+        m.insert("cause".to_string(), Json::Str(self.cause.clone()));
+        m.insert("expected".to_string(), Json::Bool(self.expected));
+        Json::Obj(m)
+    }
+}
+
+/// The streaming aggregator: fold spans in, freeze a [`StepHealth`] per
+/// step, and decide which ranks' spans are worth retaining in full.
+pub struct FleetTelemetry {
+    world: usize,
+    max_exemplars: usize,
+    exemplar: Vec<bool>,
+    n_exemplars: usize,
+    cur: StepAccum,
+    steps: Vec<StepHealth>,
+    flags: Vec<RankFlag>,
+}
+
+impl FleetTelemetry {
+    /// Aggregator for a `world`-rank fleet with the default exemplar
+    /// budget ([`DEFAULT_EXEMPLARS`]); rank 0 is always an exemplar.
+    pub fn new(world: usize) -> Self {
+        Self::with_exemplars(world, DEFAULT_EXEMPLARS)
+    }
+
+    /// Aggregator with an explicit exemplar budget `k >= 1`.
+    pub fn with_exemplars(world: usize, k: usize) -> Self {
+        let max_exemplars = k.max(1);
+        let mut exemplar = vec![false; world];
+        if let Some(e0) = exemplar.get_mut(0) {
+            *e0 = true;
+        }
+        FleetTelemetry {
+            world,
+            max_exemplars,
+            exemplar,
+            n_exemplars: 1.min(world),
+            cur: StepAccum::new(world),
+            steps: Vec::new(),
+            flags: Vec::new(),
+        }
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    /// Whether `rank`'s spans are currently retained in full.
+    #[inline]
+    pub fn is_exemplar(&self, rank: usize) -> bool {
+        self.exemplar.get(rank).copied().unwrap_or(false)
+    }
+
+    /// Ranks whose spans are retained in full, ascending.
+    pub fn exemplar_ranks(&self) -> Vec<u32> {
+        (0..self.world).filter(|&r| self.exemplar[r]).map(|r| r as u32).collect()
+    }
+
+    /// Spans folded into the current (unfrozen) step so far.
+    pub fn folded_spans(&self) -> u64 {
+        self.cur.folded
+    }
+
+    fn mark_exemplar(&mut self, rank: usize) {
+        if rank < self.world && !self.exemplar[rank] && self.n_exemplars < self.max_exemplars {
+            self.exemplar[rank] = true;
+            self.n_exemplars += 1;
+        }
+    }
+
+    /// Fold one span into the current step's aggregate. Returns whether
+    /// the span should **also** be retained verbatim (exemplar rank).
+    /// This is the `--trace sampled` hot path: a class lookup, one
+    /// histogram observe, and a few adds — `benches/codec_micro.rs`
+    /// asserts it stays under 200 ns per span.
+    #[inline]
+    pub fn fold(&mut self, s: &Span) -> bool {
+        let rank = s.rank as usize;
+        if rank >= self.world {
+            return true; // out-of-range rank: retain rather than lose data
+        }
+        self.cur.folded += 1;
+        let acc = &mut self.cur.per_rank[rank];
+        acc.spans += 1;
+        match s.kind {
+            SpanKind::Send => match s.lane {
+                Lane::EgressIntra => self.cur.intra_bytes += s.bytes,
+                Lane::EgressInter => self.cur.inter_bytes += s.bytes,
+                _ => {}
+            },
+            kind => {
+                if let Some(class) = TimeClass::of_kind(kind) {
+                    let d = class_dur(s, class);
+                    match class {
+                        TimeClass::Compute => acc.compute_s += d,
+                        TimeClass::Exchange => acc.exchange_s += d,
+                        TimeClass::RecvWait => acc.recv_wait_s += d,
+                        TimeClass::Barrier => acc.barrier_s += d,
+                        TimeClass::Encode => {}
+                    }
+                    self.cur.class[class.idx()].observe(d);
+                }
+            }
+        }
+        self.exemplar[rank]
+    }
+
+    /// Freeze the current step: run the detector, log flags (with the
+    /// scenario cross-check), update the exemplar set for the next step,
+    /// and append the [`StepHealth`] snapshot. `virt` is the step's
+    /// virtual-clock window (NaNs on the instant fabric).
+    pub fn end_step(
+        &mut self,
+        step: u32,
+        measured_s: f64,
+        virt: (f64, f64),
+        scenario: Option<&Scenario>,
+    ) {
+        let acc = std::mem::replace(&mut self.cur, StepAccum::new(self.world));
+        let present: Vec<usize> =
+            (0..self.world).filter(|&r| acc.per_rank[r].spans > 0).collect();
+        let absent: Vec<u32> = if present.is_empty() {
+            Vec::new()
+        } else {
+            (0..self.world)
+                .filter(|&r| acc.per_rank[r].spans == 0)
+                .map(|r| r as u32)
+                .collect()
+        };
+        let compute: Vec<f64> = present.iter().map(|&r| acc.per_rank[r].compute_s).collect();
+        let wait: Vec<f64> = present.iter().map(|&r| acc.per_rank[r].recv_wait_s).collect();
+        let mut flagged = Vec::new();
+        let mut wait_flagged = Vec::new();
+        if !present.is_empty() {
+            let (cthr, cmed) = (robust_threshold(&compute), median(&compute));
+            let (wthr, wmed) = (robust_threshold(&wait), median(&wait));
+            for (i, &r) in present.iter().enumerate() {
+                if compute[i] > cthr {
+                    flagged.push(r as u32);
+                    let (cause, expected) = compute_cause(scenario, r, step as usize);
+                    self.flags.push(RankFlag {
+                        step,
+                        rank: r as u32,
+                        metric: "compute_s",
+                        value_s: compute[i],
+                        median_s: cmed,
+                        threshold_s: cthr,
+                        cause,
+                        expected,
+                    });
+                }
+                if wait[i] > wthr {
+                    wait_flagged.push(r as u32);
+                    let (cause, expected) = wait_cause(scenario, virt);
+                    self.flags.push(RankFlag {
+                        step,
+                        rank: r as u32,
+                        metric: "recv_wait_s",
+                        value_s: wait[i],
+                        median_s: wmed,
+                        threshold_s: wthr,
+                        cause,
+                        expected,
+                    });
+                }
+            }
+        }
+        for &r in &absent {
+            let (cause, expected) = absent_cause(scenario, r as usize, step as usize);
+            self.flags.push(RankFlag {
+                step,
+                rank: r,
+                metric: "absent",
+                value_s: f64::NAN,
+                median_s: f64::NAN,
+                threshold_s: f64::NAN,
+                cause,
+                expected,
+            });
+        }
+        // the busiest present rank: compute plus whichever of exchange /
+        // recv-wait the run instruments (exchange contains the waits when
+        // both are present — see the attribution rule in obs::export)
+        let slowest_rank = present
+            .iter()
+            .map(|&r| {
+                let a = &acc.per_rank[r];
+                let ex = if a.exchange_s > 0.0 { a.exchange_s } else { a.recv_wait_s };
+                (r, a.compute_s + ex)
+            })
+            .max_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .map(|(r, _)| r as u32);
+        // exemplars for the *next* step: the slowest rank and every
+        // flagged anomaly, first-come, capped at K (rank 0 pre-marked)
+        if let Some(r) = slowest_rank {
+            self.mark_exemplar(r as usize);
+        }
+        for &r in flagged.iter().chain(&wait_flagged).chain(&absent) {
+            self.mark_exemplar(r as usize);
+        }
+        self.steps.push(StepHealth {
+            step,
+            measured_s,
+            virt0: virt.0,
+            virt1: virt.1,
+            class: acc.class,
+            slowest_rank,
+            flagged,
+            wait_flagged,
+            absent,
+            intra_bytes: acc.intra_bytes,
+            inter_bytes: acc.inter_bytes,
+            spans_folded: acc.folded,
+        });
+    }
+
+    /// Per-step snapshots frozen so far.
+    pub fn steps(&self) -> &[StepHealth] {
+        &self.steps
+    }
+
+    /// The flag log accumulated so far.
+    pub fn flags(&self) -> &[RankFlag] {
+        &self.flags
+    }
+
+    /// Assemble the exportable [`HealthReport`] (consumes the aggregator).
+    pub fn report(self, name: &str, meta: BTreeMap<String, Json>) -> HealthReport {
+        let mut run: [FixedHistogram; 5] = std::array::from_fn(|_| FixedHistogram::new());
+        for st in &self.steps {
+            for (r, h) in run.iter_mut().zip(&st.class) {
+                r.merge(h);
+            }
+        }
+        let exemplar_ranks = self.exemplar_ranks();
+        let mut flagged_ranks: Vec<u32> =
+            self.flags.iter().filter(|f| f.metric == "compute_s").map(|f| f.rank).collect();
+        flagged_ranks.sort_unstable();
+        flagged_ranks.dedup();
+        HealthReport {
+            name: name.to_string(),
+            ranks: self.world,
+            max_exemplars: self.max_exemplars,
+            exemplar_ranks,
+            flagged_ranks,
+            steps: self.steps,
+            flags: self.flags,
+            run,
+            meta,
+        }
+    }
+}
+
+fn compute_cause(scenario: Option<&Scenario>, rank: usize, step: usize) -> (String, bool) {
+    match scenario {
+        Some(s) => {
+            let f = s.compute_factor(rank, step);
+            if f > 1.0 + 1e-9 {
+                (format!("straggler (scenario-confirmed, {f:.2}x compute)"), true)
+            } else {
+                ("compute outlier (not in injected scenario)".to_string(), false)
+            }
+        }
+        None => ("compute outlier (no scenario to cross-check)".to_string(), false),
+    }
+}
+
+fn wait_cause(scenario: Option<&Scenario>, virt: (f64, f64)) -> (String, bool) {
+    let Some(s) = scenario else {
+        return ("recv-wait outlier (no scenario to cross-check)".to_string(), false);
+    };
+    // a flap is blamed only when its window overlaps this step's virtual
+    // extent (or the run has no virtual clock to compare against)
+    let overlaps = |f: &crate::vfabric::LinkFlap| f.start_s < virt.1 && virt.0 < f.end_s;
+    if let Some(f) = s
+        .link_flaps
+        .iter()
+        .find(|f| !virt.0.is_finite() || !virt.1.is_finite() || overlaps(f))
+    {
+        (
+            format!(
+                "link flap (scenario-confirmed: node {} at {:.1}x over [{:.3}, {:.3})s)",
+                f.node, f.factor, f.start_s, f.end_s
+            ),
+            true,
+        )
+    } else if !s.stragglers.is_empty() {
+        let cause = "slow peer links (scenario-confirmed: straggler NICs run at beta/factor)";
+        (cause.to_string(), true)
+    } else if s.link_jitter > 0.0 || !s.node_mbps.is_empty() {
+        ("link jitter/heterogeneity (scenario-confirmed)".to_string(), true)
+    } else {
+        ("recv-wait outlier (not in injected scenario)".to_string(), false)
+    }
+}
+
+fn absent_cause(scenario: Option<&Scenario>, rank: usize, step: usize) -> (String, bool) {
+    match scenario {
+        Some(s) if !s.alive(rank, step) => ("crash window (scenario-confirmed)".to_string(), true),
+        Some(_) => ("rank silent (not in injected scenario)".to_string(), false),
+        None => ("rank silent (no scenario to cross-check)".to_string(), false),
+    }
+}
+
+/// The exportable fleet-health artifact: per-step percentile series, the
+/// flagged-rank log with attributed causes, run-level histograms, and the
+/// exemplar-trace section. Written as `HEALTH_<name>.json`.
+pub struct HealthReport {
+    /// Artifact stem: written as `HEALTH_<name>.json`.
+    pub name: String,
+    pub ranks: usize,
+    pub max_exemplars: usize,
+    /// Ranks whose full traces were retained (`<= max_exemplars`).
+    pub exemplar_ranks: Vec<u32>,
+    /// Union of compute-flagged ranks across steps — the set CI compares
+    /// against the injected `--straggler` ranks.
+    pub flagged_ranks: Vec<u32>,
+    pub steps: Vec<StepHealth>,
+    pub flags: Vec<RankFlag>,
+    run: [FixedHistogram; 5],
+    /// Free-form run metadata (schedule, fabric, scenario knobs).
+    pub meta: BTreeMap<String, Json>,
+}
+
+impl HealthReport {
+    /// Run-level (step-merged) histogram for one time class.
+    pub fn run_hist(&self, c: TimeClass) -> &FixedHistogram {
+        &self.run[c.idx()]
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut top = BTreeMap::new();
+        top.insert("schema_version".to_string(), Json::Num(HEALTH_SCHEMA_VERSION as f64));
+        top.insert("name".to_string(), Json::Str(self.name.clone()));
+        top.insert("ranks".to_string(), Json::Num(self.ranks as f64));
+        for (k, v) in &self.meta {
+            top.insert(k.clone(), v.clone());
+        }
+        let mut ex = BTreeMap::new();
+        ex.insert("k".to_string(), Json::Num(self.max_exemplars as f64));
+        ex.insert("ranks".to_string(), ranks_json(&self.exemplar_ranks));
+        ex.insert("trace".to_string(), Json::Str(format!("TRACE_{}.json", self.name)));
+        top.insert("exemplar_trace".to_string(), Json::Obj(ex));
+        top.insert("flagged_ranks".to_string(), ranks_json(&self.flagged_ranks));
+        top.insert(
+            "steps".to_string(),
+            Json::Arr(self.steps.iter().map(StepHealth::to_json).collect()),
+        );
+        top.insert(
+            "flags".to_string(),
+            Json::Arr(self.flags.iter().map(RankFlag::to_json).collect()),
+        );
+        let mut hists = BTreeMap::new();
+        for c in TimeClass::ALL {
+            hists.insert(c.name().to_string(), self.run[c.idx()].to_json());
+        }
+        top.insert("histograms".to_string(), Json::Obj(hists));
+        Json::Obj(top)
+    }
+
+    /// Write `HEALTH_<name>.json` at the repo root (next to the
+    /// `TRACE_*.json` / `BENCH_*.json` artifacts) and return the path.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("."));
+        let path = root.join(format!("HEALTH_{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_string())?;
+        Ok(path)
+    }
+
+    /// Terminal fleet-health report (`--health-summary`).
+    pub fn summary(&self) -> String {
+        let mut out = String::new();
+        let folded: u64 = self.steps.iter().map(|s| s.spans_folded).sum();
+        let _ = writeln!(
+            out,
+            "health '{}': {} rank(s), {} step(s), {} span(s) folded, \
+             flagged ranks {:?}, exemplars {:?} (k={})",
+            self.name,
+            self.ranks,
+            self.steps.len(),
+            folded,
+            self.flagged_ranks,
+            self.exemplar_ranks,
+            self.max_exemplars,
+        );
+        for st in &self.steps {
+            let cls = |c: TimeClass| {
+                let h = st.class_hist(c);
+                if h.count() == 0 {
+                    format!("{} -", c.name())
+                } else {
+                    format!(
+                        "{} p50 {} p99 {} max {}",
+                        c.name(),
+                        fmt_s(h.quantile(0.5)),
+                        fmt_s(h.quantile(0.99)),
+                        fmt_s(h.max()),
+                    )
+                }
+            };
+            let _ = writeln!(
+                out,
+                "step {:>3}  measured {}  {} | {} | {} | slowest {} | flagged {:?} | absent {:?}",
+                st.step,
+                fmt_s(st.measured_s),
+                cls(TimeClass::Compute),
+                cls(TimeClass::RecvWait),
+                cls(TimeClass::Barrier),
+                st.slowest_rank.map_or("-".to_string(), |r| r.to_string()),
+                st.flagged,
+                st.absent,
+            );
+        }
+        for f in &self.flags {
+            let _ = writeln!(
+                out,
+                "  flag step {} rank {}: {} {} > {} (median {}) — {}",
+                f.step,
+                f.rank,
+                f.metric,
+                fmt_s(f.value_s),
+                fmt_s(f.threshold_s),
+                fmt_s(f.median_s),
+                f.cause,
+            );
+        }
+        out
+    }
+}
+
+fn ranks_json(ranks: &[u32]) -> Json {
+    Json::Arr(ranks.iter().map(|&r| Json::Num(r as f64)).collect())
+}
+
+fn finite_or_null(x: f64) -> Json {
+    if x.is_finite() { Json::Num(x) } else { Json::Null }
+}
+
+fn fmt_s(s: f64) -> String {
+    if s.is_finite() { crate::util::benchkit::fmt_duration(s) } else { "-".to_string() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vspan(kind: SpanKind, rank: u32, v0: f64, v1: f64) -> Span {
+        Span {
+            kind,
+            lane: Lane::Cpu,
+            rank,
+            step: 0,
+            depth: 0,
+            bytes: 0,
+            label: None,
+            wall0: f64::NAN,
+            wall1: f64::NAN,
+            virt0: v0,
+            virt1: v1,
+        }
+    }
+
+    fn fold_uniform_step(t: &mut FleetTelemetry, world: usize, slow: &[(usize, f64)]) {
+        for r in 0..world {
+            let f = slow.iter().find(|&&(sr, _)| sr == r).map_or(1.0, |&(_, f)| f);
+            let c = 1e-3 * f;
+            t.fold(&vspan(SpanKind::Compute, r as u32, 0.0, c));
+            t.fold(&vspan(SpanKind::Exchange, r as u32, c, c + 2e-3));
+            t.fold(&vspan(SpanKind::Barrier, r as u32, c + 2e-3, 5e-3));
+        }
+    }
+
+    #[test]
+    fn detector_flags_injected_stragglers_only() {
+        let mut t = FleetTelemetry::new(16);
+        fold_uniform_step(&mut t, 16, &[(3, 8.0)]);
+        let sc = Scenario { stragglers: vec![(3, 8.0)], seed: 1, ..Scenario::default() };
+        t.end_step(0, 5e-3, (0.0, 5e-3), Some(&sc));
+        let st = &t.steps()[0];
+        assert_eq!(st.flagged, vec![3]);
+        assert!(st.absent.is_empty());
+        assert_eq!(st.slowest_rank, Some(3));
+        let flag = t.flags().iter().find(|f| f.metric == "compute_s").unwrap();
+        assert_eq!(flag.rank, 3);
+        assert!(flag.expected, "scenario cross-check must confirm the straggler");
+        assert!(flag.cause.contains("straggler"), "{}", flag.cause);
+        // uniform step: nothing flagged
+        let mut u = FleetTelemetry::new(16);
+        fold_uniform_step(&mut u, 16, &[]);
+        u.end_step(0, 5e-3, (0.0, 5e-3), Some(&Scenario::none(1)));
+        assert!(u.steps()[0].flagged.is_empty());
+        assert!(u.flags().is_empty());
+    }
+
+    #[test]
+    fn absent_ranks_detected_and_crash_attributed() {
+        let mut t = FleetTelemetry::new(8);
+        for r in 0..8u32 {
+            if r == 2 {
+                continue; // rank 2 reports nothing this step
+            }
+            t.fold(&vspan(SpanKind::Compute, r, 0.0, 1e-3));
+        }
+        let sc = Scenario { crashes: vec![(2, 0, 3)], seed: 1, ..Scenario::default() };
+        t.end_step(0, 1e-3, (0.0, 1e-3), Some(&sc));
+        assert_eq!(t.steps()[0].absent, vec![2]);
+        let flag = t.flags().iter().find(|f| f.metric == "absent").unwrap();
+        assert_eq!(flag.rank, 2);
+        assert!(flag.expected);
+        assert!(flag.cause.contains("crash"), "{}", flag.cause);
+    }
+
+    #[test]
+    fn exemplars_stay_bounded_and_track_anomalies() {
+        let mut t = FleetTelemetry::with_exemplars(64, 3);
+        assert!(t.is_exemplar(0), "rank 0 is always an exemplar");
+        assert!(!t.is_exemplar(7));
+        // fold returns the retain decision
+        assert!(t.fold(&vspan(SpanKind::Compute, 0, 0.0, 1.0)));
+        assert!(!t.fold(&vspan(SpanKind::Compute, 7, 0.0, 1.0)));
+        // a straggler gets flagged and becomes an exemplar for later steps
+        fold_uniform_step(&mut t, 64, &[(7, 8.0)]);
+        t.end_step(0, 5e-3, (0.0, 5e-3), None);
+        assert!(t.is_exemplar(7));
+        // the budget caps the set no matter how many anomalies show up
+        for step in 1..20 {
+            fold_uniform_step(&mut t, 64, &[(step as usize + 8, 8.0)]);
+            t.end_step(step, 5e-3, (0.0, 5e-3), None);
+        }
+        assert!(t.exemplar_ranks().len() <= 3);
+    }
+
+    #[test]
+    fn send_spans_count_bytes_per_link_class() {
+        let mut t = FleetTelemetry::new(4);
+        let mut s = vspan(SpanKind::Send, 1, 0.0, 1e-3);
+        s.lane = Lane::EgressIntra;
+        s.bytes = 100;
+        t.fold(&s);
+        s.lane = Lane::EgressInter;
+        s.bytes = 7;
+        t.fold(&s);
+        t.end_step(0, 1e-3, (0.0, 1e-3), None);
+        assert_eq!(t.steps()[0].intra_bytes, 100);
+        assert_eq!(t.steps()[0].inter_bytes, 7);
+    }
+
+    #[test]
+    fn report_roundtrips_through_json_parser() {
+        let mut t = FleetTelemetry::new(8);
+        fold_uniform_step(&mut t, 8, &[(5, 4.0)]);
+        let sc = Scenario { stragglers: vec![(5, 4.0)], seed: 1, ..Scenario::default() };
+        t.end_step(0, 5e-3, (0.0, 5e-3), Some(&sc));
+        let mut meta = BTreeMap::new();
+        meta.insert("fabric".to_string(), Json::Str("fleet".to_string()));
+        let report = t.report("unit", meta);
+        assert_eq!(report.flagged_ranks, vec![5]);
+        let j = report.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("schema_version").unwrap().as_usize(), Some(1));
+        assert_eq!(parsed.get("ranks").unwrap().as_usize(), Some(8));
+        assert_eq!(parsed.get("fabric").unwrap().as_str(), Some("fleet"));
+        let flagged = parsed.get("flagged_ranks").unwrap().as_arr().unwrap();
+        assert_eq!(flagged.len(), 1);
+        assert_eq!(flagged[0].as_usize(), Some(5));
+        let steps = parsed.get("steps").unwrap().as_arr().unwrap();
+        assert_eq!(steps.len(), 1);
+        let classes = steps[0].get("classes").unwrap();
+        assert!(classes.get("compute").unwrap().get("p99").unwrap().as_f64().is_some());
+        let text = report.summary();
+        assert!(text.contains("flagged ranks [5]"), "{text}");
+        assert!(text.contains("straggler"), "{text}");
+    }
+}

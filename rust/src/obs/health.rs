@@ -1,0 +1,349 @@
+//! Fleet-health primitives: the shared fixed log-bucket histogram layout,
+//! plain mergeable histograms, the time-class taxonomy, and the robust
+//! (MAD-based) outlier detector.
+//!
+//! This module holds the *math* of the telemetry plane; the streaming
+//! aggregator that applies it per step lives in [`crate::obs::fleet`].
+//!
+//! # Fixed log-bucket layout
+//!
+//! Every histogram in the repo — the lock-free registry
+//! [`crate::obs::registry::Histogram`] and the plain [`FixedHistogram`]
+//! here — bins values into the **same** fixed layout ([`hist_bin`] /
+//! [`hist_bin_edge`]): bin 0 holds non-positive and non-finite values,
+//! bin `i` (1..=65) holds `2^(i-34) <= v < 2^(i-33)`, covering ~1e-10
+//! (sub-ns waits) through ~4e9 (multi-GB byte sizes). Because the layout
+//! is fixed and data-independent, merging two histograms is an
+//! element-wise add of bin counts — **associative and commutative** — so
+//! per-rank shards can be folded in any grouping or order and every
+//! quantile read off the merged bins is identical. That is the property
+//! fleet-scale aggregation needs: 10k ranks fold locally, the aggregator
+//! merges, and `p99(merge(a, b)) == p99(merge(b, a))` exactly.
+//!
+//! # Detector math
+//!
+//! Per step and metric (compute seconds, recv-wait seconds) the detector
+//! computes the fleet median `m` and the scaled median absolute
+//! deviation `MAD` (1.4826·median(|x−m|), normal-consistent), and flags
+//! rank `r` when
+//!
+//! ```text
+//! x_r > m + max(6 · MAD, 0.3 · m)
+//! ```
+//!
+//! The `6·MAD` term is the usual robust z-score gate; the `0.3·m`
+//! relative floor keeps a degenerate fleet (MAD = 0 because all but one
+//! rank are identical — exactly the injected-straggler corpus) from
+//! flagging ranks a few ulps above the median. A 1.5× straggler clears
+//! the floor (`1.5m > 1.3m`); uniform fleets flag nothing.
+
+use crate::obs::span::SpanKind;
+use crate::util::json::Json;
+use crate::util::stats::{mad, median};
+use std::collections::BTreeMap;
+
+/// Number of bins in the shared fixed log-bucket layout.
+pub const HIST_BINS: usize = 66;
+/// Bin-edge exponent offset: bin `i >= 1` has upper edge `2^(i - HIST_BIN_OFFSET)`.
+pub const HIST_BIN_OFFSET: i32 = 33;
+
+/// Bin index of `v` in the shared layout (bin 0 = non-positive/non-finite).
+#[inline]
+pub fn hist_bin(v: f64) -> usize {
+    if v <= 0.0 || !v.is_finite() {
+        0
+    } else {
+        (v.log2().floor() as i32 + HIST_BIN_OFFSET + 1).clamp(1, HIST_BINS as i32 - 1) as usize
+    }
+}
+
+/// Upper edge of bin `i` (inclusive-exclusive binning; edge of bin 0 is 0).
+#[inline]
+pub fn hist_bin_edge(i: usize) -> f64 {
+    if i == 0 { 0.0 } else { 2f64.powi(i as i32 - HIST_BIN_OFFSET) }
+}
+
+/// Plain (non-atomic) histogram over the shared fixed log-bucket layout.
+///
+/// This is the single-writer counterpart of the registry
+/// [`crate::obs::registry::Histogram`]: same bins, same quantile rule, but
+/// owned data — the fleet aggregator folds millions of spans per step
+/// through [`FixedHistogram::observe`], so it must cost a handful of adds,
+/// not atomics. [`FixedHistogram::merge`] is associative (see module docs).
+#[derive(Clone, Debug)]
+pub struct FixedHistogram {
+    count: u64,
+    sum: f64,
+    max: f64,
+    bins: [u64; HIST_BINS],
+}
+
+impl Default for FixedHistogram {
+    fn default() -> Self {
+        FixedHistogram { count: 0, sum: 0.0, max: f64::NEG_INFINITY, bins: [0; HIST_BINS] }
+    }
+}
+
+impl FixedHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    #[inline]
+    pub fn observe(&mut self, v: f64) {
+        self.count += 1;
+        self.bins[hist_bin(v)] += 1;
+        self.sum += v;
+        if v > self.max {
+            self.max = v;
+        }
+    }
+
+    /// Element-wise merge of another shard into this one. Counts, bins and
+    /// max merge exactly in any order/grouping; `sum` is an f64
+    /// accumulation (last-ulp order sensitivity, quantiles unaffected).
+    pub fn merge(&mut self, other: &FixedHistogram) {
+        self.count += other.count;
+        self.sum += other.sum;
+        if other.count > 0 && other.max > self.max {
+            self.max = other.max;
+        }
+        for (a, b) in self.bins.iter_mut().zip(&other.bins) {
+            *a += b;
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 { f64::NAN } else { self.sum / self.count as f64 }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 { f64::NAN } else { self.max }
+    }
+
+    /// Approximate quantile: the upper edge of the bin where the cumulative
+    /// count crosses `q` (same rule as the registry histogram, so merged
+    /// shards and live handles agree bit-for-bit).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        for (i, &b) in self.bins.iter().enumerate() {
+            acc += b;
+            if acc >= target {
+                return hist_bin_edge(i);
+            }
+        }
+        self.max()
+    }
+
+    /// `{count, sum, mean, max, p50, p90, p99, bins: [[bin, count], ...]}`
+    /// with only non-empty bins listed (sparse, bounded, order-stable).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("count".to_string(), Json::Num(self.count as f64));
+        m.insert("sum".to_string(), finite_or_null(self.sum));
+        m.insert("mean".to_string(), finite_or_null(self.mean()));
+        m.insert("max".to_string(), finite_or_null(self.max()));
+        m.insert("p50".to_string(), finite_or_null(self.quantile(0.50)));
+        m.insert("p90".to_string(), finite_or_null(self.quantile(0.90)));
+        m.insert("p99".to_string(), finite_or_null(self.quantile(0.99)));
+        let bins: Vec<Json> = self
+            .bins
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| Json::Arr(vec![Json::Num(i as f64), Json::Num(c as f64)]))
+            .collect();
+        m.insert("bins".to_string(), Json::Arr(bins));
+        Json::Obj(m)
+    }
+}
+
+fn finite_or_null(x: f64) -> Json {
+    if x.is_finite() { Json::Num(x) } else { Json::Null }
+}
+
+/// The five time classes the fleet percentile series is reported over.
+/// Span kinds that don't advance a rank's timeline (send/recv port
+/// bookings, decode/merge interiors) are counted elsewhere (byte
+/// counters) and carry no class.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TimeClass {
+    Compute,
+    Encode,
+    Exchange,
+    RecvWait,
+    Barrier,
+}
+
+impl TimeClass {
+    pub const ALL: [TimeClass; 5] = [
+        TimeClass::Compute,
+        TimeClass::Encode,
+        TimeClass::Exchange,
+        TimeClass::RecvWait,
+        TimeClass::Barrier,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            TimeClass::Compute => "compute",
+            TimeClass::Encode => "encode",
+            TimeClass::Exchange => "exchange",
+            TimeClass::RecvWait => "recv_wait",
+            TimeClass::Barrier => "barrier",
+        }
+    }
+
+    /// Index into a `[T; 5]` keyed by [`TimeClass::ALL`] order.
+    #[inline]
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    /// The class a span kind folds into (`None` = not a timeline class).
+    #[inline]
+    pub fn of_kind(kind: SpanKind) -> Option<TimeClass> {
+        match kind {
+            SpanKind::Compute => Some(TimeClass::Compute),
+            SpanKind::Encode | SpanKind::Pack | SpanKind::Sparsify => Some(TimeClass::Encode),
+            SpanKind::Exchange => Some(TimeClass::Exchange),
+            SpanKind::RecvWait => Some(TimeClass::RecvWait),
+            SpanKind::Barrier => Some(TimeClass::Barrier),
+            _ => None,
+        }
+    }
+}
+
+/// Robust outlier threshold over a fleet of per-rank values (see module
+/// docs for the rule). Returns `+inf` (nothing can be flagged) when the
+/// fleet is too small for robust statistics (< 4 values) or the median is
+/// not positive (no signal to be an outlier against).
+pub fn robust_threshold(values: &[f64]) -> f64 {
+    if values.len() < 4 {
+        return f64::INFINITY;
+    }
+    let m = median(values);
+    if !(m > 0.0) {
+        return f64::INFINITY;
+    }
+    m + (6.0 * mad(values)).max(0.3 * m)
+}
+
+/// Indices of values strictly above [`robust_threshold`], ascending.
+pub fn robust_flags(values: &[f64]) -> Vec<usize> {
+    let thr = robust_threshold(values);
+    values.iter().enumerate().filter(|&(_, &v)| v > thr).map(|(i, _)| i).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bin_layout_covers_edges() {
+        assert_eq!(hist_bin(0.0), 0);
+        assert_eq!(hist_bin(-1.0), 0);
+        assert_eq!(hist_bin(f64::NAN), 0);
+        assert_eq!(hist_bin(1e-300), 1, "underflow clamps to the first bin");
+        assert_eq!(hist_bin(1e300), HIST_BINS - 1, "overflow clamps to the last bin");
+        // a value lands strictly below its bin's upper edge
+        for v in [1e-9, 1e-3, 0.5, 1.0, 3.0, 1e6] {
+            let b = hist_bin(v);
+            assert!(v <= hist_bin_edge(b), "v={v} bin={b} edge={}", hist_bin_edge(b));
+            assert!(b == 1 || v >= hist_bin_edge(b - 1), "v={v} below lower edge");
+        }
+    }
+
+    #[test]
+    fn fixed_histogram_tracks_stats_and_quantiles() {
+        let mut h = FixedHistogram::new();
+        for v in [1.0, 2.0, 4.0, 1024.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert!((h.sum() - 1031.0).abs() < 1e-9);
+        assert!((h.max() - 1024.0).abs() < 1e-9);
+        assert!(h.quantile(0.5) <= 4.0 + 1e-9);
+        assert!(h.quantile(1.0) >= 1024.0);
+        let empty = FixedHistogram::new();
+        assert!(empty.mean().is_nan());
+        assert!(empty.quantile(0.5).is_nan());
+    }
+
+    #[test]
+    fn merge_is_associative_and_order_independent() {
+        let values: Vec<f64> = (0..300).map(|i| (i as f64 * 0.37).exp2() * 1e-6).collect();
+        // one histogram observing everything, versus shards merged in
+        // permuted orders and groupings
+        let mut whole = FixedHistogram::new();
+        for &v in &values {
+            whole.observe(v);
+        }
+        let shard = |range: std::ops::Range<usize>| {
+            let mut h = FixedHistogram::new();
+            for &v in &values[range] {
+                h.observe(v);
+            }
+            h
+        };
+        let (a, b, c) = (shard(0..100), shard(100..180), shard(180..300));
+        let mut ab_c = a.clone();
+        ab_c.merge(&b);
+        ab_c.merge(&c);
+        let mut c_ba = c.clone();
+        let mut ba = b.clone();
+        ba.merge(&a);
+        c_ba.merge(&ba);
+        for h in [&ab_c, &c_ba] {
+            assert_eq!(h.count(), whole.count());
+            assert_eq!(h.max().to_bits(), whole.max().to_bits());
+            for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                assert_eq!(h.quantile(q).to_bits(), whole.quantile(q).to_bits(), "q={q}");
+            }
+        }
+        assert_eq!(ab_c.bins, c_ba.bins);
+    }
+
+    #[test]
+    fn time_class_maps_kinds() {
+        assert_eq!(TimeClass::of_kind(SpanKind::Compute), Some(TimeClass::Compute));
+        assert_eq!(TimeClass::of_kind(SpanKind::Pack), Some(TimeClass::Encode));
+        assert_eq!(TimeClass::of_kind(SpanKind::RecvWait), Some(TimeClass::RecvWait));
+        assert_eq!(TimeClass::of_kind(SpanKind::Send), None);
+        assert_eq!(TimeClass::of_kind(SpanKind::Merge), None);
+        for (i, c) in TimeClass::ALL.iter().enumerate() {
+            assert_eq!(c.idx(), i);
+        }
+    }
+
+    #[test]
+    fn detector_flags_stragglers_not_uniform_fleets() {
+        let b = 2e-3;
+        // uniform fleet: MAD = 0, relative floor holds → nothing flagged
+        let uniform = vec![b; 8];
+        assert!(robust_flags(&uniform).is_empty());
+        // injected 2.0× and 1.5× stragglers at ranks 0 and 4
+        let mut v = vec![b; 8];
+        v[0] = 2.0 * b;
+        v[4] = 1.5 * b;
+        assert_eq!(robust_flags(&v), vec![0, 4]);
+        // tiny fleets and zero-signal fleets never flag
+        assert!(robust_flags(&[b, 10.0 * b]).is_empty());
+        assert!(robust_flags(&[0.0; 8]).is_empty());
+        // genuinely spread fleet: MAD term dominates, median-ish values safe
+        let spread: Vec<f64> = (0..16).map(|i| b * (1.0 + 0.02 * i as f64)).collect();
+        assert!(robust_flags(&spread).is_empty());
+    }
+}

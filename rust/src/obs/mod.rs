@@ -20,6 +20,13 @@
 //!   `trace_event` JSON (one process per rank, one thread per [`Lane`] —
 //!   open `TRACE_<name>.json` in Perfetto), a terminal critical-path
 //!   summary, and the `TRACE_<name>.json` artifact itself.
+//! - At [`TraceLevel::Sampled`] (`--trace sampled`) every span is instead
+//!   **folded** into the streaming [`fleet::FleetTelemetry`] aggregate at
+//!   record time — per-rank time totals, per-class fixed-layout log-bucket
+//!   histograms ([`health`]), byte counters — and only exemplar ranks'
+//!   spans reach the sink. The trainer freezes one [`StepHealth`] per step
+//!   ([`Tracer::end_health_step`]) and exports `HEALTH_<name>.json`; this
+//!   is the mode that scales to fleetsim's 4k–10k-rank runs.
 //!
 //! # Overhead contract
 //!
@@ -30,19 +37,24 @@
 //! is live.
 
 pub mod export;
+pub mod fleet;
+pub mod health;
 pub mod registry;
 pub mod span;
 
 pub use export::{StepWindow, TraceReport};
+pub use fleet::{FleetTelemetry, HealthReport, RankFlag, StepHealth};
+pub use health::{FixedHistogram, TimeClass};
 pub use registry::{Counter, Histogram, MetricsRegistry};
 pub use span::{check_nesting, Lane, Span, SpanKind};
 
+use crate::vfabric::Scenario;
 use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-/// How much to record, per `--trace off|step|full`.
+/// How much to record, per `--trace off|step|sampled|full`.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord)]
 #[repr(u8)]
 pub enum TraceLevel {
@@ -53,6 +65,11 @@ pub enum TraceLevel {
     Step = 1,
     /// Everything: codec, wire, merge, rounds, port occupancy, waits.
     Full = 2,
+    /// Everything *observed*, but streamed into the [`fleet`] aggregator
+    /// at record time; full spans are retained only for exemplar ranks.
+    /// This is the fleet-scale mode: memory stays O(exemplars), not
+    /// O(ranks × spans).
+    Sampled = 3,
 }
 
 impl TraceLevel {
@@ -61,7 +78,10 @@ impl TraceLevel {
             "off" => Ok(TraceLevel::Off),
             "step" => Ok(TraceLevel::Step),
             "full" => Ok(TraceLevel::Full),
-            other => anyhow::bail!("unknown trace level '{other}' (expected off|step|full)"),
+            "sampled" => Ok(TraceLevel::Sampled),
+            other => {
+                anyhow::bail!("unknown trace level '{other}' (expected off|step|sampled|full)")
+            }
         }
     }
 
@@ -70,6 +90,7 @@ impl TraceLevel {
             TraceLevel::Off => "off",
             TraceLevel::Step => "step",
             TraceLevel::Full => "full",
+            TraceLevel::Sampled => "sampled",
         }
     }
 }
@@ -81,16 +102,20 @@ pub struct Tracer {
     epoch: Instant,
     sink: Mutex<Vec<Span>>,
     registry: MetricsRegistry,
+    /// The streaming aggregator, present only at [`TraceLevel::Sampled`].
+    health: Mutex<Option<FleetTelemetry>>,
 }
 
 impl Tracer {
     pub fn new(level: TraceLevel, ranks: usize) -> Arc<Tracer> {
+        let health = (level == TraceLevel::Sampled).then(|| FleetTelemetry::new(ranks));
         Arc::new(Tracer {
             level,
             ranks,
             epoch: Instant::now(),
             sink: Mutex::new(Vec::new()),
             registry: MetricsRegistry::new(),
+            health: Mutex::new(health),
         })
     }
 
@@ -113,11 +138,52 @@ impl Tracer {
 
     /// Push one span straight into the sink (cold path — used by the
     /// trainer to synthesise spans it computes after the fact, e.g. the
-    /// end-of-step barrier gap per rank).
+    /// end-of-step barrier gap per rank). At [`TraceLevel::Sampled`] the
+    /// span is folded into the aggregate and retained only for exemplar
+    /// ranks, like every other record path.
     pub fn record(&self, s: Span) {
-        if self.level != TraceLevel::Off {
+        if self.level == TraceLevel::Off {
+            return;
+        }
+        if self.fold(&s) {
             self.sink.lock().unwrap().push(s);
         }
+    }
+
+    /// Fold a span into the streaming aggregate when sampling; returns
+    /// whether the span should also be retained verbatim.
+    #[inline]
+    fn fold(&self, s: &Span) -> bool {
+        if self.level != TraceLevel::Sampled {
+            return true;
+        }
+        match self.health.lock().unwrap().as_mut() {
+            Some(t) => t.fold(s),
+            None => true,
+        }
+    }
+
+    /// Freeze the streaming aggregate's current step (no-op unless the
+    /// tracer runs at [`TraceLevel::Sampled`]). Call once per step, after
+    /// all of the step's spans have been recorded/flushed; `virt` is the
+    /// step's virtual-clock window and `scenario` the injected weather to
+    /// cross-check detector flags against.
+    pub fn end_health_step(
+        &self,
+        step: u32,
+        measured_s: f64,
+        virt: (f64, f64),
+        scenario: Option<&Scenario>,
+    ) {
+        if let Some(t) = self.health.lock().unwrap().as_mut() {
+            t.end_step(step, measured_s, virt, scenario);
+        }
+    }
+
+    /// Take the streaming aggregator out of the tracer (end of run);
+    /// `None` unless the tracer runs at [`TraceLevel::Sampled`].
+    pub fn take_health(&self) -> Option<FleetTelemetry> {
+        self.health.lock().unwrap().take()
     }
 
     fn record_all(&self, spans: &mut Vec<Span>) {
@@ -189,10 +255,21 @@ impl Collector {
     fn now(&self) -> f64 {
         self.tracer.now()
     }
+
+    /// Buffer one finished span. This is the single chokepoint of every
+    /// thread-local record path: at [`TraceLevel::Sampled`] the span is
+    /// folded into the fleet aggregate here and buffered only when its
+    /// rank is an exemplar, so non-exemplar spans never materialise.
+    #[inline]
+    fn push(&mut self, s: Span) {
+        if self.tracer.fold(&s) {
+            self.buf.push(s);
+        }
+    }
 }
 
 thread_local! {
-    // fast-path gate: 0 = off, 1 = step, 2 = full
+    // fast-path gate: 0 = off, 1 = step, 2 = full, 3 = sampled
     static LEVEL: Cell<u8> = const { Cell::new(0) };
     static TLS: RefCell<Option<Collector>> = const { RefCell::new(None) };
     // lane [`span`] opens on; helper threads (the pipeline encoder)
@@ -246,7 +323,9 @@ fn lvl() -> u8 {
 #[inline]
 fn enabled(kind: SpanKind) -> bool {
     let l = lvl();
-    l == 2 || (l == 1 && kind.step_level())
+    // full and sampled observe every kind (sampled folds at record time);
+    // step keeps only the step-anatomy kinds
+    l >= 2 || (l == 1 && kind.step_level())
 }
 
 /// RAII span: opened by [`span`], recorded into the thread buffer on drop.
@@ -306,7 +385,7 @@ impl Drop for SpanGuard {
                     virt0: self.virt0,
                     virt1: c.vnow,
                 };
-                c.buf.push(s);
+                c.push(s);
             }
         });
     }
@@ -366,7 +445,7 @@ pub fn port_span(kind: SpanKind, lane: Lane, v0: f64, v1: f64, bytes: u64) {
         let mut b = t.borrow_mut();
         if let Some(c) = b.as_mut() {
             let w = c.now();
-            c.buf.push(Span {
+            c.push(Span {
                 kind,
                 lane,
                 rank: c.rank,
@@ -398,7 +477,7 @@ pub fn virtual_span(kind: SpanKind, lane: Lane, rank: usize, v0: f64, v1: f64, b
     TLS.with(|t| {
         let mut b = t.borrow_mut();
         if let Some(c) = b.as_mut() {
-            c.buf.push(Span {
+            c.push(Span {
                 kind,
                 lane,
                 rank: rank as u32,
@@ -625,7 +704,49 @@ mod tests {
         assert_eq!(TraceLevel::parse("off").unwrap(), TraceLevel::Off);
         assert_eq!(TraceLevel::parse("step").unwrap(), TraceLevel::Step);
         assert_eq!(TraceLevel::parse("full").unwrap(), TraceLevel::Full);
+        assert_eq!(TraceLevel::parse("sampled").unwrap(), TraceLevel::Sampled);
         assert!(TraceLevel::parse("verbose").is_err());
         assert_eq!(TraceLevel::Full.name(), "full");
+        assert_eq!(TraceLevel::Sampled.name(), "sampled");
+    }
+
+    #[test]
+    fn sampled_level_folds_and_retains_only_exemplars() {
+        let tracer = Tracer::new(TraceLevel::Sampled, 32);
+        {
+            let _g = tracer.install(0);
+            // detail kinds are observed (not filtered like step level)
+            for rank in 0..32 {
+                virtual_span(SpanKind::RecvWait, Lane::Cpu, rank, 0.0, 1e-3, 0);
+            }
+            flush();
+        }
+        // synthesized spans go through the same fold
+        for rank in 0..32u32 {
+            tracer.record(Span {
+                kind: SpanKind::Compute,
+                lane: Lane::Cpu,
+                rank,
+                step: 0,
+                depth: 0,
+                bytes: 0,
+                label: None,
+                wall0: f64::NAN,
+                wall1: f64::NAN,
+                virt0: 0.0,
+                virt1: if rank == 9 { 8e-3 } else { 1e-3 },
+            });
+        }
+        tracer.end_health_step(0, 1e-2, (0.0, 1e-2), None);
+        // only rank 0 (the pre-marked exemplar) kept spans this step
+        let spans = tracer.drain(0);
+        assert!(!spans.is_empty());
+        assert!(spans.iter().all(|s| s.rank == 0), "non-exemplar spans leaked");
+        let health = tracer.take_health().expect("sampled tracer owns an aggregator");
+        let st = &health.steps()[0];
+        assert_eq!(st.spans_folded, 64);
+        assert_eq!(st.flagged, vec![9], "the slow rank is flagged from the aggregate");
+        assert!(health.is_exemplar(9), "flagged rank becomes an exemplar");
+        assert_eq!(tracer.take_health().map(|_| ()), None, "take_health drains");
     }
 }

@@ -8,6 +8,7 @@
 //! handle map is only locked when a handle is first resolved (the
 //! thread-local collector in [`crate::obs`] caches handles per thread).
 
+use super::health::{hist_bin, hist_bin_edge, HIST_BINS};
 use crate::util::json::Json;
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -27,18 +28,13 @@ impl Counter {
     }
 }
 
-const BINS: usize = 66;
-/// Bin 0 holds `v <= 0`; bin i (1..=65) holds `2^(i-34) <= v < 2^(i-33)`,
-/// covering ~1e-10 (sub-ns waits) through ~4e9 (multi-GB byte sizes).
-const BIN_OFFSET: i32 = 33;
-
 struct HistInner {
     count: AtomicU64,
     /// f64 bits, CAS-accumulated.
     sum_bits: AtomicU64,
     /// f64 bits of the max observed value.
     max_bits: AtomicU64,
-    bins: [AtomicU64; BINS],
+    bins: [AtomicU64; HIST_BINS],
 }
 
 /// Lock-free histogram handle with power-of-two bins.
@@ -57,23 +53,10 @@ impl Default for Histogram {
 }
 
 impl Histogram {
-    fn bin(v: f64) -> usize {
-        if v <= 0.0 || !v.is_finite() {
-            0
-        } else {
-            (v.log2().floor() as i32 + BIN_OFFSET + 1).clamp(1, BINS as i32 - 1) as usize
-        }
-    }
-
-    /// Upper edge of bin `i` (inclusive-exclusive binning).
-    fn bin_edge(i: usize) -> f64 {
-        if i == 0 { 0.0 } else { 2f64.powi(i as i32 - BIN_OFFSET) }
-    }
-
     pub fn observe(&self, v: f64) {
         let h = &*self.0;
         h.count.fetch_add(1, Ordering::Relaxed);
-        h.bins[Self::bin(v)].fetch_add(1, Ordering::Relaxed);
+        h.bins[hist_bin(v)].fetch_add(1, Ordering::Relaxed);
         // CAS loops: contention here is per-thread-rare (one event per
         // encode/merge/send), not per-element.
         let _ = h.sum_bits.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
@@ -102,8 +85,11 @@ impl Histogram {
         if self.count() == 0 { f64::NAN } else { m }
     }
 
-    /// Approximate quantile: the upper edge of the bin where the
-    /// cumulative count crosses `q` (within 2x of the true value).
+    /// Approximate quantile: the upper edge of the fixed log-bucket bin
+    /// (shared layout in [`crate::obs::health`]) where the cumulative
+    /// count crosses `q` (within 2x of the true value). Because the bin
+    /// edges are fixed, quantiles are invariant under [`Self::merge`]
+    /// order — merged shards answer exactly what one big histogram would.
     pub fn quantile(&self, q: f64) -> f64 {
         let n = self.count();
         if n == 0 {
@@ -111,13 +97,40 @@ impl Histogram {
         }
         let target = (q.clamp(0.0, 1.0) * n as f64).ceil().max(1.0) as u64;
         let mut acc = 0u64;
-        for i in 0..BINS {
+        for i in 0..HIST_BINS {
             acc += self.0.bins[i].load(Ordering::Relaxed);
             if acc >= target {
-                return Self::bin_edge(i);
+                return hist_bin_edge(i);
             }
         }
         self.max()
+    }
+
+    /// Fold `other` into `self`: elementwise bin add, count/sum add,
+    /// max-of-max. Associative and commutative on counts, bins, and max
+    /// (the f64 `sum` is order-sensitive only in the last ulp), so
+    /// per-rank shards can be merged in any order.
+    pub fn merge(&self, other: &Histogram) {
+        let (a, b) = (&*self.0, &*other.0);
+        let n = b.count.load(Ordering::Relaxed);
+        if n == 0 {
+            return;
+        }
+        a.count.fetch_add(n, Ordering::Relaxed);
+        for (ab, bb) in a.bins.iter().zip(&b.bins) {
+            let c = bb.load(Ordering::Relaxed);
+            if c > 0 {
+                ab.fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        let bsum = f64::from_bits(b.sum_bits.load(Ordering::Relaxed));
+        let _ = a.sum_bits.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+            Some((f64::from_bits(bits) + bsum).to_bits())
+        });
+        let bmax = f64::from_bits(b.max_bits.load(Ordering::Relaxed));
+        let _ = a.max_bits.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |bits| {
+            if bmax > f64::from_bits(bits) { Some(bmax.to_bits()) } else { None }
+        });
     }
 }
 
@@ -219,6 +232,42 @@ mod tests {
         assert!(h.mean().is_nan());
         assert!(h.max().is_nan());
         assert!(h.quantile(0.5).is_nan());
+    }
+
+    #[test]
+    fn merged_shards_answer_like_one_histogram_in_any_order() {
+        // 240 values spread over ~14 decades, dealt round-robin into 5
+        // per-rank shards, merged in two different permutations: both
+        // merge orders must report bit-identical quantiles/max/count,
+        // equal to the single-histogram answer (shared fixed-bin layout
+        // makes merge associative and commutative).
+        let values: Vec<f64> = (0..240).map(|i| (i as f64 * 0.19 - 23.0).exp2()).collect();
+        let whole = Histogram::default();
+        let shards: Vec<Histogram> = (0..5).map(|_| Histogram::default()).collect();
+        for (i, &v) in values.iter().enumerate() {
+            whole.observe(v);
+            shards[i % 5].observe(v);
+        }
+        let forward = Histogram::default();
+        for s in &shards {
+            forward.merge(s);
+        }
+        let backward = Histogram::default();
+        for s in shards.iter().rev() {
+            backward.merge(s);
+        }
+        for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+            let want = whole.quantile(q);
+            assert_eq!(forward.quantile(q).to_bits(), want.to_bits(), "q={q}");
+            assert_eq!(backward.quantile(q).to_bits(), want.to_bits(), "q={q}");
+        }
+        assert_eq!(forward.count(), whole.count());
+        assert_eq!(backward.count(), whole.count());
+        assert_eq!(forward.max().to_bits(), whole.max().to_bits());
+        assert_eq!(backward.max().to_bits(), whole.max().to_bits());
+        // merging an empty shard is a no-op
+        forward.merge(&Histogram::default());
+        assert_eq!(forward.count(), whole.count());
     }
 
     #[test]

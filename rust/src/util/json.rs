@@ -135,7 +135,13 @@ impl Json {
     }
 }
 
-fn write_escaped(out: &mut String, s: &str) {
+/// Append the canonical JSON string literal for `s` — surrounding quotes
+/// included; `"`, `\`, and all control characters below 0x20 escaped.
+/// This is the **only** escaper in the repo: every artifact writer
+/// (`BENCH_*` via [`crate::util::benchkit`], `TRACE_*` and `HEALTH_*` via
+/// [`Json::write`], plus [`crate::obs::export::json_escape`]) emits
+/// strings through it, so escaping bugs can only exist in one place.
+pub fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
     for c in s.chars() {
         match c {

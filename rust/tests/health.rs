@@ -1,0 +1,195 @@
+//! Fleet telemetry validation (DESIGN.md §14):
+//!
+//! 1. **Fabric-differential aggregation** — the per-step fleet health
+//!    snapshot (class histograms, percentiles, detector flags) is
+//!    **bit-identical** between the threaded virtual fabric and the
+//!    fleet event-loop runner on every `scenario_corpus` entry. The
+//!    telemetry is derived from per-rank virtual clocks, which the
+//!    equivalence suite pins bit-exact below the barrage gate, so any
+//!    divergence here is an aggregation bug, not fabric noise.
+//! 2. **Detector exactness** — the MAD-based straggler detector flags
+//!    exactly the injected `--straggler R:F` ranks on the corpus, with
+//!    zero false positives on the uniform-compute entries, and every
+//!    flag is scenario-confirmed (`expected == true`).
+
+use deepreduce::collective::sparse::SegmentCodec;
+use deepreduce::collective::{Schedule, SparseConfig, Topology};
+use deepreduce::fleetsim::FleetFabric;
+use deepreduce::obs::{FleetTelemetry, Lane, Span, SpanKind};
+use deepreduce::simnet::Link;
+use deepreduce::tensor::SparseTensor;
+use deepreduce::util::testkit::scenario_corpus;
+use deepreduce::vfabric::{Scenario, VirtualNetwork};
+use std::thread;
+
+/// Per-rank modelled forward/backward time before the exchange.
+const BASE_COMPUTE: f64 = 2e-3;
+
+/// Disjoint strided supports so merges are non-trivial on every rank.
+fn inputs(n: usize, d: usize, k: usize) -> Vec<SparseTensor> {
+    (0..n)
+        .map(|r| {
+            let idx: Vec<u32> = (0..k).map(|j| ((j * n + r) % d) as u32).collect();
+            let val: Vec<f32> = (0..k).map(|j| 1.0 + (r * k + j) as f32 / 8.0).collect();
+            SparseTensor::new(d, idx, val)
+        })
+        .collect()
+}
+
+fn vspan(kind: SpanKind, rank: usize, v0: f64, v1: f64) -> Span {
+    Span {
+        kind,
+        lane: Lane::Cpu,
+        rank: rank as u32,
+        step: 0,
+        depth: 0,
+        bytes: 0,
+        label: None,
+        wall0: f64::NAN,
+        wall1: f64::NAN,
+        virt0: v0,
+        virt1: v1,
+    }
+}
+
+/// Per-rank clock marks of one step: (compute start, compute end,
+/// exchange end) — the three instants both fabrics expose identically.
+type Marks = Vec<(f64, f64, f64)>;
+
+/// Compute replay + allreduce on the threaded virtual fabric.
+fn threaded_marks(
+    sched: Schedule,
+    cfg: SparseConfig,
+    topo: Topology,
+    link: Link,
+    scenario: &Scenario,
+    ins: &[SparseTensor],
+) -> Marks {
+    let net = VirtualNetwork::new(topo, link, link, scenario.clone());
+    let handles: Vec<_> = net
+        .endpoints()
+        .into_iter()
+        .zip(ins.to_vec())
+        .enumerate()
+        .map(|(r, (ep, t))| {
+            let factor = scenario.compute_factor(r, 0);
+            thread::spawn(move || {
+                ep.sync_to(0.0);
+                let c0 = ep.now();
+                ep.elapse(BASE_COMPUTE * factor);
+                let c1 = ep.now();
+                sched.build(cfg).allreduce(&ep, t).unwrap();
+                (c0, c1, ep.now())
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+/// The same step on the fleet event-loop runner.
+fn fleet_marks(
+    sched: Schedule,
+    cfg: SparseConfig,
+    topo: Topology,
+    link: Link,
+    scenario: &Scenario,
+    ins: &[SparseTensor],
+) -> Marks {
+    let mut fab = FleetFabric::new(topo, link, link, scenario.clone());
+    let codec = SegmentCodec::raw(cfg.dense_switch);
+    let n = fab.n();
+    let mut marks: Marks = (0..n)
+        .map(|r| {
+            let c0 = fab.clock_s(r);
+            fab.elapse(r, BASE_COMPUTE * scenario.compute_factor(r, 0));
+            (c0, fab.clock_s(r), 0.0)
+        })
+        .collect();
+    fab.allreduce(sched, &cfg, &codec, ins.to_vec()).unwrap();
+    for (r, m) in marks.iter_mut().enumerate() {
+        m.2 = fab.clock_s(r);
+    }
+    marks
+}
+
+/// Fold the step anatomy the marks describe (Compute/Exchange/Barrier
+/// per rank, exactly what the fleet trainer path synthesizes) and
+/// freeze the step.
+fn telemetry_of(marks: &Marks, scenario: &Scenario) -> FleetTelemetry {
+    let end = marks.iter().map(|m| m.2).fold(0.0, f64::max);
+    let mut t = FleetTelemetry::new(marks.len());
+    for (r, &(c0, c1, e)) in marks.iter().enumerate() {
+        t.fold(&vspan(SpanKind::Compute, r, c0, c1));
+        t.fold(&vspan(SpanKind::Exchange, r, c1, e));
+        t.fold(&vspan(SpanKind::Barrier, r, e, end));
+    }
+    t.end_step(0, end, (0.0, end), Some(scenario));
+    t
+}
+
+/// (1) fold the identical step anatomy from both fabrics' clocks and
+/// require the frozen `StepHealth` JSON — histograms, percentiles,
+/// sums, detector flags — to match bit-for-bit.
+#[test]
+fn fleet_and_threaded_fabrics_aggregate_bit_identically() {
+    let n = 8usize;
+    let d = 2048usize;
+    let topo = Topology::new(2, 4);
+    let link = Link::mbps(100.0);
+    let ins = inputs(n, d, d / 40);
+    for (si, scenario) in scenario_corpus(0xF1EE7, n).into_iter().enumerate() {
+        for sched in [Schedule::GatherAll, Schedule::ChunkedRescatter] {
+            let cfg = SparseConfig {
+                topology: Some(topo),
+                chunks: if sched == Schedule::ChunkedRescatter { 2 * n } else { 0 },
+                ..SparseConfig::default()
+            };
+            let tm = threaded_marks(sched, cfg, topo, link, &scenario, &ins);
+            let fm = fleet_marks(sched, cfg, topo, link, &scenario, &ins);
+            let tj = telemetry_of(&tm, &scenario).steps()[0].to_json().to_string();
+            let fj = telemetry_of(&fm, &scenario).steps()[0].to_json().to_string();
+            assert_eq!(
+                tj, fj,
+                "scenario#{si} {sched:?}: fleet/threaded step-health JSON diverged"
+            );
+        }
+    }
+}
+
+/// (2) the detector recovers exactly the injected straggler set per
+/// corpus entry — `{}`, `{0, 4}` (0:2.0, 4:1.5), `{}`, `{}`, `{}`,
+/// `{7}` (7:1.7) — with every flag scenario-confirmed. Compute factors
+/// are deterministic on the corpus (no compute jitter), so these sets
+/// are exact, not statistical.
+#[test]
+fn detector_recovers_injected_stragglers_with_zero_false_positives() {
+    let n = 8usize;
+    let d = 2048usize;
+    let topo = Topology::new(2, 4);
+    let link = Link::mbps(100.0);
+    let ins = inputs(n, d, d / 40);
+    let cfg = SparseConfig { topology: Some(topo), ..SparseConfig::default() };
+    let expected: [&[u32]; 6] = [&[], &[0, 4], &[], &[], &[], &[7]];
+    let corpus = scenario_corpus(0xF1EE7, n);
+    assert_eq!(corpus.len(), expected.len(), "corpus shape changed; update expectations");
+    for (si, (scenario, want)) in corpus.into_iter().zip(expected).enumerate() {
+        let marks = fleet_marks(Schedule::GatherAll, cfg, topo, link, &scenario, &ins);
+        let telemetry = telemetry_of(&marks, &scenario);
+        assert_eq!(
+            telemetry.steps()[0].flagged, want,
+            "scenario#{si}: compute-flagged ranks"
+        );
+        for f in telemetry.flags().iter().filter(|f| f.metric == "compute_s") {
+            assert!(
+                f.expected,
+                "scenario#{si} rank {}: compute flag not scenario-confirmed ({})",
+                f.rank, f.cause
+            );
+            assert!(
+                f.cause.contains("straggler"),
+                "scenario#{si} rank {}: cause should name the straggler ({})",
+                f.rank, f.cause
+            );
+        }
+    }
+}

@@ -306,3 +306,63 @@ fn attribution_reconciles_virtual_step_time() {
         coverage
     );
 }
+
+/// (5) fleet-path coverage pin: the fleet runner instruments the step
+/// as per-rank Compute/Exchange/Barrier (recv-waits nest *inside* the
+/// exchange), and `--trace-summary` must attribute over exactly that
+/// partition. The regression this guards: attributing over
+/// Compute + RecvWait + Barrier on a trace that carries Exchange spans
+/// either double-counts the nested waits or mis-reports coverage for
+/// lanes the run never instruments.
+#[test]
+fn fleet_style_exchange_trace_reconciles_exactly() {
+    let n = 4usize;
+    let tracer = Tracer::new(TraceLevel::Full, n);
+    let step_end = 1.0;
+    for r in 0..n {
+        let c1 = 0.1 * (r + 1) as f64; // compute ends (rank-staggered)
+        let e1 = 0.6 + 0.05 * r as f64; // exchange ends
+        let mk = |kind, v0: f64, v1: f64| Span {
+            kind,
+            lane: Lane::Cpu,
+            rank: r as u32,
+            step: 0,
+            depth: 0,
+            bytes: 0,
+            label: None,
+            wall0: f64::NAN,
+            wall1: f64::NAN,
+            virt0: v0,
+            virt1: v1,
+        };
+        tracer.record(mk(SpanKind::Compute, 0.0, c1));
+        tracer.record(mk(SpanKind::Exchange, c1, e1));
+        // interior wait: already inside the exchange interval, must not
+        // be attributed a second time
+        tracer.record(mk(SpanKind::RecvWait, c1, (c1 + 0.1).min(e1)));
+        tracer.record(mk(SpanKind::Barrier, e1, step_end));
+    }
+    let report = TraceReport {
+        name: "fleet_style".to_string(),
+        level: TraceLevel::Full,
+        ranks: n,
+        meta: BTreeMap::new(),
+        steps: vec![StepWindow {
+            step: 0,
+            measured_s: step_end,
+            idle_mean_s: f64::NAN,
+            virt0: 0.0,
+            virt1: step_end,
+        }],
+        spans: tracer.drain(0),
+        registry: tracer.registry().snapshot(),
+    };
+    let coverage = report.reconciliation(0).expect("virtual data present");
+    assert!(
+        (coverage - 1.0).abs() < 1e-9,
+        "exchange-partition coverage is {coverage:.6}, expected exactly 1.0"
+    );
+    // the summary names the exchange column when exchange spans exist
+    let summary = report.summary();
+    assert!(summary.contains("exchange"), "{summary}");
+}
