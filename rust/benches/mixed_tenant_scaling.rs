@@ -1,0 +1,208 @@
+//! Mixed-tenant scaling: the multi-tenant reduction service's isolation
+//! and warm-start acceptance gates, measured (`deepreduce::service`).
+//!
+//! Three legs:
+//!
+//! 1. **shared leg** — 4 concurrent jobs (1 dense + 3 sparse tenants, 4
+//!    ranks each, one node per job) interleaved by the fair-share
+//!    scheduler on ONE fleet fabric for R rounds.
+//! 2. **isolated leg** — the same 4 jobs re-run one-per-service on an
+//!    identical fabric, each stepped exactly as many times as it
+//!    stepped in the shared run.
+//! 3. **warm-start leg** — an autotuned job cold-calibrates, persists
+//!    its `PROFILE_*.json`, and a second submit of the same
+//!    (model, topology, link) key warm-loads it.
+//!
+//! Acceptance (asserted below):
+//!   - aggregate shared throughput (Σ steps / virtual s) within 15% of
+//!     the sum of the isolated runs — jobs on disjoint placements must
+//!     not contend (the registry hands out disjoint rank sets and the
+//!     event loop only touches member ports);
+//!   - no tenant starved: every job completes at least one step per
+//!     scheduling round (the deficit scheduler's progress floor);
+//!   - the warm submit's setup time and first-step time are strictly
+//!     below the cold submit's (profile load replaces the calibration
+//!     sweep).
+//!
+//! Writes `BENCH_mixed_tenant_scaling.json`. `--smoke` runs the
+//! reduced sweep CI uses.
+
+use deepreduce::collective::Topology;
+use deepreduce::service::{JobId, JobRequest, ReductionService, ServiceConfig};
+use deepreduce::simnet::Link;
+use deepreduce::util::benchkit::{BenchSummary, Table};
+use deepreduce::util::json::Json;
+
+/// The fabric both legs run on: 4 nodes × 4 ranks, fast intra links,
+/// slow inter links (a job placed on one node never meters inter).
+fn config() -> ServiceConfig {
+    ServiceConfig::new(Topology::new(4, 4), Link::mbps(10_000.0), Link::mbps(100.0))
+}
+
+/// The tenant mix: one dense job next to three sparse ones, all equal
+/// weight — the adversarial shape for a byte-fair scheduler (the dense
+/// tenant's steps are ~50x the bytes of a sparse tenant's).
+fn tenant_mix(dim: usize) -> Vec<JobRequest> {
+    let mut reqs = vec![JobRequest {
+        seed: 0xBEEF,
+        ..JobRequest::synthetic("dense0", 4, dim, 0.5)
+    }];
+    for i in 0..3 {
+        reqs.push(JobRequest {
+            seed: 0xBEEF ^ (i + 1) as u64,
+            ..JobRequest::synthetic(&format!("sparse{i}"), 4, dim, 0.01)
+        });
+    }
+    reqs
+}
+
+/// steps / accumulated virtual seconds for one finished-or-running job.
+fn throughput(svc: &ReductionService, id: JobId) -> f64 {
+    let job = svc.job(id).expect("job stays queryable");
+    job.steps as f64 / job.virtual_s.max(f64::EPSILON)
+}
+
+fn main() {
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let (dim, rounds) = if smoke { (1usize << 13, 5usize) } else { (1usize << 16, 12usize) };
+    let mut summary = BenchSummary::new("mixed_tenant_scaling");
+    summary.set("smoke", Json::Bool(smoke));
+    summary.set("dim", Json::Num(dim as f64));
+    summary.set("rounds", Json::Num(rounds as f64));
+
+    // ---- shared leg: 4 tenants interleaved on one fabric ----
+    let mut shared = ReductionService::new(config());
+    let ids: Vec<JobId> = tenant_mix(dim)
+        .into_iter()
+        .map(|req| shared.submit(req).expect("mix fits the 4x4 fabric"))
+        .collect();
+    for _ in 0..rounds {
+        shared.run_round().expect("round");
+    }
+    let mut table = Table::new(
+        &format!("mixed tenants — {rounds} fair-share rounds, dim {dim}"),
+        &["job", "steps", "shared steps/s", "isolated steps/s", "intra B"],
+    );
+    let mut agg_shared = 0.0;
+    let mut agg_isolated = 0.0;
+    let mut min_steps = u64::MAX;
+    for &id in &ids {
+        let (name, steps, bytes) = {
+            let job = shared.job(id).expect("admitted");
+            assert_eq!(job.bytes[1], 0, "{} spans one node, must not meter inter", job.name);
+            (job.name.clone(), job.steps, job.bytes[0])
+        };
+        min_steps = min_steps.min(steps);
+        let tp_shared = throughput(&shared, id);
+        agg_shared += tp_shared;
+
+        // ---- isolated leg: same job alone on an identical fabric ----
+        let mut solo = ReductionService::new(config());
+        let req = tenant_mix(dim)
+            .into_iter()
+            .find(|r| r.name == name)
+            .expect("mix contains the job");
+        let solo_id = solo.submit(req).expect("single tenant always fits");
+        for _ in 0..steps {
+            solo.step_job(solo_id).expect("step");
+        }
+        let tp_solo = throughput(&solo, solo_id);
+        agg_isolated += tp_solo;
+
+        table.row(&[
+            name.clone(),
+            steps.to_string(),
+            format!("{tp_shared:.2}"),
+            format!("{tp_solo:.2}"),
+            bytes.to_string(),
+        ]);
+        summary.row(&[
+            ("leg", Json::Str("scaling".to_string())),
+            ("job", Json::Str(name)),
+            ("steps", Json::Num(steps as f64)),
+            ("shared_steps_per_s", Json::Num(tp_shared)),
+            ("isolated_steps_per_s", Json::Num(tp_solo)),
+            ("intra_bytes", Json::Num(bytes as f64)),
+        ]);
+    }
+    table.print();
+    for id in ids {
+        shared.finish(id).expect("finish");
+    }
+    let gap = (agg_shared - agg_isolated).abs() / agg_isolated.max(f64::EPSILON);
+    summary.set("aggregate_shared_steps_per_s", Json::Num(agg_shared));
+    summary.set("aggregate_isolated_steps_per_s", Json::Num(agg_isolated));
+    summary.set("aggregate_gap_frac", Json::Num(gap));
+    summary.set("min_steps", Json::Num(min_steps as f64));
+    assert!(
+        gap <= 0.15,
+        "shared aggregate {agg_shared:.2} steps/s deviates {:.1}% from the isolated \
+         sum {agg_isolated:.2} (acceptance bar 15%)",
+        gap * 100.0
+    );
+    assert!(
+        min_steps >= rounds as u64,
+        "a tenant starved: {min_steps} steps over {rounds} rounds \
+         (the progress floor owes one step per tenant per round)"
+    );
+    println!(
+        "  [isolation] aggregate {agg_shared:.2} steps/s shared vs {agg_isolated:.2} isolated \
+         ({:+.1}%, bar 15%); min {min_steps} steps over {rounds} rounds — no starvation",
+        gap * 100.0
+    );
+
+    // ---- warm-start leg: cold calibration, persist, warm reload ----
+    let dir = std::env::temp_dir().join(format!("deepreduce_mixed_tenant_{}", std::process::id()));
+    let autotuned = |name: &str| JobRequest {
+        model: "warmtest".to_string(),
+        autotune: true,
+        seed: 0xC0FFEE,
+        ..JobRequest::synthetic(name, 4, dim, 0.01)
+    };
+    let mut cold_svc = ReductionService::new(config().with_profiles(dir.clone()));
+    let cold_id = cold_svc.submit(autotuned("cold")).expect("cold admit");
+    cold_svc.step_job(cold_id).expect("cold step");
+    let cold = {
+        let job = cold_svc.job(cold_id).expect("cold job");
+        assert!(!job.setup.warm_start, "no profile exists yet");
+        (job.setup.total_s(), job.first_step_s.expect("stepped"))
+    };
+    let profile = cold_svc.finish(cold_id).expect("finish").expect("autotuned job persists");
+    println!("  [warm-start] profile persisted to {}", profile.display());
+
+    let mut warm_svc = ReductionService::new(config().with_profiles(dir.clone()));
+    let warm_id = warm_svc.submit(autotuned("warm")).expect("warm admit");
+    warm_svc.step_job(warm_id).expect("warm step");
+    let warm = {
+        let job = warm_svc.job(warm_id).expect("warm job");
+        assert!(job.setup.warm_start, "second submit of the key must warm-load");
+        (job.setup.total_s(), job.first_step_s.expect("stepped"))
+    };
+    warm_svc.finish(warm_id).expect("finish");
+    let _ = std::fs::remove_dir_all(&dir);
+    summary.row(&[
+        ("leg", Json::Str("warm_start".to_string())),
+        ("cold_setup_s", Json::Num(cold.0)),
+        ("warm_setup_s", Json::Num(warm.0)),
+        ("cold_first_step_s", Json::Num(cold.1)),
+        ("warm_first_step_s", Json::Num(warm.1)),
+    ]);
+    assert!(
+        warm.0 < cold.0 && warm.1 < cold.1,
+        "warm start must beat cold: setup {:.6}s vs {:.6}s, first step {:.6}s vs {:.6}s",
+        warm.0,
+        cold.0,
+        warm.1,
+        cold.1
+    );
+    println!(
+        "  [warm-start] setup {:.6}s warm vs {:.6}s cold; first step {:.6}s vs {:.6}s",
+        warm.0, cold.0, warm.1, cold.1
+    );
+
+    match summary.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("could not write bench summary: {e}"),
+    }
+}

@@ -29,13 +29,15 @@ pub const KNOWN_FLAGS: &[&str] = &[
     "trace", "trace-summary", "health-summary",
     // codecs
     "dim",
+    // serve: multi-tenant reduction service
+    "tenants", "dense-tenants", "ranks-per-job", "rounds", "profile-dir",
 ];
 
 /// The full help text (also printed by `deepreduce` with no arguments
 /// and by the `help` subcommand).
 pub fn usage() -> String {
     "\
-usage: deepreduce <train|smoke|codecs|list-codecs|info|help> [--opts]
+usage: deepreduce <train|serve|smoke|codecs|list-codecs|info|help> [--opts]
 
 train — run distributed training with a DeepReduce instantiation
   --model <mlp|ncf|transformer>   benchmark family (default mlp)
@@ -115,6 +117,21 @@ train — run distributed training with a DeepReduce instantiation
   --trace-summary                 print the per-step critical-path breakdown
   --health-summary                print the fleet health report (percentiles,
                                   flagged ranks; requires --trace sampled)
+
+serve — run the multi-tenant reduction service with synthetic tenants
+  --topology <NxR>                fabric grid (default 4x4)
+  --tenants <n>                   sparse tenants to admit (default 3)
+  --dense-tenants <n>             dense (high-density) tenants (default 1)
+  --ranks-per-job <n>             placement width per job (default one node)
+  --rounds <n>                    fair-share scheduling rounds (default 10)
+  --dim <n>                       gradient dimensionality (default 65536)
+  --ratio <f>                     sparse tenants' gradient density (default 0.01)
+  --intra-mbps <f>                intra-node link, Mbps (default 10000)
+  --inter-mbps <f>                inter-node link, Mbps (default 100)
+  --autotune [on|off]             calibrate/warm-start codec policy per job
+  --profile-dir <path>            PROFILE_*.json store (default repo root;
+                                  enables warm starts across invocations)
+  --seed <n>                      run seed (default 42)
 
 smoke — load the pallas smoke artifact through PJRT and execute it
 
@@ -263,7 +280,7 @@ mod tests {
             );
         }
         // and every subcommand
-        for sub in ["train", "smoke", "codecs", "list-codecs", "info"] {
+        for sub in ["train", "serve", "smoke", "codecs", "list-codecs", "info"] {
             assert!(text.contains(sub), "help text is missing {sub}");
         }
         // the chain syntax is documented where users look for codecs

@@ -439,17 +439,32 @@ impl CollectivePool {
         }
         Ok(Self { fabric, jobs, results, handles, virtual_now: 0.0 })
     }
+
+    /// Explicit graceful teardown: close the job channels, drain any
+    /// in-flight step results, and join every worker thread. Returns
+    /// the number of threads joined (0 on repeat calls — shutdown is
+    /// idempotent and `Drop` delegates here). A worker stuck
+    /// mid-collective is unblocked by its failing peer's endpoint drop
+    /// ("peer hung up"), so the drain and joins cannot hang.
+    fn shutdown(&mut self) -> usize {
+        // closing every job sender ends the workers' receive loops
+        self.jobs.clear();
+        // drain in-flight results until each worker drops its sender —
+        // a step submitted but never collected must complete, not leak
+        for rx in self.results.drain(..) {
+            while rx.recv().is_ok() {}
+        }
+        let joined = self.handles.len();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+        joined
+    }
 }
 
 impl Drop for CollectivePool {
     fn drop(&mut self) {
-        // closing the job channels ends every worker's loop; a worker
-        // stuck mid-collective is unblocked by its failing peer's
-        // endpoint drop ("peer hung up"), so these joins cannot hang
-        self.jobs.clear();
-        for h in self.handles.drain(..) {
-            let _ = h.join();
-        }
+        self.shutdown();
     }
 }
 
@@ -517,15 +532,19 @@ fn worker_loop(
 
 /// The fleet-fabric counterpart of [`CollectivePool`]: no threads, no
 /// channels — every rank's collective runs as a state machine inside
-/// [`crate::fleetsim::FleetFabric`]'s event loop, on the same virtual
-/// clock and byte meters as the threaded virtual fabric. This is the
-/// path that scales past thread-per-rank (10k+ ranks) and the one that
-/// supports elastic membership (`--crash`).
+/// the shared fleet event loop, on the same virtual clock and byte
+/// meters as the threaded virtual fabric. This is the path that scales
+/// past thread-per-rank (10k+ ranks) and the one that supports elastic
+/// membership (`--crash`).
+///
+/// Since the service refactor the trainer no longer owns the fabric:
+/// it is a single-tenant *client* of
+/// [`crate::service::ReductionService`] — same admission, metering, and
+/// accounting path as the multi-tenant `serve` daemon, with an
+/// unmetered frame budget (fair-share is moot for one tenant).
 struct FleetPool {
-    fabric: crate::fleetsim::FleetFabric,
-    sched: Schedule,
-    cfg: SparseConfig,
-    codec: SegmentCodec,
+    service: crate::service::ReductionService,
+    job: crate::service::JobId,
     /// the virtual time the last completed step ended at
     virtual_now: f64,
 }
@@ -544,15 +563,15 @@ impl FleetPool {
         step: usize,
         scenario: &Scenario,
     ) -> anyhow::Result<(Vec<SparseTensor>, Vec<(f64, f64, f64)>)> {
-        let n = self.fabric.n();
+        let n = self.service.world();
         let alive = scenario.alive_members(n, step);
         anyhow::ensure!(!alive.is_empty(), "every rank is crashed at step {step}");
         for &r in &alive {
-            self.fabric.sync_to(r, step_start);
-            self.fabric.elapse(r, advance_s[r]);
+            self.service.sync_member(r, step_start);
+            self.service.elapse_member(r, advance_s[r]);
         }
-        let starts: Vec<f64> = (0..n).map(|r| self.fabric.clock_s(r)).collect();
-        let idle0: Vec<f64> = (0..n).map(|r| self.fabric.idle_s(r)).collect();
+        let starts: Vec<f64> = (0..n).map(|r| self.service.clock_s(r)).collect();
+        let idle0: Vec<f64> = (0..n).map(|r| self.service.idle_s(r)).collect();
         let buckets = pending[alive[0]].len();
         let mut feeds: Vec<std::vec::IntoIter<SparseTensor>> =
             pending.into_iter().map(|v| v.into_iter()).collect();
@@ -562,21 +581,43 @@ impl FleetPool {
                 .iter()
                 .map(|&r| feeds[r].next().expect("bucket counts match across ranks"))
                 .collect();
-            let outs =
-                self.fabric.allreduce_members(&alive, self.sched, &self.cfg, &self.codec, inputs)?;
+            let outs = self.service.collective(self.job, &alive, inputs)?;
             // all members hold identical sums; keep the first
             summed.push(outs.into_iter().next().expect("nonempty membership"));
         }
         let windows = (0..n)
             .map(|r| {
                 if scenario.alive(r, step) {
-                    (starts[r], self.fabric.clock_s(r), self.fabric.idle_s(r) - idle0[r])
+                    (starts[r], self.service.clock_s(r), self.service.idle_s(r) - idle0[r])
                 } else {
                     (step_start, step_start, 0.0)
                 }
             })
             .collect();
         Ok((summed, windows))
+    }
+
+    /// Metered fabric bytes attributed to the trainer's job so far,
+    /// `[intra, inter]`.
+    fn job_bytes(&self) -> [u64; 2] {
+        self.service.job(self.job).map(|j| j.bytes).unwrap_or([0, 0])
+    }
+
+    /// Retire the job: release its ranks and fair share in the service.
+    /// Idempotent; returns whether this call retired it.
+    fn shutdown(&mut self) -> bool {
+        let was_running = self
+            .service
+            .job(self.job)
+            .is_some_and(|j| j.state == crate::service::JobState::Running);
+        let _ = self.service.finish(self.job);
+        was_running
+    }
+}
+
+impl Drop for FleetPool {
+    fn drop(&mut self) {
+        self.shutdown();
     }
 }
 
@@ -843,24 +884,39 @@ impl Trainer {
                          (the feedback is measured on the virtual clock)"
                     );
                     if fabric_fleet {
-                        let fabric = crate::fleetsim::FleetFabric::new(
+                        // single-tenant client of the reduction service:
+                        // same fabric, admission, and per-job metering
+                        // path as the multi-tenant `serve` daemon, with
+                        // the frame budget unmetered (no peers to be
+                        // fair to) and the trainer's exact SparseConfig
+                        // threaded through verbatim
+                        let svc_cfg = crate::service::ServiceConfig::new(
                             grid,
                             crate::simnet::Link::mbps(spec.intra_mbps),
                             crate::simnet::Link::mbps(spec.inter_mbps),
-                            scenario.clone(),
-                        );
-                        let codec = SegmentCodec::lossless_or_raw(
-                            &spec.compress,
-                            spec.seed,
-                            sparse_cfg.dense_switch,
-                        );
-                        let fleet = FleetPool {
-                            fabric,
-                            sched,
-                            cfg: sparse_cfg,
-                            codec,
-                            virtual_now: 0.0,
-                        };
+                        )
+                        .unmetered()
+                        .with_scenario(scenario.clone());
+                        let mut service = crate::service::ReductionService::new(svc_cfg);
+                        let job = service
+                            .submit(crate::service::JobRequest {
+                                name: "train".into(),
+                                model: cfg.artifact.clone(),
+                                ranks: cfg.workers,
+                                weight: 1.0,
+                                // the byte estimate only matters for
+                                // fair-share metering, which is off here
+                                dim: 1,
+                                density: 1.0,
+                                schedule: sched,
+                                chunks: sparse_cfg.chunks,
+                                compress: spec.compress.clone(),
+                                autotune: false,
+                                seed: spec.seed,
+                                sparse: Some(sparse_cfg),
+                            })
+                            .map_err(|e| anyhow::anyhow!("trainer job admission: {e}"))?;
+                        let fleet = FleetPool { service, job, virtual_now: 0.0 };
                         (None, Some(fleet), scenario, fabric_virtual)
                     } else {
                         let fabric = if fabric_virtual {
@@ -915,6 +971,21 @@ impl Trainer {
 
     pub fn artifact(&self) -> &Artifact {
         &self.artifact
+    }
+
+    /// Explicit graceful teardown of the collective machinery: drain
+    /// in-flight steps and join the pool's worker threads (threaded
+    /// fabrics), or retire the trainer's job in the reduction service
+    /// (fleet fabric). Idempotent; `Drop` performs the same teardown,
+    /// this just makes the ordering deterministic for callers that keep
+    /// the `Trainer` alive after training.
+    pub fn shutdown(&mut self) {
+        if let Some(pool) = self.pool.as_mut() {
+            pool.shutdown();
+        }
+        if let Some(fleet) = self.fleet.as_mut() {
+            fleet.shutdown();
+        }
     }
 
     /// Run the configured number of steps, returning the full report.
@@ -1231,6 +1302,7 @@ impl Trainer {
                 // --trace sampled they fold into the fleet aggregate
                 // inside the loop instead of materialising per rank
                 let obs_bind = self.tracer.as_ref().map(|t| t.install(0));
+                let bytes0 = fleet.job_bytes();
                 let exchanged = fleet.exchange(
                     std::mem::take(&mut pending),
                     &advance,
@@ -1289,12 +1361,16 @@ impl Trainer {
                         part.add_into(&mut agg[ti]);
                     }
                 }
-                metrics.fabric_bytes += fleet.fabric.total_bytes();
-                metrics.intra_bytes += fleet.fabric.intra_bytes();
-                metrics.inter_bytes += fleet.fabric.inter_bytes();
-                fleet.fabric.reset_bytes();
+                // the service attributes metered bytes per job, so the
+                // step's traffic is the job-counter delta (no global
+                // meter reset — other tenants' bytes stay untouched)
+                let bytes1 = fleet.job_bytes();
+                metrics.intra_bytes += bytes1[0] - bytes0[0];
+                metrics.inter_bytes += bytes1[1] - bytes0[1];
+                metrics.fabric_bytes += (bytes1[0] - bytes0[0]) + (bytes1[1] - bytes0[1]);
                 metrics.measured_step_s = step_end - step_start;
                 metrics.rank_idle_s = Some(idle_sum / n as f64);
+                fleet.service.note_step(fleet.job, step_end - step_start);
                 fleet.virtual_now = step_end;
                 let per_worker_bytes = bucketed_bytes as f64 / n as f64;
                 let comm_s = (step_end - max_start).max(0.0);
@@ -1410,5 +1486,80 @@ impl Trainer {
         let meta = self.trace_meta();
         let telemetry = self.tracer.as_ref()?.take_health()?;
         Some(telemetry.report("train", meta))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::SparseTensor;
+
+    fn tiny_spec() -> CompressionSpec {
+        CompressionSpec::with_spec(0.1, CompressSpec::raw())
+    }
+
+    /// The graceful-teardown satellite: repeated create → step →
+    /// shutdown cycles must join every worker thread each time and
+    /// leave nothing running. A leak here compounds fast — the old
+    /// Drop-only path relied on channel-hangup ordering.
+    #[test]
+    fn collective_pool_shutdown_joins_all_workers_repeatedly() {
+        let workers = 4;
+        let spec = tiny_spec();
+        for round in 0..50 {
+            let fabric = FabricHandle::Instant(Network::new(workers));
+            let mut pool = CollectivePool::new(
+                fabric,
+                Schedule::GatherAll,
+                SparseConfig::default(),
+                &spec,
+                workers,
+                None,
+            )
+            .unwrap();
+            // leave an in-flight step un-collected on odd rounds:
+            // shutdown must drain it rather than deadlock or leak
+            if round % 2 == 1 {
+                for jtx in &pool.jobs {
+                    let t = SparseTensor::new(64, vec![1, 5], vec![1.0, 2.0]);
+                    jtx.send(StepJob { tensors: vec![t], advance_s: 0.0, sync_to: 0.0 })
+                        .unwrap();
+                }
+            }
+            assert_eq!(pool.shutdown(), workers, "round {round} leaked a worker");
+            assert_eq!(pool.shutdown(), 0, "shutdown is idempotent");
+        }
+    }
+
+    /// The fleet pool retires its service job on shutdown, releasing
+    /// the fabric ranks; repeat calls are no-ops.
+    #[test]
+    fn fleet_pool_shutdown_retires_the_job() {
+        for _ in 0..20 {
+            let mut service = crate::service::ReductionService::new(
+                crate::service::ServiceConfig::new(
+                    Topology::flat(4),
+                    crate::simnet::Link::mbps(1000.0),
+                    crate::simnet::Link::mbps(1000.0),
+                )
+                .unmetered(),
+            );
+            let job = service
+                .submit(crate::service::JobRequest::synthetic("train", 4, 256, 0.1))
+                .unwrap();
+            let mut fleet = FleetPool { service, job, virtual_now: 0.0 };
+            let inputs: Vec<Vec<SparseTensor>> = (0..4)
+                .map(|_| vec![SparseTensor::new(256, vec![0, 9], vec![1.0, 1.0])])
+                .collect();
+            let (summed, windows) = fleet
+                .exchange(inputs, &[0.0; 4], 0.0, 0, &Scenario::none(0))
+                .unwrap();
+            assert_eq!(summed.len(), 1);
+            assert_eq!(windows.len(), 4);
+            assert!(fleet.job_bytes()[0] > 0, "exchange meters intra bytes");
+            assert!(fleet.shutdown(), "first shutdown retires the job");
+            assert!(!fleet.shutdown(), "second shutdown is a no-op");
+            assert_eq!(fleet.service.free_ranks(), 4, "ranks released");
+        }
     }
 }

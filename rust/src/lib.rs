@@ -45,6 +45,10 @@
 //!   Chrome-trace / terminal exporters, and the fleet-scale sampled
 //!   telemetry plane (`--trace off|step|sampled|full`) with streaming
 //!   aggregation, straggler detection, and `HEALTH_*.json` export.
+//! - [`service`] — the multi-tenant reduction service: admission +
+//!   weighted deficit fair-share over shared fleet fabric capacity,
+//!   disjoint per-job rank placements, and persistent
+//!   `PROFILE_*.json` autotune profiles for warm-started jobs.
 //! - [`data`] — deterministic synthetic shards (CIFAR / NCF / corpus
 //!   stand-ins).
 //! - [`tensor`], [`linalg`], [`optim`], [`util`] — dense/sparse tensors,
@@ -64,6 +68,7 @@ pub mod obs;
 pub mod optim;
 pub mod pipeline;
 pub mod runtime;
+pub mod service;
 pub mod simnet;
 pub mod sparsify;
 pub mod tensor;

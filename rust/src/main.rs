@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   train        — run distributed training with a DeepReduce instantiation
+//!   serve        — run the multi-tenant reduction service with synthetic tenants
 //!   smoke        — load the pallas smoke artifact through PJRT and execute it
 //!   codecs       — quick codec volume table on a synthetic sparse gradient
 //!   list-codecs  — print the codec registry (names, params, chainability)
@@ -9,15 +10,19 @@
 //!   help         — print the full flag reference (`cli::usage`)
 
 use deepreduce::cli::Args;
+use deepreduce::collective::Topology;
 use deepreduce::compress::{
     index_by_name, value_by_name, CodecRegistry, CodecSet, CompressSpec, DeepReduce,
 };
 use deepreduce::coordinator::{CompressionSpec, ModelKind, TrainConfig, Trainer};
 use deepreduce::runtime;
+use deepreduce::service::{JobRequest, ProfileStore, ReductionService, ServiceConfig};
+use deepreduce::simnet::Link;
 use deepreduce::sparsify::{Sparsifier, TopK};
 use deepreduce::util::benchkit::Table;
 use deepreduce::util::prng::Rng;
 use deepreduce::util::testkit::gradient_like;
+use std::path::PathBuf;
 
 fn main() {
     let argv: Vec<String> = std::env::args().skip(1).collect();
@@ -40,6 +45,7 @@ fn main() {
     }
     let result = match args.subcommand.as_str() {
         "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
         "smoke" => cmd_smoke(),
         "codecs" => cmd_codecs(&args),
         // both spellings: subcommand (documented) and bare flag
@@ -248,6 +254,122 @@ fn cmd_train(args: &Args) -> anyhow::Result<()> {
         }
         let path = health.write()?;
         eprintln!("health written to {}", path.display());
+    }
+    Ok(())
+}
+
+/// Run the multi-tenant reduction service with a synthetic tenant mix:
+/// `--dense-tenants` high-density jobs next to `--tenants` sparse ones,
+/// interleaved for `--rounds` fair-share rounds on one shared fabric.
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let topo_s = args.get_or("topology", "4x4");
+    let topo = Topology::parse(&topo_s)
+        .ok_or_else(|| anyhow::anyhow!("--topology expects NxR, got {topo_s}"))?;
+    let sparse_tenants = args.get_usize("tenants", 3)?;
+    let dense_tenants = args.get_usize("dense-tenants", 1)?;
+    let ranks_per_job = args.get_usize("ranks-per-job", topo.ranks_per_node)?;
+    let rounds = args.get_usize("rounds", 10)?;
+    let dim = args.get_usize("dim", 65_536)?;
+    let ratio = args.get_f64("ratio", 0.01)?;
+    let intra = Link::mbps(args.get_f64("intra-mbps", 10_000.0)?);
+    let inter = Link::mbps(args.get_f64("inter-mbps", 100.0)?);
+    let seed = args.get_usize("seed", 42)? as u64;
+    let autotune = match args.get("autotune") {
+        Some("on") | Some("true") | Some("1") => true,
+        Some("off") | Some("false") | Some("0") => false,
+        Some(other) => anyhow::bail!("--autotune expects on|off, got {other}"),
+        None => args.flag("autotune"),
+    };
+    let profile_dir =
+        args.get("profile-dir").map(PathBuf::from).unwrap_or_else(ProfileStore::repo_root);
+    let mut service = ReductionService::new(
+        ServiceConfig::new(topo, intra, inter).with_profiles(profile_dir.clone()),
+    );
+    eprintln!(
+        "reduction service on {} ({} ranks)  frame budget [intra {:.0} B, inter {:.0} B]  profiles in {}",
+        topo.label(),
+        topo.world(),
+        service.config().frame_budget[0],
+        service.config().frame_budget[1],
+        profile_dir.display()
+    );
+    let mut ids = Vec::new();
+    for i in 0..dense_tenants + sparse_tenants {
+        let (name, density) = if i < dense_tenants {
+            (format!("dense{i}"), 0.5)
+        } else {
+            (format!("sparse{}", i - dense_tenants), ratio)
+        };
+        let req = JobRequest {
+            autotune,
+            seed: seed ^ i as u64,
+            ..JobRequest::synthetic(&name, ranks_per_job, dim, density)
+        };
+        // a rejected tenant is reported, not fatal: the daemon keeps
+        // serving whoever fit (admission is the backpressure mechanism)
+        match service.submit(req) {
+            Ok(id) => {
+                let job = service.job(id).expect("submit registered the job");
+                let start = if !autotune {
+                    "static codecs"
+                } else if job.setup.warm_start {
+                    "warm start"
+                } else {
+                    "cold calibration"
+                };
+                eprintln!("admitted {name} as {id} on ranks {:?} ({start})", job.placement);
+                ids.push(id);
+            }
+            Err(e) => eprintln!("rejected {name}: {e}"),
+        }
+    }
+    anyhow::ensure!(!ids.is_empty(), "no tenant was admitted");
+    for _ in 0..rounds {
+        service.run_round()?;
+    }
+    let mut table = Table::new(
+        &format!("{rounds} fair-share rounds over {} tenants on {}", ids.len(), topo.label()),
+        &[
+            "job",
+            "name",
+            "steps",
+            "step s",
+            "intra B",
+            "inter B",
+            "setup s",
+            "first step s",
+            "start",
+        ],
+    );
+    let mut aggregate = 0.0;
+    for id in &ids {
+        let job = service.job(*id).expect("admitted job stays queryable");
+        aggregate += job.steps as f64 / job.virtual_s.max(f64::EPSILON);
+        table.row(&[
+            job.id.to_string(),
+            job.name.clone(),
+            job.steps.to_string(),
+            format!("{:.4}", job.step_time_s()),
+            job.bytes[0].to_string(),
+            job.bytes[1].to_string(),
+            format!("{:.4}", job.setup.total_s()),
+            format!("{:.4}", job.first_step_s.unwrap_or(f64::NAN)),
+            if !autotune {
+                "static"
+            } else if job.setup.warm_start {
+                "warm"
+            } else {
+                "cold"
+            }
+            .to_string(),
+        ]);
+    }
+    table.print();
+    eprintln!("aggregate throughput {aggregate:.2} steps/virtual-s");
+    for id in ids {
+        if let Some(path) = service.finish(id)? {
+            eprintln!("profile written to {}", path.display());
+        }
     }
     Ok(())
 }

@@ -74,6 +74,16 @@ pub fn attributed_s(spans: &[Span], rank: u32) -> f64 {
 }
 
 impl TraceReport {
+    /// Prefix the artifact stem with a job identifier, so the export
+    /// lands at `TRACE_<job>_<name>.json` — two tenants of the shared
+    /// reduction service tracing the same run name never clobber each
+    /// other. The job also lands in the payload's metadata.
+    pub fn for_job(mut self, job: &str) -> Self {
+        self.name = format!("{job}_{}", self.name);
+        self.meta.insert("job".to_string(), Json::Str(job.to_string()));
+        self
+    }
+
     /// True when the report carries virtual-clock data (virtual fabric).
     pub fn has_virtual(&self) -> bool {
         self.spans.iter().any(|s| s.has_virtual())

@@ -493,6 +493,17 @@ pub struct HealthReport {
 }
 
 impl HealthReport {
+    /// Prefix the artifact stem with a job identifier: the export lands
+    /// at `HEALTH_<job>_<name>.json` and — because the exemplar pointer
+    /// is formatted from the same stem — references
+    /// `TRACE_<job>_<name>.json`, keeping the per-job artifact pair
+    /// consistent. Concurrent service tenants never clobber each other.
+    pub fn for_job(mut self, job: &str) -> Self {
+        self.name = format!("{job}_{}", self.name);
+        self.meta.insert("job".to_string(), Json::Str(job.to_string()));
+        self
+    }
+
     /// Run-level (step-merged) histogram for one time class.
     pub fn run_hist(&self, c: TimeClass) -> &FixedHistogram {
         &self.run[c.idx()]

@@ -20,8 +20,10 @@
 use crate::compress::{build_index_spec, build_value_spec};
 use crate::simnet::{allgather_time, Link};
 use crate::tensor::SparseTensor;
+use crate::util::json::Json;
 use crate::util::prng::Rng;
 use crate::util::testkit::{gradient_like, sorted_support};
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 /// Density ladder the calibrator samples; estimates interpolate
@@ -344,6 +346,169 @@ impl CodecPolicy {
         best.expect("CodecPolicy has no candidates").1
     }
 
+    /// Serialize the calibration state — the per-codec throughput
+    /// curves plus the measured-comm EMA — to the JSON fragment
+    /// embedded in `PROFILE_*.json` artifacts
+    /// (`crate::service::profiles`). The link/world environment is
+    /// *not* serialized: a profile is keyed by it externally and
+    /// rebound on import, so one calibration can serve any job that
+    /// matches the profile key.
+    pub fn export_json(&self) -> Json {
+        let arr6 =
+            |ys: &[f64; CAL_DENSITIES.len()]| Json::Arr(ys.iter().map(|&y| Json::Num(y)).collect());
+        let idx = self
+            .index_profiles
+            .iter()
+            .map(|ip| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(ip.name.clone()));
+                m.insert("bytes_per_elem".to_string(), arr6(&ip.bytes_per_elem));
+                m.insert("secs_per_elem".to_string(), arr6(&ip.secs_per_elem));
+                Json::Obj(m)
+            })
+            .collect();
+        let val = self
+            .value_profiles
+            .iter()
+            .map(|vp| {
+                let mut m = BTreeMap::new();
+                m.insert("name".to_string(), Json::Str(vp.name.clone()));
+                m.insert("bytes_per_value".to_string(), Json::Num(vp.bytes_per_value));
+                m.insert("secs_per_value".to_string(), Json::Num(vp.secs_per_value));
+                m.insert("has_perm".to_string(), Json::Bool(vp.has_perm));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut m = BTreeMap::new();
+        m.insert(
+            "densities".to_string(),
+            Json::Arr(CAL_DENSITIES.iter().map(|&d| Json::Num(d)).collect()),
+        );
+        m.insert("index_profiles".to_string(), Json::Arr(idx));
+        m.insert("value_profiles".to_string(), Json::Arr(val));
+        m.insert(
+            "measured_secs_per_byte".to_string(),
+            match self.measured_secs_per_byte {
+                Some(r) => Json::Num(r),
+                None => Json::Null,
+            },
+        );
+        Json::Obj(m)
+    }
+
+    /// Rebuild a policy from [`CodecPolicy::export_json`] output,
+    /// rebound to the importing job's link/world environment. Every
+    /// structural mismatch — missing key, wrong ladder arity, ladder
+    /// drift against this build's [`CAL_DENSITIES`], non-finite rate,
+    /// empty candidate set — is a `String` error, never a panic, so a
+    /// corrupted profile artifact surfaces as a structured load failure
+    /// and the caller falls back to cold calibration.
+    pub fn import_json(v: &Json, link: Link, workers: usize) -> Result<Self, String> {
+        fn nums6(v: &Json, what: &str) -> Result<[f64; CAL_DENSITIES.len()], String> {
+            let arr = v.as_arr().ok_or_else(|| format!("{what}: expected array"))?;
+            if arr.len() != CAL_DENSITIES.len() {
+                return Err(format!(
+                    "{what}: expected {} rungs, got {}",
+                    CAL_DENSITIES.len(),
+                    arr.len()
+                ));
+            }
+            let mut out = [0.0; CAL_DENSITIES.len()];
+            for (i, e) in arr.iter().enumerate() {
+                let x = e.as_f64().ok_or_else(|| format!("{what}[{i}]: expected number"))?;
+                if !x.is_finite() || x < 0.0 {
+                    return Err(format!("{what}[{i}]: non-finite or negative rate {x}"));
+                }
+                out[i] = x;
+            }
+            Ok(out)
+        }
+        fn rate(v: &Json, what: &str) -> Result<f64, String> {
+            let x = v.as_f64().ok_or_else(|| format!("{what}: expected number"))?;
+            if !x.is_finite() || x < 0.0 {
+                return Err(format!("{what}: non-finite or negative rate {x}"));
+            }
+            Ok(x)
+        }
+        let dens = nums6(v.get("densities").ok_or("missing densities")?, "densities")?;
+        if dens != CAL_DENSITIES {
+            return Err(format!(
+                "density ladder {dens:?} does not match this build's {CAL_DENSITIES:?}"
+            ));
+        }
+        let idx_arr = v
+            .get("index_profiles")
+            .and_then(Json::as_arr)
+            .ok_or("missing index_profiles array")?;
+        let mut index_profiles = Vec::with_capacity(idx_arr.len());
+        for (i, e) in idx_arr.iter().enumerate() {
+            let what = format!("index_profiles[{i}]");
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("{what}: missing name"))?;
+            if name.is_empty() {
+                return Err(format!("{what}: empty codec name"));
+            }
+            index_profiles.push(IndexProfile {
+                name: name.to_string(),
+                bytes_per_elem: nums6(
+                    e.get("bytes_per_elem").ok_or_else(|| format!("{what}: missing bytes_per_elem"))?,
+                    &format!("{what}.bytes_per_elem"),
+                )?,
+                secs_per_elem: nums6(
+                    e.get("secs_per_elem").ok_or_else(|| format!("{what}: missing secs_per_elem"))?,
+                    &format!("{what}.secs_per_elem"),
+                )?,
+            });
+        }
+        let val_arr = v
+            .get("value_profiles")
+            .and_then(Json::as_arr)
+            .ok_or("missing value_profiles array")?;
+        let mut value_profiles = Vec::with_capacity(val_arr.len());
+        for (i, e) in val_arr.iter().enumerate() {
+            let what = format!("value_profiles[{i}]");
+            let name = e
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| format!("{what}: missing name"))?;
+            if name.is_empty() {
+                return Err(format!("{what}: empty codec name"));
+            }
+            value_profiles.push(ValueProfile {
+                name: name.to_string(),
+                bytes_per_value: rate(
+                    e.get("bytes_per_value").ok_or_else(|| format!("{what}: missing bytes_per_value"))?,
+                    &format!("{what}.bytes_per_value"),
+                )?,
+                secs_per_value: rate(
+                    e.get("secs_per_value").ok_or_else(|| format!("{what}: missing secs_per_value"))?,
+                    &format!("{what}.secs_per_value"),
+                )?,
+                has_perm: e
+                    .get("has_perm")
+                    .and_then(Json::as_bool)
+                    .ok_or_else(|| format!("{what}: missing has_perm"))?,
+            });
+        }
+        if index_profiles.is_empty() || value_profiles.is_empty() {
+            return Err("profile has an empty candidate set".to_string());
+        }
+        let measured_secs_per_byte = match v.get("measured_secs_per_byte") {
+            None | Some(Json::Null) => None,
+            Some(m) => Some(rate(m, "measured_secs_per_byte")?),
+        };
+        Ok(Self {
+            index_profiles,
+            value_profiles,
+            link,
+            workers,
+            cost_source: CostSource::Formula,
+            measured_secs_per_byte,
+        })
+    }
+
     /// Per-hop codec choices for a two-level exchange over `topo`: the
     /// *leader hop* ships each rank's payload (density `nnz/d`) to the
     /// node leader over the fast intra link, while the *inter hop*
@@ -598,6 +763,42 @@ mod tests {
                 };
                 assert!(picked <= t + 1e-15, "{sched:?} beaten by {other:?}: {picked} vs {t}");
             }
+        }
+    }
+
+    #[test]
+    fn export_import_round_trips_choices() {
+        let mut p = bytes_only_policy();
+        p.observe_comm(1000.0, 0.5);
+        let j = p.export_json();
+        let back =
+            CodecPolicy::import_json(&Json::parse(&j.to_string()).unwrap(), p.link, p.workers)
+                .unwrap();
+        assert_eq!(back.index_profiles.len(), p.index_profiles.len());
+        assert_eq!(back.measured_secs_per_byte, p.measured_secs_per_byte);
+        let d = 1 << 16;
+        for nnz in [d / 1000, d / 10, d * 9 / 10] {
+            assert_eq!(back.choose(d, nnz), p.choose(d, nnz));
+        }
+    }
+
+    #[test]
+    fn import_rejects_structural_damage() {
+        let p = bytes_only_policy();
+        let good = p.export_json().to_string();
+        let (link, workers) = (p.link, p.workers);
+        for bad in [
+            "{}".to_string(),
+            good.replace("\"densities\":[0.001,", "\"densities\":[0.002,"),
+            good.replace("index_profiles", "index_profilez"),
+            good.replace("\"has_perm\":false", "\"has_perm\":1"),
+            good.replace("\"bytes_per_value\":4", "\"bytes_per_value\":-4"),
+        ] {
+            let v = match Json::parse(&bad) {
+                Ok(v) => v,
+                Err(_) => continue, // unparseable damage is rejected earlier
+            };
+            assert!(CodecPolicy::import_json(&v, link, workers).is_err(), "{bad}");
         }
     }
 

@@ -181,6 +181,41 @@ impl GradientPipeline {
         })
     }
 
+    /// Warm-start construction: like [`GradientPipeline::new`] with
+    /// `autotune` on, but the calibration sweep is replaced by an
+    /// already-built [`CodecPolicy`] — typically rebound from a
+    /// persisted `PROFILE_*.json` (`crate::service::profiles`), which
+    /// is what makes a returning service job's first step cheap.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_policy(
+        members: &[(usize, usize)],
+        bucket_bytes: usize,
+        compress: &CompressSpec,
+        policy: CodecPolicy,
+        seed: u64,
+        link: Link,
+        workers: usize,
+    ) -> anyhow::Result<Self> {
+        let plan = BucketPlan::plan(members, bucket_bytes);
+        let registry = CodecRegistry::global();
+        let static_codec = DeepReduce::new(
+            registry.build_index(&compress.index, seed)?,
+            registry.build_value(&compress.value, seed)?,
+        );
+        Ok(Self {
+            plan,
+            static_codec,
+            static_label: compress.label(),
+            compress: compress.clone(),
+            policy: Some(policy),
+            tuned: BTreeMap::new(),
+            seed,
+            link,
+            workers,
+            hier: None,
+        })
+    }
+
     /// Teach the autotuner the two-level grid: per bucket it will also
     /// report the codec pair each hop of a hierarchical exchange wants
     /// ([`EncodedBucket::hier_choices`]); the leader hop is costed on
@@ -422,6 +457,42 @@ mod tests {
         assert_eq!(enc.choice_label, "rle+deflate|raw");
         // chain is lossless end to end
         assert_eq!(unfuse(&bucket, &enc.decoded), vec![sp]);
+    }
+
+    #[test]
+    fn warm_started_pipeline_autotunes_without_calibrating() {
+        // build a policy once (the "cold" job), round-trip it through
+        // the profile JSON fragment, and hand it to with_policy — the
+        // warm pipeline must make the same picks with no sweep of its own
+        let (idx, val) = default_candidates(false);
+        let cold = CodecPolicy::calibrate_bytes_only(&idx, &val, 7, Link::mbps(100.0), 4);
+        let rebound =
+            CodecPolicy::import_json(&cold.export_json(), Link::mbps(100.0), 4).unwrap();
+        let sizes = [(0usize, 4000usize)];
+        let mut pipe = GradientPipeline::with_policy(
+            &sizes,
+            0,
+            &CompressSpec::raw(),
+            rebound,
+            1,
+            Link::mbps(100.0),
+            4,
+        )
+        .unwrap();
+        assert!(pipe.autotuning());
+        let d = 4000;
+        let nnz = 80;
+        assert_eq!(
+            pipe.policy.as_ref().unwrap().choose(d, nnz).label(),
+            cold.choose(d, nnz).label(),
+            "rebound policy makes the cold policy's picks"
+        );
+        let mut rng = Rng::new(3);
+        let g = gradient_like(&mut rng, d);
+        let sp = parts_for(&g, 0.02);
+        let bucket = pipe.plan().buckets[0].clone();
+        let enc = pipe.encode_bucket(&bucket, &[&sp], &[g.as_slice()]).unwrap();
+        assert_eq!(unfuse(&bucket, &enc.decoded), vec![sp], "lossless end to end");
     }
 
     #[test]

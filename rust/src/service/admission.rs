@@ -1,0 +1,263 @@
+//! Admission control: validate a job request and reserve its share of
+//! fabric capacity before any rank is claimed.
+//!
+//! A job is admitted only when (1) enough fabric ranks are free for its
+//! placement and (2) the sum of all running jobs' single-step byte
+//! estimates — plus this job's — still fits the per-round frame budget
+//! on every link class its placement touches. (2) is what lets the
+//! scheduler's progress floor (`crate::service::scheduler`) guarantee
+//! one step per tenant per round without ever overrunning a frame.
+
+use super::scheduler::LinkClass;
+use crate::collective::{Schedule, SparseConfig, Topology};
+use crate::compress::CompressSpec;
+
+/// Everything a tenant declares when it asks the service for capacity.
+#[derive(Clone, Debug)]
+pub struct JobRequest {
+    /// Unique among running jobs; prefixes the job's artifacts.
+    pub name: String,
+    /// Profile-key component (`PROFILE_<model>_…`): which model family
+    /// the autotune calibration describes.
+    pub model: String,
+    /// Fabric ranks the job reduces over.
+    pub ranks: usize,
+    /// Fair-share weight (> 0): relative claim on each round's surplus
+    /// after every tenant's floor step.
+    pub weight: f64,
+    /// Gradient domain per step (fused bucket length).
+    pub dim: usize,
+    /// Expected gradient density in (0, 1] — drives the admission byte
+    /// estimate and the autotuner's codec pick.
+    pub density: f64,
+    /// Collective schedule. `Hierarchical` is only admitted for jobs
+    /// spanning the whole fabric (leader roles pin every rank).
+    pub schedule: Schedule,
+    /// `ChunkedRescatter` chunk count (0 = auto).
+    pub chunks: usize,
+    /// Index/value codec pipelines (lossy stages fall back to raw on
+    /// the wire, as in the trainer).
+    pub compress: CompressSpec,
+    /// Autotune at admission: calibrate (or warm-load) a
+    /// `CodecPolicy`, pick the codec pair and schedule for the job's
+    /// density, and persist the profile at finish.
+    pub autotune: bool,
+    pub seed: u64,
+    /// Full sparse-collective tuning override (the trainer-client path
+    /// threads its `SparseConfig` through verbatim). `None` = service
+    /// defaults with [`JobRequest::chunks`].
+    pub sparse: Option<SparseConfig>,
+}
+
+impl JobRequest {
+    /// A synthetic-gradient tenant with service defaults: weight 1,
+    /// chunked-rescatter, raw codecs, no autotune.
+    pub fn synthetic(name: &str, ranks: usize, dim: usize, density: f64) -> Self {
+        Self {
+            name: name.to_string(),
+            model: name.to_string(),
+            ranks,
+            weight: 1.0,
+            dim,
+            density,
+            schedule: Schedule::ChunkedRescatter,
+            chunks: 0,
+            compress: CompressSpec::raw(),
+            autotune: false,
+            seed: 0xD0_5E11,
+            sparse: None,
+        }
+    }
+
+    /// Entries a step's sparsified gradient keeps.
+    pub fn nnz(&self) -> usize {
+        ((self.dim as f64 * self.density).round() as usize).clamp(1, self.dim.max(1))
+    }
+
+    /// Admission byte estimate for one step: every member ships its
+    /// container (~32 B header + 8 B per entry) once and receives the
+    /// aggregate once. Deliberately a coarse upper proxy — scheduling
+    /// charges the *metered* bytes, this number only sizes the
+    /// reservation.
+    pub fn est_step_bytes(&self) -> f64 {
+        2.0 * self.ranks as f64 * (32.0 + 8.0 * self.nnz() as f64)
+    }
+}
+
+/// Why a request was turned away. Structured so callers (CLI, tests)
+/// can react per cause instead of string-matching.
+#[derive(Debug)]
+pub enum AdmissionError {
+    /// The request itself is invalid (zero ranks, non-positive weight,
+    /// density outside (0, 1], hierarchical on a partial placement…).
+    BadRequest(String),
+    /// A running job already uses this name.
+    DuplicateName(String),
+    /// Not enough free fabric ranks.
+    NoCapacity { need: usize, free: usize },
+    /// The per-round byte budget on one link class cannot absorb this
+    /// job's floor step on top of the running tenants'.
+    BudgetExceeded { class: LinkClass, need_bytes: f64, free_bytes: f64 },
+}
+
+impl std::fmt::Display for AdmissionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AdmissionError::BadRequest(m) => write!(f, "bad job request: {m}"),
+            AdmissionError::DuplicateName(n) => {
+                write!(f, "job name {n:?} is already running")
+            }
+            AdmissionError::NoCapacity { need, free } => {
+                write!(f, "placement needs {need} ranks but only {free} are free")
+            }
+            AdmissionError::BudgetExceeded { class, need_bytes, free_bytes } => write!(
+                f,
+                "{} frame budget cannot absorb the job's floor step \
+                 ({need_bytes:.0} B needed, {free_bytes:.0} B free)",
+                class.name()
+            ),
+        }
+    }
+}
+
+impl std::error::Error for AdmissionError {}
+
+/// Validate `req` against a previewed `placement` and the scheduler's
+/// current load, returning the per-class single-step byte estimate the
+/// scheduler should reserve. Does not mutate anything — the caller
+/// commits placement + share only on `Ok`.
+pub fn admit(
+    req: &JobRequest,
+    topo: Topology,
+    placement: &[usize],
+    load: [f64; 2],
+    frame_budget: [f64; 2],
+) -> Result<[f64; 2], AdmissionError> {
+    if req.name.is_empty() {
+        return Err(AdmissionError::BadRequest("empty job name".into()));
+    }
+    if req.ranks == 0 {
+        return Err(AdmissionError::BadRequest("ranks must be >= 1".into()));
+    }
+    if !(req.weight.is_finite() && req.weight > 0.0) {
+        return Err(AdmissionError::BadRequest(format!(
+            "weight must be a positive finite number, got {}",
+            req.weight
+        )));
+    }
+    if req.dim == 0 {
+        return Err(AdmissionError::BadRequest("dim must be >= 1".into()));
+    }
+    if !(req.density.is_finite() && req.density > 0.0 && req.density <= 1.0) {
+        return Err(AdmissionError::BadRequest(format!(
+            "density must be in (0, 1], got {}",
+            req.density
+        )));
+    }
+    if req.schedule == Schedule::Hierarchical && req.ranks != topo.world() {
+        return Err(AdmissionError::BadRequest(
+            "hierarchical jobs must span the whole fabric \
+             (leader roles pin every rank of the grid)"
+                .into(),
+        ));
+    }
+    debug_assert_eq!(placement.len(), req.ranks);
+    // which classes the placement exercises: members on one node never
+    // cross the inter boundary; a multi-node span is charged on both
+    let crosses = spans_nodes(topo, placement);
+    let total = req.est_step_bytes();
+    let est = [total, if crosses { total } else { 0.0 }];
+    for class in LinkClass::ALL {
+        let c = class.idx();
+        if est[c] > 0.0 && load[c] + est[c] > frame_budget[c] {
+            return Err(AdmissionError::BudgetExceeded {
+                class,
+                need_bytes: est[c],
+                free_bytes: (frame_budget[c] - load[c]).max(0.0),
+            });
+        }
+    }
+    Ok(est)
+}
+
+/// Whether a placement spans more than one node of the grid.
+pub fn spans_nodes(topo: Topology, placement: &[usize]) -> bool {
+    match placement.split_first() {
+        Some((&first, rest)) => {
+            let n0 = topo.node_of(first);
+            rest.iter().any(|&r| topo.node_of(r) != n0)
+        }
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validates_request_fields() {
+        let topo = Topology::new(2, 4);
+        let ok = JobRequest::synthetic("a", 2, 4096, 0.01);
+        let placement = [0usize, 1];
+        assert!(admit(&ok, topo, &placement, [0.0; 2], [1e9; 2]).is_ok());
+        for (patch, what) in [
+            (Box::new(|r: &mut JobRequest| r.name.clear()) as Box<dyn Fn(&mut JobRequest)>, "name"),
+            (Box::new(|r: &mut JobRequest| r.weight = 0.0), "weight"),
+            (Box::new(|r: &mut JobRequest| r.weight = f64::NAN), "nan weight"),
+            (Box::new(|r: &mut JobRequest| r.dim = 0), "dim"),
+            (Box::new(|r: &mut JobRequest| r.density = 0.0), "density 0"),
+            (Box::new(|r: &mut JobRequest| r.density = 1.5), "density 1.5"),
+            (Box::new(|r: &mut JobRequest| r.schedule = Schedule::Hierarchical), "partial hier"),
+        ] {
+            let mut bad = ok.clone();
+            patch(&mut bad);
+            assert!(
+                matches!(
+                    admit(&bad, topo, &placement, [0.0; 2], [1e9; 2]),
+                    Err(AdmissionError::BadRequest(_))
+                ),
+                "{what} should be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn single_node_placements_skip_the_inter_budget() {
+        let topo = Topology::new(2, 4);
+        let req = JobRequest::synthetic("a", 4, 4096, 0.01);
+        // inter budget is exhausted, but ranks 0-3 sit on node 0
+        let est = admit(&req, topo, &[0, 1, 2, 3], [0.0, 0.0], [1e9, 0.0]).unwrap();
+        assert!(est[0] > 0.0);
+        assert_eq!(est[1], 0.0);
+        // a node-spanning placement needs the inter budget too
+        let err = admit(&req, topo, &[2, 3, 4, 5], [0.0, 0.0], [1e9, 0.0]);
+        assert!(
+            matches!(err, Err(AdmissionError::BudgetExceeded { class: LinkClass::Inter, .. })),
+            "{err:?}"
+        );
+    }
+
+    #[test]
+    fn budget_accounts_for_running_load() {
+        let topo = Topology::flat(8);
+        let req = JobRequest::synthetic("a", 2, 4096, 0.5);
+        let est = req.est_step_bytes();
+        let placement = [0usize, 1];
+        assert!(admit(&req, topo, &placement, [0.0; 2], [est * 2.0, est * 2.0]).is_ok());
+        let full = admit(&req, topo, &placement, [est * 1.5, 0.0], [est * 2.0, est * 2.0]);
+        assert!(matches!(
+            full,
+            Err(AdmissionError::BudgetExceeded { class: LinkClass::Intra, .. })
+        ));
+    }
+
+    #[test]
+    fn estimate_scales_with_density_and_ranks() {
+        let sparse = JobRequest::synthetic("s", 4, 1 << 16, 0.001);
+        let dense = JobRequest::synthetic("d", 4, 1 << 16, 0.9);
+        assert!(dense.est_step_bytes() > 100.0 * sparse.est_step_bytes());
+        let wide = JobRequest::synthetic("w", 8, 1 << 16, 0.001);
+        assert!(wide.est_step_bytes() > 1.9 * sparse.est_step_bytes());
+    }
+}

@@ -1,0 +1,497 @@
+//! The in-process service API: admit jobs, interleave their collective
+//! steps on one shared fleet fabric, meter and reconcile fair-share.
+//!
+//! A [`ReductionService`] owns exactly one [`FleetFabric`] event loop.
+//! Jobs are placed on disjoint ascending rank sets, so concurrent
+//! tenants never contend for a fabric port — a job's collective runs
+//! `allreduce_members` over its own placement and leaves every other
+//! rank's clock, idle meter, and in-flight state untouched. Interleaving
+//! is therefore pure scheduling: [`ReductionService::run_round`] asks
+//! the deficit scheduler for the round's service order and executes one
+//! collective step per grant, charging each tenant the bytes it actually
+//! metered.
+//!
+//! Warm start: when a profile store is configured and a matching
+//! `PROFILE_*.json` exists, `submit` rebinds the persisted
+//! [`CodecPolicy`] instead of running the calibration sweep, and
+//! [`ReductionService::finish`] persists a fresh calibration for the
+//! next cold submit.
+
+use super::admission::{admit, spans_nodes, AdmissionError, JobRequest};
+use super::profiles::{Profile, ProfileKey, ProfileStore};
+use super::registry::{JobEntry, JobId, JobRegistry, JobState, SetupStats};
+use super::scheduler::FairShare;
+use crate::collective::sparse::SegmentCodec;
+use crate::collective::{Schedule, SparseConfig, Topology};
+use crate::compress::CompressSpec;
+use crate::fleetsim::FleetFabric;
+use crate::pipeline::{default_candidates, CodecPolicy};
+use crate::simnet::Link;
+use crate::tensor::SparseTensor;
+use crate::util::prng::Rng;
+use crate::util::testkit::{gradient_like, sorted_support};
+use crate::vfabric::Scenario;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::time::Instant;
+
+/// Everything the daemon is configured with at startup.
+#[derive(Clone)]
+pub struct ServiceConfig {
+    pub topology: Topology,
+    pub intra: Link,
+    pub inter: Link,
+    /// Bytes one scheduling round may put on each link class,
+    /// `[intra, inter]`. `f64::INFINITY` disables metering on a class.
+    pub frame_budget: [f64; 2],
+    pub scenario: Scenario,
+    /// Where `PROFILE_*.json` artifacts live; `None` disables
+    /// persistence (every autotuned job cold-starts).
+    pub profile_dir: Option<PathBuf>,
+    /// Virtual compute seconds each member spends per step before the
+    /// exchange (the service-driven synthetic-gradient path).
+    pub compute_s: f64,
+}
+
+impl ServiceConfig {
+    /// Default frame budget: one virtual second of aggregate class
+    /// bandwidth (every rank's port busy for the whole frame).
+    pub fn new(topology: Topology, intra: Link, inter: Link) -> Self {
+        let world = topology.world() as f64;
+        Self {
+            topology,
+            intra,
+            inter,
+            frame_budget: [intra.bandwidth_bps * world, inter.bandwidth_bps * world],
+            scenario: Scenario::none(0),
+            profile_dir: None,
+            compute_s: 0.0,
+        }
+    }
+
+    /// Disable byte metering entirely — the single-tenant trainer path,
+    /// where fairness is moot and the budget must never throttle.
+    pub fn unmetered(mut self) -> Self {
+        self.frame_budget = [f64::INFINITY, f64::INFINITY];
+        self
+    }
+
+    pub fn with_frame_budget(mut self, frame_budget: [f64; 2]) -> Self {
+        self.frame_budget = frame_budget;
+        self
+    }
+
+    pub fn with_scenario(mut self, scenario: Scenario) -> Self {
+        self.scenario = scenario;
+        self
+    }
+
+    pub fn with_profiles<P: Into<PathBuf>>(mut self, dir: P) -> Self {
+        self.profile_dir = Some(dir.into());
+        self
+    }
+
+    pub fn with_compute_s(mut self, compute_s: f64) -> Self {
+        self.compute_s = compute_s;
+        self
+    }
+}
+
+/// What one executed step cost, for callers that stream progress.
+#[derive(Clone, Copy, Debug)]
+pub struct StepReport {
+    pub job: JobId,
+    /// The job's step count after this step (1-based).
+    pub step: u64,
+    /// Virtual seconds the step took (critical path over members).
+    pub virt_s: f64,
+    pub start_s: f64,
+    pub end_s: f64,
+    /// Metered fabric bytes this step, `[intra, inter]`.
+    pub bytes: [u64; 2],
+}
+
+/// Per-job execution state the registry's accounting row doesn't carry.
+struct JobRuntime {
+    sched: Schedule,
+    sparse: SparseConfig,
+    codec: SegmentCodec,
+    /// Present on autotuned jobs; exported to the profile at finish.
+    policy: Option<CodecPolicy>,
+    key: ProfileKey,
+    rng: Rng,
+    dim: usize,
+    nnz: usize,
+}
+
+/// The long-running multi-tenant reduction daemon (in-process form).
+pub struct ReductionService {
+    fabric: FleetFabric,
+    cfg: ServiceConfig,
+    registry: JobRegistry,
+    shares: FairShare,
+    store: Option<ProfileStore>,
+    rt: BTreeMap<u32, JobRuntime>,
+}
+
+impl ReductionService {
+    pub fn new(cfg: ServiceConfig) -> Self {
+        let fabric =
+            FleetFabric::new(cfg.topology, cfg.intra, cfg.inter, cfg.scenario.clone());
+        let registry = JobRegistry::new(cfg.topology.world());
+        let shares = FairShare::new(cfg.frame_budget);
+        let store = cfg.profile_dir.clone().map(ProfileStore::new);
+        Self { fabric, cfg, registry, shares, store, rt: BTreeMap::new() }
+    }
+
+    /// Admit a job: validate, place, reserve fair-share, and resolve its
+    /// codec + schedule (calibrating or warm-loading when autotuned).
+    pub fn submit(&mut self, req: JobRequest) -> Result<JobId, AdmissionError> {
+        if self.registry.name_in_use(&req.name) {
+            return Err(AdmissionError::DuplicateName(req.name.clone()));
+        }
+        let placement = self.registry.peek_placement(req.ranks).ok_or(
+            AdmissionError::NoCapacity { need: req.ranks, free: self.registry.free_ranks() },
+        )?;
+        let est = admit(
+            &req,
+            self.cfg.topology,
+            &placement,
+            self.shares.load(),
+            self.shares.frame_budget(),
+        )?;
+        // the link class the exchange is bound by, for calibration keys
+        let job_link = if spans_nodes(self.cfg.topology, &placement) {
+            self.cfg.inter
+        } else {
+            self.cfg.intra
+        };
+        let span = format!("{}-{}r", self.cfg.topology.label(), req.ranks);
+        let key = ProfileKey::new(&req.model, &span, job_link);
+        let dim = req.dim;
+        let nnz = req.nnz();
+        let mut setup = SetupStats::default();
+        let (sched, chunks, compress, policy) = if req.autotune {
+            let warm = self.store.as_ref().and_then(|s| s.load(&key).ok().flatten());
+            let (policy, warm_sched) = match warm {
+                Some(profile) => {
+                    let t0 = Instant::now();
+                    match profile.policy(job_link, req.ranks) {
+                        Ok(p) => {
+                            setup.warm_start = true;
+                            setup.profile_load_s = t0.elapsed().as_secs_f64();
+                            (p, profile.schedule.clone())
+                        }
+                        // a profile that validated at load but fails to
+                        // rebind falls back to a cold calibration
+                        Err(_) => {
+                            (Self::cold_calibrate(&mut setup, req.seed, job_link, req.ranks), None)
+                        }
+                    }
+                }
+                None => (Self::cold_calibrate(&mut setup, req.seed, job_link, req.ranks), None),
+            };
+            let choice = policy.choose(dim, nnz);
+            let compress = CompressSpec::parse(&choice.index, &choice.value)
+                .map_err(|e| AdmissionError::BadRequest(format!("autotuned codec: {e}")))?;
+            let (sched, chunks) = match warm_sched {
+                Some((name, chunks)) => {
+                    let sched = Schedule::parse(&name).ok_or_else(|| {
+                        AdmissionError::BadRequest(format!("profile schedule {name:?}"))
+                    })?;
+                    (sched, chunks)
+                }
+                None => policy.choose_schedule(dim, nnz, req.ranks, job_link),
+            };
+            // the lossy ring drops collisions; the service owes exact sums
+            let sched =
+                if sched == Schedule::RingRescatter { Schedule::RingRescatterExact } else { sched };
+            (sched, chunks, compress, Some(policy))
+        } else {
+            (req.schedule, req.chunks, req.compress.clone(), None)
+        };
+        let sparse = req.sparse.clone().unwrap_or_else(|| SparseConfig {
+            chunks,
+            topology: (sched == Schedule::Hierarchical).then_some(self.cfg.topology),
+            ..SparseConfig::default()
+        });
+        let codec = SegmentCodec::lossless_or_raw(&compress, req.seed, sparse.dense_switch);
+        let id = self.registry.register(&req.name, placement, req.weight, setup);
+        self.shares.admit(id, req.weight, est);
+        self.rt.insert(
+            id.0,
+            JobRuntime {
+                sched,
+                sparse,
+                codec,
+                policy,
+                key,
+                rng: Rng::new(req.seed ^ 0x5E41_71CE ^ id.0 as u64),
+                dim,
+                nnz,
+            },
+        );
+        Ok(id)
+    }
+
+    fn cold_calibrate(
+        setup: &mut SetupStats,
+        seed: u64,
+        link: Link,
+        workers: usize,
+    ) -> CodecPolicy {
+        let t0 = Instant::now();
+        let (idx, val) = default_candidates(false);
+        let policy = CodecPolicy::calibrate(&idx, &val, seed, link, workers);
+        setup.warm_start = false;
+        setup.calibration_s = t0.elapsed().as_secs_f64();
+        policy
+    }
+
+    /// Run one collective for a job over `members` (an ascending subset
+    /// of its placement; elastic callers pass the alive subset). Meters
+    /// the fabric before/after — the event loop is single-threaded, so
+    /// the byte delta is exactly this collective's traffic — and charges
+    /// the job's fair share with it.
+    pub fn collective(
+        &mut self,
+        id: JobId,
+        members: &[usize],
+        inputs: Vec<SparseTensor>,
+    ) -> anyhow::Result<Vec<SparseTensor>> {
+        let rt = self.rt.get(&id.0).ok_or_else(|| anyhow::anyhow!("unknown job {id}"))?;
+        let entry = self.registry.get(id).expect("runtime implies registry entry");
+        anyhow::ensure!(entry.state == JobState::Running, "{id} is finished");
+        for m in members {
+            anyhow::ensure!(
+                entry.placement.binary_search(m).is_ok(),
+                "rank {m} is not in {id}'s placement {:?}",
+                entry.placement
+            );
+        }
+        let before = [self.fabric.intra_bytes(), self.fabric.inter_bytes()];
+        let out =
+            self.fabric.allreduce_members(members, rt.sched, &rt.sparse, &rt.codec, inputs)?;
+        let delta = [
+            self.fabric.intra_bytes() - before[0],
+            self.fabric.inter_bytes() - before[1],
+        ];
+        let entry = self.registry.get_mut(id).expect("checked above");
+        entry.bytes[0] += delta[0];
+        entry.bytes[1] += delta[1];
+        self.shares.charge(id, [delta[0] as f64, delta[1] as f64]);
+        Ok(out)
+    }
+
+    /// Execute one full step of a service-driven job: barrier its
+    /// members, spend the configured compute, exchange one synthetic
+    /// gradient at the job's density, and account the step.
+    pub fn step_job(&mut self, id: JobId) -> anyhow::Result<StepReport> {
+        let rt = self.rt.get_mut(&id.0).ok_or_else(|| anyhow::anyhow!("unknown job {id}"))?;
+        let entry = self.registry.get(id).expect("runtime implies registry entry");
+        anyhow::ensure!(entry.state == JobState::Running, "{id} is finished");
+        let members = entry.placement.clone();
+        let (dim, nnz) = (rt.dim, rt.nnz);
+        let inputs: Vec<SparseTensor> = members
+            .iter()
+            .map(|_| {
+                let idx = sorted_support(&mut rt.rng, dim, nnz);
+                let vals = gradient_like(&mut rt.rng, idx.len());
+                SparseTensor::new(dim, idx, vals)
+            })
+            .collect();
+        let start_s =
+            members.iter().map(|&m| self.fabric.clock_s(m)).fold(0.0, f64::max);
+        for &m in &members {
+            self.fabric.sync_to(m, start_s);
+            self.fabric.elapse(m, self.cfg.compute_s);
+        }
+        let bytes_before = self.registry.get(id).expect("checked").bytes;
+        self.collective(id, &members, inputs)?;
+        let end_s = members.iter().map(|&m| self.fabric.clock_s(m)).fold(0.0, f64::max);
+        let entry = self.registry.get_mut(id).expect("checked");
+        let virt_s = end_s - start_s;
+        entry.steps += 1;
+        entry.virtual_s += virt_s;
+        if entry.first_step_s.is_none() {
+            entry.first_step_s = Some(entry.setup.total_s() + virt_s);
+        }
+        Ok(StepReport {
+            job: id,
+            step: entry.steps,
+            virt_s,
+            start_s,
+            end_s,
+            bytes: [entry.bytes[0] - bytes_before[0], entry.bytes[1] - bytes_before[1]],
+        })
+    }
+
+    /// Account one externally-driven step (the trainer-client path,
+    /// where the caller ran [`ReductionService::collective`] itself and
+    /// knows the step's virtual duration).
+    pub fn note_step(&mut self, id: JobId, virt_s: f64) {
+        if let Some(entry) = self.registry.get_mut(id) {
+            entry.steps += 1;
+            entry.virtual_s += virt_s;
+            if entry.first_step_s.is_none() {
+                entry.first_step_s = Some(entry.setup.total_s() + virt_s);
+            }
+        }
+    }
+
+    /// One fair-share scheduling round: every running tenant's floor
+    /// step plus the deficit-funded surplus, in the scheduler's order.
+    pub fn run_round(&mut self) -> anyhow::Result<Vec<StepReport>> {
+        let order = self.shares.next_round();
+        let mut reports = Vec::with_capacity(order.len());
+        for id in order {
+            if self.registry.get(id).map(|j| j.state) != Some(JobState::Running) {
+                continue;
+            }
+            reports.push(self.step_job(id)?);
+        }
+        Ok(reports)
+    }
+
+    /// Retire a job: persist its calibration (when autotuned and a
+    /// store is configured), release its ranks and its fair share.
+    /// Returns the profile path when one was written.
+    pub fn finish(&mut self, id: JobId) -> anyhow::Result<Option<PathBuf>> {
+        let persisted = match (self.rt.get(&id.0), &self.store) {
+            (Some(rt), Some(store)) => match &rt.policy {
+                Some(policy) => {
+                    let profile = Profile {
+                        key: rt.key.clone(),
+                        policy: policy.export_json(),
+                        schedule: Some((rt.sched.name().to_string(), rt.sparse.chunks)),
+                    };
+                    Some(store.save(&profile).map_err(anyhow::Error::from)?)
+                }
+                None => None,
+            },
+            _ => None,
+        };
+        self.rt.remove(&id.0);
+        self.shares.remove(id);
+        self.registry.finish(id);
+        Ok(persisted)
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    pub fn world(&self) -> usize {
+        self.registry.world()
+    }
+
+    pub fn free_ranks(&self) -> usize {
+        self.registry.free_ranks()
+    }
+
+    pub fn job(&self, id: JobId) -> Option<&JobEntry> {
+        self.registry.get(id)
+    }
+
+    /// Every job the service has seen, ascending by id.
+    pub fn jobs(&self) -> impl Iterator<Item = &JobEntry> {
+        self.registry.jobs()
+    }
+
+    pub fn shares(&self) -> &FairShare {
+        &self.shares
+    }
+
+    /// A member rank's virtual clock (trainer-client plumbing).
+    pub fn clock_s(&self, rank: usize) -> f64 {
+        self.fabric.clock_s(rank)
+    }
+
+    /// A member rank's accumulated recv-wait idle seconds.
+    pub fn idle_s(&self, rank: usize) -> f64 {
+        self.fabric.idle_s(rank)
+    }
+
+    /// Barrier plumbing for external drivers: advance `rank` to at
+    /// least `t` without counting the gap as idle.
+    pub fn sync_member(&mut self, rank: usize, t: f64) {
+        self.fabric.sync_to(rank, t);
+    }
+
+    /// Local-work plumbing for external drivers: spend `dt` seconds of
+    /// compute on `rank`.
+    pub fn elapse_member(&mut self, rank: usize, dt: f64) {
+        self.fabric.elapse(rank, dt);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn svc(nodes: usize, rpn: usize) -> ReductionService {
+        ReductionService::new(ServiceConfig::new(
+            Topology::new(nodes, rpn),
+            Link::mbps(1000.0),
+            Link::mbps(100.0),
+        ))
+    }
+
+    #[test]
+    fn submit_places_steps_and_finishes() {
+        let mut s = svc(2, 4);
+        let a = s.submit(JobRequest::synthetic("a", 4, 1 << 12, 0.01)).unwrap();
+        let b = s.submit(JobRequest::synthetic("b", 4, 1 << 12, 0.01)).unwrap();
+        assert!(matches!(
+            s.submit(JobRequest::synthetic("a", 1, 1 << 12, 0.01)),
+            Err(AdmissionError::DuplicateName(_))
+        ));
+        assert!(matches!(
+            s.submit(JobRequest::synthetic("c", 4, 1 << 12, 0.01)),
+            Err(AdmissionError::NoCapacity { need: 4, free: 0 })
+        ));
+        let ra = s.step_job(a).unwrap();
+        let rb = s.step_job(b).unwrap();
+        assert!(ra.virt_s > 0.0 && rb.virt_s > 0.0);
+        assert!(ra.bytes[0] > 0, "node-local job meters intra bytes");
+        assert_eq!(ra.bytes[1], 0, "node-local job never crosses the inter link");
+        assert_eq!(s.job(a).unwrap().steps, 1);
+        s.finish(a).unwrap();
+        assert_eq!(s.free_ranks(), 4);
+        assert!(s.step_job(a).is_err(), "finished jobs cannot step");
+        let c = s.submit(JobRequest::synthetic("c", 4, 1 << 12, 0.01)).unwrap();
+        assert_eq!(s.job(c).unwrap().placement, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn rounds_interleave_all_tenants() {
+        let mut s = svc(4, 2);
+        let ids: Vec<JobId> = (0..4)
+            .map(|i| {
+                s.submit(JobRequest::synthetic(&format!("t{i}"), 2, 1 << 12, 0.02)).unwrap()
+            })
+            .collect();
+        let reports = s.run_round().unwrap();
+        for id in &ids {
+            assert!(
+                reports.iter().any(|r| r.job == *id),
+                "{id} missed the round: {reports:?}"
+            );
+        }
+        for id in &ids {
+            assert!(s.job(*id).unwrap().steps >= 1);
+        }
+    }
+
+    #[test]
+    fn disjoint_tenants_do_not_move_each_others_clocks() {
+        let mut s = svc(2, 4);
+        let a = s.submit(JobRequest::synthetic("a", 4, 1 << 12, 0.05)).unwrap();
+        let _b = s.submit(JobRequest::synthetic("b", 4, 1 << 12, 0.05)).unwrap();
+        let b_clock: Vec<f64> = (4..8).map(|r| s.clock_s(r)).collect();
+        s.step_job(a).unwrap();
+        for (i, r) in (4..8).enumerate() {
+            assert_eq!(s.clock_s(r), b_clock[i], "rank {r} moved during a's step");
+        }
+    }
+}

@@ -1,0 +1,38 @@
+//! Multi-tenant reduction service: one shared fleet fabric, many
+//! concurrent training jobs.
+//!
+//! DeepReduce frames compressed sparse communication as *system
+//! support* — transparent to the job, orthogonal to the sparsifier —
+//! which in production means a long-running service rather than a
+//! per-process pool. This module promotes the trainer's private
+//! `CollectivePool`/`FleetPool` into that service:
+//!
+//! - [`registry`] — job identity, disjoint rank placement, per-job
+//!   accounting (steps, virtual seconds, metered bytes per link class).
+//! - [`admission`] — request validation plus capacity/byte-budget
+//!   checks; a job is only admitted when every running tenant can still
+//!   take its guaranteed floor step per round.
+//! - [`scheduler`] — weighted deficit fair-share over the two link
+//!   classes, with a progress floor so a dense tenant can outspend but
+//!   never starve a sparse one.
+//! - [`profiles`] — versioned `PROFILE_<model>_<topology>_<link>.json`
+//!   artifacts persisting [`crate::pipeline::CodecPolicy`] calibration,
+//!   so a returning job warm-starts without the calibration sweep.
+//! - [`api`] — the [`ReductionService`] itself: submit / step /
+//!   run_round / finish over one shared `fleetsim` event loop.
+//!
+//! The `serve` CLI subcommand (`crate::cli`) drives an in-process
+//! instance with synthetic tenants; `coordinator::Trainer`'s fleet mode
+//! is a single-tenant client of the same API.
+
+pub mod admission;
+pub mod api;
+pub mod profiles;
+pub mod registry;
+pub mod scheduler;
+
+pub use admission::{admit, spans_nodes, AdmissionError, JobRequest};
+pub use api::{ReductionService, ServiceConfig, StepReport};
+pub use profiles::{Profile, ProfileError, ProfileKey, ProfileStore, PROFILE_SCHEMA_VERSION};
+pub use registry::{JobEntry, JobId, JobRegistry, JobState, SetupStats};
+pub use scheduler::{FairShare, LinkClass};

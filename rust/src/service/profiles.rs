@@ -1,0 +1,349 @@
+//! Persistent autotune profiles: versioned `PROFILE_*.json` artifacts
+//! that let a returning job skip its startup calibration sweep.
+//!
+//! A profile captures what [`crate::pipeline::CodecPolicy`] learned
+//! about one (model, topology, link) combination — the codec throughput
+//! curves over the calibration density ladder plus the schedule/chunk
+//! pick — keyed so a job resubmitted on the same fabric shape warm-starts
+//! with the persisted choices. The load path is schema-guarded the same
+//! way the wire containers are: any truncation or field-level damage
+//! yields a structured [`ProfileError`], never a panic and never a
+//! silently-wrong policy (`CodecPolicy::import_json` revalidates every
+//! number before the profile is accepted).
+
+use crate::pipeline::CodecPolicy;
+use crate::simnet::Link;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Version stamp of the `PROFILE_*.json` schema. Bump on any breaking
+/// layout change; loaders reject other versions with
+/// [`ProfileError::Schema`] so a stale profile re-calibrates instead of
+/// mis-parsing.
+pub const PROFILE_SCHEMA_VERSION: u32 = 1;
+
+const PROFILE_KIND: &str = "deepreduce_profile";
+
+/// Lowercase the name and map anything outside `[a-z0-9]` to `-` so the
+/// key components survive as a filename.
+fn slug(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        let ch = ch.to_ascii_lowercase();
+        if ch.is_ascii_alphanumeric() {
+            out.push(ch);
+        } else if !out.ends_with('-') {
+            out.push('-');
+        }
+    }
+    let trimmed = out.trim_matches('-').to_string();
+    if trimmed.is_empty() { "unnamed".to_string() } else { trimmed }
+}
+
+/// What a calibration is keyed by: the profile is only reusable for the
+/// same model family on the same fabric shape and link speed.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ProfileKey {
+    pub model: String,
+    /// Topology label the job's placement spans, e.g. `2x4`.
+    pub topology: String,
+    /// Link-speed slug of the class the policy was calibrated for,
+    /// e.g. `100mbps`.
+    pub link: String,
+}
+
+impl ProfileKey {
+    pub fn new(model: &str, topology: &str, link: Link) -> Self {
+        Self {
+            model: slug(model),
+            topology: slug(topology),
+            link: Self::link_slug(link),
+        }
+    }
+
+    /// `100mbps`-style slug from the link's bandwidth (fractional
+    /// megabit rates spell the point as `p`: 2.5 Mbps → `2p5mbps`).
+    pub fn link_slug(link: Link) -> String {
+        let mb = link.bandwidth_bps * 8.0 / 1e6;
+        if !mb.is_finite() {
+            return "ideal".to_string();
+        }
+        let s = if mb.fract() == 0.0 && mb < 9e15 {
+            format!("{}", mb as u64)
+        } else {
+            format!("{mb}").replace('.', "p")
+        };
+        format!("{s}mbps")
+    }
+
+    /// The artifact filename this key maps to.
+    pub fn file_name(&self) -> String {
+        format!("PROFILE_{}_{}_{}.json", self.model, self.topology, self.link)
+    }
+}
+
+/// One persisted calibration: the policy's learned curves plus the
+/// schedule pick made for the job's density.
+pub struct Profile {
+    pub key: ProfileKey,
+    /// `CodecPolicy::export_json` payload (link/worker-independent).
+    pub policy: Json,
+    /// `(schedule_name, chunks)` pick, when the producer made one.
+    pub schedule: Option<(String, usize)>,
+}
+
+impl Profile {
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("schema_version".to_string(), Json::Num(PROFILE_SCHEMA_VERSION as f64));
+        m.insert("kind".to_string(), Json::Str(PROFILE_KIND.to_string()));
+        m.insert("model".to_string(), Json::Str(self.key.model.clone()));
+        m.insert("topology".to_string(), Json::Str(self.key.topology.clone()));
+        m.insert("link".to_string(), Json::Str(self.key.link.clone()));
+        m.insert("policy".to_string(), self.policy.clone());
+        let sched = match &self.schedule {
+            Some((name, chunks)) => {
+                let mut s = BTreeMap::new();
+                s.insert("schedule".to_string(), Json::Str(name.clone()));
+                s.insert("chunks".to_string(), Json::Num(*chunks as f64));
+                Json::Obj(s)
+            }
+            None => Json::Null,
+        };
+        m.insert("schedule".to_string(), sched);
+        Json::Obj(m)
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.to_json().to_string().into_bytes()
+    }
+
+    /// Schema-guarded load. Every failure mode — truncation, non-UTF-8,
+    /// malformed JSON, version skew, wrong artifact kind, damaged policy
+    /// numbers — maps to a structured [`ProfileError`].
+    pub fn from_bytes(bytes: &[u8]) -> Result<Profile, ProfileError> {
+        let text = std::str::from_utf8(bytes).map_err(|_| ProfileError::Utf8)?;
+        let v = Json::parse(text).map_err(|e| ProfileError::Malformed {
+            detail: format!("json parse: {e:?}"),
+        })?;
+        let version = v
+            .get("schema_version")
+            .and_then(Json::as_f64)
+            .filter(|x| x.fract() == 0.0 && *x >= 0.0)
+            .map(|x| x as u64);
+        if version != Some(PROFILE_SCHEMA_VERSION as u64) {
+            return Err(ProfileError::Schema { found: version, expect: PROFILE_SCHEMA_VERSION });
+        }
+        let kind = v.get("kind").and_then(Json::as_str).unwrap_or_default();
+        if kind != PROFILE_KIND {
+            return Err(ProfileError::WrongKind { found: kind.to_string() });
+        }
+        let field = |name: &str| -> Result<String, ProfileError> {
+            v.get(name)
+                .and_then(Json::as_str)
+                .filter(|s| !s.is_empty())
+                .map(str::to_string)
+                .ok_or_else(|| ProfileError::Malformed {
+                    detail: format!("missing or empty string field {name:?}"),
+                })
+        };
+        let key = ProfileKey {
+            model: field("model")?,
+            topology: field("topology")?,
+            link: field("link")?,
+        };
+        let policy = v
+            .get("policy")
+            .cloned()
+            .ok_or_else(|| ProfileError::Malformed {
+                detail: "missing policy object".to_string(),
+            })?;
+        // revalidate the full policy payload at load time (with a
+        // throwaway binding) so corruption is caught here, not at the
+        // first choose() call
+        CodecPolicy::import_json(&policy, Link::mbps(100.0), 2)
+            .map_err(|e| ProfileError::Malformed { detail: format!("policy: {e}") })?;
+        let schedule = match v.get("schedule") {
+            None | Some(Json::Null) => None,
+            Some(s) => {
+                let name = s
+                    .get("schedule")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| ProfileError::Malformed {
+                        detail: "schedule entry without a schedule name".to_string(),
+                    })?;
+                if crate::collective::Schedule::parse(name).is_none() {
+                    return Err(ProfileError::Malformed {
+                        detail: format!("unknown schedule {name:?}"),
+                    });
+                }
+                let chunks = s.get("chunks").and_then(Json::as_usize).ok_or_else(|| {
+                    ProfileError::Malformed { detail: "schedule entry without chunks".to_string() }
+                })?;
+                Some((name.to_string(), chunks))
+            }
+        };
+        Ok(Profile { key, policy, schedule })
+    }
+
+    /// Rebind the persisted policy to a live link + worker count.
+    pub fn policy(&self, link: Link, workers: usize) -> Result<CodecPolicy, ProfileError> {
+        CodecPolicy::import_json(&self.policy, link, workers)
+            .map_err(|e| ProfileError::Malformed { detail: format!("policy: {e}") })
+    }
+}
+
+/// Why a profile failed to load. Structured (not a string) so the
+/// service can distinguish "no profile yet" from "damaged artifact" and
+/// the hardening tests can assert the exact cause.
+#[derive(Debug)]
+pub enum ProfileError {
+    Io(std::io::Error),
+    /// The file is not valid UTF-8 (binary damage).
+    Utf8,
+    /// Parsed, but the payload is structurally wrong; `detail` names the
+    /// first offending field.
+    Malformed { detail: String },
+    /// Version skew: written by a different schema revision.
+    Schema { found: Option<u64>, expect: u32 },
+    /// A JSON artifact of some other kind was handed to the loader.
+    WrongKind { found: String },
+}
+
+impl std::fmt::Display for ProfileError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProfileError::Io(e) => write!(f, "profile io: {e}"),
+            ProfileError::Utf8 => write!(f, "profile is not valid UTF-8"),
+            ProfileError::Malformed { detail } => write!(f, "malformed profile: {detail}"),
+            ProfileError::Schema { found, expect } => match found {
+                Some(v) => write!(f, "profile schema version {v} (this build expects {expect})"),
+                None => write!(f, "profile has no schema_version (this build expects {expect})"),
+            },
+            ProfileError::WrongKind { found } => {
+                write!(f, "not a profile artifact (kind {found:?})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ProfileError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ProfileError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for ProfileError {
+    fn from(e: std::io::Error) -> Self {
+        ProfileError::Io(e)
+    }
+}
+
+/// Directory-backed profile store. Missing files are a normal cold
+/// start (`Ok(None)`); present-but-damaged files are an error the
+/// caller surfaces before falling back to calibration.
+pub struct ProfileStore {
+    dir: PathBuf,
+}
+
+impl ProfileStore {
+    pub fn new<P: Into<PathBuf>>(dir: P) -> Self {
+        Self { dir: dir.into() }
+    }
+
+    /// The repo root, where the other `BENCH_`/`TRACE_`/`HEALTH_`
+    /// artifacts live — the default profile directory for the CLI.
+    pub fn repo_root() -> PathBuf {
+        let manifest = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+        manifest.parent().map(Path::to_path_buf).unwrap_or(manifest)
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn path(&self, key: &ProfileKey) -> PathBuf {
+        self.dir.join(key.file_name())
+    }
+
+    pub fn save(&self, profile: &Profile) -> Result<PathBuf, ProfileError> {
+        std::fs::create_dir_all(&self.dir)?;
+        let path = self.path(&profile.key);
+        std::fs::write(&path, profile.to_bytes())?;
+        Ok(path)
+    }
+
+    /// `Ok(None)` when no profile exists for the key (cold start);
+    /// `Err` when one exists but fails validation.
+    pub fn load(&self, key: &ProfileKey) -> Result<Option<Profile>, ProfileError> {
+        let bytes = match std::fs::read(self.path(key)) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(e.into()),
+        };
+        Profile::from_bytes(&bytes).map(Some)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pipeline::{default_candidates, CodecPolicy};
+
+    fn sample_profile() -> Profile {
+        let (idx, val) = default_candidates(false);
+        let policy = CodecPolicy::calibrate_bytes_only(&idx, &val, 7, Link::mbps(100.0), 4);
+        Profile {
+            key: ProfileKey::new("ResNet-50", "2x4", Link::mbps(100.0)),
+            policy: policy.export_json(),
+            schedule: Some(("chunked_rescatter".to_string(), 4)),
+        }
+    }
+
+    #[test]
+    fn keys_slug_into_stable_filenames() {
+        let key = ProfileKey::new("ResNet-50 (v1.5)", "2x4", Link::mbps(100.0));
+        assert_eq!(key.file_name(), "PROFILE_resnet-50-v1-5_2x4_100mbps.json");
+        assert_eq!(ProfileKey::link_slug(Link::mbps(2.5)), "2p5mbps");
+        assert_eq!(ProfileKey::link_slug(Link::ideal()), "ideal");
+        let key2 = ProfileKey::new("", "", Link::gbps(1.0));
+        assert_eq!(key2.file_name(), "PROFILE_unnamed_unnamed_1000mbps.json");
+    }
+
+    #[test]
+    fn store_round_trips_through_disk() {
+        let dir = std::env::temp_dir().join(format!("profiles-{}", std::process::id()));
+        let store = ProfileStore::new(&dir);
+        let profile = sample_profile();
+        assert!(store.load(&profile.key).unwrap().is_none(), "cold store is empty");
+        let path = store.save(&profile).unwrap();
+        assert!(path.ends_with(profile.key.file_name()));
+        let back = store.load(&profile.key).unwrap().expect("saved profile loads");
+        assert_eq!(back.key, profile.key);
+        assert_eq!(back.schedule, profile.schedule);
+        assert_eq!(back.to_bytes(), profile.to_bytes(), "byte-stable round trip");
+        back.policy(Link::mbps(10.0), 8).expect("policy rebinds to a new link");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn version_skew_and_wrong_kind_are_structured() {
+        let profile = sample_profile();
+        let text = String::from_utf8(profile.to_bytes()).unwrap();
+        let skew = text.replace("\"schema_version\":1", "\"schema_version\":99");
+        assert!(matches!(
+            Profile::from_bytes(skew.as_bytes()),
+            Err(ProfileError::Schema { found: Some(99), expect: 1 })
+        ));
+        let other = text.replace(PROFILE_KIND, "deepreduce_health");
+        assert!(matches!(
+            Profile::from_bytes(other.as_bytes()),
+            Err(ProfileError::WrongKind { .. })
+        ));
+        assert!(matches!(Profile::from_bytes(&[0xFF, 0xFE]), Err(ProfileError::Utf8)));
+    }
+}

@@ -1,0 +1,214 @@
+//! Job registry: identity, rank placement, and per-job accounting for
+//! every tenant admitted to the shared reduction fabric.
+//!
+//! The registry owns the free-rank pool. Placements are disjoint
+//! ascending rank sets handed out lowest-first, so two running jobs
+//! never share a fabric port — the property the `mixed_tenant_scaling`
+//! bench's isolation gate rests on (a member's event-loop state machine
+//! only touches its own ports; see `crate::fleetsim`).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+/// Opaque handle for one admitted job.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct JobId(pub u32);
+
+impl std::fmt::Display for JobId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "job{}", self.0)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum JobState {
+    Running,
+    Finished,
+}
+
+/// Startup-cost breakdown: what the job paid before its first step.
+/// `calibration_s` is the wall-clock autotune sweep (cold start);
+/// `profile_load_s` is the wall-clock `PROFILE_*.json` load + import
+/// (warm start). At most one of the two is non-zero.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SetupStats {
+    pub warm_start: bool,
+    pub calibration_s: f64,
+    pub profile_load_s: f64,
+}
+
+impl SetupStats {
+    /// Total setup seconds charged ahead of the first step.
+    pub fn total_s(&self) -> f64 {
+        self.calibration_s + self.profile_load_s
+    }
+}
+
+/// Accounting row for one job.
+pub struct JobEntry {
+    pub id: JobId,
+    pub name: String,
+    /// Ascending, disjoint fabric ranks this job reduces over.
+    pub placement: Vec<usize>,
+    pub weight: f64,
+    pub state: JobState,
+    pub steps: u64,
+    /// Metered fabric traffic attributed to this job, `[intra, inter]`.
+    pub bytes: [u64; 2],
+    /// Accumulated virtual step seconds (sum of per-step critical
+    /// paths over the job's members).
+    pub virtual_s: f64,
+    /// Setup seconds plus the first step's virtual seconds — the
+    /// cold-vs-warm number the bench gates on. `None` until step 1.
+    pub first_step_s: Option<f64>,
+    pub setup: SetupStats,
+}
+
+impl JobEntry {
+    /// Mean virtual seconds per completed step (NaN before step 1).
+    pub fn step_time_s(&self) -> f64 {
+        if self.steps == 0 {
+            f64::NAN
+        } else {
+            self.virtual_s / self.steps as f64
+        }
+    }
+
+    /// Total metered bytes across both link classes.
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes[0] + self.bytes[1]
+    }
+}
+
+/// Identity + placement + accounting for every job the service has
+/// seen. Finished jobs stay queryable (their ranks return to the pool).
+pub struct JobRegistry {
+    world: usize,
+    next: u32,
+    free: BTreeSet<usize>,
+    jobs: BTreeMap<u32, JobEntry>,
+}
+
+impl JobRegistry {
+    pub fn new(world: usize) -> Self {
+        Self { world, next: 0, free: (0..world).collect(), jobs: BTreeMap::new() }
+    }
+
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    pub fn free_ranks(&self) -> usize {
+        self.free.len()
+    }
+
+    /// The placement `ranks` ranks would get right now (lowest free
+    /// ranks, ascending) without claiming them — admission previews the
+    /// placement to classify its link usage before committing.
+    pub fn peek_placement(&self, ranks: usize) -> Option<Vec<usize>> {
+        if ranks == 0 || ranks > self.free.len() {
+            return None;
+        }
+        Some(self.free.iter().copied().take(ranks).collect())
+    }
+
+    /// Whether a *running* job already uses `name` (finished jobs free
+    /// their name for reuse along with their ranks).
+    pub fn name_in_use(&self, name: &str) -> bool {
+        self.jobs
+            .values()
+            .any(|j| j.state == JobState::Running && j.name == name)
+    }
+
+    /// Claim `placement` (must come from [`JobRegistry::peek_placement`])
+    /// and register the job.
+    pub fn register(
+        &mut self,
+        name: &str,
+        placement: Vec<usize>,
+        weight: f64,
+        setup: SetupStats,
+    ) -> JobId {
+        debug_assert!(placement.iter().all(|r| self.free.contains(r)));
+        for r in &placement {
+            self.free.remove(r);
+        }
+        let id = JobId(self.next);
+        self.next += 1;
+        self.jobs.insert(
+            id.0,
+            JobEntry {
+                id,
+                name: name.to_string(),
+                placement,
+                weight,
+                state: JobState::Running,
+                steps: 0,
+                bytes: [0, 0],
+                virtual_s: 0.0,
+                first_step_s: None,
+                setup,
+            },
+        );
+        id
+    }
+
+    /// Release the job's ranks and mark it finished. Returns false when
+    /// the id is unknown or already finished.
+    pub fn finish(&mut self, id: JobId) -> bool {
+        match self.jobs.get_mut(&id.0) {
+            Some(j) if j.state == JobState::Running => {
+                j.state = JobState::Finished;
+                for &r in &j.placement {
+                    self.free.insert(r);
+                }
+                true
+            }
+            _ => false,
+        }
+    }
+
+    pub fn get(&self, id: JobId) -> Option<&JobEntry> {
+        self.jobs.get(&id.0)
+    }
+
+    pub fn get_mut(&mut self, id: JobId) -> Option<&mut JobEntry> {
+        self.jobs.get_mut(&id.0)
+    }
+
+    /// Every job ever registered, ascending by id.
+    pub fn jobs(&self) -> impl Iterator<Item = &JobEntry> {
+        self.jobs.values()
+    }
+
+    /// Running jobs only, ascending by id.
+    pub fn running(&self) -> impl Iterator<Item = &JobEntry> {
+        self.jobs.values().filter(|j| j.state == JobState::Running)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn placements_are_disjoint_and_recycled() {
+        let mut reg = JobRegistry::new(8);
+        let p1 = reg.peek_placement(3).unwrap();
+        let a = reg.register("a", p1.clone(), 1.0, SetupStats::default());
+        assert_eq!(p1, vec![0, 1, 2]);
+        let p2 = reg.peek_placement(3).unwrap();
+        assert_eq!(p2, vec![3, 4, 5]);
+        let b = reg.register("b", p2, 1.0, SetupStats::default());
+        assert_eq!(reg.free_ranks(), 2);
+        assert!(reg.peek_placement(3).is_none(), "only 2 ranks left");
+        assert!(reg.name_in_use("a") && reg.name_in_use("b"));
+        assert!(reg.finish(a));
+        assert!(!reg.finish(a), "double finish is a no-op");
+        assert_eq!(reg.free_ranks(), 5);
+        assert!(!reg.name_in_use("a"), "finished jobs free their name");
+        // the freed low ranks are handed out again, ascending
+        assert_eq!(reg.peek_placement(4).unwrap(), vec![0, 1, 2, 6]);
+        assert_eq!(reg.running().count(), 1);
+        assert_eq!(reg.get(b).unwrap().name, "b");
+    }
+}

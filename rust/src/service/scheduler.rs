@@ -1,0 +1,331 @@
+//! Weighted deficit fair-share scheduler: per-round byte budgets on
+//! each link class, with a progress floor.
+//!
+//! Classic weighted deficit round robin (DRR) divides a frame's byte
+//! budget among tenants in proportion to weight and serves a tenant
+//! while its deficit counter covers the next quantum. Two adaptations
+//! for the reduction service:
+//!
+//! 1. **Two link classes.** A step consumes intra- and inter-node
+//!    budget simultaneously, so each tenant keeps one deficit counter
+//!    *per class* and a step is affordable only when every class it
+//!    touches is covered.
+//! 2. **A progress floor.** Admission guarantees that the sum of all
+//!    admitted jobs' single-step estimates fits the frame budget
+//!    (`crate::service::admission`), so every round serves every
+//!    tenant at least once before any deficit-funded extra steps. This
+//!    is what makes starvation structurally impossible: a dense tenant
+//!    can consume the whole *surplus*, never a sparse tenant's floor
+//!    step.
+//!
+//! Deficits are charged with **actual metered bytes** (the provisional
+//! estimate is reconciled in [`FairShare::charge`]), so a tenant that
+//! underestimates its traffic repays the overdraft from later rounds'
+//! credits. Both credit and overdraft are clamped to one frame plus one
+//! step burst, which bounds any tenant's unfairness window to a
+//! constant number of frames — the standard DRR latency bound.
+
+use super::registry::JobId;
+use std::collections::BTreeMap;
+
+/// The two metered link classes of the shared fabric.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LinkClass {
+    Intra,
+    Inter,
+}
+
+impl LinkClass {
+    pub const ALL: [LinkClass; 2] = [LinkClass::Intra, LinkClass::Inter];
+
+    pub fn idx(self) -> usize {
+        match self {
+            LinkClass::Intra => 0,
+            LinkClass::Inter => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LinkClass::Intra => "intra",
+            LinkClass::Inter => "inter",
+        }
+    }
+}
+
+struct Tenant {
+    weight: f64,
+    /// Banked byte credit per link class (can run negative after an
+    /// underestimated step, down to the clamp).
+    deficit: [f64; 2],
+    /// Estimated bytes one step costs this tenant per class.
+    est_step: [f64; 2],
+}
+
+/// The per-round scheduling state. One instance per
+/// [`crate::service::ReductionService`].
+pub struct FairShare {
+    frame_budget: [f64; 2],
+    tenants: BTreeMap<u32, Tenant>,
+}
+
+impl FairShare {
+    /// `frame_budget` is the bytes one scheduling round may put on each
+    /// link class. `f64::INFINITY` disables metering on a class (the
+    /// single-tenant trainer path).
+    pub fn new(frame_budget: [f64; 2]) -> Self {
+        Self { frame_budget, tenants: BTreeMap::new() }
+    }
+
+    pub fn frame_budget(&self) -> [f64; 2] {
+        self.frame_budget
+    }
+
+    /// Sum of admitted tenants' single-step estimates per class — the
+    /// load admission compares against the frame budget.
+    pub fn load(&self) -> [f64; 2] {
+        let mut l = [0.0; 2];
+        for t in self.tenants.values() {
+            l[0] += t.est_step[0];
+            l[1] += t.est_step[1];
+        }
+        l
+    }
+
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Current banked credit of one tenant (tests and reports).
+    pub fn deficit(&self, id: JobId) -> Option<[f64; 2]> {
+        self.tenants.get(&id.0).map(|t| t.deficit)
+    }
+
+    /// Register an admitted tenant. `est_step` is its per-class
+    /// single-step byte estimate (from admission).
+    pub fn admit(&mut self, id: JobId, weight: f64, est_step: [f64; 2]) {
+        let tenant =
+            Tenant { weight: weight.max(f64::MIN_POSITIVE), deficit: [0.0; 2], est_step };
+        self.tenants.insert(id.0, tenant);
+    }
+
+    pub fn remove(&mut self, id: JobId) {
+        self.tenants.remove(&id.0);
+    }
+
+    /// Plan one scheduling round: credit every tenant its weighted
+    /// share of the frame budget, then return the service order — one
+    /// floor step per tenant (ascending id), followed by extra steps
+    /// granted to the largest banked surplus while deficits cover them.
+    /// Deterministic: ties break toward the lower id.
+    pub fn next_round(&mut self) -> Vec<JobId> {
+        if self.tenants.is_empty() {
+            return Vec::new();
+        }
+        let total_w: f64 = self.tenants.values().map(|t| t.weight).sum();
+        let budget = self.frame_budget;
+        let ids: Vec<u32> = self.tenants.keys().copied().collect();
+        for id in &ids {
+            let share = self.tenants[id].weight / total_w;
+            let t = self.tenants.get_mut(id).unwrap();
+            for c in 0..2 {
+                if budget[c].is_finite() {
+                    t.deficit[c] += share * budget[c];
+                }
+            }
+        }
+        for id in &ids {
+            let t = self.tenants.get_mut(id).unwrap();
+            Self::clamp_static(budget, t);
+        }
+        // progress floor: one step each, provisionally charged at the
+        // estimate ([`FairShare::charge`] reconciles to actual bytes)
+        let quota = self.round_quota();
+        let mut spent = [0.0; 2];
+        let mut order: Vec<JobId> = Vec::new();
+        for id in &ids {
+            let t = self.tenants.get_mut(id).unwrap();
+            for c in 0..2 {
+                t.deficit[c] -= t.est_step[c];
+                spent[c] += t.est_step[c];
+            }
+            order.push(JobId(*id));
+        }
+        // surplus service: highest normalized surplus first, while the
+        // tenant can afford a full step in every class it uses AND the
+        // round's scheduled estimates stay inside [`Self::round_quota`]
+        // (banked refunds from over-estimated steps must not let one
+        // round flood the fabric). The cap bounds the round even under
+        // a zero-cost estimate.
+        let cap = ids.len() * 8;
+        while order.len() < cap {
+            let mut best: Option<(f64, u32)> = None;
+            for (&id, t) in &self.tenants {
+                let affordable = (0..2).all(|c| {
+                    t.est_step[c] <= 0.0
+                        || (t.deficit[c] >= t.est_step[c] && spent[c] + t.est_step[c] <= quota[c])
+                });
+                if !affordable {
+                    continue;
+                }
+                let surplus = (0..2)
+                    .filter(|&c| t.est_step[c] > 0.0)
+                    .map(|c| t.deficit[c] / t.est_step[c])
+                    .fold(f64::INFINITY, f64::min);
+                if best.is_none_or(|(s, _)| surplus > s) {
+                    best = Some((surplus, id));
+                }
+            }
+            let Some((_, id)) = best else { break };
+            let t = self.tenants.get_mut(&id).unwrap();
+            for c in 0..2 {
+                t.deficit[c] -= t.est_step[c];
+                spent[c] += t.est_step[c];
+            }
+            order.push(JobId(id));
+        }
+        order
+    }
+
+    fn clamp_static(budget: [f64; 2], t: &mut Tenant) {
+        for c in 0..2 {
+            if !budget[c].is_finite() {
+                continue;
+            }
+            let cap = budget[c] + t.est_step[c];
+            t.deficit[c] = t.deficit[c].clamp(-cap, cap);
+        }
+    }
+
+    /// Reconcile one executed step: replace the provisional estimate
+    /// charged in [`FairShare::next_round`] with the actually metered
+    /// bytes. Overdraft is clamped to one frame + one burst.
+    pub fn charge(&mut self, id: JobId, actual: [f64; 2]) {
+        let budget = self.frame_budget;
+        if let Some(t) = self.tenants.get_mut(&id.0) {
+            for c in 0..2 {
+                t.deficit[c] += t.est_step[c] - actual[c];
+            }
+            Self::clamp_static(budget, t);
+        }
+    }
+
+    /// The hard per-round byte ceiling the round order respects on each
+    /// class: the frame budget plus one single-step burst per tenant
+    /// (the standard DRR slack — a tenant's last affordable step may
+    /// straddle the budget edge). Property tests assert scheduled
+    /// estimates against this.
+    pub fn round_quota(&self) -> [f64; 2] {
+        let mut q = self.frame_budget;
+        for t in self.tenants.values() {
+            q[0] += t.est_step[0];
+            q[1] += t.est_step[1];
+        }
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn est(i: f64, x: f64) -> [f64; 2] {
+        [i, x]
+    }
+
+    #[test]
+    fn every_tenant_gets_a_floor_step() {
+        let mut fs = FairShare::new([1000.0, 1000.0]);
+        fs.admit(JobId(0), 100.0, est(900.0, 0.0)); // dense bully
+        fs.admit(JobId(1), 1.0, est(50.0, 0.0));
+        fs.admit(JobId(2), 1.0, est(50.0, 0.0));
+        for _ in 0..20 {
+            let order = fs.next_round();
+            for id in [0, 1, 2] {
+                assert!(
+                    order.contains(&JobId(id)),
+                    "tenant {id} starved in round order {order:?}"
+                );
+            }
+            for id in &order {
+                // reconcile with actuals equal to the estimate
+                let actual = if id.0 == 0 { est(900.0, 0.0) } else { est(50.0, 0.0) };
+                fs.charge(*id, actual);
+            }
+        }
+    }
+
+    #[test]
+    fn weights_steer_the_surplus() {
+        let mut fs = FairShare::new([10_000.0, 0.0]);
+        fs.admit(JobId(0), 9.0, est(1000.0, 0.0));
+        fs.admit(JobId(1), 1.0, est(1000.0, 0.0));
+        let mut steps = [0usize; 2];
+        for _ in 0..50 {
+            for id in fs.next_round() {
+                steps[id.0 as usize] += 1;
+                fs.charge(id, est(1000.0, 0.0));
+            }
+        }
+        assert!(steps[1] >= 50, "floor guarantees one step per round: {steps:?}");
+        assert!(
+            steps[0] > 3 * steps[1],
+            "a 9x weight should win most surplus steps: {steps:?}"
+        );
+    }
+
+    #[test]
+    fn round_estimates_respect_the_quota() {
+        let mut fs = FairShare::new([5000.0, 2000.0]);
+        let ests = [est(1200.0, 400.0), est(800.0, 100.0), est(3000.0, 1500.0)];
+        for (i, e) in ests.iter().enumerate() {
+            fs.admit(JobId(i as u32), 1.0 + i as f64, *e);
+        }
+        let quota = fs.round_quota();
+        // reconcile at the estimate, then at half of it: tenants that
+        // keep under-running their estimate bank refunds, and the quota
+        // must hold structurally even once everyone is flush
+        for scale in [1.0, 0.5] {
+            for _ in 0..30 {
+                let order = fs.next_round();
+                let mut used = [0.0; 2];
+                for id in &order {
+                    let e = ests[id.0 as usize];
+                    used[0] += e[0];
+                    used[1] += e[1];
+                    fs.charge(*id, [e[0] * scale, e[1] * scale]);
+                }
+                for c in 0..2 {
+                    assert!(
+                        used[c] <= quota[c] + 1e-6,
+                        "class {c} at scale {scale}: {used:?} exceeds quota {quota:?} \
+                         (order {order:?})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn infinite_budget_disables_metering() {
+        let mut fs = FairShare::new([f64::INFINITY, f64::INFINITY]);
+        fs.admit(JobId(0), 1.0, est(1e9, 1e9));
+        let order = fs.next_round();
+        assert!(!order.is_empty());
+        fs.charge(JobId(0), est(5e9, 5e9));
+        let d = fs.deficit(JobId(0)).unwrap();
+        assert!(d[0].is_finite() && d[1].is_finite(), "no NaN/Inf poisoning: {d:?}");
+    }
+
+    #[test]
+    fn removal_frees_the_share() {
+        let mut fs = FairShare::new([1000.0, 1000.0]);
+        fs.admit(JobId(0), 1.0, est(400.0, 0.0));
+        fs.admit(JobId(1), 1.0, est(400.0, 0.0));
+        assert_eq!(fs.load(), [800.0, 0.0]);
+        fs.remove(JobId(0));
+        assert_eq!(fs.load(), [400.0, 0.0]);
+        assert_eq!(fs.tenant_count(), 1);
+        assert!(fs.deficit(JobId(0)).is_none());
+    }
+}

@@ -272,6 +272,16 @@ impl BenchSummary {
         Self { name: name.to_string(), meta: BTreeMap::new(), rows: Vec::new() }
     }
 
+    /// Prefix the artifact stem with a job identifier
+    /// (`BENCH_<job>_<name>.json`), so two concurrent reduction-service
+    /// tenants writing the same bench never clobber each other. The job
+    /// also lands in the payload's metadata.
+    pub fn for_job(mut self, job: &str) -> Self {
+        self.name = format!("{job}_{}", self.name);
+        self.meta.insert("job".into(), Json::Str(job.to_string()));
+        self
+    }
+
     /// Attach a top-level metadata field (sweep parameters, pass/fail
     /// counters, anything a trajectory plot wants without row parsing).
     pub fn set(&mut self, key: &str, value: Json) {

@@ -1,0 +1,308 @@
+//! Integration tests for the multi-tenant reduction service
+//! (`deepreduce::service`): daemon smoke, fair-share properties under an
+//! adversarial tenant mix, `PROFILE_*.json` hardening, and per-job
+//! artifact naming.
+
+use deepreduce::collective::Topology;
+use deepreduce::obs::{FleetTelemetry, Lane, Span, SpanKind, TraceLevel, TraceReport};
+use deepreduce::pipeline::{default_candidates, CodecPolicy};
+use deepreduce::service::{
+    JobId, JobRequest, Profile, ProfileError, ReductionService, ServiceConfig,
+};
+use deepreduce::simnet::Link;
+use deepreduce::util::benchkit::BenchSummary;
+use deepreduce::util::json::Json;
+use std::collections::BTreeMap;
+
+/// Daemon smoke: two in-process jobs share one fabric, interleave under
+/// the scheduler, meter their own traffic, and release capacity on
+/// finish — the lifecycle the `serve` subcommand drives.
+#[test]
+fn daemon_smoke_interleaves_two_jobs_and_recycles_capacity() {
+    let mut svc = ReductionService::new(ServiceConfig::new(
+        Topology::new(2, 4),
+        Link::mbps(1000.0),
+        Link::mbps(100.0),
+    ));
+    let a = svc.submit(JobRequest::synthetic("jobA", 4, 1 << 12, 0.01)).expect("admit A");
+    let b = svc.submit(JobRequest::synthetic("jobB", 4, 1 << 12, 0.05)).expect("admit B");
+    assert_eq!(svc.free_ranks(), 0);
+    let rounds = 3usize;
+    for _ in 0..rounds {
+        let reports = svc.run_round().expect("round");
+        assert!(reports.iter().any(|r| r.job == a), "A missed a round");
+        assert!(reports.iter().any(|r| r.job == b), "B missed a round");
+    }
+    for id in [a, b] {
+        let job = svc.job(id).expect("queryable");
+        assert!(job.steps >= rounds as u64, "{} made {} steps", job.name, job.steps);
+        assert!(job.bytes[0] > 0, "{} metered no intra traffic", job.name);
+        assert_eq!(job.bytes[1], 0, "{} spans one node, must not meter inter", job.name);
+        assert!(job.virtual_s > 0.0);
+    }
+    svc.finish(a).expect("finish A");
+    svc.finish(b).expect("finish B");
+    assert_eq!(svc.free_ranks(), 8, "finished jobs release their ranks");
+    // the freed capacity admits a new tenant — and the freed *name* too
+    let a2 = svc.submit(JobRequest::synthetic("jobA", 8, 1 << 12, 0.01)).expect("readmit");
+    assert_eq!(svc.job(a2).expect("queryable").placement.len(), 8);
+}
+
+/// Fair-share property test: one dense bully next to six sparse tenants
+/// on a tight frame budget. Every tenant must progress every round (the
+/// progress floor), the bully must never win surplus steps (its step
+/// estimate exceeds its per-round credit), the sparse tenants must
+/// collectively receive surplus, and the per-round scheduled estimate
+/// must respect the round quota (frame budget + one burst per tenant).
+#[test]
+fn fair_share_bully_cannot_starve_sparse_tenants() {
+    let topo = Topology::new(8, 2);
+    let dim = 1usize << 12;
+    let budget = [60_000.0, 60_000.0];
+    let mut svc = ReductionService::new(
+        ServiceConfig::new(topo, Link::mbps(1000.0), Link::mbps(100.0))
+            .with_frame_budget(budget),
+    );
+    let dense_req = JobRequest::synthetic("dense", 2, dim, 0.3);
+    let dense_est = dense_req.est_step_bytes();
+    let sparse_est = JobRequest::synthetic("s", 2, dim, 0.01).est_step_bytes();
+    // the mix must be adversarial: the bully's floor step alone outweighs
+    // its fair credit share, and the whole mix still fits the frame
+    assert!(dense_est > budget[0] / 7.0, "dense step must exceed its credit share");
+    assert!(dense_est + 6.0 * sparse_est <= budget[0], "mix must pass admission");
+    let dense = svc.submit(dense_req).expect("admit dense");
+    let mut sparse: Vec<JobId> = Vec::new();
+    for i in 0..6 {
+        sparse.push(
+            svc.submit(JobRequest::synthetic(&format!("s{i}"), 2, dim, 0.01))
+                .expect("admit sparse"),
+        );
+    }
+    let est_of = |id: JobId| if id == dense { dense_est } else { sparse_est };
+    let quota = svc.shares().round_quota();
+    let rounds = 12usize;
+    for round in 0..rounds {
+        let reports = svc.run_round().expect("round");
+        let mut scheduled = 0.0;
+        for r in &reports {
+            scheduled += est_of(r.job);
+            assert_eq!(r.bytes[1], 0, "single-node placements never meter inter");
+        }
+        assert!(
+            scheduled <= quota[0] + 1e-6,
+            "round {round} scheduled {scheduled:.0} B of estimate, quota {:.0} B",
+            quota[0]
+        );
+        assert!(reports.iter().any(|r| r.job == dense), "dense missed round {round}");
+        for id in &sparse {
+            assert!(reports.iter().any(|r| r.job == *id), "{id} missed round {round}");
+        }
+    }
+    // the bully got exactly its floor; the surplus went to the sparse mix
+    assert_eq!(
+        svc.job(dense).expect("dense").steps,
+        rounds as u64,
+        "a bully whose step exceeds its credit share never wins surplus"
+    );
+    let sparse_steps: u64 = sparse.iter().map(|id| svc.job(*id).expect("sparse").steps).sum();
+    assert!(
+        sparse_steps > (6 * rounds) as u64,
+        "sparse tenants should win surplus steps beyond the floor: {sparse_steps}"
+    );
+}
+
+/// Warm start across service instances: a cold autotuned job persists
+/// its profile at finish; a second service submitting the same
+/// (model, topology, link) key loads it instead of re-calibrating, and
+/// pays measurably less setup ahead of its first step.
+#[test]
+fn warm_start_reuses_the_persisted_profile() {
+    let dir = std::env::temp_dir().join(format!("svc-warm-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let cfg = || {
+        ServiceConfig::new(Topology::new(2, 4), Link::mbps(1000.0), Link::mbps(100.0))
+            .with_profiles(dir.clone())
+    };
+    let autotuned = |name: &str| JobRequest {
+        model: "resnet-sim".to_string(),
+        autotune: true,
+        ..JobRequest::synthetic(name, 4, 1 << 12, 0.01)
+    };
+    let mut cold_svc = ReductionService::new(cfg());
+    let cold_id = cold_svc.submit(autotuned("first")).expect("cold admit");
+    cold_svc.step_job(cold_id).expect("cold step");
+    let (cold_setup, cold_first) = {
+        let job = cold_svc.job(cold_id).expect("cold job");
+        assert!(!job.setup.warm_start, "empty store must cold-start");
+        assert!(job.setup.calibration_s > 0.0, "cold start pays the calibration sweep");
+        (job.setup.total_s(), job.first_step_s.expect("stepped"))
+    };
+    let path = cold_svc.finish(cold_id).expect("finish").expect("autotuned job persists");
+    assert!(path.exists(), "profile file on disk");
+    assert!(
+        path.file_name().and_then(|f| f.to_str()).unwrap_or("").starts_with("PROFILE_"),
+        "profile artifact naming: {path:?}"
+    );
+
+    let mut warm_svc = ReductionService::new(cfg());
+    let warm_id = warm_svc.submit(autotuned("second")).expect("warm admit");
+    warm_svc.step_job(warm_id).expect("warm step");
+    {
+        let job = warm_svc.job(warm_id).expect("warm job");
+        assert!(job.setup.warm_start, "same key must warm-start");
+        assert_eq!(job.setup.calibration_s, 0.0, "warm start skips the sweep");
+        assert!(
+            job.setup.total_s() < cold_setup,
+            "warm setup {:.6}s not below cold {:.6}s",
+            job.setup.total_s(),
+            cold_setup
+        );
+        assert!(
+            job.first_step_s.expect("stepped") < cold_first,
+            "warm first step {:.6}s not below cold {:.6}s",
+            job.first_step_s.expect("stepped"),
+            cold_first
+        );
+    }
+    warm_svc.finish(warm_id).expect("finish");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn golden_profile() -> Profile {
+    let (idx, val) = default_candidates(false);
+    let policy = CodecPolicy::calibrate_bytes_only(&idx, &val, 7, Link::mbps(100.0), 4);
+    Profile {
+        key: deepreduce::service::ProfileKey::new("golden", "2x4", Link::mbps(100.0)),
+        policy: policy.export_json(),
+        schedule: Some(("chunked_rescatter".to_string(), 4)),
+    }
+}
+
+/// PROFILE hardening: the golden fixture round-trips byte-stable, every
+/// strict prefix of it is rejected with a structured error (never a
+/// panic), and field-level damage maps to the matching error variant.
+#[test]
+fn profile_golden_roundtrip_survives_truncation_and_corruption() {
+    let golden = golden_profile();
+    let bytes = golden.to_bytes();
+    let back = Profile::from_bytes(&bytes).expect("golden fixture loads");
+    assert_eq!(back.to_bytes(), bytes, "byte-stable round trip");
+    assert_eq!(back.key, golden.key);
+    assert_eq!(back.schedule, golden.schedule);
+
+    // prefix-truncation sweep: a partially-written profile (crash during
+    // save) must fail structurally at every cut point
+    for cut in 0..bytes.len() {
+        match Profile::from_bytes(&bytes[..cut]) {
+            Err(_) => {}
+            Ok(_) => panic!("truncated profile ({cut}/{} bytes) must not load", bytes.len()),
+        }
+    }
+
+    // field-level corruption maps to the matching structured variant
+    let mutate = |f: &dyn Fn(&mut BTreeMap<String, Json>)| -> Result<Profile, ProfileError> {
+        let mut v = Json::parse(std::str::from_utf8(&bytes).unwrap()).unwrap();
+        if let Json::Obj(m) = &mut v {
+            f(m);
+        }
+        Profile::from_bytes(v.to_string().as_bytes())
+    };
+    assert!(matches!(
+        mutate(&|m| {
+            m.insert("schema_version".into(), Json::Num(99.0));
+        }),
+        Err(ProfileError::Schema { found: Some(99), expect: 1 })
+    ));
+    assert!(matches!(
+        mutate(&|m| {
+            m.remove("schema_version");
+        }),
+        Err(ProfileError::Schema { found: None, expect: 1 })
+    ));
+    assert!(matches!(
+        mutate(&|m| {
+            m.insert("kind".into(), Json::Str("deepreduce_bench".into()));
+        }),
+        Err(ProfileError::WrongKind { .. })
+    ));
+    assert!(matches!(
+        mutate(&|m| {
+            m.insert("policy".into(), Json::Null);
+        }),
+        Err(ProfileError::Malformed { .. })
+    ));
+    assert!(matches!(
+        mutate(&|m| {
+            m.remove("model");
+        }),
+        Err(ProfileError::Malformed { .. })
+    ));
+    assert!(matches!(
+        mutate(&|m| {
+            let mut s = BTreeMap::new();
+            s.insert("schedule".to_string(), Json::Str("warp_drive".into()));
+            s.insert("chunks".to_string(), Json::Num(4.0));
+            m.insert("schedule".into(), Json::Obj(s));
+        }),
+        Err(ProfileError::Malformed { .. })
+    ));
+    assert!(matches!(Profile::from_bytes(&[0xFF, 0xFE, 0xFD]), Err(ProfileError::Utf8)));
+}
+
+fn vspan(rank: u32, v0: f64, v1: f64) -> Span {
+    Span {
+        kind: SpanKind::Compute,
+        lane: Lane::Cpu,
+        rank,
+        step: 0,
+        depth: 0,
+        bytes: 0,
+        label: None,
+        wall0: f64::NAN,
+        wall1: f64::NAN,
+        virt0: v0,
+        virt1: v1,
+    }
+}
+
+/// Per-job artifact naming: `for_job` prefixes the BENCH/TRACE/HEALTH
+/// stems so concurrent tenants never clobber each other's artifacts,
+/// and the health report's exemplar-trace pointer follows the renamed
+/// stem automatically.
+#[test]
+fn artifacts_are_prefixed_per_job() {
+    let bench = BenchSummary::new("service_smoke").for_job("tenant0");
+    let bj = bench.to_json();
+    assert_eq!(bj.get("bench").and_then(Json::as_str), Some("tenant0_service_smoke"));
+    assert_eq!(bj.get("job").and_then(Json::as_str), Some("tenant0"));
+
+    let trace = TraceReport {
+        name: "svc".to_string(),
+        level: TraceLevel::Step,
+        ranks: 2,
+        meta: BTreeMap::new(),
+        steps: Vec::new(),
+        spans: vec![vspan(0, 0.0, 1.0)],
+        registry: Json::Null,
+    }
+    .for_job("tenant1");
+    assert_eq!(trace.name, "tenant1_svc");
+    assert_eq!(trace.meta.get("job").and_then(Json::as_str), Some("tenant1"));
+
+    let mut telemetry = FleetTelemetry::new(2);
+    telemetry.fold(&vspan(0, 0.0, 1.0));
+    telemetry.fold(&vspan(1, 0.0, 1.5));
+    telemetry.end_step(0, 1.5, (0.0, 1.5), None);
+    let health = telemetry.report("svc", BTreeMap::new()).for_job("tenant2");
+    assert_eq!(health.name, "tenant2_svc");
+    let hj = health.to_json();
+    let pointer = hj
+        .get("exemplar_trace")
+        .and_then(|e| e.get("trace"))
+        .and_then(Json::as_str)
+        .expect("exemplar pointer");
+    assert_eq!(
+        pointer, "TRACE_tenant2_svc.json",
+        "the exemplar pointer must follow the per-job stem"
+    );
+}
